@@ -1,0 +1,43 @@
+//! Autotune the SplitK splitting factor on the calibrated simulator for
+//! every paper device, across the paper's n = k sweep — reproduces the
+//! §3.3 conclusion (split_k = 4 on A100, 8 on H100) and shows where each
+//! factor's regime begins and ends.
+//!
+//! ```sh
+//! cargo run --release --example autotune_splitk [-- <m>]
+//! ```
+
+use anyhow::Result;
+use splitk_w4a16::gpusim::DeviceConfig;
+use splitk_w4a16::kernels::{autotune_split_k, GemmShape, TileConfig};
+use splitk_w4a16::tables::NK_SWEEP;
+
+fn main() -> Result<()> {
+    let m: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let tiles = TileConfig::paper_splitk();
+
+    for dev in DeviceConfig::paper_devices() {
+        println!("== {} (m = {m}) ==", dev.name);
+        println!("{:>7} {:>9} {:>10}  sweep (split_k: µs)", "N=K", "best", "best µs");
+        let mut votes = std::collections::BTreeMap::<u32, u32>::new();
+        for &nk in &NK_SWEEP {
+            let r = autotune_split_k(&dev, &GemmShape::square(m, nk), &tiles);
+            *votes.entry(r.best_split_k).or_default() += 1;
+            let sweep: Vec<String> = r
+                .sweep
+                .iter()
+                .map(|(sk, us)| format!("{sk}:{us:.0}"))
+                .collect();
+            println!("{nk:>7} {:>9} {:>10.1}  [{}]", r.best_split_k, r.best_us,
+                     sweep.join(" "));
+        }
+        let overall = votes.iter().max_by_key(|(_, &v)| v).unwrap();
+        println!("most frequent best split_k = {} ({} of {} sizes)\n",
+                 overall.0, overall.1, NK_SWEEP.len());
+    }
+    println!("paper §3.3: split_k = 4 optimal on A100, split_k = 8 on H100");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Quickstart: run one fused W4A16 SplitK GEMM artifact end to end.
+//!
+//! 1. Load `artifacts/manifest.json` (built by `make artifacts`).
+//! 2. Quantize a random weight matrix with the Rust GPTQ-style quantizer.
+//! 3. Execute the AOT Pallas kernel on the PJRT CPU client.
+//! 4. Verify against the Rust CPU reference, then time a few iterations.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{ensure, Result};
+use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32};
+use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
+use splitk_w4a16::util::Rng;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let (m, nk) = (16usize, 512usize);
+
+    println!("== splitk-w4a16 quickstart ==");
+    let manifest = Manifest::load(&artifacts)?;
+    let entry = manifest.find_gemm("splitk", m, nk, nk)?.clone();
+    let group = entry.group_size.unwrap();
+    println!("artifact: {} (group_size={group})", entry.name);
+
+    let runtime = Runtime::cpu()?;
+    println!("PJRT platform: {}", runtime.platform());
+    let mut cache = ExecutableCache::new(runtime, manifest);
+    let exe = cache.get(&entry)?;
+
+    // Quantize a random fp32 weight to the GPTQ-style W4 format.
+    let mut rng = Rng::seed_from(2024);
+    let a = MatF32::new(m, nk, rng.normal_vec(m * nk, 1.0));
+    let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
+    let q = quantize_weight(&w, group);
+    println!(
+        "weight: {}x{} fp32 -> {:.1} KB packed int4 (vs {:.1} KB fp16, {:.2}x smaller)",
+        nk, nk,
+        q.packed_bytes() as f64 / 1024.0,
+        q.fp16_bytes() as f64 / 1024.0,
+        q.fp16_bytes() as f64 / q.packed_bytes() as f64
+    );
+
+    let inputs = [
+        HostTensor::f32(vec![m, nk], a.data.clone()),
+        HostTensor::i32(vec![q.qweight.rows, q.qweight.cols], q.qweight.data.clone()),
+        HostTensor::f32(vec![q.scales.rows, q.scales.cols], q.scales.data.clone()),
+        HostTensor::i32(vec![q.qzeros.rows, q.qzeros.cols], q.qzeros.data.clone()),
+    ];
+    let out = exe.run(&inputs)?;
+    let got = out[0].as_f32()?;
+
+    // The fused kernel (dequant + GEMM + SplitK accumulation, lowered
+    // from Pallas) must match the plain CPU reference.
+    let want = w4a16_gemm_ref(&a, &q);
+    let max_err = got
+        .iter()
+        .zip(&want.data)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f32, f32::max);
+    println!("numerics vs CPU reference: max |err| = {max_err:.2e}");
+    ensure!(max_err < 1e-3, "kernel does not match reference");
+
+    let iters = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        exe.run(&inputs)?;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "timing: {:.2} ms/iter over {iters} iters ({:.2} GFLOP/s on CPU-PJRT)",
+        per * 1e3,
+        2.0 * (m * nk * nk) as f64 / per / 1e9
+    );
+    println!("OK");
+    Ok(())
+}

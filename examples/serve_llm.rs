@@ -1,0 +1,111 @@
+//! End-to-end serving driver (the DESIGN.md E2E validation run).
+//!
+//! Loads the W4A16-quantized llama-style model (AOT decode artifacts),
+//! starts the full coordinator (router -> dynamic batcher -> engine), and
+//! drives a synthetic batched workload through it — the paper's
+//! batch-1..16 skinny-GEMM regime — reporting per-request latency,
+//! aggregate throughput, and batch-occupancy statistics. Results are also
+//! dumped to `results/serve_llm.json` for EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example serve_llm [-- <requests> <max_new>]
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+use splitk_w4a16::config::ServeConfig;
+use splitk_w4a16::coordinator::Coordinator;
+use splitk_w4a16::util::{Json, Rng};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+    let max_new: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let cfg = ServeConfig {
+        artifacts_dir: PathBuf::from("artifacts"),
+        batch_window_ms: 4,
+        max_new_tokens: max_new.max(8),
+        ..Default::default()
+    };
+    println!("== serve_llm: E2E batched serving over W4A16 decode artifacts ==");
+    println!("starting coordinator (compiles decode buckets {:?})...",
+             cfg.batch_buckets);
+    let t0 = Instant::now();
+    let coord = Coordinator::start(&cfg)?;
+    println!("engine warm in {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Synthetic open-loop workload: bursts of varying size so the batcher
+    // exercises every bucket (the m of every fused GEMM in the step).
+    let mut rng = Rng::seed_from(7);
+    let bursts = [1usize, 16, 4, 2, 8, 16, 1, 3, 16];
+    let serve_start = Instant::now();
+    let mut done = 0usize;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut issued = 0usize;
+    'outer: loop {
+        for &burst in &bursts {
+            let mut pending = Vec::new();
+            for _ in 0..burst {
+                if issued >= requests {
+                    break;
+                }
+                let len = rng.gen_range(2, 13);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| rng.gen_range(0, 512) as i32).collect();
+                pending.push(coord.submit(prompt, max_new, None)?);
+                issued += 1;
+            }
+            for p in pending {
+                let r = p.wait()?;
+                latencies.push(r.latency_ms);
+                done += 1;
+                println!(
+                    "req {:>3}: {:>2} tok bucket={:>2} queue={:>7.1}ms total={:>8.1}ms ({:?})",
+                    r.id, r.tokens.len(), r.bucket, r.queue_wait_ms,
+                    r.latency_ms, r.finish_reason
+                );
+            }
+            if issued >= requests {
+                break 'outer;
+            }
+        }
+    }
+    let wall = serve_start.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = |q: f64| latencies[((latencies.len() as f64 * q) as usize)
+                               .min(latencies.len() - 1)];
+    let m = coord.metrics();
+    use std::sync::atomic::Ordering;
+    let tokens = m.tokens_generated.load(Ordering::Relaxed);
+    let steps = m.decode_steps.load(Ordering::Relaxed);
+    println!("\n== summary ==");
+    println!("requests          {done}");
+    println!("wall time         {wall:.2} s");
+    println!("tokens generated  {tokens}");
+    println!("throughput        {:.1} tok/s", tokens as f64 / wall);
+    println!("decode steps      {steps}");
+    println!("avg batch occupancy {:.2} seq/step", m.avg_batch_occupancy());
+    println!("latency p50/p90/p99  {:.1} / {:.1} / {:.1} ms",
+             p(0.50), p(0.90), p(0.99));
+    println!("{}", m.summary());
+
+    std::fs::create_dir_all("results").ok();
+    let json = Json::obj(vec![
+        ("requests", Json::num(done as f64)),
+        ("wall_s", Json::num(wall)),
+        ("tokens", Json::num(tokens as f64)),
+        ("throughput_tok_s", Json::num(tokens as f64 / wall)),
+        ("decode_steps", Json::num(steps as f64)),
+        ("avg_batch_occupancy", Json::num(m.avg_batch_occupancy())),
+        ("latency_p50_ms", Json::num(p(0.50))),
+        ("latency_p90_ms", Json::num(p(0.90))),
+        ("latency_p99_ms", Json::num(p(0.99))),
+    ]);
+    std::fs::write("results/serve_llm.json", json.to_string())?;
+    println!("wrote results/serve_llm.json");
+    coord.shutdown()
+}

@@ -1,0 +1,212 @@
+"""S6 — AOT exporter: lower L2/L1 to HLO **text** artifacts for Rust.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and README gotchas).
+
+Artifacts written to ``artifacts/``:
+
+  * ``gemm_{variant}_m{M}_n{N}_k{K}.hlo.txt`` — the standalone fused
+    W4A16 GEMM (runtime inputs: a, qweight, scales, qzeros) for
+    variant ∈ {splitk, dp}, M ∈ {1, 16}, N = K ∈ GEMM_SIZES.
+  * ``decode_{variant}_b{B}.hlo.txt`` — one decode step of the tiny llama
+    model at batch bucket B (weights baked in as HLO constants; runtime
+    inputs: tokens, kv_cache, pos).
+  * ``manifest.json`` — input/output specs + model/kernel metadata the
+    Rust runtime uses to drive the executables.
+
+Python runs ONLY here (``make artifacts``); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import KernelConfig
+from .model import (ModelConfig, decode_step, gemm_fn, init_kv_cache,
+                    init_params, kv_cache_shape)
+
+GEMM_SIZES = (512, 1024, 2048)
+GEMM_SIZES_FULL = (512, 1024, 2048, 4096)
+GEMM_MS = (1, 16)
+BATCH_BUCKETS = (1, 2, 4, 8, 16)
+GEMM_GROUP_SIZE = 128
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser).
+
+    Printed with ``print_large_constants=True`` — the default printer
+    elides big constants as ``{...}``, which the Rust-side text parser
+    silently reads back as zeros (all baked weights would vanish).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # This jax's metadata includes source_end_line/column attributes the
+    # xla_extension 0.5.1 text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _spec(shape, dtype) -> dict[str, Any]:
+    return {"shape": list(shape), "dtype": str(jnp.dtype(dtype))}
+
+
+def export_gemm(out_dir: str, variant: str, m: int, n: int, k: int,
+                group_size: int, config: KernelConfig) -> dict[str, Any]:
+    fn = gemm_fn(variant, group_size, config)
+    specs = (
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k // 8, n), jnp.int32),
+        jax.ShapeDtypeStruct((k // group_size, n), jnp.float32),
+        jax.ShapeDtypeStruct((k // group_size, n // 8), jnp.int32),
+    )
+    lowered = jax.jit(fn).lower(*specs)
+    name = f"gemm_{variant}_m{m}_n{n}_k{k}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "name": name,
+        "kind": "gemm",
+        "file": os.path.basename(path),
+        "variant": variant,
+        "m": m, "n": n, "k": k,
+        "group_size": group_size,
+        "kernel_config": {
+            "block_m": min(config.block_m, m), "block_n": config.block_n,
+            "block_k": config.block_k,
+            "split_k": config.split_k if variant == "splitk" else 1,
+            "ordering": config.ordering,
+        },
+        "inputs": [
+            {"name": "a", **_spec((m, k), jnp.float32)},
+            {"name": "qweight", **_spec((k // 8, n), jnp.int32)},
+            {"name": "scales", **_spec((k // group_size, n), jnp.float32)},
+            {"name": "qzeros", **_spec((k // group_size, n // 8), jnp.int32)},
+        ],
+        "outputs": [{"name": "c", **_spec((m, n), jnp.float32)}],
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def export_decode(out_dir: str, cfg: ModelConfig, params, batch: int) -> dict[str, Any]:
+    def fn(tokens, kv, pos, start):
+        return decode_step(params, cfg, tokens, kv, pos, start)
+
+    kv_shape = kv_cache_shape(cfg, batch)
+    specs = (
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct(kv_shape, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    # Donate the KV cache: XLA aliases the input buffer for the output
+    # cache, removing a device-side copy of the largest tensor on the
+    # decode hot path (§Perf L2 iteration).
+    lowered = jax.jit(fn, donate_argnums=(1,)).lower(*specs)
+    name = f"decode_{cfg.variant}_b{batch}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "name": name,
+        "kind": "decode",
+        "file": os.path.basename(path),
+        "variant": cfg.variant,
+        "batch": batch,
+        "inputs": [
+            {"name": "tokens", **_spec((batch,), jnp.int32)},
+            {"name": "kv_cache", **_spec(kv_shape, jnp.float32)},
+            {"name": "pos", **_spec((), jnp.int32)},
+            {"name": "start", **_spec((batch,), jnp.int32)},
+        ],
+        "outputs": [
+            {"name": "logits", **_spec((batch, cfg.vocab), jnp.float32)},
+            {"name": "kv_cache", **_spec(kv_shape, jnp.float32)},
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--full", action="store_true",
+                    help="also export the n=k=4096 GEMM artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-decode", action="store_true",
+                    help="only export the GEMM artifacts (fast)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries: list[dict[str, Any]] = []
+    sizes = GEMM_SIZES_FULL if args.full else GEMM_SIZES
+    for variant in ("splitk", "dp"):
+        for m in GEMM_MS:
+            for nk in sizes:
+                # Size-dependent tiles (§Perf L1 iterations 2-3): time on
+                # the interpret-lowered CPU path is ~linear in grid-step
+                # count, so target <= ~32 steps: block_n = nk/4 (capped at
+                # 512), block_k = 128 (the group-size ceiling). VMEM
+                # estimate per step at the largest tile (16x512 out,
+                # 128x512 packed+dequant) is ~0.8 MB double-buffered —
+                # comfortably inside a real TPU's ~16 MB VMEM; see
+                # EXPERIMENTS.md §Perf for the measured sweep.
+                block_n = min(max(nk // 4, 64), 512)
+                block_k = 128 if nk >= 1024 else 64
+                config = KernelConfig(block_m=m, block_n=block_n,
+                                      block_k=block_k,
+                                      split_k=4 if variant == "splitk" else 1)
+                e = export_gemm(args.out, variant, m, nk, nk,
+                                GEMM_GROUP_SIZE, config)
+                entries.append(e)
+                print(f"exported {e['name']} ({e['sha256']})")
+
+    model_cfg = ModelConfig()
+    if not args.skip_decode:
+        params = init_params(model_cfg, seed=args.seed)
+        for b in BATCH_BUCKETS:
+            e = export_decode(args.out, model_cfg, params, b)
+            entries.append(e)
+            print(f"exported {e['name']} ({e['sha256']})")
+
+    manifest = {
+        "format": 1,
+        "model": {
+            "vocab": model_cfg.vocab,
+            "d_model": model_cfg.d_model,
+            "n_layers": model_cfg.n_layers,
+            "n_heads": model_cfg.n_heads,
+            "d_ff": model_cfg.d_ff,
+            "max_seq": model_cfg.max_seq,
+            "group_size": model_cfg.group_size,
+            "variant": model_cfg.variant,
+            "batch_buckets": list(BATCH_BUCKETS),
+            "seed": args.seed,
+        },
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""L1 — Pallas fused W4A16 dequant-GEMM kernels (interpret=True on CPU).
+
+Public surface:
+  * :func:`w4a16_gemm_splitk` — the paper's SplitK fused kernel (S2).
+  * :func:`w4a16_gemm_dp` — the data-parallel baseline (S3).
+  * :class:`KernelConfig` — block sizes / split_k / k-ordering.
+  * :mod:`ref` — pure-jnp oracle (S4).
+"""
+
+from .common import KernelConfig, PACK_FACTOR, cdiv
+from .w4a16_splitk import w4a16_gemm_splitk
+from .w4a16_dp import w4a16_gemm_dp
+from . import ref
+
+__all__ = [
+    "KernelConfig",
+    "PACK_FACTOR",
+    "cdiv",
+    "w4a16_gemm_splitk",
+    "w4a16_gemm_dp",
+    "ref",
+]

@@ -1,0 +1,75 @@
+"""Shared pieces of the fused W4A16 Pallas kernels (L1).
+
+Both decompositions (SplitK and Data-Parallel) share the same in-kernel
+dequantization: unpack int4 nibbles from the packed int32 VMEM block with
+shift/mask (the Triton kernel's ``>>``/``& 0xF``), subtract the per-group
+zero point, multiply by the per-group scale, and feed the MXU ``jnp.dot``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+PACK_FACTOR = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Launch configuration — the analogue of the Triton kernel's
+    ``BLOCK_M/BLOCK_N/BLOCK_K`` + ``SPLIT_K`` meta-parameters.
+
+    ``ordering`` selects how the k-blocks are distributed over the split_k
+    grid axis: ``"strided"`` matches the paper's Algorithm 1 (block ``s``
+    handles k-blocks ``s, s+split_k, ...``); ``"contiguous"`` gives each
+    split a contiguous k-range (the TPU-friendlier schedule, better HBM
+    locality per core). Numerics are identical up to f32 summation order.
+    """
+
+    block_m: int = 16
+    block_n: int = 64
+    block_k: int = 64
+    split_k: int = 4
+    ordering: str = "strided"
+
+    def validate(self, m: int, n: int, k: int, group_size: int) -> None:
+        if self.block_k % PACK_FACTOR != 0:
+            raise ValueError(f"block_k={self.block_k} must be a multiple of 8")
+        if self.block_n % PACK_FACTOR != 0:
+            raise ValueError(f"block_n={self.block_n} must be a multiple of 8")
+        if group_size % self.block_k != 0:
+            raise ValueError(
+                f"group_size={group_size} must be a multiple of block_k={self.block_k} "
+                "(each k-block reads exactly one scale/zero row)")
+        if k % (self.block_k * self.split_k) != 0:
+            raise ValueError(
+                f"k={k} must be a multiple of block_k*split_k="
+                f"{self.block_k * self.split_k}")
+        if n % self.block_n != 0:
+            raise ValueError(f"n={n} must be a multiple of block_n={self.block_n}")
+        if k % group_size != 0:
+            raise ValueError(f"k={k} must be a multiple of group_size={group_size}")
+        if self.ordering not in ("strided", "contiguous"):
+            raise ValueError(f"unknown ordering {self.ordering!r}")
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def dequant_block(qw_blk, scale_blk, qz_blk, block_k: int, block_n: int,
+                  compute_dtype=jnp.float32):
+    """Dequantize one packed VMEM block.
+
+    ``qw_blk``  int32 [block_k//8, block_n]  (packed along k)
+    ``scale_blk`` float [1, block_n]
+    ``qz_blk``  int32 [1, block_n//8]        (packed along n)
+    returns ``compute_dtype`` [block_k, block_n].
+    """
+    shifts_k = (4 * jnp.arange(PACK_FACTOR, dtype=jnp.int32)).reshape(1, PACK_FACTOR, 1)
+    q = ((qw_blk[:, None, :] >> shifts_k) & 0xF).reshape(block_k, block_n)
+    shifts_n = (4 * jnp.arange(PACK_FACTOR, dtype=jnp.int32)).reshape(1, 1, PACK_FACTOR)
+    z = ((qz_blk[:, :, None] >> shifts_n) & 0xF).reshape(1, block_n)
+    b = (q.astype(jnp.float32) - z.astype(jnp.float32)) * scale_blk.astype(jnp.float32)
+    return b.astype(compute_dtype)

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracle for the fused W4A16 kernels (S4).
+
+This is the ground truth every Pallas kernel variant is validated against
+in pytest: unpack int4 -> dequantize -> matmul, written with plain jnp ops
+only (no pallas, no custom calls), so it runs anywhere and its numerics are
+trivially auditable.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PACK_FACTOR = 8
+
+
+def unpack_rows(qweight: jnp.ndarray) -> jnp.ndarray:
+    """int32 [K//8, N] -> int32 [K, N] of values in [0, 15] (packed along K)."""
+    kp, n = qweight.shape
+    shifts = (4 * jnp.arange(PACK_FACTOR, dtype=jnp.int32)).reshape(1, PACK_FACTOR, 1)
+    q = (qweight[:, None, :] >> shifts) & 0xF
+    return q.reshape(kp * PACK_FACTOR, n)
+
+
+def unpack_cols(qzeros: jnp.ndarray) -> jnp.ndarray:
+    """int32 [G, N//8] -> int32 [G, N] of values in [0, 15] (packed along N)."""
+    g, npk = qzeros.shape
+    shifts = (4 * jnp.arange(PACK_FACTOR, dtype=jnp.int32)).reshape(1, 1, PACK_FACTOR)
+    z = (qzeros[:, :, None] >> shifts) & 0xF
+    return z.reshape(g, npk * PACK_FACTOR)
+
+
+def dequantize(qweight: jnp.ndarray, scales: jnp.ndarray, qzeros: jnp.ndarray,
+               group_size: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize to ``dtype`` [K, N]: ``(q - z) * s`` with per-group s, z."""
+    q = unpack_rows(qweight).astype(jnp.float32)  # [K, N]
+    z = unpack_cols(qzeros).astype(jnp.float32)  # [G, N]
+    k, n = q.shape
+    groups = k // group_size
+    q = q.reshape(groups, group_size, n)
+    s = scales.astype(jnp.float32)
+    w = (q - z[:, None, :]) * s[:, None, :]
+    return w.reshape(k, n).astype(dtype)
+
+
+def w4a16_gemm_ref(a: jnp.ndarray, qweight: jnp.ndarray, scales: jnp.ndarray,
+                   qzeros: jnp.ndarray, group_size: int) -> jnp.ndarray:
+    """Oracle for ``C = A @ dequant(B)``; accumulates in f32, returns a.dtype."""
+    w = dequantize(qweight, scales, qzeros, group_size, dtype=a.dtype)
+    out = jnp.dot(a, w, preferred_element_type=jnp.float32)
+    return out.astype(a.dtype)

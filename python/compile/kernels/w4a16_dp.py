@@ -1,0 +1,80 @@
+"""Fused W4A16 dequant + GEMM with **Data-Parallel** decomposition (S3).
+
+The paper's baseline: one "thread block" — here one ``(i, j)`` grid tile —
+is solely responsible for the complete multiply-accumulate over the full
+k extent of its output tile (the classic blocked GEMM). The k loop is the
+third grid axis; since every k-step of a given ``(i, j)`` maps to the same
+output block, there is no cross-tile partial-sum merge — the defining
+contrast with the SplitK kernel.
+
+Dequantization is fused identically to the SplitK kernel so the comparison
+isolates the *decomposition*, exactly as the paper's experiments do ("we
+fixed the tile sizes ... to isolate the impact of SplitK").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import PACK_FACTOR, KernelConfig, cdiv, dequant_block
+
+
+def _kernel(a_ref, qw_ref, scale_ref, qz_ref, o_ref, *, block_k: int,
+            block_n: int, compute_dtype):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(compute_dtype)
+    b = dequant_block(qw_ref[...], scale_ref[...], qz_ref[...], block_k,
+                      block_n, compute_dtype)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def w4a16_gemm_dp(a, qweight, scales, qzeros, *, group_size: int,
+                  config: KernelConfig | None = None,
+                  out_dtype=jnp.float32, interpret: bool = True):
+    """``C = A @ dequant(qweight)`` with the data-parallel (blocked) schedule.
+
+    Same signature as :func:`w4a16_gemm_splitk`; ``config.split_k`` and
+    ``config.ordering`` are ignored (DP is the ``split_k == 1`` limit).
+    """
+    config = config or KernelConfig()
+    m, k = a.shape
+    kp, n = qweight.shape
+    if kp * PACK_FACTOR != k:
+        raise ValueError(f"qweight rows {kp} != k/8 = {k // PACK_FACTOR}")
+    # Validate as if split_k == 1.
+    KernelConfig(config.block_m, config.block_n, config.block_k, 1,
+                 "contiguous").validate(m, n, k, group_size)
+
+    block_m = min(config.block_m, m)
+    block_n, block_k = config.block_n, config.block_k
+    grid = (cdiv(m, block_m), cdiv(n, block_n), k // block_k)
+
+    pack = PACK_FACTOR
+    a_spec = pl.BlockSpec((block_m, block_k), lambda i, j, t: (i, t))
+    qw_spec = pl.BlockSpec((block_k // pack, block_n), lambda i, j, t: (t, j))
+    scale_spec = pl.BlockSpec((1, block_n),
+                              lambda i, j, t: (t * block_k // group_size, j))
+    qz_spec = pl.BlockSpec((1, block_n // pack),
+                           lambda i, j, t: (t * block_k // group_size, j))
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, t: (i, j))
+
+    kernel = functools.partial(_kernel, block_k=block_k, block_n=block_n,
+                               compute_dtype=jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, qw_spec, scale_spec, qz_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(a, qweight, scales, qzeros)

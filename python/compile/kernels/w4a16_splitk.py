@@ -1,0 +1,104 @@
+"""Fused W4A16 dequant + GEMM with **SplitK** work decomposition (S2).
+
+TPU/Pallas adaptation of the paper's Triton kernel (Algorithm 1):
+
+* Triton launches a 2-D grid ``(pid, pid_k)`` where ``pid_k`` indexes the
+  ``split_k`` partial-sum blocks, each striding through the k-blocks with
+  stride ``split_k``, and merges partials with ``tl.atomic_add``.
+* Here the grid is ``(m_tiles, n_tiles, split_k, inner_k)``; the output
+  ``BlockSpec`` maps every ``(s, t)`` to the same ``(i, j)`` tile, so all
+  k-slices *revisit* the output block and accumulate ``o_ref += acc``.
+  On a real TPU the two k axes are ``"arbitrary"`` (sequential per core),
+  which is the TPU-idiomatic analogue of the GPU's exclusive atomic write;
+  under ``interpret=True`` grid steps are sequential by construction.
+  DESIGN.md §8 spells out the full mapping.
+
+The dequantization is fused: the packed int32 weight block is unpacked
+(shift/mask), shifted by the per-group zero point and scaled in-kernel,
+immediately before the MXU dot — exactly the paper's one-step fused
+dequant-GEMM, never materializing the fp16 weight matrix in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import PACK_FACTOR, KernelConfig, cdiv, dequant_block
+
+
+def _kernel(a_ref, qw_ref, scale_ref, qz_ref, o_ref, *, block_k: int,
+            block_n: int, compute_dtype):
+    s = pl.program_id(2)
+    t = pl.program_id(3)
+
+    # First visit to this output tile: zero it (the Triton kernel relies on
+    # a zeroed C buffer; we fold the zeroing into the kernel itself).
+    @pl.when(jnp.logical_and(s == 0, t == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(compute_dtype)
+    b = dequant_block(qw_ref[...], scale_ref[...], qz_ref[...], block_k,
+                      block_n, compute_dtype)
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    # Partial-sum merge — the atomic_add analogue (see module docstring).
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def w4a16_gemm_splitk(a, qweight, scales, qzeros, *, group_size: int,
+                      config: KernelConfig | None = None,
+                      out_dtype=jnp.float32, interpret: bool = True):
+    """``C[m,n] = A[m,k] @ dequant(qweight)[k,n]`` via SplitK decomposition.
+
+    Args:
+      a:       activations ``[m, k]`` (f32/bf16/f16).
+      qweight: packed int4 weights ``int32 [k//8, n]``.
+      scales:  ``[k//group_size, n]``.
+      qzeros:  packed zero points ``int32 [k//group_size, n//8]``.
+      group_size: quantization group length along k.
+      config:  launch configuration (block sizes + split_k + ordering).
+      out_dtype: output/accumulator dtype of the C buffer.
+      interpret: must stay True on CPU-PJRT (Mosaic custom-calls cannot
+        run there); the lowered HLO is what the Rust runtime executes.
+    """
+    config = config or KernelConfig()
+    m, k = a.shape
+    kp, n = qweight.shape
+    if kp * PACK_FACTOR != k:
+        raise ValueError(f"qweight rows {kp} != k/8 = {k // PACK_FACTOR}")
+    config.validate(m, n, k, group_size)
+
+    block_m = min(config.block_m, m)
+    block_n, block_k, split_k = config.block_n, config.block_k, config.split_k
+    inner_k = k // (block_k * split_k)
+    grid = (cdiv(m, block_m), cdiv(n, block_n), split_k, inner_k)
+    strided = config.ordering == "strided"
+
+    def kb(s, t):
+        # k-block index owned by (split s, inner step t).
+        return t * split_k + s if strided else s * inner_k + t
+
+    pack = PACK_FACTOR
+    a_spec = pl.BlockSpec((block_m, block_k), lambda i, j, s, t: (i, kb(s, t)))
+    qw_spec = pl.BlockSpec((block_k // pack, block_n),
+                           lambda i, j, s, t: (kb(s, t), j))
+    scale_spec = pl.BlockSpec((1, block_n),
+                              lambda i, j, s, t: (kb(s, t) * block_k // group_size, j))
+    qz_spec = pl.BlockSpec((1, block_n // pack),
+                           lambda i, j, s, t: (kb(s, t) * block_k // group_size, j))
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j, s, t: (i, j))
+
+    kernel = functools.partial(_kernel, block_k=block_k, block_n=block_n,
+                               compute_dtype=jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[a_spec, qw_spec, scale_spec, qz_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(a, qweight, scales, qzeros)

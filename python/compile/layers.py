@@ -1,0 +1,102 @@
+"""L2 building blocks: llama-style layers with W4A16 quantized linears.
+
+Every projection (qkv, attention output, SwiGLU gate/up/down, lm head) runs
+through the fused Pallas W4A16 kernel, so a decode step of the model is a
+sequence of exactly the skinny ``m = batch`` GEMMs the paper targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import KernelConfig, w4a16_gemm_dp, w4a16_gemm_splitk
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantLinearParams:
+    """Packed parameters of one W4A16 linear layer ``[k_in, n_out]``."""
+
+    qweight: jax.Array  # int32 [k//8, n]
+    scales: jax.Array   # f32   [k//group, n]
+    qzeros: jax.Array   # int32 [k//group, n//8]
+
+    @property
+    def k(self) -> int:
+        return self.qweight.shape[0] * 8
+
+    @property
+    def n(self) -> int:
+        return self.qweight.shape[1]
+
+
+def quant_linear(x: jax.Array, p: QuantLinearParams, *, group_size: int,
+                 config: KernelConfig,
+                 variant: Literal["splitk", "dp"] = "splitk") -> jax.Array:
+    """``x [m, k] @ dequant(p) [k, n] -> [m, n]`` via the fused kernel."""
+    fn = w4a16_gemm_splitk if variant == "splitk" else w4a16_gemm_dp
+    return fn(x, p.qweight, p.scales, p.qzeros, group_size=group_size,
+              config=config, out_dtype=x.dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis (llama-style, no bias)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    normed = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (normed * weight).astype(x.dtype)
+
+
+def rope_angles(head_dim: int, max_seq: int, base: float = 10000.0):
+    """Precomputed RoPE cos/sin tables ``[max_seq, head_dim//2]``."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                               / head_dim))
+    t = jnp.arange(max_seq, dtype=jnp.float32)
+    freqs = jnp.outer(t, inv_freq)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x [..., head_dim]`` by position-specific cos/sin
+    ``[..., head_dim//2]`` (broadcastable)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    """SwiGLU activation: ``silu(gate) * up``."""
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def attention_decode(q, k_new, v_new, k_cache, v_cache, pos, start=None):
+    """Single-token attention against a static-shape KV cache.
+
+    q, k_new, v_new: ``[b, h, hd]`` for the current position.
+    k_cache, v_cache: ``[b, h, max_seq, hd]``.
+    pos: scalar int32, the index being written this step.
+    start: optional int32 ``[b]`` — first valid position per sequence.
+      The Rust batcher left-pads unequal prompts to a common length; pad
+      positions (< start) are masked out of attention so batching never
+      changes a sequence's numerics.
+    Returns (context ``[b, h, hd]``, new k_cache, new v_cache).
+    """
+    b, h, hd = q.shape
+    max_seq = k_cache.shape[2]
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k_new[:, :, None, :], (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v_new[:, :, None, :], (0, 0, pos, 0))
+    scores = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    positions = jnp.arange(max_seq)
+    mask = positions[None, :] <= pos  # causal: only written positions
+    if start is not None:
+        mask = jnp.logical_and(mask, positions[None, :] >= start[:, None])
+    else:
+        mask = jnp.broadcast_to(mask, (b, max_seq))
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bhsd->bhd", probs, v_cache.astype(jnp.float32))
+    return ctx.astype(q.dtype), k_cache, v_cache

@@ -1,0 +1,184 @@
+"""L2 — tiny llama-style decoder with W4A16 quantized projections (S5).
+
+The model exists to put the paper's kernel on a *real* inference path: a
+decode step at batch ``b`` issues exactly the skinny ``m = b`` GEMMs
+(qkv / attn-out / gate / up / down / lm-head) the paper benchmarks.
+
+Weights are random-initialized then GPTQ-style quantized by
+``compile.quant`` (no pretrained checkpoint is available in this
+environment — substitution documented in DESIGN.md §2). ``aot.py`` bakes
+the quantized weights into the exported HLO as constants, so the Rust
+engine's runtime inputs are only ``(tokens, kv_cache, pos)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import KernelConfig
+from .layers import (QuantLinearParams, apply_rope, attention_decode,
+                     quant_linear, rms_norm, rope_angles, swiglu)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + quantization + kernel-launch configuration."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 128
+    group_size: int = 64
+    rope_base: float = 10000.0
+    variant: Literal["splitk", "dp"] = "splitk"
+    block_n: int = 64
+    block_k: int = 64
+    split_k: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def kernel_config(self, m: int) -> KernelConfig:
+        return KernelConfig(block_m=max(m, 1), block_n=self.block_n,
+                            block_k=self.block_k, split_k=self.split_k)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerParams:
+    attn_norm: jax.Array
+    wq: QuantLinearParams
+    wk: QuantLinearParams
+    wv: QuantLinearParams
+    wo: QuantLinearParams
+    mlp_norm: jax.Array
+    w_gate: QuantLinearParams
+    w_up: QuantLinearParams
+    w_down: QuantLinearParams
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelParams:
+    embed: jax.Array  # f32 [vocab, d_model] (not quantized, like GPTQ llama)
+    layers: tuple[LayerParams, ...]
+    final_norm: jax.Array
+    lm_head: QuantLinearParams  # W4A16 [d_model, vocab]
+
+
+def _quantize(rng: np.random.Generator, k: int, n: int, group_size: int,
+              scale: float) -> QuantLinearParams:
+    qw, s, qz, _ = quant.random_quantized_weight(rng, k, n, group_size, scale)
+    return QuantLinearParams(jnp.asarray(qw), jnp.asarray(s), jnp.asarray(qz))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> ModelParams:
+    """Random-init weights, GPTQ-quantize every projection."""
+    rng = np.random.default_rng(seed)
+    d, f, v, g = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.group_size
+    scale = 1.0 / np.sqrt(d)
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(LayerParams(
+            attn_norm=jnp.ones((d,), jnp.float32),
+            wq=_quantize(rng, d, d, g, scale),
+            wk=_quantize(rng, d, d, g, scale),
+            wv=_quantize(rng, d, d, g, scale),
+            wo=_quantize(rng, d, d, g, scale),
+            mlp_norm=jnp.ones((d,), jnp.float32),
+            w_gate=_quantize(rng, d, f, g, scale),
+            w_up=_quantize(rng, d, f, g, scale),
+            w_down=_quantize(rng, f, d, g, 1.0 / np.sqrt(f)),
+        ))
+    embed = jnp.asarray(
+        rng.standard_normal((v, d), dtype=np.float32) * 0.02)
+    return ModelParams(
+        embed=embed,
+        layers=tuple(layers),
+        final_norm=jnp.ones((d,), jnp.float32),
+        lm_head=_quantize(rng, d, v, g, scale),
+    )
+
+
+def kv_cache_shape(cfg: ModelConfig, batch: int) -> tuple[int, ...]:
+    """Shape of the stacked KV cache: ``[layers, 2, b, heads, max_seq, hd]``."""
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int) -> jax.Array:
+    return jnp.zeros(kv_cache_shape(cfg, batch), jnp.float32)
+
+
+def decode_step(params: ModelParams, cfg: ModelConfig, tokens: jax.Array,
+                kv_cache: jax.Array, pos: jax.Array, start=None):
+    """One decode step for a batch of sequences at the same position.
+
+    tokens:   int32 ``[b]`` — current token per sequence.
+    kv_cache: f32 ``[layers, 2, b, h, max_seq, hd]``.
+    pos:      scalar int32 — position the step writes (same for the batch;
+              the Rust batcher left-pads prompts to a common length).
+    start:    optional int32 ``[b]`` — first valid position per sequence;
+              positions before it are padding and masked from attention.
+    Returns ``(logits [b, vocab], new_kv_cache)``.
+    """
+    b = tokens.shape[0]
+    kc = cfg.kernel_config(b)
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    x = params.embed[tokens]  # [b, d]
+    cos_t, sin_t = rope_angles(hd, cfg.max_seq, cfg.rope_base)
+    cos = jax.lax.dynamic_slice_in_dim(cos_t, pos, 1, axis=0)  # [1, hd/2]
+    sin = jax.lax.dynamic_slice_in_dim(sin_t, pos, 1, axis=0)
+
+    new_kv = []
+    for li, lp in enumerate(params.layers):
+        xn = rms_norm(x, lp.attn_norm)
+        q = quant_linear(xn, lp.wq, group_size=cfg.group_size, config=kc,
+                         variant=cfg.variant).reshape(b, h, hd)
+        k = quant_linear(xn, lp.wk, group_size=cfg.group_size, config=kc,
+                         variant=cfg.variant).reshape(b, h, hd)
+        v = quant_linear(xn, lp.wv, group_size=cfg.group_size, config=kc,
+                         variant=cfg.variant).reshape(b, h, hd)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        ctx, k_cache, v_cache = attention_decode(
+            q, k, v, kv_cache[li, 0], kv_cache[li, 1], pos, start)
+        new_kv.append(jnp.stack([k_cache, v_cache], axis=0))
+        attn_out = quant_linear(ctx.reshape(b, h * hd), lp.wo,
+                                group_size=cfg.group_size, config=kc,
+                                variant=cfg.variant)
+        x = x + attn_out
+        xn = rms_norm(x, lp.mlp_norm)
+        gate = quant_linear(xn, lp.w_gate, group_size=cfg.group_size,
+                            config=kc, variant=cfg.variant)
+        up = quant_linear(xn, lp.w_up, group_size=cfg.group_size, config=kc,
+                          variant=cfg.variant)
+        down = quant_linear(swiglu(gate, up), lp.w_down,
+                            group_size=cfg.group_size, config=kc,
+                            variant=cfg.variant)
+        x = x + down
+
+    xn = rms_norm(x, params.final_norm)
+    logits = quant_linear(xn, params.lm_head, group_size=cfg.group_size,
+                          config=kc, variant=cfg.variant)
+    return logits, jnp.stack(new_kv, axis=0)
+
+
+def gemm_fn(variant: str, group_size: int, config: KernelConfig):
+    """Standalone fused-GEMM entry point used for the GEMM artifacts."""
+    from .kernels import w4a16_gemm_dp, w4a16_gemm_splitk
+
+    fn = w4a16_gemm_splitk if variant == "splitk" else w4a16_gemm_dp
+
+    def run(a, qweight, scales, qzeros):
+        return fn(a, qweight, scales, qzeros, group_size=group_size,
+                  config=config)
+
+    return run

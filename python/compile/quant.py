@@ -1,0 +1,125 @@
+"""GPTQ-style W4 packing / quantization substrate (build-time only).
+
+Format (matches the paper's GPTQ-style inputs, S1 in DESIGN.md):
+
+  * ``qweight``: int32[K//8, N]   — 8 int4 nibbles packed along K.
+    Nibble ``i`` (bits ``4*i .. 4*i+3``) of ``qweight[r, n]`` holds the
+    quantized value of logical weight row ``r*8 + i``, column ``n``.
+  * ``scales``:  float[K//G, N]   — per-(group, column) scale.
+  * ``qzeros``:  int32[K//G, N//8] — per-(group, column) zero points,
+    8 int4 nibbles packed along N (nibble ``n % 8`` of column ``n``).
+
+Dequantization: ``w[k, n] = (q[k, n] - z[k//G, n]) * s[k//G, n]``.
+
+This mirrors AutoGPTQ's storage minus the ``g_idx`` permutation (we use
+contiguous groups) and minus the historical ``zeros - 1`` bias quirk.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+PACK_FACTOR = 8  # int4 values per int32
+QMAX = 15  # unsigned 4-bit range [0, 15]
+
+
+def pack_along_rows(q: np.ndarray) -> np.ndarray:
+    """Pack uint4 values (rows are the packed axis) into int32.
+
+    ``q``: integer array [K, N] with values in [0, 15].
+    Returns int32 [K//8, N].
+    """
+    k, n = q.shape
+    if k % PACK_FACTOR != 0:
+        raise ValueError(f"K={k} must be a multiple of {PACK_FACTOR}")
+    if q.min() < 0 or q.max() > QMAX:
+        raise ValueError("quantized values out of int4 range [0, 15]")
+    q = q.astype(np.uint32).reshape(k // PACK_FACTOR, PACK_FACTOR, n)
+    shifts = (4 * np.arange(PACK_FACTOR, dtype=np.uint32)).reshape(1, PACK_FACTOR, 1)
+    packed = np.bitwise_or.reduce(q << shifts, axis=1)
+    return packed.view(np.int32)
+
+
+def unpack_along_rows(packed: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_along_rows`. int32 [K//8, N] -> uint8 [K, N]."""
+    kp, n = packed.shape
+    u = packed.view(np.uint32)[:, None, :]  # [K//8, 1, N]
+    shifts = (4 * np.arange(PACK_FACTOR, dtype=np.uint32)).reshape(1, PACK_FACTOR, 1)
+    q = (u >> shifts) & 0xF
+    return q.reshape(kp * PACK_FACTOR, n).astype(np.uint8)
+
+
+def pack_along_cols(q: np.ndarray) -> np.ndarray:
+    """Pack uint4 values (cols are the packed axis) into int32.
+
+    ``q``: integer array [G, N] with values in [0, 15].
+    Returns int32 [G, N//8].
+    """
+    g, n = q.shape
+    if n % PACK_FACTOR != 0:
+        raise ValueError(f"N={n} must be a multiple of {PACK_FACTOR}")
+    if q.min() < 0 or q.max() > QMAX:
+        raise ValueError("quantized values out of int4 range [0, 15]")
+    q = q.astype(np.uint32).reshape(g, n // PACK_FACTOR, PACK_FACTOR)
+    shifts = (4 * np.arange(PACK_FACTOR, dtype=np.uint32)).reshape(1, 1, PACK_FACTOR)
+    packed = np.bitwise_or.reduce(q << shifts, axis=2)
+    return packed.view(np.int32)
+
+
+def unpack_along_cols(packed: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_along_cols`. int32 [G, N//8] -> uint8 [G, N]."""
+    g, npk = packed.shape
+    u = packed.view(np.uint32)[:, :, None]  # [G, N//8, 1]
+    shifts = (4 * np.arange(PACK_FACTOR, dtype=np.uint32)).reshape(1, 1, PACK_FACTOR)
+    q = (u >> shifts) & 0xF
+    return q.reshape(g, npk * PACK_FACTOR).astype(np.uint8)
+
+
+def quantize_weight(w: np.ndarray, group_size: int):
+    """Asymmetric per-(group, column) int4 quantization of ``w`` [K, N].
+
+    Returns ``(qweight int32[K//8, N], scales f32[K//G, N],
+    qzeros int32[K//G, N//8])``.
+    """
+    k, n = w.shape
+    if k % group_size != 0:
+        raise ValueError(f"K={k} must be a multiple of group_size={group_size}")
+    groups = k // group_size
+    wg = w.reshape(groups, group_size, n).astype(np.float32)
+    # Extend the range to include 0 (standard asymmetric-quant practice):
+    # guarantees 0.0 is exactly representable and keeps constant groups
+    # from degenerating to a ~0 scale.
+    wmax = np.maximum(wg.max(axis=1), 0.0)  # [G, N]
+    wmin = np.minimum(wg.min(axis=1), 0.0)
+    scales = np.maximum((wmax - wmin) / QMAX, 1e-8).astype(np.float32)
+    zeros = np.clip(np.round(-wmin / scales), 0, QMAX).astype(np.uint8)
+    q = np.clip(
+        np.round(wg / scales[:, None, :]) + zeros[:, None, :].astype(np.float32),
+        0,
+        QMAX,
+    ).astype(np.uint8)
+    qweight = pack_along_rows(q.reshape(k, n))
+    qzeros = pack_along_cols(zeros)
+    return qweight, scales, qzeros
+
+
+def dequantize(qweight: np.ndarray, scales: np.ndarray, qzeros: np.ndarray,
+               group_size: int) -> np.ndarray:
+    """Reference dequantization to f32 [K, N] (numpy; mirrors ref.py)."""
+    q = unpack_along_rows(qweight).astype(np.float32)  # [K, N]
+    z = unpack_along_cols(qzeros).astype(np.float32)  # [G, N]
+    k, n = q.shape
+    groups = k // group_size
+    s = scales.astype(np.float32)
+    q = q.reshape(groups, group_size, n)
+    w = (q - z[:, None, :]) * s[:, None, :]
+    return w.reshape(k, n)
+
+
+def random_quantized_weight(rng: np.random.Generator, k: int, n: int,
+                            group_size: int, scale: float = 0.02):
+    """Random fp weight -> quantized tuple; returns (qweight, scales, qzeros, w_dequant)."""
+    w = rng.standard_normal((k, n), dtype=np.float32) * scale
+    qweight, scales, qzeros = quantize_weight(w, group_size)
+    wd = dequantize(qweight, scales, qzeros, group_size)
+    return qweight, scales, qzeros, wd

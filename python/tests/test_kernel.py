@@ -1,0 +1,200 @@
+"""L1 core correctness: Pallas fused kernels vs the pure-jnp oracle.
+
+Every variant (SplitK strided/contiguous, DP) must match ``ref.py`` to f32
+tolerance across shapes, block configs, split factors, group sizes and
+dtypes — this is the signal that the fused dequant + decomposition is
+numerically faithful to the paper's kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+from compile.kernels import (KernelConfig, ref, w4a16_gemm_dp,
+                             w4a16_gemm_splitk)
+
+
+def make_case(m, n, k, group_size, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    qw, s, qz, _ = quant.random_quantized_weight(rng, k, n, group_size)
+    a = jnp.asarray(rng.standard_normal((m, k), dtype=np.float32)).astype(dtype)
+    return a, jnp.asarray(qw), jnp.asarray(s), jnp.asarray(qz)
+
+
+def check(fn, config, m=4, n=128, k=256, group_size=64, seed=0,
+          dtype=jnp.float32, atol=2e-5):
+    a, qw, s, qz = make_case(m, n, k, group_size, seed, dtype)
+    want = ref.w4a16_gemm_ref(a, qw, s, qz, group_size)
+    got = fn(a, qw, s, qz, group_size=group_size, config=config,
+             out_dtype=dtype)
+    assert got.shape == want.shape
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=1e-4)
+
+
+class TestRefOracle:
+    """The oracle itself vs numpy — guards the guard."""
+
+    def test_dequant_matches_numpy(self):
+        rng = np.random.default_rng(7)
+        qw, s, qz, wd_np = quant.random_quantized_weight(rng, 256, 64, 64)
+        wd = ref.dequantize(jnp.asarray(qw), jnp.asarray(s), jnp.asarray(qz), 64)
+        np.testing.assert_allclose(np.asarray(wd), wd_np, atol=1e-6)
+
+    def test_gemm_matches_numpy(self):
+        rng = np.random.default_rng(8)
+        qw, s, qz, wd_np = quant.random_quantized_weight(rng, 128, 64, 32)
+        a = rng.standard_normal((3, 128), dtype=np.float32)
+        want = a @ wd_np
+        got = ref.w4a16_gemm_ref(jnp.asarray(a), jnp.asarray(qw),
+                                 jnp.asarray(s), jnp.asarray(qz), 32)
+        np.testing.assert_allclose(np.asarray(got), want, atol=1e-4, rtol=1e-4)
+
+    def test_unpack_rows_matches_numpy(self):
+        rng = np.random.default_rng(9)
+        q = rng.integers(0, 16, size=(64, 24), dtype=np.uint8)
+        packed = quant.pack_along_rows(q)
+        got = ref.unpack_rows(jnp.asarray(packed))
+        np.testing.assert_array_equal(np.asarray(got), q)
+
+    def test_unpack_cols_matches_numpy(self):
+        rng = np.random.default_rng(10)
+        z = rng.integers(0, 16, size=(4, 64), dtype=np.uint8)
+        packed = quant.pack_along_cols(z)
+        got = ref.unpack_cols(jnp.asarray(packed))
+        np.testing.assert_array_equal(np.asarray(got), z)
+
+
+class TestSplitK:
+    @pytest.mark.parametrize("split_k", [1, 2, 4, 8])
+    def test_split_factors(self, split_k):
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=4, block_n=64, block_k=32, split_k=split_k))
+
+    @pytest.mark.parametrize("ordering", ["strided", "contiguous"])
+    def test_orderings(self, ordering):
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=4, block_n=32, block_k=32, split_k=4,
+                           ordering=ordering))
+
+    @pytest.mark.parametrize("m", [1, 2, 16])
+    def test_paper_batch_range(self, m):
+        # The paper's regime: m = batch in 1..16.
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=m, block_n=64, block_k=64, split_k=4),
+              m=m, n=256, k=512, group_size=128)
+
+    @pytest.mark.parametrize("group_size", [32, 64, 128, 256])
+    def test_group_sizes(self, group_size):
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=2, block_n=64, block_k=32, split_k=2),
+              m=2, n=128, k=256, group_size=group_size)
+
+    def test_block_m_larger_than_m(self):
+        # block_m is clamped to m (the m=1 decode case).
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=16, block_n=64, block_k=32, split_k=4),
+              m=1)
+
+    def test_square_llama_shape(self):
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=16, block_n=64, block_k=64, split_k=4),
+              m=16, n=512, k=512, group_size=128)
+
+    def test_bf16_activations(self):
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=4, block_n=64, block_k=32, split_k=4),
+              dtype=jnp.bfloat16, atol=0.15)
+
+    def test_rejects_indivisible_k(self):
+        a, qw, s, qz = make_case(4, 128, 256, 64)
+        with pytest.raises(ValueError):
+            w4a16_gemm_splitk(a, qw, s, qz, group_size=64,
+                              config=KernelConfig(block_m=4, block_n=64,
+                                                  block_k=64, split_k=8))
+
+    def test_rejects_block_k_over_group(self):
+        a, qw, s, qz = make_case(4, 128, 256, 32)
+        with pytest.raises(ValueError):
+            w4a16_gemm_splitk(a, qw, s, qz, group_size=32,
+                              config=KernelConfig(block_m=4, block_n=64,
+                                                  block_k=64, split_k=2))
+
+    def test_rejects_bad_ordering(self):
+        a, qw, s, qz = make_case(4, 128, 256, 64)
+        with pytest.raises(ValueError):
+            w4a16_gemm_splitk(a, qw, s, qz, group_size=64,
+                              config=KernelConfig(ordering="zigzag"))
+
+    def test_jit_compatible(self):
+        a, qw, s, qz = make_case(4, 128, 256, 64)
+        cfg = KernelConfig(block_m=4, block_n=64, block_k=32, split_k=4)
+        f = jax.jit(lambda *xs: w4a16_gemm_splitk(
+            *xs, group_size=64, config=cfg))
+        want = ref.w4a16_gemm_ref(a, qw, s, qz, 64)
+        np.testing.assert_allclose(np.asarray(f(a, qw, s, qz)),
+                                   np.asarray(want), atol=2e-5, rtol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([1, 2, 3, 8, 16]),
+        n_blocks=st.integers(1, 4),
+        k_cfg=st.sampled_from([(32, 2, 2), (32, 4, 2), (64, 2, 4), (64, 4, 1)]),
+        ordering=st.sampled_from(["strided", "contiguous"]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, m, n_blocks, k_cfg, ordering, seed):
+        block_k, split_k, inner = k_cfg
+        k = block_k * split_k * inner
+        group_size = k if k <= 256 else block_k
+        # group_size must be a multiple of block_k and divide k.
+        group_size = block_k * max(1, group_size // block_k)
+        while k % group_size:
+            group_size //= 2
+        n = 64 * n_blocks
+        check(w4a16_gemm_splitk,
+              KernelConfig(block_m=m, block_n=64, block_k=block_k,
+                           split_k=split_k, ordering=ordering),
+              m=m, n=n, k=k, group_size=group_size, seed=seed)
+
+
+class TestDataParallel:
+    @pytest.mark.parametrize("m", [1, 4, 16])
+    def test_batch_range(self, m):
+        check(w4a16_gemm_dp,
+              KernelConfig(block_m=m, block_n=64, block_k=64),
+              m=m, n=256, k=512, group_size=128)
+
+    @pytest.mark.parametrize("block_k", [8, 16, 32, 64])
+    def test_block_k_sweep(self, block_k):
+        check(w4a16_gemm_dp,
+              KernelConfig(block_m=4, block_n=64, block_k=block_k),
+              group_size=64)
+
+    def test_matches_splitk(self):
+        # Both decompositions compute the same C (different summation order).
+        a, qw, s, qz = make_case(8, 128, 512, 128, seed=11)
+        cfg = KernelConfig(block_m=8, block_n=64, block_k=64, split_k=4)
+        sk = w4a16_gemm_splitk(a, qw, s, qz, group_size=128, config=cfg)
+        dp = w4a16_gemm_dp(a, qw, s, qz, group_size=128, config=cfg)
+        np.testing.assert_allclose(np.asarray(sk), np.asarray(dp),
+                                   atol=2e-5, rtol=1e-5)
+
+    def test_bf16(self):
+        check(w4a16_gemm_dp, KernelConfig(block_m=4, block_n=64, block_k=32),
+              dtype=jnp.bfloat16, atol=0.15)
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.sampled_from([1, 5, 16]), n_blocks=st.integers(1, 3),
+           k_blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, m, n_blocks, k_blocks, seed):
+        k = 64 * k_blocks
+        check(w4a16_gemm_dp,
+              KernelConfig(block_m=m, block_n=64, block_k=64),
+              m=m, n=64 * n_blocks, k=k, group_size=64, seed=seed)

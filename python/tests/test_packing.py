@@ -1,0 +1,124 @@
+"""S1 tests: GPTQ-style int4 packing + quantization round-trips."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+
+
+class TestPackRows:
+    def test_roundtrip_small(self):
+        rng = np.random.default_rng(0)
+        q = rng.integers(0, 16, size=(16, 8), dtype=np.uint8)
+        packed = quant.pack_along_rows(q)
+        assert packed.shape == (2, 8)
+        assert packed.dtype == np.int32
+        np.testing.assert_array_equal(quant.unpack_along_rows(packed), q)
+
+    def test_nibble_order(self):
+        # Row r*8+i lands in bits 4i..4i+3 — the GPTQ layout the kernel
+        # unpacks with (x >> 4*i) & 0xF.
+        q = np.zeros((8, 1), dtype=np.uint8)
+        q[3, 0] = 0xA
+        packed = quant.pack_along_rows(q)
+        assert (int(packed[0, 0].view(np.uint32) if hasattr(packed[0, 0], 'view') else np.uint32(packed[0, 0])) >> 12) & 0xF == 0xA
+
+    def test_high_nibble_sign_bit(self):
+        # Nibble 7 >= 8 sets the int32 sign bit; unpack must still mask.
+        q = np.full((8, 4), 15, dtype=np.uint8)
+        packed = quant.pack_along_rows(q)
+        assert (packed < 0).all()  # 0xFFFFFFFF as int32
+        np.testing.assert_array_equal(quant.unpack_along_rows(packed), q)
+
+    def test_rejects_bad_k(self):
+        with pytest.raises(ValueError):
+            quant.pack_along_rows(np.zeros((7, 4), dtype=np.uint8))
+
+    def test_rejects_out_of_range(self):
+        with pytest.raises(ValueError):
+            quant.pack_along_rows(np.full((8, 4), 16, dtype=np.int32))
+
+    @settings(max_examples=30, deadline=None)
+    @given(kp=st.integers(1, 16), n=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_hypothesis(self, kp, n, seed):
+        rng = np.random.default_rng(seed)
+        q = rng.integers(0, 16, size=(kp * 8, n), dtype=np.uint8)
+        np.testing.assert_array_equal(
+            quant.unpack_along_rows(quant.pack_along_rows(q)), q)
+
+
+class TestPackCols:
+    def test_roundtrip_small(self):
+        rng = np.random.default_rng(1)
+        z = rng.integers(0, 16, size=(4, 32), dtype=np.uint8)
+        packed = quant.pack_along_cols(z)
+        assert packed.shape == (4, 4)
+        np.testing.assert_array_equal(quant.unpack_along_cols(packed), z)
+
+    def test_rejects_bad_n(self):
+        with pytest.raises(ValueError):
+            quant.pack_along_cols(np.zeros((4, 12), dtype=np.uint8))
+
+    @settings(max_examples=30, deadline=None)
+    @given(g=st.integers(1, 8), npk=st.integers(1, 16),
+           seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_hypothesis(self, g, npk, seed):
+        rng = np.random.default_rng(seed)
+        z = rng.integers(0, 16, size=(g, npk * 8), dtype=np.uint8)
+        np.testing.assert_array_equal(
+            quant.unpack_along_cols(quant.pack_along_cols(z)), z)
+
+
+class TestQuantize:
+    def test_shapes(self):
+        rng = np.random.default_rng(2)
+        w = rng.standard_normal((256, 64), dtype=np.float32)
+        qw, s, qz = quant.quantize_weight(w, group_size=64)
+        assert qw.shape == (32, 64) and qw.dtype == np.int32
+        assert s.shape == (4, 64) and s.dtype == np.float32
+        assert qz.shape == (4, 8) and qz.dtype == np.int32
+
+    def test_dequant_error_bound(self):
+        # Asymmetric int4: |w - dq(q(w))| <= scale/2 per element.
+        rng = np.random.default_rng(3)
+        w = rng.standard_normal((128, 32), dtype=np.float32)
+        qw, s, qz = quant.quantize_weight(w, group_size=32)
+        wd = quant.dequantize(qw, s, qz, group_size=32)
+        err = np.abs(wd - w)
+        bound = np.repeat(s, 32, axis=0) * 0.5 + 1e-6
+        assert (err <= bound).all()
+
+    def test_constant_group_exact(self):
+        # A constant group quantizes exactly (scale floor keeps it finite).
+        w = np.full((64, 8), 0.37, dtype=np.float32)
+        qw, s, qz = quant.quantize_weight(w, group_size=64)
+        wd = quant.dequantize(qw, s, qz, group_size=64)
+        np.testing.assert_allclose(wd, w, atol=1e-5)
+
+    def test_extremes_hit_qmin_qmax(self):
+        w = np.tile(np.linspace(-1, 1, 64, dtype=np.float32).reshape(64, 1),
+                    (1, 8))
+        qw, s, qz = quant.quantize_weight(w, group_size=64)
+        q = quant.unpack_along_rows(qw)
+        # fp rounding at the half-step boundary may cost one level.
+        assert q.min() <= 1 and q.max() >= 14
+
+    def test_rejects_bad_group(self):
+        with pytest.raises(ValueError):
+            quant.quantize_weight(np.zeros((100, 8), np.float32), group_size=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(groups=st.integers(1, 4), n=st.sampled_from([8, 16, 32]),
+           group_size=st.sampled_from([8, 16, 32, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_error_bound_hypothesis(self, groups, n, group_size, seed):
+        rng = np.random.default_rng(seed)
+        k = groups * group_size
+        w = rng.standard_normal((k, n), dtype=np.float32)
+        qw, s, qz = quant.quantize_weight(w, group_size)
+        wd = quant.dequantize(qw, s, qz, group_size)
+        bound = np.repeat(s, group_size, axis=0) * 0.5 + 1e-5
+        assert (np.abs(wd - w) <= bound).all()

@@ -1,0 +1,94 @@
+//! Bench: L3 coordinator hot paths *without* PJRT — batcher push/poll
+//! cycles, metrics recording, JSON/manifest parsing — plus, when the
+//! artifacts are present, the end-to-end serving loop (decode step rate
+//! and request turnaround through the real engine).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::config::ServeConfig;
+use splitk_w4a16::coordinator::{Coordinator, DynamicBatcher, GenerateRequest};
+use splitk_w4a16::metrics::ServingMetrics;
+use splitk_w4a16::runtime::Manifest;
+use splitk_w4a16::util::{Bench, Json};
+
+fn req(id: u64, at: Instant) -> GenerateRequest {
+    GenerateRequest {
+        id,
+        prompt: vec![1, 2, 3],
+        max_new_tokens: 4,
+        stop_token: None,
+        accepted_at: at,
+    }
+}
+
+fn main() {
+    let mut bench = Bench::default();
+
+    // Batcher: full push->poll cycle for a 16-burst (the hot path that
+    // sits in front of every decode step).
+    bench.run("batcher_push_poll_16", || {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4, 8, 16],
+                                        Duration::ZERO, 1024);
+        let t0 = Instant::now();
+        for i in 0..16 {
+            b.push(req(i, t0)).unwrap();
+        }
+        while b.poll(t0).is_some() {}
+    });
+
+    // Metrics: request + step recording (engine-loop frequency).
+    let metrics = ServingMetrics::new();
+    bench.run("metrics_record_request", || {
+        metrics.record_request(12.5, 8, 0.5);
+    });
+    bench.run("metrics_record_step", || {
+        metrics.record_step(850.0, 16);
+    });
+
+    // Manifest parsing (startup path, also a JSON-parser macro-bench).
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        bench.run("json_parse_manifest", || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        });
+        bench.run("manifest_load_validate", || {
+            std::hint::black_box(Manifest::load(&dir).unwrap());
+        });
+
+        // End-to-end: one batched request through the live engine.
+        let cfg = ServeConfig {
+            artifacts_dir: dir,
+            batch_window_ms: 1,
+            max_new_tokens: 8,
+            ..Default::default()
+        };
+        println!("starting live coordinator for e2e bench...");
+        let coord = Coordinator::start(&cfg).expect("coordinator");
+        let mut e2e = Bench::new(Duration::from_secs(20), 12, 1);
+        e2e.run("e2e_request_b1_4tok", || {
+            coord
+                .submit(vec![5, 9, 13], 4, None)
+                .unwrap()
+                .wait()
+                .unwrap();
+        });
+        e2e.run("e2e_burst16_2tok", || {
+            let pending: Vec<_> = (0..16)
+                .map(|i| coord.submit(vec![i + 1, 2], 2, None).unwrap())
+                .collect();
+            for p in pending {
+                p.wait().unwrap();
+            }
+        });
+        println!("{}", coord.metrics().summary());
+        coord.shutdown().unwrap();
+        std::fs::create_dir_all("results").ok();
+        e2e.write_json("results/bench_coordinator_e2e.json").ok();
+    } else {
+        eprintln!("artifacts/ missing: skipping manifest + e2e benches");
+    }
+    std::fs::create_dir_all("results").ok();
+    bench.write_json("results/bench_coordinator.json").ok();
+}

@@ -1,0 +1,35 @@
+//! Bench: simulator hot paths — occupancy calculation, one full
+//! simulate() call, and the Table-7 Nsight comparison. The simulator
+//! sits inside the autotuner's search loop, so its per-call cost matters.
+
+use splitk_w4a16::gpusim::{simulate, DeviceConfig, Occupancy};
+use splitk_w4a16::kernels::{dp_launch, splitk_launch, GemmShape, TileConfig};
+use splitk_w4a16::tables::nsight_comparison;
+use splitk_w4a16::util::Bench;
+
+fn main() {
+    let dev = DeviceConfig::a100_40gb_pcie();
+    let shape = GemmShape::square(16, 4096);
+    let tiles = TileConfig::paper_splitk();
+    let launch = splitk_launch(&dev, &shape, &tiles, 4);
+    let dp = dp_launch(&dev, &shape, &TileConfig::paper_dp());
+
+    let mut bench = Bench::default();
+    bench.run("occupancy_compute", || {
+        std::hint::black_box(Occupancy::compute(&dev, &launch));
+    });
+    bench.run("build_splitk_launch", || {
+        std::hint::black_box(splitk_launch(&dev, &shape, &tiles, 4));
+    });
+    bench.run("simulate_splitk", || {
+        std::hint::black_box(simulate(&dev, &launch));
+    });
+    bench.run("simulate_dp", || {
+        std::hint::black_box(simulate(&dev, &dp));
+    });
+    bench.run("nsight_comparison_table7", || {
+        std::hint::black_box(nsight_comparison(&dev));
+    });
+    std::fs::create_dir_all("results").ok();
+    bench.write_json("results/bench_gpusim.json").ok();
+}

@@ -1,0 +1,59 @@
+//! Bench: the REAL fused W4A16 kernels (AOT Pallas -> PJRT CPU), SplitK
+//! vs Data-Parallel, across the paper's m ∈ {1, 16} and n = k sweep —
+//! the real-numerics counterpart of Tables 1–6. Absolute times are
+//! CPU-PJRT (interpret-lowered) and not GPU-comparable; what matters is
+//! that both variants run the identical math from the same artifacts.
+//!
+//! Skips (exit 0) if artifacts are not built.
+
+use std::path::PathBuf;
+
+use splitk_w4a16::quant::{quantize_weight, MatF32};
+use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
+use splitk_w4a16::util::{Bench, Rng};
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping kernel_cpu bench: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let shapes = manifest.gemm_shapes("splitk");
+    let runtime = Runtime::cpu().expect("pjrt");
+    let mut cache = ExecutableCache::new(runtime, manifest);
+    let mut bench = Bench::quick();
+    let mut rng = Rng::seed_from(11);
+
+    for (m, n, k) in shapes {
+        let entry_sk = cache.manifest().find_gemm("splitk", m, n, k)
+            .unwrap().clone();
+        let entry_dp = match cache.manifest().find_gemm("dp", m, n, k) {
+            Ok(e) => e.clone(),
+            Err(_) => continue,
+        };
+        let group = entry_sk.group_size.unwrap();
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.05));
+        let q = quantize_weight(&w, group);
+        let inputs = [
+            HostTensor::f32(vec![m, k], a),
+            HostTensor::i32(vec![q.qweight.rows, q.qweight.cols],
+                            q.qweight.data.clone()),
+            HostTensor::f32(vec![q.scales.rows, q.scales.cols],
+                            q.scales.data.clone()),
+            HostTensor::i32(vec![q.qzeros.rows, q.qzeros.cols],
+                            q.qzeros.data.clone()),
+        ];
+        let sk = cache.get(&entry_sk).unwrap();
+        bench.run(&format!("gemm_splitk_m{m}_nk{n}"), || {
+            sk.run(&inputs).unwrap();
+        });
+        let dp = cache.get(&entry_dp).unwrap();
+        bench.run(&format!("gemm_dp_m{m}_nk{n}"), || {
+            dp.run(&inputs).unwrap();
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench.write_json("results/bench_kernel_cpu.json").ok();
+}

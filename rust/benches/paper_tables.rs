@@ -1,0 +1,36 @@
+//! Bench: regenerate Tables 1–6 (Figures 3–8) on the calibrated
+//! simulator — one benchmark per paper table, timing the full n=k sweep
+//! and printing mean/peak speedups so the bench log doubles as the
+//! experiment record.
+
+use splitk_w4a16::gpusim::DeviceConfig;
+use splitk_w4a16::tables::tflops_table;
+use splitk_w4a16::util::Bench;
+
+fn main() {
+    let mut bench = Bench::default();
+    let specs = [
+        ("table1_a100_40_m1", DeviceConfig::a100_40gb_pcie(), 1u64),
+        ("table2_a100_80_m1", DeviceConfig::a100_80gb_sxm(), 1),
+        ("table3_h100_m1", DeviceConfig::h100_pcie(), 1),
+        ("table4_a100_40_m16", DeviceConfig::a100_40gb_pcie(), 16),
+        ("table5_a100_80_m16", DeviceConfig::a100_80gb_sxm(), 16),
+        ("table6_h100_m16", DeviceConfig::h100_pcie(), 16),
+    ];
+    for (name, dev, m) in specs {
+        let mut last = None;
+        bench.run(name, || {
+            last = Some(tflops_table(&dev, m));
+        });
+        let t = last.unwrap();
+        println!(
+            "    -> mean speedup {:.2}x  peak {:.2}x  (splitk wins {}/{} rows)",
+            t.mean_speedup(),
+            t.peak_speedup(),
+            t.rows.iter().filter(|r| r.speedup > 1.0).count(),
+            t.rows.len()
+        );
+    }
+    std::fs::create_dir_all("results").ok();
+    bench.write_json("results/bench_paper_tables.json").ok();
+}

@@ -1,0 +1,34 @@
+//! Bench: Figures 9/10 — the split_k factor sweep on A100 and H100, plus
+//! the autotuner that consumes it. Prints the best factor per device
+//! (paper §3.3: 4 on A100, 8 on H100).
+
+use splitk_w4a16::gpusim::DeviceConfig;
+use splitk_w4a16::kernels::{autotune_split_k, GemmShape, TileConfig};
+use splitk_w4a16::tables::split_factor_sweep;
+use splitk_w4a16::util::Bench;
+
+fn main() {
+    let mut bench = Bench::default();
+    for (name, dev) in [
+        ("figure9_split_sweep_a100", DeviceConfig::a100_80gb_sxm()),
+        ("figure10_split_sweep_h100", DeviceConfig::h100_pcie()),
+    ] {
+        let mut last = None;
+        bench.run(name, || {
+            last = Some(split_factor_sweep(&dev, 16));
+        });
+        println!("    -> best split_k = {}", last.unwrap().best_split_k());
+    }
+
+    let tiles = TileConfig::paper_splitk();
+    for dev in DeviceConfig::paper_devices() {
+        let shape = GemmShape::square(16, 4096);
+        let mut best = 0;
+        bench.run(&format!("autotune_4096_{}", dev.name.replace(' ', "_")), || {
+            best = autotune_split_k(&dev, &shape, &tiles).best_split_k;
+        });
+        println!("    -> best split_k at n=k=4096: {best}");
+    }
+    std::fs::create_dir_all("results").ok();
+    bench.write_json("results/bench_splitk_factor.json").ok();
+}

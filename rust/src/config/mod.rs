@@ -1,0 +1,214 @@
+//! S12 — configuration system (JSON-backed via the in-tree parser).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::Json;
+
+/// Top-level configuration for the serving binary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Directory containing `manifest.json` and the HLO artifacts.
+    pub artifacts_dir: PathBuf,
+    /// Batch buckets the batcher may form (must be exported artifacts).
+    pub batch_buckets: Vec<usize>,
+    /// Max time the batcher waits to fill a bucket before flushing, ms.
+    pub batch_window_ms: u64,
+    /// Bounded request queue depth (back-pressure beyond this).
+    pub queue_depth: usize,
+    /// Default max new tokens per request (requests may ask for fewer).
+    pub max_new_tokens: usize,
+    /// Hard cap on sequence length (must match the exported max_seq).
+    pub max_seq: usize,
+    /// Greedy sampling (argmax) — the only mode; deterministic replay.
+    pub greedy: bool,
+    /// Decode variant to serve: "splitk" (default) or "dp".
+    pub variant: String,
+    /// Compile every decode bucket at startup (production default).
+    /// Disable for fast-start tools/tests; buckets then compile lazily.
+    pub warm_start: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            batch_buckets: vec![1, 2, 4, 8, 16],
+            batch_window_ms: 2,
+            queue_depth: 256,
+            max_new_tokens: 32,
+            max_seq: 128,
+            greedy: true,
+            variant: "splitk".into(),
+            warm_start: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file; absent keys keep their defaults.
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let cfg = Self::from_json(&Json::parse(&text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Build from a parsed JSON object (defaults for missing keys).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        Ok(ServeConfig {
+            artifacts_dir: match v.opt("artifacts_dir") {
+                Some(s) => PathBuf::from(s.as_str()?),
+                None => d.artifacts_dir,
+            },
+            batch_buckets: match v.opt("batch_buckets") {
+                Some(a) => a.as_usize_vec()?,
+                None => d.batch_buckets,
+            },
+            batch_window_ms: match v.opt("batch_window_ms") {
+                Some(n) => n.as_u64()?,
+                None => d.batch_window_ms,
+            },
+            queue_depth: match v.opt("queue_depth") {
+                Some(n) => n.as_usize()?,
+                None => d.queue_depth,
+            },
+            max_new_tokens: match v.opt("max_new_tokens") {
+                Some(n) => n.as_usize()?,
+                None => d.max_new_tokens,
+            },
+            max_seq: match v.opt("max_seq") {
+                Some(n) => n.as_usize()?,
+                None => d.max_seq,
+            },
+            greedy: match v.opt("greedy") {
+                Some(b) => b.as_bool()?,
+                None => d.greedy,
+            },
+            variant: match v.opt("variant") {
+                Some(s) => s.as_str()?.to_string(),
+                None => d.variant,
+            },
+            warm_start: match v.opt("warm_start") {
+                Some(b) => b.as_bool()?,
+                None => d.warm_start,
+            },
+        })
+    }
+
+    /// Serialize to JSON (round-trips through [`Self::from_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifacts_dir",
+             Json::str(self.artifacts_dir.display().to_string())),
+            ("batch_buckets",
+             Json::Arr(self.batch_buckets.iter()
+                       .map(|&b| Json::num(b as f64)).collect())),
+            ("batch_window_ms", Json::num(self.batch_window_ms as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("max_new_tokens", Json::num(self.max_new_tokens as f64)),
+            ("max_seq", Json::num(self.max_seq as f64)),
+            ("greedy", Json::Bool(self.greedy)),
+            ("variant", Json::str(self.variant.clone())),
+            ("warm_start", Json::Bool(self.warm_start)),
+        ])
+    }
+
+    /// Sanity-check invariants the engine relies on.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.batch_buckets.is_empty(), "batch_buckets is empty");
+        ensure!(
+            self.batch_buckets.windows(2).all(|w| w[0] < w[1]),
+            "batch_buckets must be strictly increasing"
+        );
+        ensure!(
+            self.batch_buckets.iter().all(|&b| b >= 1),
+            "batch buckets must be >= 1"
+        );
+        ensure!(self.queue_depth > 0, "queue_depth must be > 0");
+        ensure!(self.max_new_tokens > 0, "max_new_tokens must be > 0");
+        ensure!(self.max_seq > 1, "max_seq must be > 1");
+        ensure!(
+            self.variant == "splitk" || self.variant == "dp",
+            "variant must be 'splitk' or 'dp'"
+        );
+        Ok(())
+    }
+
+    /// Smallest bucket that fits `n` waiting sequences, or the largest
+    /// bucket if `n` exceeds them all.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.batch_buckets {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.batch_buckets.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bucket_for_rounds_up() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.bucket_for(1), 1);
+        assert_eq!(cfg.bucket_for(3), 4);
+        assert_eq!(cfg.bucket_for(9), 16);
+        assert_eq!(cfg.bucket_for(100), 16);
+    }
+
+    #[test]
+    fn rejects_unsorted_buckets() {
+        let cfg = ServeConfig { batch_buckets: vec![4, 2], ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_variant() {
+        let cfg = ServeConfig { variant: "streamk".into(), ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ServeConfig {
+            batch_window_ms: 7,
+            variant: "dp".into(),
+            ..Default::default()
+        };
+        let back = ServeConfig::from_json(&Json::parse(
+            &cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let cfg = ServeConfig::from_json(
+            &Json::parse(r#"{"max_new_tokens": 8}"#).unwrap()).unwrap();
+        assert_eq!(cfg.max_new_tokens, 8);
+        assert_eq!(cfg.batch_buckets, vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn file_loading() {
+        let dir = std::env::temp_dir().join(format!(
+            "splitk-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"batch_window_ms": 9}"#).unwrap();
+        let cfg = ServeConfig::from_json_file(&p).unwrap();
+        assert_eq!(cfg.batch_window_ms, 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,222 @@
+//! Dynamic batcher — the L3 consumer of the paper's m = 1..16 regime.
+//!
+//! Incoming requests queue up; the batcher forms the largest bucket it
+//! can fill (buckets = the exported decode batch sizes {1, 2, 4, 8, 16})
+//! or flushes a partial batch once the oldest request has waited past the
+//! batching window. The chosen bucket *is* the `m` of every GEMM in the
+//! decode step — batching policy directly selects the kernel's shape.
+//!
+//! Pure queue logic: no PJRT, fully unit-testable.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::GenerateRequest;
+
+/// Decision produced by [`DynamicBatcher::poll`].
+#[derive(Debug)]
+pub struct Batch {
+    /// Requests to serve together (len <= bucket).
+    pub requests: Vec<GenerateRequest>,
+    /// Padded batch size — the decode artifact (and GEMM m) to use.
+    pub bucket: usize,
+}
+
+/// Queue + batch-formation policy.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    queue: VecDeque<GenerateRequest>,
+    buckets: Vec<usize>,
+    window: Duration,
+    capacity: usize,
+}
+
+impl DynamicBatcher {
+    /// `buckets` must be strictly increasing (validated by `ServeConfig`).
+    pub fn new(buckets: Vec<usize>, window: Duration, capacity: usize) -> Self {
+        assert!(!buckets.is_empty());
+        DynamicBatcher { queue: VecDeque::new(), buckets, window, capacity }
+    }
+
+    /// Current queue depth.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True if no requests are waiting.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue, or return the request back on overflow (back-pressure).
+    pub fn push(&mut self, req: GenerateRequest) -> Result<(), GenerateRequest> {
+        if self.queue.len() >= self.capacity {
+            return Err(req);
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Largest bucket <= n, if any.
+    fn bucket_filled_by(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().rev().find(|&&b| b <= n).copied()
+    }
+
+    /// Smallest bucket >= n (or the largest bucket).
+    fn bucket_covering(&self, n: usize) -> usize {
+        for &b in &self.buckets {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    /// Form a batch if policy allows at time `now`.
+    ///
+    /// * If the queue fills the largest bucket — dispatch it immediately.
+    /// * Else, if the oldest request has waited >= `window` — flush
+    ///   whatever is queued into the smallest covering bucket.
+    /// * Else — wait (returns `None`).
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let max_bucket = *self.buckets.last().unwrap();
+        if self.queue.len() >= max_bucket {
+            return Some(self.take(max_bucket, max_bucket));
+        }
+        let oldest_wait = now.duration_since(self.queue[0].accepted_at);
+        if oldest_wait >= self.window {
+            // Flush: largest fillable bucket, padded to covering size.
+            let n = self.queue.len();
+            let take_n = self.bucket_filled_by(n).unwrap_or(n.min(max_bucket));
+            let take_n = take_n.max(1).min(n);
+            let bucket = self.bucket_covering(take_n);
+            return Some(self.take(take_n, bucket));
+        }
+        None
+    }
+
+    /// Time until the oldest request's window expires (for sleep timing).
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| {
+            let waited = now.duration_since(r.accepted_at);
+            self.window.saturating_sub(waited)
+        })
+    }
+
+    fn take(&mut self, n: usize, bucket: usize) -> Batch {
+        let requests: Vec<GenerateRequest> = self.queue.drain(..n).collect();
+        Batch { requests, bucket }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn req(id: u64, at: Instant) -> GenerateRequest {
+        GenerateRequest {
+            id,
+            prompt: vec![1, 2],
+            max_new_tokens: 4,
+            stop_token: None,
+            accepted_at: at,
+        }
+    }
+
+    fn batcher(window_ms: u64) -> DynamicBatcher {
+        DynamicBatcher::new(vec![1, 2, 4, 8, 16],
+                            Duration::from_millis(window_ms), 64)
+    }
+
+    #[test]
+    fn empty_queue_no_batch() {
+        let mut b = batcher(5);
+        assert!(b.poll(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn full_bucket_dispatches_immediately() {
+        let mut b = batcher(1000);
+        let t0 = Instant::now();
+        for i in 0..16 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let batch = b.poll(t0).expect("full bucket should dispatch");
+        assert_eq!(batch.bucket, 16);
+        assert_eq!(batch.requests.len(), 16);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_waits_for_window() {
+        let mut b = batcher(5);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0)).unwrap();
+        }
+        assert!(b.poll(t0).is_none(), "within window: wait");
+        let later = t0 + Duration::from_millis(6);
+        let batch = b.poll(later).expect("window expired: flush");
+        // 3 waiting -> take 2 (largest filled bucket), padded bucket 2.
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.bucket, 2);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn single_request_flushes_to_bucket_1() {
+        let mut b = batcher(0);
+        let t0 = Instant::now();
+        b.push(req(0, t0)).unwrap();
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.bucket, 1);
+    }
+
+    #[test]
+    fn five_waiting_takes_four() {
+        let mut b = batcher(0);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.bucket, 4);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn overflow_backpressure() {
+        let mut b = DynamicBatcher::new(vec![1], Duration::ZERO, 2);
+        let t0 = Instant::now();
+        assert!(b.push(req(0, t0)).is_ok());
+        assert!(b.push(req(1, t0)).is_ok());
+        assert!(b.push(req(2, t0)).is_err());
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = batcher(0);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let batch = b.poll(t0).unwrap();
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut b = batcher(10);
+        let t0 = Instant::now();
+        b.push(req(0, t0)).unwrap();
+        let d = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+}

@@ -1,0 +1,238 @@
+//! Generation engine — executes batched prefill + decode steps against
+//! the AOT decode artifacts. Owns all PJRT state; lives on one thread.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::ServingMetrics;
+use crate::runtime::{ExecutableCache, HostTensor};
+
+use super::batcher::Batch;
+use super::kvcache::KvCacheSpec;
+use super::request::{FinishReason, GenerateRequest, GenerateResponse};
+
+/// Per-slot generation state inside a running batch.
+#[derive(Debug)]
+struct Slot {
+    /// Index into the batch's request list; None = padding slot.
+    req_idx: Option<usize>,
+    /// First valid KV position (left-padding offset).
+    start: i32,
+    generated: Vec<i32>,
+    done: Option<FinishReason>,
+    /// Token to feed at the next step.
+    next_token: i32,
+}
+
+/// The engine: compiled decode executables + batched generation loop.
+pub struct Engine {
+    cache: ExecutableCache,
+    kv_spec: KvCacheSpec,
+    variant: String,
+    max_seq: usize,
+    metrics: Arc<ServingMetrics>,
+}
+
+impl Engine {
+    /// Build from a warmed (or cold) executable cache.
+    pub fn new(cache: ExecutableCache, variant: String,
+               metrics: Arc<ServingMetrics>) -> Self {
+        let kv_spec = KvCacheSpec::from_model(&cache.manifest().model);
+        let max_seq = cache.manifest().model.max_seq;
+        Engine { cache, kv_spec, variant, max_seq, metrics }
+    }
+
+    /// Model metadata helper.
+    pub fn vocab(&self) -> usize {
+        self.cache.manifest().model.vocab
+    }
+
+    /// Serve one batch to completion (static batching), returning one
+    /// response per real request, in request order.
+    pub fn run_batch(&mut self, batch: Batch) -> Result<Vec<GenerateResponse>> {
+        let Batch { requests, bucket } = batch;
+        ensure!(!requests.is_empty(), "empty batch");
+        ensure!(requests.len() <= bucket, "batch exceeds bucket");
+        let b = bucket;
+        let exe = self.cache.decode(&self.variant, b)?;
+
+        let prompt_max = requests.iter().map(|r| r.prompt.len()).max().unwrap();
+        ensure!(prompt_max < self.max_seq, "prompt exceeds context");
+        let batch_started = Instant::now();
+
+        // Left-pad prompts to a common length; padding positions are
+        // masked out of attention by the artifact's `start` input.
+        let mut slots: Vec<Slot> = (0..b)
+            .map(|i| {
+                if i < requests.len() {
+                    Slot {
+                        req_idx: Some(i),
+                        start: (prompt_max - requests[i].prompt.len()) as i32,
+                        generated: Vec::new(),
+                        done: None,
+                        next_token: 0,
+                    }
+                } else {
+                    Slot { req_idx: None, start: (prompt_max - 1) as i32,
+                           generated: Vec::new(), done: Some(FinishReason::Length),
+                           next_token: 0 }
+                }
+            })
+            .collect();
+
+        let start_tensor = HostTensor::i32(
+            vec![b], slots.iter().map(|s| s.start).collect())
+            .to_literal()?;
+        // KV state stays as an XLA literal across steps: no per-step
+        // HostTensor <-> Literal copies of the (multi-MB) cache
+        // (EXPERIMENTS.md §Perf iteration 1).
+        let mut kv = self.kv_spec.zeros(b).to_literal()?;
+
+        // ---- prefill: feed prompt tokens position by position ----
+        let mut logits: Option<HostTensor> = None;
+        for pos in 0..prompt_max {
+            let tokens: Vec<i32> = slots
+                .iter()
+                .map(|s| match s.req_idx {
+                    Some(ri) => {
+                        let p = &requests[ri].prompt;
+                        let off = pos as i32 - s.start;
+                        if off >= 0 { p[off as usize] } else { 0 }
+                    }
+                    None => 0,
+                })
+                .collect();
+            let (l, new_kv) = self.step(&exe, tokens, kv, pos as i32,
+                                        &start_tensor, b)?;
+            kv = new_kv;
+            logits = Some(l);
+        }
+
+        // First generated token comes from the last prefill logits.
+        let vocab = self.vocab();
+        let mut cur_logits = logits.expect("prompt_max >= 1");
+        self.harvest(&requests, &mut slots, &cur_logits, vocab, prompt_max)?;
+
+        // ---- decode loop ----
+        let mut pos = prompt_max;
+        while slots.iter().any(|s| s.done.is_none()) && pos < self.max_seq {
+            let tokens: Vec<i32> = slots.iter().map(|s| s.next_token).collect();
+            let (l, new_kv) = self.step(&exe, tokens, kv, pos as i32,
+                                        &start_tensor, b)?;
+            kv = new_kv;
+            cur_logits = l;
+            pos += 1;
+            self.harvest(&requests, &mut slots, &cur_logits, vocab, pos)?;
+        }
+        // Context exhausted: finish stragglers.
+        for s in slots.iter_mut() {
+            if s.done.is_none() {
+                s.done = Some(FinishReason::ContextLimit);
+            }
+        }
+
+        // ---- responses ----
+        let now = Instant::now();
+        let mut responses = Vec::with_capacity(requests.len());
+        for (i, req) in requests.iter().enumerate() {
+            let slot = slots.iter().find(|s| s.req_idx == Some(i)).unwrap();
+            let latency_ms =
+                now.duration_since(req.accepted_at).as_secs_f64() * 1e3;
+            let queue_wait_ms = batch_started
+                .duration_since(req.accepted_at)
+                .as_secs_f64() * 1e3;
+            self.metrics.record_request(latency_ms,
+                                        slot.generated.len() as u64,
+                                        queue_wait_ms);
+            responses.push(GenerateResponse {
+                id: req.id,
+                tokens: slot.generated.clone(),
+                finish_reason: slot.done.unwrap(),
+                latency_ms,
+                queue_wait_ms,
+                bucket: b,
+            });
+        }
+        Ok(responses)
+    }
+
+    /// One decode-artifact execution + metrics. `kv` is consumed and
+    /// replaced by the step's output cache literal (device round-trip
+    /// without host-side tensor copies).
+    fn step(&self, exe: &std::rc::Rc<crate::runtime::Executable>,
+            tokens: Vec<i32>, kv: xla::Literal, pos: i32,
+            start: &xla::Literal, b: usize)
+            -> Result<(HostTensor, xla::Literal)> {
+        let t0 = Instant::now();
+        let inputs = [
+            HostTensor::i32(vec![b], tokens).to_literal()?,
+            kv,
+            HostTensor::scalar_i32(pos).to_literal()?,
+            start.clone(),
+        ];
+        let mut out = exe.run_literals(&inputs)?;
+        ensure!(out.len() == 2, "decode artifact must return (logits, kv)");
+        let new_kv = out.pop().unwrap();
+        let logits = HostTensor::from_literal(&out.pop().unwrap())?;
+        let active = b as u64;
+        self.metrics
+            .record_step(t0.elapsed().as_secs_f64() * 1e6, active);
+        Ok((logits, new_kv))
+    }
+
+    /// Greedy-sample next tokens from `logits`, update slot state.
+    fn harvest(&self, requests: &[GenerateRequest], slots: &mut [Slot],
+               logits: &HostTensor, vocab: usize, next_pos: usize)
+               -> Result<()> {
+        let data = logits.as_f32()?;
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.done.is_some() {
+                continue;
+            }
+            let ri = slot.req_idx.unwrap();
+            let row = &data[i * vocab..(i + 1) * vocab];
+            let tok = argmax(row) as i32;
+            slot.generated.push(tok);
+            slot.next_token = tok;
+            let req = &requests[ri];
+            if req.stop_token == Some(tok) {
+                slot.done = Some(FinishReason::Stop);
+            } else if slot.generated.len() >= req.max_new_tokens {
+                slot.done = Some(FinishReason::Length);
+            } else if next_pos >= self.max_seq {
+                slot.done = Some(FinishReason::ContextLimit);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[2.0, 2.0]), 0); // first on ties
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    // Engine execution paths are covered by rust/tests/serving_integration.rs
+    // against the real decode artifacts.
+}

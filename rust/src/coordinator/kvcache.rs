@@ -1,0 +1,80 @@
+//! KV-cache state management for the static-batching engine.
+
+use crate::runtime::{HostTensor, ModelMeta};
+
+/// Shape/creation helpers for the stacked KV cache tensor
+/// `[layers, 2, b, heads, max_seq, head_dim]` the decode artifacts use.
+#[derive(Debug, Clone)]
+pub struct KvCacheSpec {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+impl KvCacheSpec {
+    /// Derive from the artifact manifest's model metadata.
+    pub fn from_model(meta: &ModelMeta) -> Self {
+        KvCacheSpec {
+            n_layers: meta.n_layers,
+            n_heads: meta.n_heads,
+            max_seq: meta.max_seq,
+            head_dim: meta.d_model / meta.n_heads,
+        }
+    }
+
+    /// Tensor shape for a batch of `b` sequences.
+    pub fn shape(&self, b: usize) -> Vec<usize> {
+        vec![self.n_layers, 2, b, self.n_heads, self.max_seq, self.head_dim]
+    }
+
+    /// Total f32 elements for a batch of `b`.
+    pub fn elements(&self, b: usize) -> usize {
+        self.shape(b).iter().product()
+    }
+
+    /// Bytes for a batch of `b` (f32 cache).
+    pub fn bytes(&self, b: usize) -> usize {
+        self.elements(b) * 4
+    }
+
+    /// Fresh zeroed cache for a batch of `b`.
+    pub fn zeros(&self, b: usize) -> HostTensor {
+        HostTensor::f32(self.shape(b), vec![0.0; self.elements(b)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 512, d_model: 256, n_layers: 4, n_heads: 4, d_ff: 512,
+            max_seq: 128, group_size: 64, variant: "splitk".into(),
+            batch_buckets: vec![1, 2, 4, 8, 16], seed: 0,
+        }
+    }
+
+    #[test]
+    fn shape_matches_artifact_layout() {
+        let spec = KvCacheSpec::from_model(&meta());
+        assert_eq!(spec.shape(2), vec![4, 2, 2, 4, 128, 64]);
+        assert_eq!(spec.head_dim, 64);
+    }
+
+    #[test]
+    fn zeros_allocates_correctly() {
+        let spec = KvCacheSpec::from_model(&meta());
+        let t = spec.zeros(1);
+        assert_eq!(t.shape(), spec.shape(1).as_slice());
+        assert_eq!(t.elements(), spec.elements(1));
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bytes_scale_with_batch() {
+        let spec = KvCacheSpec::from_model(&meta());
+        assert_eq!(spec.bytes(16), 16 * spec.bytes(1));
+    }
+}

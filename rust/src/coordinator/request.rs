@@ -1,0 +1,121 @@
+//! Request/response types flowing through the serving stack.
+
+use std::time::Instant;
+
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// A generation request as accepted by the router.
+#[derive(Debug, Clone)]
+pub struct GenerateRequest {
+    pub id: RequestId,
+    /// Prompt token ids (the tiny model has no tokenizer; workloads are
+    /// token-level, like the paper's synthetic skinny-GEMM benchmarks).
+    pub prompt: Vec<i32>,
+    /// Maximum number of tokens to generate.
+    pub max_new_tokens: usize,
+    /// Optional early-stop token id.
+    pub stop_token: Option<i32>,
+    /// When the router accepted the request (for queue-wait metrics).
+    pub accepted_at: Instant,
+}
+
+/// Why a generation finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Emitted the stop token.
+    Stop,
+    /// Ran into the model's max_seq context limit.
+    ContextLimit,
+}
+
+/// Completed generation.
+#[derive(Debug, Clone)]
+pub struct GenerateResponse {
+    pub id: RequestId,
+    /// Generated token ids (prompt not included).
+    pub tokens: Vec<i32>,
+    pub finish_reason: FinishReason,
+    /// End-to-end latency (accept -> complete), milliseconds.
+    pub latency_ms: f64,
+    /// Time spent queued before entering a batch, milliseconds.
+    pub queue_wait_ms: f64,
+    /// Batch bucket this request was served in (the GEMM's `m`).
+    pub bucket: usize,
+}
+
+/// Validation limits applied by the router.
+#[derive(Debug, Clone)]
+pub struct RequestLimits {
+    pub max_prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+}
+
+impl RequestLimits {
+    /// Check a raw (prompt, max_new) pair against the limits.
+    pub fn validate(&self, prompt: &[i32], max_new: usize) -> Result<(), String> {
+        if prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        if prompt.len() > self.max_prompt_len {
+            return Err(format!(
+                "prompt length {} exceeds max {}",
+                prompt.len(), self.max_prompt_len
+            ));
+        }
+        if max_new == 0 {
+            return Err("max_new_tokens must be >= 1".into());
+        }
+        if max_new > self.max_new_tokens {
+            return Err(format!(
+                "max_new_tokens {} exceeds max {}",
+                max_new, self.max_new_tokens
+            ));
+        }
+        if let Some(&bad) = prompt.iter().find(|&&t| t < 0 || t as usize >= self.vocab) {
+            return Err(format!("token {bad} out of vocab range 0..{}", self.vocab));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> RequestLimits {
+        RequestLimits { max_prompt_len: 16, max_new_tokens: 32, vocab: 512 }
+    }
+
+    #[test]
+    fn accepts_valid() {
+        assert!(limits().validate(&[1, 2, 3], 8).is_ok());
+    }
+
+    #[test]
+    fn rejects_empty_prompt() {
+        assert!(limits().validate(&[], 8).is_err());
+    }
+
+    #[test]
+    fn rejects_long_prompt() {
+        assert!(limits().validate(&vec![1; 17], 8).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_and_excess_max_new() {
+        assert!(limits().validate(&[1], 0).is_err());
+        assert!(limits().validate(&[1], 33).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_vocab() {
+        assert!(limits().validate(&[511], 1).is_ok());
+        assert!(limits().validate(&[512], 1).is_err());
+        assert!(limits().validate(&[-1], 1).is_err());
+    }
+}

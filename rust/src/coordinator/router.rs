@@ -1,0 +1,273 @@
+//! Router + scheduler: the public serving facade.
+//!
+//! Thread topology (the xla handles are not `Send`, so all PJRT state
+//! stays on the engine thread):
+//!
+//! ```text
+//! callers ──submit()──> DynamicBatcher (mutex'd queue)
+//!                          │   scheduler thread: poll/window
+//!                          ▼
+//!                      mpsc channel of Batch
+//!                          │   engine thread: owns PJRT + artifacts
+//!                          ▼
+//!                      per-request response channels
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::ServeConfig;
+use crate::metrics::ServingMetrics;
+use crate::runtime::{ExecutableCache, Manifest, Runtime};
+
+use super::batcher::{Batch, DynamicBatcher};
+use super::engine::Engine;
+use super::request::{GenerateRequest, GenerateResponse, RequestId, RequestLimits};
+
+/// Handle to a submitted request.
+pub struct Pending {
+    pub id: RequestId,
+    rx: Receiver<GenerateResponse>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<GenerateResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped request {}", self.id))
+    }
+
+    /// Non-blocking check.
+    pub fn try_wait(&self) -> Option<GenerateResponse> {
+        self.rx.try_recv().ok()
+    }
+}
+
+type Waiters = Mutex<HashMap<RequestId, SyncSender<GenerateResponse>>>;
+
+struct Shared {
+    batcher: Mutex<DynamicBatcher>,
+    waiters: Waiters,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+}
+
+/// The serving coordinator: router + scheduler + engine threads.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    limits: RequestLimits,
+    metrics: Arc<ServingMetrics>,
+    scheduler: Option<JoinHandle<()>>,
+    engine: Option<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Start the serving stack: load the manifest, spawn the engine
+    /// thread (which compiles the decode artifacts), spawn the scheduler.
+    /// Blocks until the engine has warmed every decode bucket.
+    pub fn start(cfg: &ServeConfig) -> Result<Self> {
+        cfg.validate()?;
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let model = manifest.model.clone();
+        let limits = RequestLimits {
+            max_prompt_len: model
+                .max_seq
+                .saturating_sub(cfg.max_new_tokens)
+                .max(1),
+            max_new_tokens: cfg.max_new_tokens,
+            vocab: model.vocab,
+        };
+        let metrics = Arc::new(ServingMetrics::new());
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(DynamicBatcher::new(
+                cfg.batch_buckets.clone(),
+                Duration::from_millis(cfg.batch_window_ms),
+                cfg.queue_depth,
+            )),
+            waiters: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            next_id: AtomicU64::new(1),
+        });
+
+        // Engine thread: all PJRT state is created *on* this thread.
+        let (batch_tx, batch_rx) = sync_channel::<Batch>(4);
+        let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(1);
+        let engine_shared = shared.clone();
+        let engine_metrics = metrics.clone();
+        let artifacts_dir: PathBuf = cfg.artifacts_dir.clone();
+        let variant = cfg.variant.clone();
+        let warm_start = cfg.warm_start;
+        let engine = std::thread::Builder::new()
+            .name("engine".into())
+            .spawn(move || -> Result<()> {
+                let init = (|| -> Result<Engine> {
+                    let runtime = Runtime::cpu()?;
+                    let manifest = Manifest::load(&artifacts_dir)?;
+                    let mut cache = ExecutableCache::new(runtime, manifest);
+                    let warmed = if warm_start {
+                        cache.warm_decode(&variant)?
+                    } else {
+                        0
+                    };
+                    log::info!("engine ready ({warmed} buckets compiled)");
+                    let _ = ready_tx.send(Ok(warmed));
+                    Ok(Engine::new(cache, variant, engine_metrics))
+                })();
+                let mut engine = match init {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // ready_tx may still be open if init failed early.
+                        return Err(e);
+                    }
+                };
+                while let Ok(batch) = batch_rx.recv() {
+                    match engine.run_batch(batch) {
+                        Ok(responses) => {
+                            let mut waiters =
+                                engine_shared.waiters.lock().unwrap();
+                            for resp in responses {
+                                if let Some(tx) = waiters.remove(&resp.id) {
+                                    let _ = tx.send(resp);
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            // Fail every outstanding waiter (dropping the
+                            // senders unblocks their recv with an error)
+                            // rather than leaving callers hanging.
+                            engine_shared.waiters.lock().unwrap().clear();
+                            return Err(e);
+                        }
+                    }
+                }
+                Ok(())
+            })?;
+
+        // Wait for warm-up (or propagate the engine's startup error).
+        match ready_rx.recv() {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => {
+                return match engine.join() {
+                    Ok(Err(e)) => Err(e),
+                    _ => Err(anyhow!("engine failed during startup")),
+                };
+            }
+        }
+
+        // Scheduler thread: forms batches per the window policy.
+        let sched_shared = shared.clone();
+        let scheduler = std::thread::Builder::new()
+            .name("scheduler".into())
+            .spawn(move || loop {
+                if sched_shared.shutdown.load(Ordering::Relaxed) {
+                    // Drain what's left (treat everything as expired).
+                    let mut b = sched_shared.batcher.lock().unwrap();
+                    let far_future = Instant::now() + Duration::from_secs(3600);
+                    while let Some(batch) = b.poll(far_future) {
+                        if batch_tx.send(batch).is_err() {
+                            return;
+                        }
+                    }
+                    drop(b);
+                    drop(batch_tx);
+                    return;
+                }
+                let now = Instant::now();
+                let batch = {
+                    let mut b = sched_shared.batcher.lock().unwrap();
+                    b.poll(now)
+                };
+                match batch {
+                    Some(batch) => {
+                        if batch_tx.send(batch).is_err() {
+                            return;
+                        }
+                    }
+                    None => std::thread::sleep(Duration::from_micros(200)),
+                }
+            })?;
+
+        Ok(Coordinator {
+            shared,
+            limits,
+            metrics,
+            scheduler: Some(scheduler),
+            engine: Some(engine),
+        })
+    }
+
+    /// Validate and enqueue a request; returns a waitable handle.
+    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                  stop_token: Option<i32>) -> Result<Pending> {
+        self.limits
+            .validate(&prompt, max_new_tokens)
+            .map_err(|e| anyhow!("invalid request: {e}"))?;
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = sync_channel(1);
+        self.shared.waiters.lock().unwrap().insert(id, tx);
+        let req = GenerateRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            stop_token,
+            accepted_at: Instant::now(),
+        };
+        let pushed = self.shared.batcher.lock().unwrap().push(req);
+        if pushed.is_err() {
+            self.shared.waiters.lock().unwrap().remove(&id);
+            return Err(anyhow!("queue full (back-pressure), retry later"));
+        }
+        Ok(Pending { id, rx })
+    }
+
+    /// Serving metrics (shared with the engine).
+    pub fn metrics(&self) -> &ServingMetrics {
+        &self.metrics
+    }
+
+    /// Current queue depth.
+    pub fn queue_len(&self) -> usize {
+        self.shared.batcher.lock().unwrap().len()
+    }
+
+    /// Request validation limits in force.
+    pub fn limits(&self) -> &RequestLimits {
+        &self.limits
+    }
+
+    /// Drain outstanding work and stop all threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => return Err(anyhow!("engine thread panicked")),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.scheduler.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.engine.take() {
+            let _ = h.join();
+        }
+    }
+}

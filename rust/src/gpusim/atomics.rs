@@ -1,0 +1,114 @@
+//! Atomic-reduction cost model (the SplitK tax).
+//!
+//! SplitK's partial sums are merged with atomic adds on the C tile. Two
+//! costs (paper §2.1):
+//!
+//! 1. **Throughput**: every writer pushes its tile through the L2 atomic
+//!    RMW path — `atomic_bytes` at the device's atomic throughput.
+//! 2. **Contention**: the Triton 2-D grid linearizes with `pid_k`
+//!    adjacent, so a tile's `split_k` writers are co-scheduled in the
+//!    same wave and race for exclusive access to the same C tile. Each
+//!    rival beyond the first adds an L2 lock round-trip (`atomic_lock_us`)
+//!    to the wave's epilogue; the cost repeats every wave. This is the
+//!    term behind the paper's observation that "increasing the SplitK
+//!    parameter from 4 to 16 resulted in a steady degradation of
+//!    performance as the matrix sizes increased" — more waves × more
+//!    rivals.
+
+use super::device::DeviceConfig;
+use super::kernel::KernelLaunch;
+use super::occupancy::Occupancy;
+use super::scheduler::WaveStats;
+
+/// Extra time (seconds) the launch spends in the atomic merge path.
+pub fn atomic_time(dev: &DeviceConfig, launch: &KernelLaunch,
+                   occ: &Occupancy) -> f64 {
+    let writers = launch.decomposition.writers_per_tile();
+    if writers <= 1 {
+        return 0.0;
+    }
+    // Throughput term: total RMW bytes at the L2 atomic rate.
+    let base = launch.total_atomic_bytes() / (dev.atomic_gbs * 1e9);
+
+    // Contention term: rivals co-resident on the same tile, per wave.
+    let waves = WaveStats::compute(dev, launch, occ);
+    let total_waves = waves.full_waves + (waves.last_wave_fill > 0.0) as u64;
+    let capacity = waves.wave_capacity.max(1);
+    let co_resident = (writers as u64).min(capacity) as f64;
+    let rivals = (co_resident - 1.0).max(0.0);
+    let contention = total_waves as f64 * rivals * dev.atomic_lock_us * 1e-6;
+
+    base + contention
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::Decomposition;
+
+    fn launch(writers: u32, atomic_bytes: f64, grid: u64) -> KernelLaunch {
+        KernelLaunch {
+            name: "t".into(),
+            grid,
+            threads_per_block: 128,
+            regs_per_thread: 92,
+            smem_per_block: 32 * 1024,
+            flops_per_block: 1.0,
+            dram_bytes_per_block: 1.0,
+            l2_bytes_per_block: 1.0,
+            atomic_bytes_per_block: atomic_bytes,
+            inner_iters: 1,
+            stages: 2,
+            decomposition: if writers == 1 {
+                Decomposition::DataParallel
+            } else {
+                Decomposition::SplitK { split_k: writers }
+            },
+            output_tiles: grid / writers as u64,
+        }
+    }
+
+    fn occ_of(dev: &DeviceConfig, l: &KernelLaunch) -> Occupancy {
+        Occupancy::compute(dev, l)
+    }
+
+    #[test]
+    fn dp_pays_nothing() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let l = launch(1, 0.0, 128);
+        assert_eq!(atomic_time(&dev, &l, &occ_of(&dev, &l)), 0.0);
+    }
+
+    #[test]
+    fn grows_with_split_k() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let l4 = launch(4, 1024.0, 512);
+        let l16 = launch(16, 1024.0, 2048);
+        let t4 = atomic_time(&dev, &l4, &occ_of(&dev, &l4));
+        let t16 = atomic_time(&dev, &l16, &occ_of(&dev, &l16));
+        assert!(t16 > t4 * 2.0, "t4={t4} t16={t16}");
+    }
+
+    #[test]
+    fn contention_grows_with_matrix_size() {
+        // Fig 9: at split 16 the contention tax grows with n=k (more
+        // waves of racing writers), while split 4 stays modest.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let small = launch(16, 1024.0, 2048); // n=k=4096-ish tiles
+        let big = launch(16, 1024.0, 8192); // n=k=16384-ish tiles
+        let t_small = atomic_time(&dev, &small, &occ_of(&dev, &small));
+        let t_big = atomic_time(&dev, &big, &occ_of(&dev, &big));
+        assert!(t_big > 2.0 * t_small, "small {t_small} big {t_big}");
+    }
+
+    #[test]
+    fn h100_cheaper_atomics() {
+        // Hopper's larger/faster L2 absorbs the merge better — one of the
+        // two reasons split_k=8 is optimal on H100 but 4 on A100.
+        let a = DeviceConfig::a100_40gb_pcie();
+        let h = DeviceConfig::h100_pcie();
+        let l = launch(8, 4096.0, 1024);
+        assert!(atomic_time(&h, &l, &occ_of(&h, &l))
+                < atomic_time(&a, &l, &occ_of(&a, &l)));
+    }
+}

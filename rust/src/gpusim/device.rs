@@ -1,0 +1,182 @@
+//! GPU device models (paper Table 9 + public architecture whitepapers).
+//!
+//! The three devices the paper evaluates on, plus the calibration
+//! constants of the performance model. Spec rows marked *Table 9* are
+//! taken verbatim from the paper; the calibration constants are fitted to
+//! the paper's own Nsight measurements (Table 7/8) and TFLOPS ceilings
+//! (Tables 1–6) — see EXPERIMENTS.md §Calibration.
+
+
+/// Static + calibrated description of one GPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceConfig {
+    /// Human-readable name, e.g. "NVIDIA A100 80GB SXM".
+    pub name: String,
+    /// Streaming multiprocessor count (Table 9).
+    pub sms: u32,
+    /// Peak FP16 tensor-core throughput in TFLOPS (Table 9).
+    pub fp16_tflops: f64,
+    /// Peak DRAM bandwidth in GB/s (Table 9).
+    pub mem_bw_gbs: f64,
+    /// L2 cache in MiB (Table 9).
+    pub l2_mb: f64,
+    /// L1/shared-memory carveout per SM in KiB (Table 9 lists combined L1).
+    pub l1_kb_per_sm: f64,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u32,
+    /// Maximum shared memory per SM available to blocks, bytes.
+    pub smem_per_sm: u32,
+    /// Maximum resident blocks per SM.
+    pub max_blocks_per_sm: u32,
+    /// Maximum resident warps per SM.
+    pub max_warps_per_sm: u32,
+    /// Maximum threads per block.
+    pub max_threads_per_block: u32,
+    /// SM clock in GHz.
+    pub clock_ghz: f64,
+
+    // ---- performance-model calibration constants ----
+    /// Warps/SM at which DRAM bandwidth saturates for short skinny-GEMM
+    /// kernels: `bw = peak * sqrt(active_warps_per_sm / warp_sat)`.
+    /// Fitted to Table 7 (17.8 warps -> 313 GB/s, 4.84 -> 161 GB/s).
+    pub warp_sat: f64,
+    /// Fixed kernel launch + drain overhead, microseconds.
+    pub launch_overhead_us: f64,
+    /// Per-block scheduling/epilogue cost, nanoseconds.
+    pub block_overhead_ns: f64,
+    /// L2 atomic-update throughput in GB/s (red/atom path, fp16x2).
+    pub atomic_gbs: f64,
+    /// L2 lock round-trip per rival writer racing on one C tile, µs
+    /// (SplitK contention; drives the Fig-9/10 split-16 degradation).
+    pub atomic_lock_us: f64,
+    /// MXU/tensor-core efficiency attainable by these skinny tiles.
+    pub mxu_eff: f64,
+}
+
+impl DeviceConfig {
+    /// NVIDIA A100 40GB PCIe (Ampere).
+    pub fn a100_40gb_pcie() -> Self {
+        Self {
+            name: "NVIDIA A100 40GB PCIe".into(),
+            sms: 108,
+            fp16_tflops: 312.0,
+            mem_bw_gbs: 1555.0,
+            l2_mb: 40.0,
+            l1_kb_per_sm: 192.0,
+            regs_per_sm: 65536,
+            smem_per_sm: 164 * 1024,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            max_threads_per_block: 1024,
+            clock_ghz: 1.410,
+            warp_sat: 439.0,
+            launch_overhead_us: 4.0,
+            block_overhead_ns: 150.0,
+            atomic_gbs: 800.0,
+            atomic_lock_us: 0.4,
+            mxu_eff: 0.55,
+        }
+    }
+
+    /// NVIDIA A100 80GB SXM (Ampere) — same SMs, higher memory bandwidth.
+    pub fn a100_80gb_sxm() -> Self {
+        Self {
+            name: "NVIDIA A100 80GB SXM".into(),
+            mem_bw_gbs: 2039.0,
+            ..Self::a100_40gb_pcie()
+        }
+    }
+
+    /// NVIDIA H100 80GB PCIe (Hopper) — Table 9 column 1.
+    pub fn h100_pcie() -> Self {
+        Self {
+            name: "NVIDIA H100 80GB PCIe".into(),
+            sms: 132,
+            fp16_tflops: 1513.0,
+            mem_bw_gbs: 2000.0,
+            l2_mb: 50.0,
+            l1_kb_per_sm: 256.0,
+            regs_per_sm: 65536,
+            smem_per_sm: 228 * 1024,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            max_threads_per_block: 1024,
+            clock_ghz: 1.755,
+            // Hopper's larger SMs + TMA want even more concurrency to hide
+            // latency -> skinny kernels are further from saturation, so DP
+            // suffers more and SplitK gains more (paper §2.2).
+            warp_sat: 520.0,
+            launch_overhead_us: 3.5,
+            block_overhead_ns: 120.0,
+            atomic_gbs: 1400.0,
+            atomic_lock_us: 0.08,
+            mxu_eff: 0.5,
+        }
+    }
+
+    /// All paper devices in evaluation order.
+    pub fn paper_devices() -> Vec<DeviceConfig> {
+        vec![Self::a100_40gb_pcie(), Self::a100_80gb_sxm(), Self::h100_pcie()]
+    }
+
+    /// Look up a device by short key (CLI-friendly).
+    pub fn by_key(key: &str) -> Option<DeviceConfig> {
+        match key {
+            "a100-40" | "a100_40" | "a100-40gb" => Some(Self::a100_40gb_pcie()),
+            "a100-80" | "a100_80" | "a100-80gb" => Some(Self::a100_80gb_sxm()),
+            "h100" | "h100-pcie" => Some(Self::h100_pcie()),
+            _ => None,
+        }
+    }
+
+    /// Peak DRAM bandwidth in bytes/second.
+    pub fn mem_bw_bytes_per_s(&self) -> f64 {
+        self.mem_bw_gbs * 1e9
+    }
+
+    /// Peak FP16 FLOPs/second.
+    pub fn flops_per_s(&self) -> f64 {
+        self.fp16_tflops * 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_specs() {
+        let a40 = DeviceConfig::a100_40gb_pcie();
+        let a80 = DeviceConfig::a100_80gb_sxm();
+        let h = DeviceConfig::h100_pcie();
+        // Paper Table 9 rows.
+        assert_eq!((a40.sms, a80.sms, h.sms), (108, 108, 132));
+        assert_eq!(a40.fp16_tflops, 312.0);
+        assert_eq!(h.fp16_tflops, 1513.0);
+        assert!(a40.mem_bw_gbs < a80.mem_bw_gbs);
+        assert_eq!(h.l2_mb, 50.0);
+    }
+
+    #[test]
+    fn h100_has_more_sms_by_a_third() {
+        // "The H100 has 33% greater SMs" (paper §2.2): 132/108 ≈ 1.22 by
+        // the PCIe count the paper tabulates; assert >= 20% more.
+        let a = DeviceConfig::a100_40gb_pcie();
+        let h = DeviceConfig::h100_pcie();
+        assert!(h.sms as f64 / a.sms as f64 > 1.2);
+    }
+
+    #[test]
+    fn by_key_roundtrip() {
+        assert_eq!(DeviceConfig::by_key("a100-40").unwrap().sms, 108);
+        assert_eq!(DeviceConfig::by_key("h100").unwrap().sms, 132);
+        assert!(DeviceConfig::by_key("b200").is_none());
+    }
+
+    #[test]
+    fn clone_eq() {
+        let d = DeviceConfig::h100_pcie();
+        let back = d.clone();
+        assert_eq!(d, back);
+    }
+}

@@ -1,0 +1,144 @@
+//! Kernel launch descriptors — what the simulator executes.
+//!
+//! A [`KernelLaunch`] captures everything the performance model needs to
+//! know about one kernel launch: the grid, the per-block resource usage
+//! (registers / shared memory / threads) and the per-block work (FLOPs,
+//! DRAM bytes, L2 bytes, atomic traffic). `crate::kernels` builds these
+//! from GEMM shapes + tile configs for the SplitK and DP decompositions.
+
+
+/// Work decomposition strategy of a GEMM kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Decomposition {
+    /// Classic data-parallel block tiling: one block owns one output tile
+    /// and the full k reduction (paper Fig. 2).
+    DataParallel,
+    /// SplitK: `split_k` blocks per output tile, each reducing a k-slice,
+    /// merged with atomic adds (paper Fig. 1).
+    SplitK { split_k: u32 },
+}
+
+impl Decomposition {
+    /// Number of blocks cooperating on one output tile.
+    pub fn writers_per_tile(&self) -> u32 {
+        match self {
+            Decomposition::DataParallel => 1,
+            Decomposition::SplitK { split_k } => *split_k,
+        }
+    }
+
+    /// Short label used by the table harness.
+    pub fn label(&self) -> String {
+        match self {
+            Decomposition::DataParallel => "dp".into(),
+            Decomposition::SplitK { split_k } => format!("splitk{split_k}"),
+        }
+    }
+}
+
+/// One kernel launch, fully described for the simulator.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    /// Human-readable name (shows up in reports).
+    pub name: String,
+    /// Total thread blocks in the grid.
+    pub grid: u64,
+    /// Threads per block.
+    pub threads_per_block: u32,
+    /// Registers per thread.
+    pub regs_per_thread: u32,
+    /// Shared memory per block, bytes.
+    pub smem_per_block: u32,
+    /// FLOPs executed per block (multiply-add counted as 2).
+    pub flops_per_block: f64,
+    /// Bytes each block must pull from DRAM (L2 misses already accounted:
+    /// this is compulsory traffic / L2-reuse-adjusted).
+    pub dram_bytes_per_block: f64,
+    /// Bytes each block moves through L2 (>= dram bytes; includes reuse
+    /// hits and atomic read-modify-write traffic).
+    pub l2_bytes_per_block: f64,
+    /// Bytes of atomic read-modify-write traffic per block (subset of
+    /// `l2_bytes_per_block`; 0 for data-parallel kernels).
+    pub atomic_bytes_per_block: f64,
+    /// Sequential k-loop iterations inside one block (pipeline depth
+    /// available for latency hiding interacts with `stages`).
+    pub inner_iters: u32,
+    /// Software pipeline stages (Triton `num_stages`).
+    pub stages: u32,
+    /// The decomposition this launch implements.
+    pub decomposition: Decomposition,
+    /// Output tiles in C (grid / writers_per_tile).
+    pub output_tiles: u64,
+}
+
+impl KernelLaunch {
+    /// Warps per block.
+    pub fn warps_per_block(&self) -> u32 {
+        self.threads_per_block.div_ceil(32)
+    }
+
+    /// Total FLOPs in the launch.
+    pub fn total_flops(&self) -> f64 {
+        self.flops_per_block * self.grid as f64
+    }
+
+    /// Total compulsory DRAM bytes in the launch.
+    pub fn total_dram_bytes(&self) -> f64 {
+        self.dram_bytes_per_block * self.grid as f64
+    }
+
+    /// Total atomic RMW bytes in the launch.
+    pub fn total_atomic_bytes(&self) -> f64 {
+        self.atomic_bytes_per_block * self.grid as f64
+    }
+
+    /// Arithmetic intensity (FLOPs per DRAM byte) — the memory-bound
+    /// regime the paper targets sits far below the device ridge point.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.total_flops() / self.total_dram_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn launch() -> KernelLaunch {
+        KernelLaunch {
+            name: "test".into(),
+            grid: 512,
+            threads_per_block: 128,
+            regs_per_thread: 92,
+            smem_per_block: 32 * 1024,
+            flops_per_block: 1e6,
+            dram_bytes_per_block: 16384.0,
+            l2_bytes_per_block: 32768.0,
+            atomic_bytes_per_block: 1024.0,
+            inner_iters: 16,
+            stages: 2,
+            decomposition: Decomposition::SplitK { split_k: 4 },
+            output_tiles: 128,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let l = launch();
+        assert_eq!(l.warps_per_block(), 4);
+        assert_eq!(l.total_flops(), 512e6);
+        assert_eq!(l.total_dram_bytes(), 512.0 * 16384.0);
+        assert!((l.arithmetic_intensity() - 1e6 / 16384.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn writers_per_tile() {
+        assert_eq!(Decomposition::DataParallel.writers_per_tile(), 1);
+        assert_eq!(Decomposition::SplitK { split_k: 8 }.writers_per_tile(), 8);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Decomposition::DataParallel.label(), "dp");
+        assert_eq!(Decomposition::SplitK { split_k: 4 }.label(), "splitk4");
+    }
+}

@@ -1,0 +1,146 @@
+//! S8 — GPU execution simulator.
+//!
+//! The paper's evaluation is NVIDIA-microarchitectural: SM occupancy,
+//! wave quantization, warp scheduling, atomic contention, achieved DRAM
+//! bandwidth. No GPU exists in this environment, so this module models
+//! that chain explicitly (DESIGN.md §2, §6):
+//!
+//! ```text
+//! KernelLaunch ──> Occupancy ──> WaveStats ──> Timing ──> WarpStats
+//!  (grid, regs,     (block        (waves,       (mem/mxu/   (Table 8)
+//!   smem, bytes)     limits)       quantize)     atomics)
+//! ```
+//!
+//! Calibration constants are fitted to the paper's own measurements
+//! (Table 7's Nsight counters, Table 9's specs); every anchor is a unit
+//! test in the submodules. EXPERIMENTS.md records paper-vs-simulated for
+//! every table and figure.
+
+pub mod atomics;
+pub mod device;
+pub mod kernel;
+pub mod memory;
+pub mod occupancy;
+pub mod report;
+pub mod scheduler;
+pub mod warp;
+
+pub use device::DeviceConfig;
+pub use kernel::{Decomposition, KernelLaunch};
+pub use occupancy::{Limiter, Occupancy};
+pub use report::NsightReport;
+pub use scheduler::{schedule, Timing, WaveStats};
+pub use warp::WarpStats;
+
+
+/// Everything the simulator derives about one kernel launch on one device.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Device the launch ran on.
+    pub device_name: String,
+    /// Name of the launch (from [`KernelLaunch::name`]).
+    pub launch_name: String,
+    /// Grid size, echoed for reporting.
+    pub grid: u64,
+    /// Registers per thread, echoed for reporting.
+    pub regs_per_thread: u32,
+    /// Shared memory per block (bytes), echoed for reporting.
+    pub smem_per_block: u32,
+    /// Occupancy analysis.
+    pub occupancy: Occupancy,
+    /// Wave accounting.
+    pub waves: WaveStats,
+    /// Timing breakdown.
+    pub timing: Timing,
+    /// Warp scheduler statistics at achieved occupancy.
+    pub warp_stats: WarpStats,
+}
+
+impl SimResult {
+    /// Effective TFLOPS for `useful_flops` *useful* FLOPs (2·m·n·k — the
+    /// paper's metric counts logical work, not padded tile work).
+    pub fn tflops(&self, useful_flops: f64) -> f64 {
+        useful_flops / self.timing.kernel_s / 1e12
+    }
+
+    /// Nsight-style report (Tables 7/8).
+    pub fn report(&self) -> NsightReport {
+        NsightReport::from_sim(self)
+    }
+}
+
+/// Simulate one kernel launch on one device.
+pub fn simulate(dev: &DeviceConfig, launch: &KernelLaunch) -> SimResult {
+    let occ = Occupancy::compute(dev, launch);
+    let waves = WaveStats::compute(dev, launch, &occ);
+    let timing = schedule(dev, launch, &occ);
+    let warp_stats = WarpStats::from_warps_per_sm(occ.achieved_warps_per_sm);
+    SimResult {
+        device_name: dev.name.clone(),
+        launch_name: launch.name.clone(),
+        grid: launch.grid,
+        regs_per_thread: launch.regs_per_thread,
+        smem_per_block: launch.smem_per_block,
+        occupancy: occ,
+        waves,
+        timing,
+        warp_stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn launch(grid: u64, split_k: u32) -> KernelLaunch {
+        KernelLaunch {
+            name: format!("t{split_k}"),
+            grid,
+            threads_per_block: 128,
+            regs_per_thread: 92,
+            smem_per_block: 32 * 1024,
+            flops_per_block: 2.0 * 16.0 * 32.0 * 4096.0,
+            dram_bytes_per_block: 4096.0 * 32.0 / 2.0 / split_k as f64,
+            l2_bytes_per_block: 4096.0 * 32.0,
+            atomic_bytes_per_block: if split_k > 1 { 16.0 * 32.0 * 2.0 } else { 0.0 },
+            inner_iters: 16,
+            stages: 2,
+            decomposition: if split_k > 1 {
+                Decomposition::SplitK { split_k }
+            } else {
+                Decomposition::DataParallel
+            },
+            output_tiles: grid / split_k.max(1) as u64,
+        }
+    }
+
+    #[test]
+    fn simulate_end_to_end() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let sim = simulate(&dev, &launch(512, 4));
+        assert!(sim.timing.kernel_s > 0.0);
+        assert!(sim.occupancy.achieved_pct > 0.0);
+        assert!(sim.warp_stats.active > 0.0);
+        let rep = sim.report();
+        assert_eq!(rep.grid, 512);
+        assert!(rep.latency_us > 0.0);
+    }
+
+    #[test]
+    fn tflops_metric() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let sim = simulate(&dev, &launch(512, 4));
+        let useful = 2.0 * 16.0 * 4096.0 * 4096.0;
+        let tf = sim.tflops(useful);
+        assert!(tf > 0.0 && tf < dev.fp16_tflops);
+    }
+
+    #[test]
+    fn report_displays() {
+        let dev = DeviceConfig::h100_pcie();
+        let sim = simulate(&dev, &launch(1024, 8));
+        let text = format!("{}", sim.report());
+        assert!(text.contains("Latency"));
+        assert!(text.contains("Achieved Occupancy"));
+    }
+}

@@ -1,0 +1,183 @@
+//! SM occupancy calculator — which resource limits how many blocks can be
+//! resident on one SM (reproduces Table 7's "Block Limit" rows and the
+//! Figure 11/12 resource-usage breakdown).
+
+
+use super::device::DeviceConfig;
+use super::kernel::KernelLaunch;
+
+/// Per-resource block limits and the resulting occupancy for a launch.
+#[derive(Debug, Clone)]
+pub struct Occupancy {
+    /// Block limit from the register file.
+    pub limit_regs: u32,
+    /// Block limit from shared memory.
+    pub limit_smem: u32,
+    /// Block limit from the SM's resident-block slots.
+    pub limit_blocks: u32,
+    /// Block limit from the SM's resident-warp slots.
+    pub limit_warps: u32,
+    /// min of all limits — max co-resident blocks per SM.
+    pub blocks_per_sm: u32,
+    /// Theoretical occupancy: resident warps / max warps at `blocks_per_sm`.
+    pub theoretical_pct: f64,
+    /// Average *achieved* resident blocks per SM once the actual grid is
+    /// spread over the device (<= blocks_per_sm; small grids can't fill).
+    pub achieved_blocks_per_sm: f64,
+    /// Achieved resident warps per SM.
+    pub achieved_warps_per_sm: f64,
+    /// Achieved occupancy percentage (Nsight's "Achieved Occupancy").
+    pub achieved_pct: f64,
+}
+
+/// Name of the binding resource — drives Figures 11/12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    Registers,
+    SharedMemory,
+    BlockSlots,
+    WarpSlots,
+}
+
+impl Occupancy {
+    /// Compute occupancy for `launch` on `dev`.
+    pub fn compute(dev: &DeviceConfig, launch: &KernelLaunch) -> Self {
+        let regs_per_block =
+            (launch.regs_per_thread * launch.threads_per_block).max(1);
+        let limit_regs = (dev.regs_per_sm / regs_per_block).max(0);
+        let limit_smem = if launch.smem_per_block == 0 {
+            dev.max_blocks_per_sm
+        } else {
+            dev.smem_per_sm / launch.smem_per_block
+        };
+        let limit_blocks = dev.max_blocks_per_sm;
+        let limit_warps = dev.max_warps_per_sm / launch.warps_per_block();
+        let blocks_per_sm = limit_regs
+            .min(limit_smem)
+            .min(limit_blocks)
+            .min(limit_warps);
+
+        let theoretical_pct = 100.0
+            * (blocks_per_sm * launch.warps_per_block()) as f64
+            / dev.max_warps_per_sm as f64;
+
+        // Spread the grid: with fewer blocks than SM capacity, SMs idle
+        // (this is where DP loses — its coarse grid can't fill the device).
+        let achieved_blocks_per_sm =
+            (launch.grid as f64 / dev.sms as f64).min(blocks_per_sm as f64);
+        let achieved_warps_per_sm =
+            achieved_blocks_per_sm * launch.warps_per_block() as f64;
+        let achieved_pct =
+            100.0 * achieved_warps_per_sm / dev.max_warps_per_sm as f64;
+
+        Occupancy {
+            limit_regs,
+            limit_smem,
+            limit_blocks,
+            limit_warps,
+            blocks_per_sm,
+            theoretical_pct,
+            achieved_blocks_per_sm,
+            achieved_warps_per_sm,
+            achieved_pct,
+        }
+    }
+
+    /// The binding resource (first of the minimal limits, in Nsight's
+    /// reporting order: registers, smem, block slots, warp slots).
+    pub fn limiter(&self) -> Limiter {
+        let m = self.blocks_per_sm;
+        if self.limit_regs == m {
+            Limiter::Registers
+        } else if self.limit_smem == m {
+            Limiter::SharedMemory
+        } else if self.limit_blocks == m {
+            Limiter::BlockSlots
+        } else {
+            Limiter::WarpSlots
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::Decomposition;
+
+    fn launch(grid: u64, regs: u32, smem: u32) -> KernelLaunch {
+        KernelLaunch {
+            name: "t".into(),
+            grid,
+            threads_per_block: 128,
+            regs_per_thread: regs,
+            smem_per_block: smem,
+            flops_per_block: 1.0,
+            dram_bytes_per_block: 1.0,
+            l2_bytes_per_block: 1.0,
+            atomic_bytes_per_block: 0.0,
+            inner_iters: 1,
+            stages: 2,
+            decomposition: Decomposition::DataParallel,
+            output_tiles: grid,
+        }
+    }
+
+    #[test]
+    fn table7_splitk_register_limit() {
+        // 92 regs/thread × 128 threads -> floor(65536/11776) = 5 (Table 7).
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let occ = Occupancy::compute(&dev, &launch(512, 92, 32 * 1024));
+        assert_eq!(occ.limit_regs, 5);
+        assert_eq!(occ.limit_smem, 5); // 164KB / 32KB
+        assert_eq!(occ.blocks_per_sm, 5);
+    }
+
+    #[test]
+    fn table7_dp_smem_limit() {
+        // 150 regs -> floor(65536/19200) = 3; 64KB smem -> floor(164/64)=2.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let occ = Occupancy::compute(&dev, &launch(128, 150, 64 * 1024));
+        assert_eq!(occ.limit_regs, 3);
+        assert_eq!(occ.limit_smem, 2);
+        assert_eq!(occ.blocks_per_sm, 2);
+        assert_eq!(occ.limiter(), Limiter::SharedMemory);
+    }
+
+    #[test]
+    fn achieved_occupancy_grid_limited() {
+        // Table 7: grid 512 on 108 SMs -> 4.74 blocks/SM -> ~29.6% achieved;
+        // grid 128 -> 1.19 blocks/SM -> ~7.4%.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let sk = Occupancy::compute(&dev, &launch(512, 92, 32 * 1024));
+        assert!((sk.achieved_blocks_per_sm - 4.74).abs() < 0.01);
+        assert!(sk.achieved_pct > 25.0 && sk.achieved_pct < 32.0);
+        let dp = Occupancy::compute(&dev, &launch(128, 150, 64 * 1024));
+        assert!(dp.achieved_pct > 6.0 && dp.achieved_pct < 9.0);
+    }
+
+    #[test]
+    fn zero_smem_not_limiting() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let occ = Occupancy::compute(&dev, &launch(64, 32, 0));
+        assert_eq!(occ.limit_smem, dev.max_blocks_per_sm);
+    }
+
+    #[test]
+    fn warp_slot_limit() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let mut l = launch(10_000, 16, 1024);
+        l.threads_per_block = 1024; // 32 warps/block -> limit 2
+        let occ = Occupancy::compute(&dev, &l);
+        assert_eq!(occ.limit_warps, 2);
+    }
+
+    #[test]
+    fn theoretical_vs_achieved_monotone() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let occ = Occupancy::compute(&dev, &launch(100_000, 92, 32 * 1024));
+        // Huge grid: achieved == theoretical blocks.
+        assert!((occ.achieved_blocks_per_sm - occ.blocks_per_sm as f64).abs()
+            < 1e-9);
+        assert!((occ.achieved_pct - occ.theoretical_pct).abs() < 1e-9);
+    }
+}

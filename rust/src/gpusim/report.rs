@@ -1,0 +1,84 @@
+//! Nsight-Compute-style metrics report (reproduces paper Tables 7 and 8
+//! and the Figure 11/12 occupancy-limiter breakdown).
+
+use std::fmt;
+
+
+use super::occupancy::Limiter;
+use super::SimResult;
+
+/// The metric rows of paper Table 7 plus Table 8, for one launch.
+#[derive(Debug, Clone)]
+pub struct NsightReport {
+    pub kernel: String,
+    /// Kernel latency in microseconds (Table 7 "Latency").
+    pub latency_us: f64,
+    /// Global memory throughput, GB/s.
+    pub gmem_throughput_gbs: f64,
+    /// Grid size (total blocks).
+    pub grid: u64,
+    /// Registers per thread.
+    pub registers: u32,
+    /// Shared memory allocated per SM at achieved residency, KB.
+    pub smem_usage_kb: f64,
+    /// Block limit from registers.
+    pub block_limit_regs: u32,
+    /// Block limit from shared memory.
+    pub block_limit_smem: u32,
+    /// Achieved occupancy, percent.
+    pub achieved_occupancy_pct: f64,
+    /// SM utilization, percent.
+    pub sm_utilization_pct: f64,
+    // ---- Table 8 rows ----
+    pub active_warps: f64,
+    pub eligible_warps: f64,
+    pub issued_warps: f64,
+    pub issued_ipc_active: f64,
+    /// Which resource binds occupancy (Figures 11/12).
+    pub limiter: Limiter,
+}
+
+impl NsightReport {
+    /// Build the report from a finished simulation.
+    pub fn from_sim(sim: &SimResult) -> Self {
+        NsightReport {
+            kernel: sim.launch_name.clone(),
+            latency_us: sim.timing.kernel_s * 1e6,
+            gmem_throughput_gbs: sim.timing.achieved_bw / 1e9,
+            grid: sim.grid,
+            registers: sim.regs_per_thread,
+            smem_usage_kb: sim.occupancy.achieved_blocks_per_sm
+                * sim.smem_per_block as f64
+                / 1024.0,
+            block_limit_regs: sim.occupancy.limit_regs,
+            block_limit_smem: sim.occupancy.limit_smem,
+            achieved_occupancy_pct: sim.occupancy.achieved_pct,
+            sm_utilization_pct: sim.warp_stats.sm_utilization_pct(),
+            active_warps: sim.warp_stats.active,
+            eligible_warps: sim.warp_stats.eligible,
+            issued_warps: sim.warp_stats.issued,
+            issued_ipc_active: sim.warp_stats.ipc_active,
+            limiter: sim.occupancy.limiter(),
+        }
+    }
+}
+
+impl fmt::Display for NsightReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Kernel: {}", self.kernel)?;
+        writeln!(f, "  Latency                  {:>10.2} us", self.latency_us)?;
+        writeln!(f, "  Global Memory Throughput {:>10.0} GB/s", self.gmem_throughput_gbs)?;
+        writeln!(f, "  Grid Size                {:>10}", self.grid)?;
+        writeln!(f, "  Registers                {:>10}", self.registers)?;
+        writeln!(f, "  Shared Memory Usage      {:>10.2} KB", self.smem_usage_kb)?;
+        writeln!(f, "  Block Limit (Registers)  {:>10}", self.block_limit_regs)?;
+        writeln!(f, "  Block Limit (SMEM)       {:>10}", self.block_limit_smem)?;
+        writeln!(f, "  Achieved Occupancy       {:>10.2} %", self.achieved_occupancy_pct)?;
+        writeln!(f, "  SM Utilization           {:>10.2} %", self.sm_utilization_pct)?;
+        writeln!(f, "  Active Warps             {:>10.2}", self.active_warps)?;
+        writeln!(f, "  Eligible Warps           {:>10.2}", self.eligible_warps)?;
+        writeln!(f, "  Issued Warps             {:>10.2}", self.issued_warps)?;
+        writeln!(f, "  Issued IPC Active        {:>10.2}", self.issued_ipc_active)?;
+        writeln!(f, "  Occupancy Limiter        {:>10?}", self.limiter)
+    }
+}

@@ -1,0 +1,219 @@
+//! Wave scheduler — how the grid fills the device over time, including
+//! the wave-quantization inefficiency the paper analyzes in §2.2.
+//!
+//! Blocks are dispatched in waves of `sms * blocks_per_sm`. Every full
+//! wave runs at the launch's achieved occupancy; the final partial wave
+//! runs with whatever blocks remain, at proportionally lower concurrency
+//! (and therefore lower achievable bandwidth — the quantization penalty).
+//! Coarse grids (DP on big-SM-count devices) may not even fill wave 0,
+//! which is exactly the H100-vs-A100 effect in the paper.
+
+
+use super::atomics::atomic_time;
+use super::device::DeviceConfig;
+use super::kernel::KernelLaunch;
+use super::memory::achievable_bandwidth;
+use super::occupancy::Occupancy;
+
+/// Wave accounting for one launch.
+#[derive(Debug, Clone)]
+pub struct WaveStats {
+    /// Blocks dispatched per full wave (`sms * blocks_per_sm`).
+    pub wave_capacity: u64,
+    /// Number of completely full waves.
+    pub full_waves: u64,
+    /// Fill fraction of the final wave (0 if the grid is an exact
+    /// multiple of the capacity; else in (0, 1)).
+    pub last_wave_fill: f64,
+    /// `grid / (waves * capacity)` — 1.0 means no quantization loss.
+    pub wave_efficiency: f64,
+    /// "waves per SM" in the paper's §2.1 sense: grid / sms.
+    pub waves_per_sm: f64,
+}
+
+impl WaveStats {
+    /// Compute wave accounting for a launch at a given occupancy.
+    pub fn compute(dev: &DeviceConfig, launch: &KernelLaunch,
+                   occ: &Occupancy) -> Self {
+        let capacity = (dev.sms as u64 * occ.blocks_per_sm.max(1) as u64).max(1);
+        let full_waves = launch.grid / capacity;
+        let rem = launch.grid % capacity;
+        let last_wave_fill = rem as f64 / capacity as f64;
+        let total_waves = full_waves + if rem > 0 { 1 } else { 0 };
+        let wave_efficiency = if total_waves == 0 {
+            1.0
+        } else {
+            launch.grid as f64 / (total_waves as f64 * capacity as f64)
+        };
+        WaveStats {
+            wave_capacity: capacity,
+            full_waves,
+            last_wave_fill,
+            wave_efficiency,
+            waves_per_sm: launch.grid as f64 / dev.sms as f64,
+        }
+    }
+}
+
+/// Timing breakdown of one simulated launch (all seconds).
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// Memory-transfer time summed over waves.
+    pub mem_s: f64,
+    /// Compute (MXU) time summed over waves.
+    pub compute_s: f64,
+    /// Atomic merge time (SplitK only).
+    pub atomic_s: f64,
+    /// Block scheduling / epilogue overhead.
+    pub block_overhead_s: f64,
+    /// Fixed launch overhead.
+    pub launch_overhead_s: f64,
+    /// Kernel duration as Nsight would report it (no launch overhead).
+    pub kernel_s: f64,
+    /// End-to-end duration including launch overhead.
+    pub total_s: f64,
+    /// Effective DRAM bandwidth over the kernel, bytes/s.
+    pub achieved_bw: f64,
+}
+
+/// Simulate the launch wave by wave and return the timing breakdown.
+pub fn schedule(dev: &DeviceConfig, launch: &KernelLaunch,
+                occ: &Occupancy) -> Timing {
+    let waves = WaveStats::compute(dev, launch, occ);
+    let wpb = launch.warps_per_block() as f64;
+
+    // Per-wave time at a given number of resident blocks.
+    let wave_time = |blocks: f64| -> (f64, f64) {
+        if blocks <= 0.0 {
+            return (0.0, 0.0);
+        }
+        let blocks_per_sm = blocks / dev.sms as f64;
+        let w = blocks_per_sm * wpb;
+        let bw = achievable_bandwidth(dev, w);
+        let t_mem = launch.dram_bytes_per_block * blocks / bw.max(1.0);
+        // Compute throughput scales with the fraction of SMs holding work.
+        let active_frac = (blocks / dev.sms as f64).min(1.0);
+        let flops_rate = dev.flops_per_s() * dev.mxu_eff * active_frac;
+        let t_comp = launch.flops_per_block * blocks / flops_rate.max(1.0);
+        (t_mem, t_comp)
+    };
+
+    let (mem_full, comp_full) = wave_time(waves.wave_capacity as f64);
+    let rem_blocks = waves.last_wave_fill * waves.wave_capacity as f64;
+    let (mem_last, comp_last) = wave_time(rem_blocks);
+
+    // Within a wave, compute overlaps memory via pipelining; the wave takes
+    // the max of the two streams.
+    let full = mem_full.max(comp_full) * waves.full_waves as f64;
+    let last = mem_last.max(comp_last);
+    let mem_s = mem_full * waves.full_waves as f64 + mem_last;
+    let compute_s = comp_full * waves.full_waves as f64 + comp_last;
+
+    let atomic_s = atomic_time(dev, launch, occ);
+    // Block launch/epilogue work serializes per SM dispatch queue.
+    let block_overhead_s =
+        (launch.grid as f64 / dev.sms as f64) * dev.block_overhead_ns * 1e-9;
+    let launch_overhead_s = dev.launch_overhead_us * 1e-6;
+
+    let kernel_s = full + last + atomic_s + block_overhead_s;
+    let total_s = kernel_s + launch_overhead_s;
+    let achieved_bw = launch.total_dram_bytes() / kernel_s.max(1e-12);
+
+    Timing {
+        mem_s,
+        compute_s,
+        atomic_s,
+        block_overhead_s,
+        launch_overhead_s,
+        kernel_s,
+        total_s,
+        achieved_bw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::kernel::Decomposition;
+
+    fn launch(grid: u64, dram_per_block: f64, split_k: u32) -> KernelLaunch {
+        KernelLaunch {
+            name: "t".into(),
+            grid,
+            threads_per_block: 128,
+            regs_per_thread: 92,
+            smem_per_block: 32 * 1024,
+            flops_per_block: 2.0 * 16.0 * 32.0 * 1024.0,
+            dram_bytes_per_block: dram_per_block,
+            l2_bytes_per_block: dram_per_block,
+            atomic_bytes_per_block: if split_k > 1 { 1024.0 } else { 0.0 },
+            inner_iters: 16,
+            stages: 2,
+            decomposition: if split_k > 1 {
+                Decomposition::SplitK { split_k }
+            } else {
+                Decomposition::DataParallel
+            },
+            output_tiles: grid / split_k.max(1) as u64,
+        }
+    }
+
+    #[test]
+    fn exact_multiple_has_no_quantization_loss() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let l = launch(108 * 5, 16384.0, 4);
+        let occ = Occupancy::compute(&dev, &l);
+        assert_eq!(occ.blocks_per_sm, 5);
+        let w = WaveStats::compute(&dev, &l, &occ);
+        assert_eq!(w.full_waves, 1);
+        assert_eq!(w.last_wave_fill, 0.0);
+        assert!((w.wave_efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_wave_quantization() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let l = launch(108 * 5 + 1, 16384.0, 4);
+        let occ = Occupancy::compute(&dev, &l);
+        let w = WaveStats::compute(&dev, &l, &occ);
+        assert_eq!(w.full_waves, 1);
+        assert!(w.last_wave_fill > 0.0);
+        assert!(w.wave_efficiency < 0.51); // 541/1080
+    }
+
+    #[test]
+    fn finer_grid_is_faster_same_bytes() {
+        // Same total traffic split across 4x more blocks -> higher
+        // occupancy -> more bandwidth -> faster. The paper's core claim.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let coarse = launch(128, 65536.0, 1);
+        let fine = launch(512, 16384.0, 4);
+        let occ_c = Occupancy::compute(&dev, &coarse);
+        let occ_f = Occupancy::compute(&dev, &fine);
+        let t_c = schedule(&dev, &coarse, &occ_c);
+        let t_f = schedule(&dev, &fine, &occ_f);
+        assert!(t_f.kernel_s < t_c.kernel_s,
+                "fine {} vs coarse {}", t_f.kernel_s, t_c.kernel_s);
+    }
+
+    #[test]
+    fn achieved_bw_below_peak() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let l = launch(512, 16384.0, 4);
+        let occ = Occupancy::compute(&dev, &l);
+        let t = schedule(&dev, &l, &occ);
+        assert!(t.achieved_bw < dev.mem_bw_bytes_per_s());
+        assert!(t.achieved_bw > 0.0);
+    }
+
+    #[test]
+    fn timing_components_sum_sensibly() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let l = launch(512, 16384.0, 4);
+        let occ = Occupancy::compute(&dev, &l);
+        let t = schedule(&dev, &l, &occ);
+        assert!(t.total_s > t.kernel_s);
+        assert!(t.kernel_s >= t.atomic_s);
+        assert!((t.total_s - t.kernel_s - t.launch_overhead_s).abs() < 1e-12);
+    }
+}

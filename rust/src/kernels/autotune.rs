@@ -1,0 +1,100 @@
+//! SplitK autotuner — searches the splitting factor (and optionally tile
+//! width) on the simulator, reproducing the paper's §3.3 finding:
+//! split_k = 4 optimal on A100, 8 on H100 (Figures 9/10).
+
+
+use crate::gpusim::{simulate, DeviceConfig};
+
+use super::{dp_launch, splitk_launch, GemmShape, TileConfig};
+
+/// The splitting factors the paper sweeps (Figures 9/10).
+pub const SPLIT_K_CANDIDATES: [u32; 5] = [1, 2, 4, 8, 16];
+
+/// Outcome of an autotune search.
+#[derive(Debug, Clone)]
+pub struct AutotuneResult {
+    pub shape: GemmShape,
+    pub device: String,
+    /// Best splitting factor found (1 = data-parallel wins).
+    pub best_split_k: u32,
+    /// Simulated kernel time at the best factor, microseconds.
+    pub best_us: f64,
+    /// (split_k, simulated µs) for every candidate, in sweep order.
+    pub sweep: Vec<(u32, f64)>,
+}
+
+/// Sweep `SPLIT_K_CANDIDATES` for `shape` on `dev` and return the best.
+///
+/// Candidates that violate the kernel's divisibility constraints
+/// (`k % (block_k · split_k) != 0`) are skipped, mirroring the Triton
+/// kernel's launchable configs.
+pub fn autotune_split_k(dev: &DeviceConfig, shape: &GemmShape,
+                        tiles: &TileConfig) -> AutotuneResult {
+    let mut sweep = Vec::new();
+    let mut best: Option<(u32, f64)> = None;
+    for &sk in &SPLIT_K_CANDIDATES {
+        if tiles.validate(shape.k, shape.group_size, sk as u64).is_err() {
+            continue;
+        }
+        let launch = if sk == 1 {
+            dp_launch(dev, shape, tiles)
+        } else {
+            splitk_launch(dev, shape, tiles, sk)
+        };
+        let us = simulate(dev, &launch).timing.kernel_s * 1e6;
+        sweep.push((sk, us));
+        if best.map_or(true, |(_, b)| us < b) {
+            best = Some((sk, us));
+        }
+    }
+    let (best_split_k, best_us) = best.expect("no feasible split_k candidate");
+    AutotuneResult {
+        shape: *shape,
+        device: dev.name.clone(),
+        best_split_k,
+        best_us,
+        sweep,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_feasible_candidates() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let r = autotune_split_k(&dev, &GemmShape::square(16, 4096),
+                                 &TileConfig::paper_splitk());
+        assert_eq!(r.sweep.len(), 5); // 4096 divisible by 64*16
+        assert!(SPLIT_K_CANDIDATES.contains(&r.best_split_k));
+    }
+
+    #[test]
+    fn infeasible_splits_skipped() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        // k = 512: split 16 needs k % 1024 == 0 -> skipped.
+        let r = autotune_split_k(&dev, &GemmShape::square(16, 512),
+                                 &TileConfig::paper_splitk());
+        assert!(r.sweep.iter().all(|&(sk, _)| sk != 16));
+    }
+
+    #[test]
+    fn splitk_beats_dp_in_paper_regime() {
+        // The headline: for skinny GEMMs a split > 1 wins on every device.
+        for dev in DeviceConfig::paper_devices() {
+            let r = autotune_split_k(&dev, &GemmShape::square(16, 4096),
+                                     &TileConfig::paper_splitk());
+            assert!(r.best_split_k > 1, "{}: best {}", dev.name, r.best_split_k);
+        }
+    }
+
+    #[test]
+    fn best_is_min_of_sweep() {
+        let dev = DeviceConfig::h100_pcie();
+        let r = autotune_split_k(&dev, &GemmShape::square(16, 8192),
+                                 &TileConfig::paper_splitk());
+        let min = r.sweep.iter().map(|&(_, us)| us).fold(f64::MAX, f64::min);
+        assert_eq!(r.best_us, min);
+    }
+}

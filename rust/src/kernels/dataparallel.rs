@@ -1,0 +1,61 @@
+//! Data-parallel launch descriptor — the paper's baseline: one block owns
+//! one output tile and the entire k reduction (paper Fig. 2).
+
+use crate::gpusim::{Decomposition, DeviceConfig, KernelLaunch};
+
+use super::splitk::build_gemm_launch;
+use super::{GemmShape, TileConfig};
+
+/// Build the [`KernelLaunch`] for the data-parallel kernel: grid =
+/// `m_tiles × n_tiles`, no atomic traffic.
+pub fn dp_launch(dev: &DeviceConfig, shape: &GemmShape,
+                 tiles: &TileConfig) -> KernelLaunch {
+    build_gemm_launch(dev, shape, tiles, Decomposition::DataParallel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::splitk_launch;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::a100_40gb_pcie()
+    }
+
+    #[test]
+    fn table7_grid() {
+        // m=16, n=k=4096, paper tiles -> grid 128 (Table 7).
+        let l = dp_launch(&dev(), &GemmShape::square(16, 4096),
+                          &TileConfig::paper_dp());
+        assert_eq!(l.grid, 128);
+        assert_eq!(l.inner_iters, 64); // 4096/64
+        assert_eq!(l.atomic_bytes_per_block, 0.0);
+    }
+
+    #[test]
+    fn same_compulsory_traffic_as_splitk() {
+        // The decompositions move the same data; only the distribution
+        // differs ("we fixed the tile sizes ... to isolate SplitK").
+        let shape = GemmShape::square(16, 4096);
+        let dp = dp_launch(&dev(), &shape, &TileConfig::paper_dp());
+        let sk = splitk_launch(&dev(), &shape, &TileConfig::paper_splitk(), 4);
+        let ratio = dp.total_dram_bytes() / sk.total_dram_bytes();
+        assert!((ratio - 1.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn same_flops_as_splitk() {
+        let shape = GemmShape::square(16, 4096);
+        let dp = dp_launch(&dev(), &shape, &TileConfig::paper_dp());
+        let sk = splitk_launch(&dev(), &shape, &TileConfig::paper_splitk(), 4);
+        assert!((dp.total_flops() / sk.total_flops() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn blocks_do_the_full_k() {
+        let shape = GemmShape::square(16, 2048);
+        let tiles = TileConfig::paper_dp();
+        let l = dp_launch(&dev(), &shape, &tiles);
+        assert_eq!(l.inner_iters as u64, shape.k / tiles.block_k);
+    }
+}

@@ -1,0 +1,75 @@
+//! S9 — GEMM kernel descriptors and the autotuner.
+//!
+//! Translates a W4A16 GEMM problem (shape + tile config + decomposition)
+//! into the [`crate::gpusim::KernelLaunch`] the simulator executes —
+//! the Rust-side mirror of the Triton kernel's launch logic (grid
+//! computation, resource usage, per-block traffic accounting).
+
+mod autotune;
+mod dataparallel;
+mod resources;
+mod splitk;
+mod streamk;
+mod tiles;
+
+pub use autotune::{autotune_split_k, AutotuneResult, SPLIT_K_CANDIDATES};
+pub use dataparallel::dp_launch;
+pub use resources::{resource_usage, ResourceUsage, PAD_FACTOR};
+pub use splitk::splitk_launch;
+pub use streamk::{streamk_launch, streamk_residency};
+pub use tiles::TileConfig;
+
+
+/// A W4A16 GEMM problem: fp16 activations `[m, k]` times int4-packed
+/// weights `[k, n]` with per-`group_size` scales/zeros.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Quantization group length along k.
+    pub group_size: u64,
+}
+
+impl GemmShape {
+    /// Square-weight llama-style shape (n = k), the paper's sweep axis.
+    pub fn square(m: u64, nk: u64) -> Self {
+        GemmShape { m, n: nk, k: nk, group_size: 128 }
+    }
+
+    /// Useful FLOPs: `2·m·n·k` (the paper's TFLOPS numerator).
+    pub fn useful_flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+
+    /// Compulsory DRAM traffic in bytes: packed weights + scales/zeros
+    /// (int4 + f16/int4 per group), activations once, C written once.
+    pub fn compulsory_bytes(&self) -> f64 {
+        let b_packed = self.n as f64 * self.k as f64 / 2.0;
+        let groups = (self.k / self.group_size) as f64;
+        let meta = groups * self.n as f64 * (2.0 + 0.5); // f16 scale + int4 zero
+        let a = self.m as f64 * self.k as f64 * 2.0;
+        let c = self.m as f64 * self.n as f64 * 2.0;
+        b_packed + meta + a + c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn square_shape() {
+        let s = GemmShape::square(16, 4096);
+        assert_eq!((s.m, s.n, s.k, s.group_size), (16, 4096, 4096, 128));
+        assert_eq!(s.useful_flops(), 2.0 * 16.0 * 4096.0 * 4096.0);
+    }
+
+    #[test]
+    fn compulsory_bytes_dominated_by_packed_weights() {
+        let s = GemmShape::square(16, 4096);
+        let b_packed = 4096.0 * 4096.0 / 2.0;
+        let total = s.compulsory_bytes();
+        assert!(total > b_packed && total < b_packed * 1.1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Triton-compilation resource model: registers/thread and shared
+//! memory/block as a function of the tile configuration.
+//!
+//! Exact register allocation is a compiler artifact; we use an explicit
+//! affine model **calibrated to the paper's own Nsight measurements**
+//! (Table 7: SplitK 92 regs & 5-block limits, DP 150 regs & smem-limited
+//! at 2 blocks — both at tile (16, 32, 64), 4 warps):
+//!
+//! ```text
+//! regs  = 40 + 4·(bm·bn / threads) + 9·stages·(bk/32) [+ 22 if DP]
+//! smem  = stages · (bm·bk + bk·bn) · 2B · PAD,   PAD = 8/3
+//! ```
+//!
+//! PAD covers Triton's multi-buffering alignment, bank-conflict padding
+//! and epilogue staging. The DP register surcharge reflects the full-k
+//! loop bookkeeping + deeper unroll of the baseline kernel. Unit tests
+//! pin both anchors.
+
+
+use super::TileConfig;
+use crate::gpusim::Decomposition;
+
+/// Shared-memory over-allocation factor (see module docs).
+pub const PAD_FACTOR: f64 = 8.0 / 3.0;
+
+/// Modeled per-block resource usage.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceUsage {
+    pub regs_per_thread: u32,
+    pub smem_per_block: u32,
+}
+
+/// Compute modeled resource usage for a tile config + decomposition.
+pub fn resource_usage(tiles: &TileConfig, decomp: Decomposition) -> ResourceUsage {
+    let threads = tiles.threads() as u64;
+    let acc = tiles.block_m * tiles.block_n / threads.max(1);
+    let stage_term = 9 * tiles.stages as u64 * (tiles.block_k / 32);
+    let dp_surcharge = match decomp {
+        Decomposition::DataParallel => 22,
+        Decomposition::SplitK { .. } => 0,
+    };
+    let regs = 40 + 4 * acc + stage_term + dp_surcharge;
+
+    let smem_elems = tiles.stages as u64
+        * (tiles.block_m * tiles.block_k + tiles.block_k * tiles.block_n);
+    let smem = (smem_elems as f64 * 2.0 * PAD_FACTOR).round() as u32;
+
+    ResourceUsage { regs_per_thread: regs as u32, smem_per_block: smem }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{DeviceConfig, Decomposition};
+
+    #[test]
+    fn table7_splitk_anchor() {
+        let r = resource_usage(&TileConfig::paper_splitk(),
+                               Decomposition::SplitK { split_k: 4 });
+        assert_eq!(r.regs_per_thread, 92); // Table 7 "Registers" 92
+        // 164KB smem / smem_block -> block limit 5 (Table 7).
+        let dev = DeviceConfig::a100_40gb_pcie();
+        assert_eq!(dev.smem_per_sm / r.smem_per_block, 5);
+        // regs limit: floor(65536 / (92*128)) = 5 (Table 7).
+        assert_eq!(dev.regs_per_sm / (r.regs_per_thread * 128), 5);
+    }
+
+    #[test]
+    fn table7_dp_anchor() {
+        let r = resource_usage(&TileConfig::paper_dp(),
+                               Decomposition::DataParallel);
+        assert_eq!(r.regs_per_thread, 150); // Table 7 "Registers" 150
+        let dev = DeviceConfig::a100_40gb_pcie();
+        // smem-limited at 2 blocks/SM, regs limit 3 (Table 7).
+        assert_eq!(dev.smem_per_sm / r.smem_per_block, 2);
+        assert_eq!(dev.regs_per_sm / (r.regs_per_thread * 128), 3);
+    }
+
+    #[test]
+    fn smem_grows_with_stages() {
+        let mut t = TileConfig::paper_splitk();
+        let r2 = resource_usage(&t, Decomposition::SplitK { split_k: 4 });
+        t.stages = 4;
+        let r4 = resource_usage(&t, Decomposition::SplitK { split_k: 4 });
+        assert_eq!(r4.smem_per_block, 2 * r2.smem_per_block);
+    }
+
+    #[test]
+    fn bigger_tiles_more_registers() {
+        let small = resource_usage(&TileConfig::paper_splitk(),
+                                   Decomposition::SplitK { split_k: 4 });
+        let big_t = TileConfig { block_n: 128, ..TileConfig::paper_splitk() };
+        let big = resource_usage(&big_t, Decomposition::SplitK { split_k: 4 });
+        assert!(big.regs_per_thread > small.regs_per_thread);
+        assert!(big.smem_per_block > small.smem_per_block);
+    }
+}

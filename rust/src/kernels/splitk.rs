@@ -1,0 +1,157 @@
+//! SplitK launch descriptor — grid and per-block traffic accounting for
+//! the paper's fused dequant + SplitK GEMM kernel (Algorithm 1).
+
+use crate::gpusim::{Decomposition, DeviceConfig, KernelLaunch};
+
+use super::resources::resource_usage;
+use super::{GemmShape, TileConfig};
+
+/// Build the [`KernelLaunch`] for the SplitK kernel.
+///
+/// Grid: `m_tiles × n_tiles × split_k` blocks; each block reduces a
+/// `k / split_k` slice into its output tile via atomic adds.
+pub fn splitk_launch(dev: &DeviceConfig, shape: &GemmShape, tiles: &TileConfig,
+                     split_k: u32) -> KernelLaunch {
+    build_gemm_launch(dev, shape, tiles,
+                      Decomposition::SplitK { split_k: split_k.max(1) })
+}
+
+/// Shared builder for both decompositions (DP is the `split_k == 1`,
+/// no-atomics limit).
+pub(crate) fn build_gemm_launch(dev: &DeviceConfig, shape: &GemmShape,
+                                tiles: &TileConfig,
+                                decomp: Decomposition) -> KernelLaunch {
+    let split_k = decomp.writers_per_tile() as u64;
+    let m_tiles = shape.m.div_ceil(tiles.block_m);
+    let n_tiles = shape.n.div_ceil(tiles.block_n);
+    let output_tiles = m_tiles * n_tiles;
+    let grid = output_tiles * split_k;
+    let k_slice = (shape.k / split_k).max(1);
+
+    // --- per-block DRAM traffic (L2-reuse-adjusted, see DESIGN.md §6) ---
+    let l2_half = dev.l2_mb * 1024.0 * 1024.0 * 0.5;
+
+    // Packed weights: each (n-tile, k-slice) pair covers a distinct B
+    // region; re-read per extra m-tile row unless B is L2-resident.
+    let b_bytes_total = shape.n as f64 * shape.k as f64 / 2.0;
+    let b_m_reuse = if m_tiles > 1 && b_bytes_total > l2_half {
+        m_tiles as f64
+    } else {
+        1.0
+    };
+    let b_per_block =
+        k_slice as f64 * tiles.block_n as f64 / 2.0 * b_m_reuse / m_tiles as f64;
+
+    // Scales (f16) + zeros (int4) per group.
+    let groups_per_slice = (k_slice as f64 / shape.group_size as f64).max(1.0);
+    let meta_per_block = groups_per_slice * tiles.block_n as f64 * 2.5;
+
+    // Activations: the A tile row is re-read by every n-tile; it is
+    // DRAM-compulsory once and an L2 hit afterwards if it fits.
+    let a_bytes_total = shape.m as f64 * shape.k as f64 * 2.0;
+    let a_reads = if a_bytes_total <= l2_half { 1.0 } else { n_tiles as f64 };
+    let a_per_block =
+        tiles.block_m as f64 * k_slice as f64 * 2.0 * a_reads / n_tiles as f64;
+
+    // C: written back to DRAM once per tile (atomics stay in L2).
+    let tile_bytes = tiles.block_m as f64 * tiles.block_n as f64 * 2.0;
+    let c_per_block = tile_bytes / split_k as f64;
+
+    let dram_bytes_per_block = b_per_block + meta_per_block + a_per_block + c_per_block;
+
+    // Atomic RMW traffic: every SplitK writer read-modify-writes its full
+    // tile through the L2 atomic path.
+    let atomic_bytes_per_block = match decomp {
+        Decomposition::DataParallel => 0.0,
+        Decomposition::SplitK { .. } => 2.0 * tile_bytes,
+    };
+    let l2_bytes_per_block = dram_bytes_per_block
+        + atomic_bytes_per_block
+        + tiles.block_m as f64 * k_slice as f64 * 2.0; // A re-reads from L2
+
+    let res = resource_usage(tiles, decomp);
+    let flops_per_block =
+        2.0 * tiles.block_m as f64 * tiles.block_n as f64 * k_slice as f64;
+
+    KernelLaunch {
+        name: format!(
+            "w4a16_{}_m{}n{}k{}_t{}x{}x{}",
+            decomp.label(), shape.m, shape.n, shape.k,
+            tiles.block_m, tiles.block_n, tiles.block_k
+        ),
+        grid,
+        threads_per_block: tiles.threads(),
+        regs_per_thread: res.regs_per_thread,
+        smem_per_block: res.smem_per_block,
+        flops_per_block,
+        dram_bytes_per_block,
+        l2_bytes_per_block,
+        atomic_bytes_per_block,
+        inner_iters: (k_slice / tiles.block_k).max(1) as u32,
+        stages: tiles.stages,
+        decomposition: decomp,
+        output_tiles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::a100_40gb_pcie()
+    }
+
+    #[test]
+    fn table7_grid() {
+        // m=16, n=k=4096, paper tiles, split 4 -> grid 512 (Table 7).
+        let l = splitk_launch(&dev(), &GemmShape::square(16, 4096),
+                              &TileConfig::paper_splitk(), 4);
+        assert_eq!(l.grid, 512);
+        assert_eq!(l.output_tiles, 128);
+        assert_eq!(l.inner_iters, 16); // (4096/4)/64
+    }
+
+    #[test]
+    fn total_traffic_close_to_compulsory() {
+        // Summed per-block DRAM bytes ≈ the shape's compulsory traffic
+        // (B dominates; A and C are L2-friendly at these sizes).
+        let shape = GemmShape::square(16, 4096);
+        let l = splitk_launch(&dev(), &shape, &TileConfig::paper_splitk(), 4);
+        let total = l.total_dram_bytes();
+        let compulsory = shape.compulsory_bytes();
+        assert!((total / compulsory - 1.0).abs() < 0.05,
+                "total {total} vs compulsory {compulsory}");
+    }
+
+    #[test]
+    fn m1_and_m16_share_a_grid() {
+        // block_m = 16 covers the whole 1..=16 batch range with the same
+        // launch geometry — why the paper's m=1 and m=16 TFLOPS differ by
+        // exactly the FLOP ratio.
+        let t = TileConfig::paper_splitk();
+        let l1 = splitk_launch(&dev(), &GemmShape::square(1, 4096), &t, 4);
+        let l16 = splitk_launch(&dev(), &GemmShape::square(16, 4096), &t, 4);
+        assert_eq!(l1.grid, l16.grid);
+    }
+
+    #[test]
+    fn atomic_traffic_only_for_splitk() {
+        let t = TileConfig::paper_splitk();
+        let l = splitk_launch(&dev(), &GemmShape::square(16, 4096), &t, 4);
+        assert!(l.atomic_bytes_per_block > 0.0);
+        assert_eq!(l.atomic_bytes_per_block, 2.0 * 16.0 * 32.0 * 2.0);
+    }
+
+    #[test]
+    fn split_scales_grid_not_tiles() {
+        let t = TileConfig::paper_splitk();
+        let s = GemmShape::square(16, 8192);
+        let l4 = splitk_launch(&dev(), &s, &t, 4);
+        let l8 = splitk_launch(&dev(), &s, &t, 8);
+        assert_eq!(l8.grid, 2 * l4.grid);
+        assert_eq!(l8.output_tiles, l4.output_tiles);
+        // Same total compulsory B traffic either way (±meta rounding).
+        assert!((l8.total_dram_bytes() / l4.total_dram_bytes() - 1.0).abs() < 0.05);
+    }
+}

@@ -1,0 +1,169 @@
+//! StreamK launch descriptor — the paper's §4 future-work direction
+//! (Osama et al., "Stream-K: Work-centric Parallel Decomposition for
+//! Dense Matrix-Matrix Multiplication on the GPU", 2023), implemented as
+//! an extension so the repo can answer the paper's closing question.
+//!
+//! Instead of tiling the *output* (DP) or splitting k by a fixed factor
+//! (SplitK), StreamK launches exactly one persistent block per SM
+//! residency slot and assigns each an equal share of the *total
+//! MAC-iteration space*, crossing tile boundaries as needed. Consequences
+//! the model captures:
+//!
+//! * wave quantization disappears (grid == device capacity by
+//!   construction, wave efficiency = 1);
+//! * load balance is perfect up to one iteration of skew;
+//! * every block boundary that lands inside a tile needs a partial-sum
+//!   fixup through the same atomic path SplitK uses, but the *expected*
+//!   number of writers per tile is `1 + grid/tiles` rather than a fixed
+//!   split factor — contention stays low and size-independent.
+
+use crate::gpusim::{Decomposition, DeviceConfig, KernelLaunch, Occupancy};
+
+use super::resources::resource_usage;
+use super::splitk::build_gemm_launch;
+use super::{GemmShape, TileConfig};
+
+/// Blocks per SM the persistent grid can sustain for these tiles
+/// (resource-limited residency, the StreamK grid-sizing rule).
+pub fn streamk_residency(dev: &DeviceConfig, tiles: &TileConfig) -> u32 {
+    // Occupancy needs a launch; geometry fields don't affect the limits.
+    let res = resource_usage(tiles, Decomposition::SplitK { split_k: 2 });
+    let probe = KernelLaunch {
+        name: "streamk-probe".into(),
+        grid: 1,
+        threads_per_block: tiles.threads(),
+        regs_per_thread: res.regs_per_thread,
+        smem_per_block: res.smem_per_block,
+        flops_per_block: 1.0,
+        dram_bytes_per_block: 1.0,
+        l2_bytes_per_block: 1.0,
+        atomic_bytes_per_block: 0.0,
+        inner_iters: 1,
+        stages: tiles.stages,
+        decomposition: Decomposition::SplitK { split_k: 2 },
+        output_tiles: 1,
+    };
+    Occupancy::compute(dev, &probe).blocks_per_sm.max(1)
+}
+
+/// Build the [`KernelLaunch`] for a StreamK-decomposed fused W4A16 GEMM.
+pub fn streamk_launch(dev: &DeviceConfig, shape: &GemmShape,
+                      tiles: &TileConfig) -> KernelLaunch {
+    let residency = streamk_residency(dev, tiles);
+    let grid = (dev.sms as u64 * residency as u64).max(1);
+
+    // Total iteration space and an equal share per persistent block.
+    let m_tiles = shape.m.div_ceil(tiles.block_m);
+    let n_tiles = shape.n.div_ceil(tiles.block_n);
+    let output_tiles = m_tiles * n_tiles;
+    let iters_per_tile = (shape.k / tiles.block_k).max(1);
+    let total_iters = output_tiles * iters_per_tile;
+    let iters_per_block = total_iters.div_ceil(grid).max(1);
+
+    // Borrow the DP/SplitK traffic accounting for the aggregate, then
+    // re-slice it evenly across the persistent grid.
+    let ref_launch = build_gemm_launch(dev, shape, tiles,
+                                       Decomposition::DataParallel);
+    let total_dram = ref_launch.total_dram_bytes();
+    let total_flops = ref_launch.total_flops();
+
+    // Fixups: each block contributes at most 2 partial-tile boundaries;
+    // tiles fully inside one block's range need no merge.
+    let tile_bytes = (tiles.block_m * tiles.block_n) as f64 * 2.0;
+    let boundary_tiles = grid.min(output_tiles) as f64;
+    let atomic_total = 2.0 * boundary_tiles * 2.0 * tile_bytes;
+
+    let res = resource_usage(tiles, Decomposition::SplitK { split_k: 2 });
+    // Effective writers per tile (drives the contention model): spread of
+    // boundaries over tiles, never below 1.
+    let writers = (1 + (grid / output_tiles.max(1)) as u32).min(8);
+
+    KernelLaunch {
+        name: format!("w4a16_streamk_m{}n{}k{}", shape.m, shape.n, shape.k),
+        grid,
+        threads_per_block: tiles.threads(),
+        regs_per_thread: res.regs_per_thread,
+        smem_per_block: res.smem_per_block,
+        flops_per_block: total_flops / grid as f64,
+        dram_bytes_per_block: total_dram / grid as f64,
+        l2_bytes_per_block: (total_dram + atomic_total) / grid as f64,
+        atomic_bytes_per_block: atomic_total / grid as f64,
+        inner_iters: iters_per_block as u32,
+        stages: tiles.stages,
+        decomposition: Decomposition::SplitK { split_k: writers },
+        output_tiles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::simulate;
+    use crate::kernels::{dp_launch, splitk_launch};
+
+    fn dev() -> DeviceConfig {
+        DeviceConfig::a100_40gb_pcie()
+    }
+
+    #[test]
+    fn grid_fills_device_exactly() {
+        let tiles = TileConfig::paper_splitk();
+        let l = streamk_launch(&dev(), &GemmShape::square(16, 4096), &tiles);
+        let residency = streamk_residency(&dev(), &tiles);
+        assert_eq!(l.grid, dev().sms as u64 * residency as u64);
+    }
+
+    #[test]
+    fn no_wave_quantization() {
+        // grid == capacity by construction -> exactly one full wave.
+        let tiles = TileConfig::paper_splitk();
+        let shape = GemmShape::square(16, 8192);
+        let sim = simulate(&dev(), &streamk_launch(&dev(), &shape, &tiles));
+        assert_eq!(sim.waves.full_waves, 1);
+        assert_eq!(sim.waves.last_wave_fill, 0.0);
+        assert!((sim.waves.wave_efficiency - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conserves_total_work() {
+        let tiles = TileConfig::paper_splitk();
+        let shape = GemmShape::square(16, 4096);
+        let sk = splitk_launch(&dev(), &shape, &tiles, 4);
+        let st = streamk_launch(&dev(), &shape, &tiles);
+        assert!((st.total_flops() / sk.total_flops() - 1.0).abs() < 1e-9);
+        assert!((st.total_dram_bytes() / sk.total_dram_bytes() - 1.0).abs()
+                < 0.05);
+    }
+
+    #[test]
+    fn beats_dp_everywhere_in_the_paper_regime() {
+        let tiles = TileConfig::paper_splitk();
+        for nk in [1024u64, 2048, 4096, 8192, 16384] {
+            let shape = GemmShape::square(16, nk);
+            let st = simulate(&dev(), &streamk_launch(&dev(), &shape, &tiles));
+            let dp = simulate(&dev(), &dp_launch(&dev(), &shape,
+                                                 &TileConfig::paper_dp()));
+            assert!(st.timing.kernel_s < dp.timing.kernel_s,
+                    "nk={nk}: streamk {} vs dp {}", st.timing.kernel_s,
+                    dp.timing.kernel_s);
+        }
+    }
+
+    #[test]
+    fn competitive_with_tuned_splitk_at_awkward_sizes() {
+        // StreamK's pitch: no per-shape split factor to tune. At sizes
+        // whose SplitK grids quantize badly it should at least match the
+        // *best* fixed split.
+        let tiles = TileConfig::paper_splitk();
+        let shape = GemmShape::square(16, 8192);
+        let st = simulate(&dev(), &streamk_launch(&dev(), &shape, &tiles))
+            .timing
+            .kernel_s;
+        let best_sk = [2u32, 4, 8, 16]
+            .iter()
+            .map(|&s| simulate(&dev(), &splitk_launch(&dev(), &shape, &tiles, s))
+                 .timing.kernel_s)
+            .fold(f64::MAX, f64::min);
+        assert!(st < best_sk * 1.15, "streamk {st} vs best splitk {best_sk}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Tile configurations — the Triton kernel's meta-parameters.
+
+
+/// Thread-block tile configuration (BLOCK_M/N/K, warps, pipeline stages).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileConfig {
+    pub block_m: u64,
+    pub block_n: u64,
+    pub block_k: u64,
+    /// Warps per block (Triton `num_warps`).
+    pub warps: u32,
+    /// Software pipeline stages (Triton `num_stages`).
+    pub stages: u32,
+}
+
+impl TileConfig {
+    /// The paper's SplitK kernel configuration for the m=1..16 regime
+    /// (reconstructed from Table 7: grid 512 = 1 × 4096/32 × 4 at
+    /// m=16, n=k=4096, 4 warps, 2 stages -> 92 regs / ~32 KB smem).
+    pub fn paper_splitk() -> Self {
+        TileConfig { block_m: 16, block_n: 32, block_k: 64, warps: 4, stages: 2 }
+    }
+
+    /// The paper's data-parallel baseline configuration (grid 128 =
+    /// 1 × 4096/32; deeper pipeline to compensate for the coarse grid —
+    /// Table 7: 150 regs, smem-limited at 2 blocks/SM).
+    pub fn paper_dp() -> Self {
+        TileConfig { block_m: 16, block_n: 32, block_k: 64, warps: 4, stages: 4 }
+    }
+
+    /// Threads per block.
+    pub fn threads(&self) -> u32 {
+        self.warps * 32
+    }
+
+    /// Output tiles needed to cover an `m x n` C matrix.
+    pub fn output_tiles(&self, m: u64, n: u64) -> u64 {
+        m.div_ceil(self.block_m) * n.div_ceil(self.block_n)
+    }
+
+    /// Validate against a shape (mirrors the Pallas `KernelConfig`
+    /// divisibility rules).
+    pub fn validate(&self, k: u64, group_size: u64, split_k: u64) -> Result<(), String> {
+        if self.block_k % 8 != 0 {
+            return Err(format!("block_k={} must be a multiple of 8", self.block_k));
+        }
+        if group_size % self.block_k != 0 {
+            return Err(format!(
+                "group_size={group_size} must be a multiple of block_k={}",
+                self.block_k
+            ));
+        }
+        if k % (self.block_k * split_k) != 0 {
+            return Err(format!(
+                "k={k} must be a multiple of block_k*split_k={}",
+                self.block_k * split_k
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_reproduce_table7_grids() {
+        // m=16, n=k=4096: SplitK grid 512 (with split 4), DP grid 128.
+        let sk = TileConfig::paper_splitk();
+        assert_eq!(sk.output_tiles(16, 4096) * 4, 512);
+        let dp = TileConfig::paper_dp();
+        assert_eq!(dp.output_tiles(16, 4096), 128);
+    }
+
+    #[test]
+    fn output_tiles_rounds_up() {
+        let t = TileConfig::paper_splitk();
+        assert_eq!(t.output_tiles(1, 4096), 128); // m=1 still needs a tile row
+        assert_eq!(t.output_tiles(17, 33), 2 * 2);
+    }
+
+    #[test]
+    fn validate_rules() {
+        let t = TileConfig::paper_splitk();
+        assert!(t.validate(4096, 128, 4).is_ok());
+        assert!(t.validate(4096, 96, 4).is_err()); // group % block_k
+        assert!(t.validate(100, 128, 4).is_err()); // k % (bk*split)
+    }
+}

@@ -1,0 +1,32 @@
+//! # splitk-w4a16 — SplitK W4A16 fused dequant-GEMM, reproduced end to end
+//!
+//! Reproduction of *"Accelerating a Triton Fused Kernel for W4A16 Quantized
+//! Inference with SplitK work decomposition"* (Hoque et al., cs.DC 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas fused dequant + GEMM kernels (SplitK + data-parallel
+//!   baseline), authored in `python/compile/kernels/`, AOT-lowered to HLO
+//!   text artifacts.
+//! * **L2** — a tiny llama-style decoder whose every projection runs the
+//!   fused kernel (`python/compile/model.py`), exported per batch bucket.
+//! * **L3** — this crate: the serving coordinator ([`coordinator`]), the
+//!   PJRT runtime that loads and executes the artifacts ([`runtime`]), the
+//!   GPU execution simulator that reproduces the paper's A100/H100
+//!   evaluation ([`gpusim`]), kernel launch descriptors and the autotuner
+//!   ([`kernels`]), and the table/figure regeneration harness ([`tables`]).
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python entry point; the binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod kernels;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod tables;
+pub mod util;

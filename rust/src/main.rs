@@ -1,0 +1,199 @@
+//! `splitk-w4a16` — CLI for the SplitK W4A16 reproduction stack.
+//!
+//! ```text
+//! splitk-w4a16 serve    [--artifacts DIR] [--config FILE.json]
+//!                       [--requests N] [--max-new N]
+//! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
+//!                       [--m M] [--nk NK] [--iters N]
+//! splitk-w4a16 simulate [--device a100-40|a100-80|h100] [--m M]
+//!                       [--nk NK] [--split-k S]
+//! splitk-w4a16 tables   [all|t1..t6|f9|f10|t7|t8|t9]
+//! splitk-w4a16 autotune [--m M] [--nk NK]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use splitk_w4a16::config::ServeConfig;
+use splitk_w4a16::coordinator::Coordinator;
+use splitk_w4a16::gpusim::{simulate, DeviceConfig};
+use splitk_w4a16::kernels::{dp_launch, splitk_launch, GemmShape, TileConfig};
+use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32};
+use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
+use splitk_w4a16::tables;
+use splitk_w4a16::util::{logging, Args, Rng};
+
+const USAGE: &str = "usage: splitk-w4a16 <serve|gemm|simulate|tables|autotune> [options]
+run `splitk-w4a16 <cmd> --help-cmd` or see README.md for options";
+
+fn main() -> Result<()> {
+    logging::init();
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("serve") => serve(&args),
+        Some("gemm") => gemm(&args),
+        Some("simulate") => sim(&args),
+        Some("tables") => print_tables(&args),
+        Some("autotune") => autotune(&args),
+        _ => bail!("{USAGE}"),
+    }
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let mut cfg = match args.options.get("config") {
+        Some(p) => ServeConfig::from_json_file(&PathBuf::from(p))?,
+        None => ServeConfig::default(),
+    };
+    cfg.artifacts_dir = PathBuf::from(args.opt_str("artifacts", "artifacts"));
+    let requests: usize = args.opt_num("requests", 32)?;
+    let max_new: usize = args.opt_num("max-new", 8)?;
+    cfg.max_new_tokens = cfg.max_new_tokens.max(max_new);
+
+    let coord = Coordinator::start(&cfg)?;
+    println!("coordinator up; issuing {requests} synthetic requests");
+
+    let mut rng = Rng::seed_from(0);
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let len = rng.gen_range(2, 13);
+        let prompt: Vec<i32> =
+            (0..len).map(|_| rng.gen_range(0, 512) as i32).collect();
+        pending.push(coord.submit(prompt, max_new, None)?);
+    }
+    for p in pending {
+        let r = p.wait()?;
+        println!(
+            "req {:>3}: {:>2} tokens bucket={:>2} latency={:>8.1}ms ({:?})",
+            r.id, r.tokens.len(), r.bucket, r.latency_ms, r.finish_reason
+        );
+    }
+    println!("{}", coord.metrics().summary());
+    coord.shutdown()
+}
+
+fn gemm(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.opt_str("artifacts", "artifacts"));
+    let variant = args.opt_str("variant", "splitk");
+    let m: usize = args.opt_num("m", 16)?;
+    let nk: usize = args.opt_num("nk", 512)?;
+    let iters: usize = args.opt_num("iters", 10)?;
+
+    let manifest = Manifest::load(&artifacts)?;
+    let entry = manifest.find_gemm(&variant, m, nk, nk)?.clone();
+    let group = entry.group_size.ok_or_else(|| anyhow!("gemm missing group"))?;
+    let runtime = Runtime::cpu()?;
+    println!("platform: {}", runtime.platform());
+    let mut cache = ExecutableCache::new(runtime, manifest);
+    let exe = cache.get(&entry)?;
+
+    // Random activations + quantized weights, checked vs the Rust oracle.
+    let mut rng = Rng::seed_from(7);
+    let a = MatF32::new(m, nk, (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+    let w = MatF32::new(nk, nk,
+                        (0..nk * nk).map(|_| rng.uniform_f32(-0.05, 0.05)).collect());
+    let q = quantize_weight(&w, group);
+
+    let inputs = [
+        HostTensor::f32(vec![m, nk], a.data.clone()),
+        HostTensor::i32(vec![q.qweight.rows, q.qweight.cols], q.qweight.data.clone()),
+        HostTensor::f32(vec![q.scales.rows, q.scales.cols], q.scales.data.clone()),
+        HostTensor::i32(vec![q.qzeros.rows, q.qzeros.cols], q.qzeros.data.clone()),
+    ];
+    let out = exe.run(&inputs)?;
+    let got = out[0].as_f32()?;
+    let want = w4a16_gemm_ref(&a, &q);
+    let max_err = got
+        .iter()
+        .zip(&want.data)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f32, f32::max);
+    println!("{} m={m} n=k={nk}: max |err| vs reference = {max_err:.2e}",
+             entry.name);
+    ensure!(max_err < 1e-3, "numerics mismatch");
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        exe.run(&inputs)?;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let flops = 2.0 * m as f64 * nk as f64 * nk as f64;
+    println!("{iters} iters: {:.2} ms/iter  ({:.3} GFLOP/s on CPU-PJRT)",
+             per * 1e3, flops / per / 1e9);
+    Ok(())
+}
+
+fn sim(args: &Args) -> Result<()> {
+    let device = args.opt_str("device", "a100-40");
+    let m: u64 = args.opt_num("m", 16)?;
+    let nk: u64 = args.opt_num("nk", 4096)?;
+    let split_k: u32 = args.opt_num("split-k", 4)?;
+
+    let dev = DeviceConfig::by_key(&device)
+        .ok_or_else(|| anyhow!("unknown device {device}"))?;
+    let shape = GemmShape::square(m, nk);
+    let sk = simulate(&dev, &splitk_launch(&dev, &shape,
+                                           &TileConfig::paper_splitk(), split_k));
+    let dp = simulate(&dev, &dp_launch(&dev, &shape, &TileConfig::paper_dp()));
+    println!("{}", tables::render_nsight_table(&sk.report(), &dp.report()));
+    println!("SplitK TFLOPS: {:.2}   DP TFLOPS: {:.2}   speedup {:.2}x",
+             sk.tflops(shape.useful_flops()), dp.tflops(shape.useful_flops()),
+             dp.timing.kernel_s / sk.timing.kernel_s);
+    Ok(())
+}
+
+fn print_tables(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| args.opt_str("which", "all"));
+    let all = which == "all";
+    let devs = [
+        ("t1", DeviceConfig::a100_40gb_pcie(), 1u64),
+        ("t2", DeviceConfig::a100_80gb_sxm(), 1),
+        ("t3", DeviceConfig::h100_pcie(), 1),
+        ("t4", DeviceConfig::a100_40gb_pcie(), 16),
+        ("t5", DeviceConfig::a100_80gb_sxm(), 16),
+        ("t6", DeviceConfig::h100_pcie(), 16),
+    ];
+    for (key, dev, m) in devs {
+        if all || which == key {
+            println!("── {key} ─────────────────────────────");
+            println!("{}", tables::tflops_table(&dev, m).render());
+        }
+    }
+    if all || which == "f9" {
+        println!("── f9 ─────────────────────────────");
+        println!("{}", tables::split_factor_sweep(
+            &DeviceConfig::a100_80gb_sxm(), 16).render());
+    }
+    if all || which == "f10" {
+        println!("── f10 ────────────────────────────");
+        println!("{}", tables::split_factor_sweep(
+            &DeviceConfig::h100_pcie(), 16).render());
+    }
+    if all || which == "t7" || which == "t8" || which == "f11" {
+        println!("── t7/t8 (+f11/f12 limiters) ──────");
+        let (sk, dp) = tables::nsight_comparison(&DeviceConfig::a100_40gb_pcie());
+        println!("{}", tables::render_nsight_table(&sk.report(), &dp.report()));
+    }
+    if all || which == "t9" {
+        println!("── t9 ─────────────────────────────");
+        println!("{}", tables::render_device_table());
+    }
+    Ok(())
+}
+
+fn autotune(args: &Args) -> Result<()> {
+    let m: u64 = args.opt_num("m", 16)?;
+    let nk: u64 = args.opt_num("nk", 4096)?;
+    for r in tables::autotune_all_devices(m, nk) {
+        println!("{}: best split_k = {} ({:.2} us)", r.device, r.best_split_k,
+                 r.best_us);
+        for (sk, us) in &r.sweep {
+            println!("    split_k={sk:>2}: {us:>8.2} us");
+        }
+    }
+    Ok(())
+}

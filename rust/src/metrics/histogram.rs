@@ -1,0 +1,142 @@
+//! Fixed-bucket log-scale latency histogram (lock-cheap, allocation-free
+//! after construction).
+
+
+/// Log-scale histogram covering ~1e-3 .. ~1e9 with 5% resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BUCKETS: usize = 568; // ceil(log(1e12) / log(1.05))
+const SCALE: f64 = 1e-3; // left edge of bucket 0
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_index(v: f64) -> usize {
+        if v <= SCALE {
+            return 0;
+        }
+        let idx = (v / SCALE).ln() / 1.05f64.ln();
+        (idx as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one sample (any unit; negative values clamp to bucket 0).
+    pub fn record(&mut self, v: f64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Approximate percentile (bucket upper edge), `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return SCALE * 1.05f64.powi(i as i32 + 1);
+            }
+        }
+        self.max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(10.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean(), 10.0);
+        let p50 = h.percentile(50.0);
+        assert!((p50 / 10.0 - 1.0).abs() < 0.06, "p50 {p50}"); // 5% buckets
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 < p99);
+        assert!((p50 / 500.0 - 1.0).abs() < 0.1, "p50 {p50}");
+        assert!((p99 / 990.0 - 1.0).abs() < 0.1, "p99 {p99}");
+    }
+
+    #[test]
+    fn min_max_mean() {
+        let mut h = Histogram::new();
+        for v in [2.0, 4.0, 6.0] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 2.0);
+        assert_eq!(h.max(), 6.0);
+        assert_eq!(h.mean(), 4.0);
+    }
+
+    #[test]
+    fn huge_values_clamp() {
+        let mut h = Histogram::new();
+        h.record(1e30);
+        assert_eq!(h.count(), 1);
+        assert!(h.percentile(100.0) > 0.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! S13 — serving metrics: latency histograms and throughput counters.
+
+mod histogram;
+
+pub use histogram::Histogram;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use std::sync::Mutex;
+
+/// Aggregated serving metrics, cheap to update from the engine hot loop.
+#[derive(Debug)]
+pub struct ServingMetrics {
+    start: Instant,
+    /// Completed requests.
+    pub requests_completed: AtomicU64,
+    /// Generated tokens (all requests).
+    pub tokens_generated: AtomicU64,
+    /// Executed decode steps (batched forward passes).
+    pub decode_steps: AtomicU64,
+    /// Sum over steps of the batch slot utilization numerator
+    /// (active sequences per step) — divides by `decode_steps` for the
+    /// average batch occupancy.
+    pub active_seq_steps: AtomicU64,
+    /// End-to-end request latency, milliseconds.
+    pub request_latency_ms: Mutex<Histogram>,
+    /// Per-decode-step latency, microseconds.
+    pub step_latency_us: Mutex<Histogram>,
+    /// Queue wait time, milliseconds.
+    pub queue_wait_ms: Mutex<Histogram>,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            start: Instant::now(),
+            requests_completed: AtomicU64::new(0),
+            tokens_generated: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+            active_seq_steps: AtomicU64::new(0),
+            request_latency_ms: Mutex::new(Histogram::new()),
+            step_latency_us: Mutex::new(Histogram::new()),
+            queue_wait_ms: Mutex::new(Histogram::new()),
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record_request(&self, latency_ms: f64, tokens: u64, queue_wait_ms: f64) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
+        self.request_latency_ms.lock().unwrap().record(latency_ms);
+        self.queue_wait_ms.lock().unwrap().record(queue_wait_ms);
+    }
+
+    /// Record one executed decode step.
+    pub fn record_step(&self, latency_us: f64, active_seqs: u64) {
+        self.decode_steps.fetch_add(1, Ordering::Relaxed);
+        self.active_seq_steps.fetch_add(active_seqs, Ordering::Relaxed);
+        self.step_latency_us.lock().unwrap().record(latency_us);
+    }
+
+    /// Tokens per second since startup.
+    pub fn throughput_tps(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.tokens_generated.load(Ordering::Relaxed) as f64 / secs
+    }
+
+    /// Average active sequences per decode step.
+    pub fn avg_batch_occupancy(&self) -> f64 {
+        let steps = self.decode_steps.load(Ordering::Relaxed);
+        if steps == 0 {
+            return 0.0;
+        }
+        self.active_seq_steps.load(Ordering::Relaxed) as f64 / steps as f64
+    }
+
+    /// One-line summary for logs / example output.
+    pub fn summary(&self) -> String {
+        let req = self.request_latency_ms.lock().unwrap();
+        let step = self.step_latency_us.lock().unwrap();
+        format!(
+            "requests={} tokens={} steps={} tput={:.1} tok/s batch_occ={:.2} \
+             req_lat p50={:.1}ms p99={:.1}ms step p50={:.0}us p99={:.0}us",
+            self.requests_completed.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.decode_steps.load(Ordering::Relaxed),
+            self.throughput_tps(),
+            self.avg_batch_occupancy(),
+            req.percentile(50.0),
+            req.percentile(99.0),
+            step.percentile(50.0),
+            step.percentile(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let m = ServingMetrics::new();
+        m.record_request(12.0, 5, 1.0);
+        m.record_request(20.0, 7, 2.0);
+        m.record_step(100.0, 4);
+        m.record_step(200.0, 2);
+        assert_eq!(m.requests_completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 12);
+        assert_eq!(m.avg_batch_occupancy(), 3.0);
+        let s = m.summary();
+        assert!(s.contains("requests=2"));
+    }
+
+    #[test]
+    fn throughput_positive_after_tokens() {
+        let m = ServingMetrics::new();
+        m.record_request(1.0, 100, 0.0);
+        assert!(m.throughput_tps() > 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! CPU reference dequantization + GEMM — the Rust-side oracle that
+//! cross-checks what the PJRT executables return (integration tests,
+//! examples, and the serving engine's self-check mode).
+
+use super::{unpack_along_cols, unpack_along_rows, MatF32, QuantizedLinear};
+
+/// Dequantize a packed linear back to dense `f32[k, n]`:
+/// `w[r][c] = (q[r][c] - z[r/G][c]) * s[r/G][c]`.
+pub fn dequantize(q: &QuantizedLinear) -> MatF32 {
+    let (k, n, g) = (q.k, q.n, q.group_size);
+    let qv = unpack_along_rows(&q.qweight);
+    let zv = unpack_along_cols(&q.qzeros);
+    let mut out = MatF32::zeros(k, n);
+    for r in 0..k {
+        let grp = r / g;
+        for c in 0..n {
+            let z = zv[grp * n + c] as f32;
+            let s = q.scales.at(grp, c);
+            *out.at_mut(r, c) = (qv[r * n + c] as f32 - z) * s;
+        }
+    }
+    out
+}
+
+/// Plain dense `f32` GEMM: `C[m,n] = A[m,k] @ B[k,n]` (f32 accumulate).
+pub fn gemm_f32(a: &MatF32, b: &MatF32) -> MatF32 {
+    assert_eq!(a.cols, b.rows, "gemm_f32: inner dims disagree");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatF32::zeros(m, n);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.at(i, l);
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[l * n..(l + 1) * n];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Reference fused W4A16 GEMM: `C = A @ dequant(Q)`.
+pub fn w4a16_gemm_ref(a: &MatF32, q: &QuantizedLinear) -> MatF32 {
+    assert_eq!(a.cols, q.k, "activation k != weight k");
+    gemm_f32(a, &dequantize(q))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_weight;
+
+    #[test]
+    fn gemm_identity() {
+        let mut eye = MatF32::zeros(3, 3);
+        for i in 0..3 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        let b = MatF32::new(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(gemm_f32(&eye, &b), b);
+    }
+
+    #[test]
+    fn gemm_known_values() {
+        let a = MatF32::new(2, 2, vec![1., 2., 3., 4.]);
+        let b = MatF32::new(2, 2, vec![1., 1., 1., 1.]);
+        let c = gemm_f32(&a, &b);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims disagree")]
+    fn gemm_checks_dims() {
+        gemm_f32(&MatF32::zeros(2, 3), &MatF32::zeros(2, 2));
+    }
+
+    #[test]
+    fn fused_ref_matches_manual() {
+        let data: Vec<f32> = (0..64 * 8).map(|i| ((i * 37) % 100) as f32 / 50.0 - 1.0).collect();
+        let w = MatF32::new(64, 8, data);
+        let q = quantize_weight(&w, 32);
+        let a = MatF32::new(2, 64, (0..128).map(|i| (i % 7) as f32 * 0.1).collect());
+        let got = w4a16_gemm_ref(&a, &q);
+        let want = gemm_f32(&a, &dequantize(&q));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn quantize_dequant_gemm_close_to_dense() {
+        // End-to-end: the quantization error in C is bounded by
+        // sum_k |a| * scale/2.
+        let data: Vec<f32> = (0..128 * 16)
+            .map(|i| (((i * 131) % 997) as f32 / 997.0 - 0.5) * 0.1)
+            .collect();
+        let w = MatF32::new(128, 16, data);
+        let q = quantize_weight(&w, 64);
+        let a = MatF32::new(1, 128, vec![0.05; 128]);
+        let dense = gemm_f32(&a, &w);
+        let fused = w4a16_gemm_ref(&a, &q);
+        let max_scale = q.scales.data.iter().fold(0.0f32, |m, &s| m.max(s));
+        let bound = 128.0 * 0.05 * max_scale * 0.5 + 1e-5;
+        assert!(dense.max_abs_diff(&fused) <= bound);
+    }
+}

@@ -1,0 +1,152 @@
+//! Asymmetric per-group int4 quantizer (the GPTQ storage format's
+//! round-to-nearest baseline), mirroring `compile/quant.py`.
+
+use super::{pack_along_cols, pack_along_rows, MatF32, MatI32, QMAX};
+
+/// Packed parameters of one W4A16 linear layer `[k, n]`.
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    /// Logical weight rows (k) and columns (n).
+    pub k: usize,
+    pub n: usize,
+    /// Quantization group length along k.
+    pub group_size: usize,
+    /// Packed int4 weights `i32[k/8, n]`.
+    pub qweight: MatI32,
+    /// Per-(group, column) scales `f32[k/G, n]`.
+    pub scales: MatF32,
+    /// Packed per-(group, column) zero points `i32[k/G, n/8]`.
+    pub qzeros: MatI32,
+}
+
+/// Quantize a dense `f32[k, n]` weight (row-major) to the W4 format.
+///
+/// Per (group, column): `scale = (max - min) / 15` (floored at 1e-8),
+/// `zero = clamp(round(-min / scale), 0, 15)`,
+/// `q = clamp(round(w / scale) + zero, 0, 15)`.
+pub fn quantize_weight(w: &MatF32, group_size: usize) -> QuantizedLinear {
+    let (k, n) = (w.rows, w.cols);
+    assert_eq!(k % group_size, 0, "k must be a multiple of group_size");
+    let groups = k / group_size;
+
+    let mut scales = MatF32::zeros(groups, n);
+    let mut zeros = vec![0u8; groups * n];
+    let mut q = vec![0u8; k * n];
+
+    for g in 0..groups {
+        for c in 0..n {
+            // Range extended to include 0 (matches compile/quant.py):
+            // guarantees 0.0 is exactly representable and keeps constant
+            // groups from degenerating to a ~0 scale.
+            let mut wmin = 0.0f32;
+            let mut wmax = 0.0f32;
+            for r in 0..group_size {
+                let v = w.at(g * group_size + r, c);
+                wmin = wmin.min(v);
+                wmax = wmax.max(v);
+            }
+            let scale = ((wmax - wmin) / QMAX as f32).max(1e-8);
+            let zero = (-wmin / scale).round().clamp(0.0, QMAX as f32) as u8;
+            *scales.at_mut(g, c) = scale;
+            zeros[g * n + c] = zero;
+            for r in 0..group_size {
+                let row = g * group_size + r;
+                let v = (w.at(row, c) / scale).round() + zero as f32;
+                q[row * n + c] = v.clamp(0.0, QMAX as f32) as u8;
+            }
+        }
+    }
+
+    QuantizedLinear {
+        k,
+        n,
+        group_size,
+        qweight: pack_along_rows(&q, k, n),
+        scales,
+        qzeros: pack_along_cols(&zeros, groups, n),
+    }
+}
+
+impl QuantizedLinear {
+    /// Byte sizes of the packed tensors — used by the simulator's traffic
+    /// model and by the memory-savings accounting (W4 vs FP16).
+    pub fn packed_bytes(&self) -> usize {
+        self.qweight.data.len() * 4 + self.scales.data.len() * 4 + self.qzeros.data.len() * 4
+    }
+
+    /// Bytes the same weight would occupy as dense FP16.
+    pub fn fp16_bytes(&self) -> usize {
+        self.k * self.n * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dequantize, unpack_along_rows};
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> MatF32 {
+        // Small deterministic LCG — keeps the substrate dependency-free.
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 11) as f64 / (1u64 << 53) as f64) as f32 * 2.0 - 1.0
+        };
+        let data = (0..rows * cols).map(|_| next()).collect();
+        MatF32::new(rows, cols, data)
+    }
+
+    #[test]
+    fn shapes() {
+        let w = rand_mat(256, 64, 1);
+        let q = quantize_weight(&w, 64);
+        assert_eq!((q.qweight.rows, q.qweight.cols), (32, 64));
+        assert_eq!((q.scales.rows, q.scales.cols), (4, 64));
+        assert_eq!((q.qzeros.rows, q.qzeros.cols), (4, 8));
+    }
+
+    #[test]
+    fn dequant_error_bound() {
+        let w = rand_mat(128, 32, 2);
+        let q = quantize_weight(&w, 32);
+        let wd = dequantize(&q);
+        for r in 0..128 {
+            for c in 0..32 {
+                let bound = q.scales.at(r / 32, c) * 0.5 + 1e-6;
+                assert!(
+                    (wd.at(r, c) - w.at(r, c)).abs() <= bound,
+                    "({r},{c}) err {} > bound {bound}",
+                    (wd.at(r, c) - w.at(r, c)).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn extremes_hit_full_range() {
+        let col: Vec<f32> = (0..64).map(|i| i as f32 / 63.0 * 2.0 - 1.0).collect();
+        let data: Vec<f32> = col.iter().flat_map(|&v| [v; 8]).collect();
+        let w = MatF32::new(64, 8, data);
+        let q = quantize_weight(&w, 64);
+        let vals = unpack_along_rows(&q.qweight);
+        // fp rounding at the half-step boundary may cost one level.
+        assert!(*vals.iter().min().unwrap() <= 1);
+        assert!(*vals.iter().max().unwrap() >= 14);
+    }
+
+    #[test]
+    fn memory_savings_is_about_4x() {
+        let w = rand_mat(512, 512, 3);
+        let q = quantize_weight(&w, 128);
+        let ratio = q.fp16_bytes() as f64 / q.packed_bytes() as f64;
+        assert!(ratio > 3.0 && ratio < 4.0, "ratio {ratio}");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of group_size")]
+    fn rejects_bad_group() {
+        quantize_weight(&MatF32::zeros(100, 8), 64);
+    }
+}

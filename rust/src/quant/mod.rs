@@ -1,0 +1,121 @@
+//! S7 — GPTQ-style W4 quantization substrate (Rust side).
+//!
+//! Bit-for-bit the same storage format as `python/compile/quant.py`:
+//!
+//! * `qweight`: `i32[K/8, N]` — 8 int4 nibbles packed along K; nibble `i`
+//!   (bits `4i..4i+3`) of `qweight[r][n]` holds weight row `r*8 + i`.
+//! * `scales`: `f32[K/G, N]` — per-(group, column) scale.
+//! * `qzeros`: `i32[K/G, N/8]` — per-(group, column) zero points, packed
+//!   along N.
+//!
+//! The Rust side needs this to (a) quantize weights for the GEMM
+//! artifacts' runtime inputs, (b) compute CPU reference results that
+//! cross-check what the PJRT executables return, and (c) feed the
+//! simulator exact byte-traffic numbers.
+
+mod gemm_ref;
+mod gptq;
+mod pack;
+
+pub use gemm_ref::{dequantize, gemm_f32, w4a16_gemm_ref};
+pub use gptq::{quantize_weight, QuantizedLinear};
+pub use pack::{
+    pack_along_cols, pack_along_rows, unpack_along_cols, unpack_along_rows,
+};
+
+/// int4 values per packed i32 word.
+pub const PACK_FACTOR: usize = 8;
+/// Unsigned 4-bit maximum.
+pub const QMAX: u32 = 15;
+
+/// A dense row-major matrix of `f32` — the minimal tensor type the
+/// substrate needs (activations, scales, reference outputs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Create a matrix from row-major data; panics if sizes disagree.
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatF32 size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Element accessor (row-major).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element accessor (row-major).
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Max absolute elementwise difference against another matrix.
+    pub fn max_abs_diff(&self, other: &MatF32) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// A dense row-major matrix of packed `i32` words.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    /// Create a matrix from row-major data; panics if sizes disagree.
+    pub fn new(rows: usize, cols: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatI32 size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Element accessor (row-major).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matf32_accessors() {
+        let mut m = MatF32::zeros(2, 3);
+        *m.at_mut(1, 2) = 5.0;
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.at(0, 0), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn matf32_size_checked() {
+        MatF32::new(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = MatF32::new(1, 2, vec![1.0, 2.0]);
+        let b = MatF32::new(1, 2, vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

@@ -1,0 +1,135 @@
+//! int4 <-> packed-i32 conversions, mirroring `compile/quant.py` exactly.
+
+use super::{MatI32, PACK_FACTOR, QMAX};
+
+/// Pack uint4 values (rows are the packed axis) into i32.
+///
+/// `q` is a row-major `[k, n]` slice of values in `0..=15`; returns
+/// `i32[k/8, n]`. Panics if `k % 8 != 0` or any value is out of range.
+pub fn pack_along_rows(q: &[u8], k: usize, n: usize) -> MatI32 {
+    assert_eq!(q.len(), k * n, "pack_along_rows: size mismatch");
+    assert_eq!(k % PACK_FACTOR, 0, "k must be a multiple of 8");
+    let kp = k / PACK_FACTOR;
+    let mut out = vec![0i32; kp * n];
+    for rp in 0..kp {
+        for i in 0..PACK_FACTOR {
+            let row = rp * PACK_FACTOR + i;
+            for c in 0..n {
+                let v = q[row * n + c] as u32;
+                assert!(v <= QMAX, "value {v} out of int4 range");
+                out[rp * n + c] |= (v << (4 * i)) as i32;
+            }
+        }
+    }
+    MatI32::new(kp, n, out)
+}
+
+/// Inverse of [`pack_along_rows`]: `i32[k/8, n]` -> `u8[k, n]`.
+pub fn unpack_along_rows(packed: &MatI32) -> Vec<u8> {
+    let (kp, n) = (packed.rows, packed.cols);
+    let mut out = vec![0u8; kp * PACK_FACTOR * n];
+    for rp in 0..kp {
+        for c in 0..n {
+            let word = packed.data[rp * n + c] as u32;
+            for i in 0..PACK_FACTOR {
+                out[(rp * PACK_FACTOR + i) * n + c] = ((word >> (4 * i)) & 0xF) as u8;
+            }
+        }
+    }
+    out
+}
+
+/// Pack uint4 values (cols are the packed axis) into i32.
+///
+/// `z` is a row-major `[g, n]` slice of values in `0..=15`; returns
+/// `i32[g, n/8]`. Panics if `n % 8 != 0` or any value is out of range.
+pub fn pack_along_cols(z: &[u8], g: usize, n: usize) -> MatI32 {
+    assert_eq!(z.len(), g * n, "pack_along_cols: size mismatch");
+    assert_eq!(n % PACK_FACTOR, 0, "n must be a multiple of 8");
+    let np = n / PACK_FACTOR;
+    let mut out = vec![0i32; g * np];
+    for r in 0..g {
+        for cp in 0..np {
+            let mut word = 0u32;
+            for i in 0..PACK_FACTOR {
+                let v = z[r * n + cp * PACK_FACTOR + i] as u32;
+                assert!(v <= QMAX, "value {v} out of int4 range");
+                word |= v << (4 * i);
+            }
+            out[r * np + cp] = word as i32;
+        }
+    }
+    MatI32::new(g, np, out)
+}
+
+/// Inverse of [`pack_along_cols`]: `i32[g, n/8]` -> `u8[g, n]`.
+pub fn unpack_along_cols(packed: &MatI32) -> Vec<u8> {
+    let (g, np) = (packed.rows, packed.cols);
+    let n = np * PACK_FACTOR;
+    let mut out = vec![0u8; g * n];
+    for r in 0..g {
+        for cp in 0..np {
+            let word = packed.data[r * np + cp] as u32;
+            for i in 0..PACK_FACTOR {
+                out[r * n + cp * PACK_FACTOR + i] = ((word >> (4 * i)) & 0xF) as u8;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_rows() {
+        let k = 16;
+        let n = 5;
+        let q: Vec<u8> = (0..k * n).map(|i| (i % 16) as u8).collect();
+        let packed = pack_along_rows(&q, k, n);
+        assert_eq!(packed.rows, 2);
+        assert_eq!(packed.cols, 5);
+        assert_eq!(unpack_along_rows(&packed), q);
+    }
+
+    #[test]
+    fn roundtrip_cols() {
+        let g = 3;
+        let n = 16;
+        let z: Vec<u8> = (0..g * n).map(|i| ((i * 7) % 16) as u8).collect();
+        let packed = pack_along_cols(&z, g, n);
+        assert_eq!(packed.cols, 2);
+        assert_eq!(unpack_along_cols(&packed), z);
+    }
+
+    #[test]
+    fn nibble_order_matches_python() {
+        // Row r*8+i -> bits 4i..4i+3 (kernel unpacks with >> 4i & 0xF).
+        let mut q = vec![0u8; 8];
+        q[3] = 0xA;
+        let packed = pack_along_rows(&q, 8, 1);
+        assert_eq!((packed.data[0] as u32 >> 12) & 0xF, 0xA);
+    }
+
+    #[test]
+    fn sign_bit_roundtrip() {
+        // Nibble 7 = 15 sets the i32 sign bit; masked unpack must survive.
+        let q = vec![15u8; 8];
+        let packed = pack_along_rows(&q, 8, 1);
+        assert!(packed.data[0] < 0);
+        assert_eq!(unpack_along_rows(&packed), q);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 8")]
+    fn rejects_bad_k() {
+        pack_along_rows(&[0u8; 7], 7, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of int4 range")]
+    fn rejects_out_of_range() {
+        pack_along_rows(&[16u8; 8], 8, 1);
+    }
+}

@@ -1,0 +1,281 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the Rust runtime (`artifacts/manifest.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::util::Json;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            name: v.get("name")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_usize_vec()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Kernel launch configuration recorded for a GEMM artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelConfigMeta {
+    pub block_m: usize,
+    pub block_n: usize,
+    pub block_k: usize,
+    pub split_k: usize,
+    pub ordering: String,
+}
+
+impl KernelConfigMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(KernelConfigMeta {
+            block_m: v.get("block_m")?.as_usize()?,
+            block_n: v.get("block_n")?.as_usize()?,
+            block_k: v.get("block_k")?.as_usize()?,
+            split_k: v.get("split_k")?.as_usize()?,
+            ordering: v.get("ordering")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One exported executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// "gemm" or "decode".
+    pub kind: String,
+    pub file: String,
+    pub variant: String,
+    pub m: Option<usize>,
+    pub n: Option<usize>,
+    pub k: Option<usize>,
+    pub group_size: Option<usize>,
+    pub batch: Option<usize>,
+    pub kernel_config: Option<KernelConfigMeta>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: Option<String>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(ArtifactEntry {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            file: v.get("file")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+            m: v.opt("m").map(|x| x.as_usize()).transpose()?,
+            n: v.opt("n").map(|x| x.as_usize()).transpose()?,
+            k: v.opt("k").map(|x| x.as_usize()).transpose()?,
+            group_size: v.opt("group_size").map(|x| x.as_usize()).transpose()?,
+            batch: v.opt("batch").map(|x| x.as_usize()).transpose()?,
+            kernel_config: v
+                .opt("kernel_config")
+                .map(KernelConfigMeta::from_json)
+                .transpose()?,
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            sha256: v.opt("sha256").map(|x| Ok::<_, anyhow::Error>(
+                x.as_str()?.to_string())).transpose()?,
+        })
+    }
+}
+
+/// Model metadata the engine needs at runtime.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub group_size: usize,
+    pub variant: String,
+    pub batch_buckets: Vec<usize>,
+    pub seed: u64,
+}
+
+impl ModelMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(ModelMeta {
+            vocab: v.get("vocab")?.as_usize()?,
+            d_model: v.get("d_model")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            n_heads: v.get("n_heads")?.as_usize()?,
+            d_ff: v.get("d_ff")?.as_usize()?,
+            max_seq: v.get("max_seq")?.as_usize()?,
+            group_size: v.get("group_size")?.as_usize()?,
+            variant: v.get("variant")?.as_str()?.to_string(),
+            batch_buckets: v.get("batch_buckets")?.as_usize_vec()?,
+            seed: v.opt("seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0),
+        })
+    }
+}
+
+/// The parsed `manifest.json` plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u32,
+    pub model: ModelMeta,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let m = Self::parse(&text, dir).context("parsing manifest.json")?;
+        for e in &m.artifacts {
+            ensure!(
+                dir.join(&e.file).exists(),
+                "artifact file missing: {}",
+                e.file
+            );
+        }
+        Ok(m)
+    }
+
+    /// Parse manifest text (no file-existence checks — used by tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let format = v.get("format")?.as_usize()? as u32;
+        ensure!(format == 1, "unsupported manifest format {format}");
+        Ok(Manifest {
+            format,
+            model: ModelMeta::from_json(v.get("model")?)?,
+            artifacts: v
+                .get("artifacts")?
+                .as_arr()?
+                .iter()
+                .map(ArtifactEntry::from_json)
+                .collect::<Result<_>>()?,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Find a GEMM artifact by variant and shape.
+    pub fn find_gemm(&self, variant: &str, m: usize, n: usize, k: usize)
+                     -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|e| {
+                e.kind == "gemm"
+                    && e.variant == variant
+                    && e.m == Some(m)
+                    && e.n == Some(n)
+                    && e.k == Some(k)
+            })
+            .ok_or_else(|| anyhow!("no gemm artifact {variant} m={m} n={n} k={k}"))
+    }
+
+    /// Find the decode-step artifact for a batch bucket.
+    pub fn find_decode(&self, variant: &str, batch: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|e| e.kind == "decode" && e.variant == variant
+                  && e.batch == Some(batch))
+            .ok_or_else(|| anyhow!("no decode artifact {variant} b={batch}"))
+    }
+
+    /// All GEMM shapes available for a variant, sorted.
+    pub fn gemm_shapes(&self, variant: &str) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|e| e.kind == "gemm" && e.variant == variant)
+            .filter_map(|e| Some((e.m?, e.n?, e.k?)))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+            "format": 1,
+            "model": {
+                "vocab": 512, "d_model": 256, "n_layers": 4, "n_heads": 4,
+                "d_ff": 512, "max_seq": 128, "group_size": 64,
+                "variant": "splitk", "batch_buckets": [1, 2, 4, 8, 16],
+                "seed": 0
+            },
+            "artifacts": [{
+                "name": "gemm_splitk_m1_n512_k512",
+                "kind": "gemm", "file": "g.hlo.txt", "variant": "splitk",
+                "m": 1, "n": 512, "k": 512, "group_size": 128,
+                "kernel_config": {"block_m": 1, "block_n": 64, "block_k": 64,
+                                   "split_k": 4, "ordering": "strided"},
+                "inputs": [{"name": "a", "shape": [1, 512], "dtype": "float32"}],
+                "outputs": [{"name": "c", "shape": [1, 512], "dtype": "float32"}]
+            }]
+        }"#
+    }
+
+    #[test]
+    fn parse_and_find() {
+        let m = Manifest::parse(sample_manifest(), Path::new("/tmp")).unwrap();
+        assert_eq!(m.model.vocab, 512);
+        assert_eq!(m.model.batch_buckets, vec![1, 2, 4, 8, 16]);
+        let e = m.find_gemm("splitk", 1, 512, 512).unwrap();
+        assert_eq!(e.kernel_config.as_ref().unwrap().split_k, 4);
+        assert_eq!(e.inputs[0].shape, vec![1, 512]);
+        assert!(m.find_gemm("dp", 1, 512, 512).is_err());
+        assert!(m.find_decode("splitk", 4).is_err());
+        assert_eq!(m.gemm_shapes("splitk"), vec![(1, 512, 512)]);
+    }
+
+    #[test]
+    fn load_checks_files_exist() {
+        let dir = std::env::temp_dir().join(format!(
+            "splitk-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest()).unwrap();
+        assert!(Manifest::load(&dir).is_err(), "missing g.hlo.txt");
+        std::fs::write(dir.join("g.hlo.txt"), "HloModule x").unwrap();
+        assert!(Manifest::load(&dir).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let text = sample_manifest().replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&text, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_elements() {
+        let t = TensorSpec { name: "x".into(), shape: vec![2, 3, 4],
+                             dtype: "float32".into() };
+        assert_eq!(t.elements(), 24);
+    }
+}

@@ -1,0 +1,76 @@
+//! Executable cache: compile each artifact once, reuse across requests.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::{ArtifactEntry, Executable, Manifest, Runtime};
+
+/// Caches compiled executables keyed by artifact name. Engine-thread
+/// local (`Rc`, not `Arc` — the underlying PJRT handles are not `Send`).
+pub struct ExecutableCache {
+    runtime: Runtime,
+    manifest: Manifest,
+    cache: HashMap<String, Rc<Executable>>,
+}
+
+impl ExecutableCache {
+    /// Wrap a runtime + manifest.
+    pub fn new(runtime: Runtime, manifest: Manifest) -> Self {
+        ExecutableCache { runtime, manifest, cache: HashMap::new() }
+    }
+
+    /// The manifest backing this cache.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn get(&mut self, entry: &ArtifactEntry) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(&entry.name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        log::info!("compiling artifact {}", entry.name);
+        let exe = Rc::new(self.runtime.load_hlo(&path)?);
+        self.cache.insert(entry.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Convenience: get the decode-step executable for a batch bucket.
+    pub fn decode(&mut self, variant: &str, batch: usize) -> Result<Rc<Executable>> {
+        let entry = self.manifest.find_decode(variant, batch)?.clone();
+        self.get(&entry)
+    }
+
+    /// Convenience: get a GEMM executable.
+    pub fn gemm(&mut self, variant: &str, m: usize, n: usize, k: usize)
+                -> Result<Rc<Executable>> {
+        let entry = self.manifest.find_gemm(variant, m, n, k)?.clone();
+        self.get(&entry)
+    }
+
+    /// Pre-compile every decode bucket (warm start before serving).
+    pub fn warm_decode(&mut self, variant: &str) -> Result<usize> {
+        let buckets = self.manifest.model.batch_buckets.clone();
+        let mut n = 0;
+        for b in buckets {
+            if self.manifest.find_decode(variant, b).is_ok() {
+                self.decode(variant, b)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// True if nothing has been compiled yet.
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}

@@ -1,0 +1,92 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute.
+//!
+//! Adapted from /opt/xla-example/load_hlo — HLO *text* is the interchange
+//! format (the text parser reassigns the 64-bit instruction ids jax >= 0.5
+//! emits, which xla_extension 0.5.1's proto path rejects).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::HostTensor;
+
+/// Owns the PJRT client. Not `Send` — lives on the engine thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform string, e.g. "cpu" (Host).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO text file and compile it for this client.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the un-tupled outputs.
+    ///
+    /// aot.py lowers with `return_tuple=True`, so the raw result is one
+    /// tuple literal that we decompose into the manifest's output order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        ensure!(!result.is_empty() && !result[0].is_empty(),
+                "empty execution result from {}", self.name);
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute with raw XLA literals (engine-thread hot path — avoids the
+    /// HostTensor <-> Literal copies of [`Self::run`] for large state like
+    /// the KV cache). Returns the un-tupled output literals.
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        ensure!(!result.is_empty() && !result[0].is_empty(),
+                "empty execution result from {}", self.name);
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        tuple.to_tuple().context("untupling result")
+    }
+
+    /// Artifact name (path) this executable came from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}

@@ -1,0 +1,148 @@
+//! Typed host tensors <-> XLA literals.
+//!
+//! The coordinator's channels carry [`HostTensor`]s (plain `Send` data);
+//! conversion to/from `xla::Literal` happens only on the engine thread
+//! that owns the PJRT client (the xla crate's types wrap raw pointers and
+//! are not `Send`).
+
+use anyhow::{bail, ensure, Result};
+
+/// A host-side tensor: row-major data + shape. The only currency that
+/// crosses thread boundaries in the serving stack.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    /// f32 tensor; panics if sizes disagree.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    /// i32 tensor; panics if sizes disagree.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    /// Scalar i32 (rank 0) — e.g. the decode `pos` input.
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Borrow f32 data or error.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Borrow i32 data or error.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Convert to an XLA literal (engine thread only).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal (engine thread only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Validate against a manifest tensor spec.
+    pub fn check_spec(&self, spec: &crate::runtime::TensorSpec) -> Result<()> {
+        ensure!(
+            self.shape() == spec.shape.as_slice(),
+            "shape mismatch for '{}': got {:?}, manifest says {:?}",
+            spec.name, self.shape(), spec.shape
+        );
+        let dtype = match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+        };
+        ensure!(
+            dtype == spec.dtype,
+            "dtype mismatch for '{}': got {dtype}, manifest says {}",
+            spec.name, spec.dtype
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.elements(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn scalar() {
+        let t = HostTensor::scalar_i32(7);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        HostTensor::f32(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn spec_check() {
+        use crate::runtime::TensorSpec;
+        let t = HostTensor::i32(vec![4], vec![0; 4]);
+        let good = TensorSpec { name: "tokens".into(), shape: vec![4],
+                                dtype: "int32".into() };
+        let bad_shape = TensorSpec { shape: vec![8], ..good.clone() };
+        let bad_dtype = TensorSpec { dtype: "float32".into(), ..good.clone() };
+        assert!(t.check_spec(&good).is_ok());
+        assert!(t.check_spec(&bad_shape).is_err());
+        assert!(t.check_spec(&bad_dtype).is_err());
+    }
+
+    // Literal round-trips are covered by rust/tests/runtime_integration.rs
+    // (they need the PJRT shared library at runtime).
+}

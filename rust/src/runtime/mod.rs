@@ -1,0 +1,19 @@
+//! S10 — PJRT runtime: loads the AOT artifacts `python/compile/aot.py`
+//! produced and executes them from the serving hot path.
+//!
+//! ```text
+//! artifacts/manifest.json  ──> Manifest (specs, shapes, buckets)
+//! artifacts/*.hlo.txt      ──> Runtime::load_hlo ──> Executable
+//!                              ExecutableCache: compile once, reuse
+//! HostTensor (Send)        <─> xla::Literal (engine-thread only)
+//! ```
+
+mod artifact;
+mod cache;
+mod client;
+mod literal;
+
+pub use artifact::{ArtifactEntry, KernelConfigMeta, Manifest, ModelMeta, TensorSpec};
+pub use cache::ExecutableCache;
+pub use client::{Executable, Runtime};
+pub use literal::HostTensor;

@@ -1,0 +1,414 @@
+//! S14 — paper table & figure regeneration harness.
+//!
+//! One function per experiment in DESIGN.md §5. Each returns structured
+//! rows (and can render the paper's table layout) so the criterion
+//! benches, the `paper-tables` example, and EXPERIMENTS.md all share one
+//! source of truth.
+
+
+use crate::gpusim::{simulate, DeviceConfig, NsightReport, SimResult};
+use crate::kernels::{
+    autotune_split_k, dp_launch, splitk_launch, AutotuneResult, GemmShape,
+    TileConfig,
+};
+
+/// The paper's n = k sweep axis (Tables 1–6, Figures 3–8).
+pub const NK_SWEEP: [u64; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+/// One row of a SplitK-vs-DP TFLOPS table.
+#[derive(Debug, Clone)]
+pub struct TflopsRow {
+    pub n: u64,
+    pub k: u64,
+    pub splitk_tflops: f64,
+    pub dp_tflops: f64,
+    /// splitk / dp — the per-row speedup.
+    pub speedup: f64,
+    pub splitk_us: f64,
+    pub dp_us: f64,
+}
+
+/// A full SplitK-vs-DP table (one of Tables 1–6 / Figures 3–8).
+#[derive(Debug, Clone)]
+pub struct TflopsTable {
+    pub device: String,
+    pub m: u64,
+    pub split_k: u32,
+    pub rows: Vec<TflopsRow>,
+}
+
+/// Paper-recommended splitting factor per device (§3.3: 4 on A100,
+/// 8 on H100).
+pub fn paper_split_k(dev: &DeviceConfig) -> u32 {
+    if dev.name.contains("H100") {
+        8
+    } else {
+        4
+    }
+}
+
+/// Generate one SplitK-vs-DP TFLOPS table: `m` fixed, n = k swept.
+pub fn tflops_table(dev: &DeviceConfig, m: u64) -> TflopsTable {
+    let split_k = paper_split_k(dev);
+    let sk_tiles = TileConfig::paper_splitk();
+    let dp_tiles = TileConfig::paper_dp();
+    let rows = NK_SWEEP
+        .iter()
+        .map(|&nk| {
+            let shape = GemmShape::square(m, nk);
+            let sk = simulate(dev, &splitk_launch(dev, &shape, &sk_tiles, split_k));
+            let dp = simulate(dev, &dp_launch(dev, &shape, &dp_tiles));
+            let flops = shape.useful_flops();
+            let sk_tf = sk.tflops(flops);
+            let dp_tf = dp.tflops(flops);
+            TflopsRow {
+                n: nk,
+                k: nk,
+                splitk_tflops: sk_tf,
+                dp_tflops: dp_tf,
+                speedup: sk_tf / dp_tf,
+                splitk_us: sk.timing.kernel_s * 1e6,
+                dp_us: dp.timing.kernel_s * 1e6,
+            }
+        })
+        .collect();
+    TflopsTable { device: dev.name.clone(), m, split_k, rows }
+}
+
+impl TflopsTable {
+    /// Geometric-mean speedup over the sweep (the paper quotes averages).
+    pub fn mean_speedup(&self) -> f64 {
+        let log_sum: f64 = self.rows.iter().map(|r| r.speedup.ln()).sum();
+        (log_sum / self.rows.len() as f64).exp()
+    }
+
+    /// Peak speedup over the sweep.
+    pub fn peak_speedup(&self) -> f64 {
+        self.rows.iter().map(|r| r.speedup).fold(0.0, f64::max)
+    }
+
+    /// Render in the paper's layout.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "SplitK vs Data Parallel TFLOPS — {} — M={} (split_k={})\n\
+             {:>6} {:>6} {:>16} {:>22} {:>9}\n",
+            self.device, self.m, self.split_k,
+            "N", "K", "SplitK [TFLOPS]", "Data Parallel [TFLOPS]", "Speedup"
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{:>6} {:>6} {:>16.2} {:>22.2} {:>8.2}x\n",
+                r.n, r.k, r.splitk_tflops, r.dp_tflops, r.speedup
+            ));
+        }
+        s.push_str(&format!(
+            "mean speedup {:.2}x   peak {:.2}x\n",
+            self.mean_speedup(), self.peak_speedup()
+        ));
+        s
+    }
+}
+
+/// Figures 9/10: TFLOPS (at m=16) for each splitting factor across the
+/// n = k sweep.
+#[derive(Debug, Clone)]
+pub struct SplitFactorSweep {
+    pub device: String,
+    pub m: u64,
+    /// (split_k, per-nk TFLOPS aligned with `NK_SWEEP`).
+    pub series: Vec<(u32, Vec<f64>)>,
+}
+
+/// Generate the Figure 9/10 split-factor comparison for a device.
+pub fn split_factor_sweep(dev: &DeviceConfig, m: u64) -> SplitFactorSweep {
+    let tiles = TileConfig::paper_splitk();
+    let mut series = Vec::new();
+    for &sk in &[2u32, 4, 8, 16] {
+        let mut tf = Vec::new();
+        for &nk in &NK_SWEEP {
+            let shape = GemmShape::square(m, nk);
+            if tiles.validate(shape.k, shape.group_size, sk as u64).is_err() {
+                tf.push(f64::NAN);
+                continue;
+            }
+            let sim = simulate(dev, &splitk_launch(dev, &shape, &tiles, sk));
+            tf.push(sim.tflops(shape.useful_flops()));
+        }
+        series.push((sk, tf));
+    }
+    SplitFactorSweep { device: dev.name.clone(), m, series }
+}
+
+impl SplitFactorSweep {
+    /// The split factor with the best average TFLOPS over the sweep
+    /// (paper: 4 on A100, 8 on H100). Averaged over the n=k rows valid
+    /// for *every* factor, so a factor can't win by skipping its worst
+    /// (divisibility-infeasible) sizes.
+    pub fn best_split_k(&self) -> u32 {
+        let common: Vec<usize> = (0..NK_SWEEP.len())
+            .filter(|&i| self.series.iter().all(|(_, tf)| !tf[i].is_nan()))
+            .collect();
+        self.series
+            .iter()
+            .max_by(|a, b| {
+                let mean = |tf: &[f64]| {
+                    common.iter().map(|&i| tf[i]).sum::<f64>()
+                        / common.len().max(1) as f64
+                };
+                mean(&a.1).partial_cmp(&mean(&b.1)).unwrap()
+            })
+            .map(|(sk, _)| *sk)
+            .unwrap()
+    }
+
+    /// Render as aligned columns (one line per n=k, one column per split).
+    pub fn render(&self) -> String {
+        let mut s = format!("SplitK factor comparison — {} — M={}\n{:>7}",
+                            self.device, self.m, "N=K");
+        for (sk, _) in &self.series {
+            s.push_str(&format!(" {:>10}", format!("split={sk}")));
+        }
+        s.push('\n');
+        for (i, &nk) in NK_SWEEP.iter().enumerate() {
+            s.push_str(&format!("{nk:>7}"));
+            for (_, tf) in &self.series {
+                if tf[i].is_nan() {
+                    s.push_str(&format!(" {:>10}", "-"));
+                } else {
+                    s.push_str(&format!(" {:>10.2}", tf[i]));
+                }
+            }
+            s.push('\n');
+        }
+        s.push_str(&format!("best split_k = {}\n", self.best_split_k()));
+        s
+    }
+}
+
+
+/// Table 7/8 + Figures 11/12: the Nsight-style comparison at
+/// m=16, n=k=4096 on the A100.
+pub fn nsight_comparison(dev: &DeviceConfig) -> (SimResult, SimResult) {
+    let shape = GemmShape::square(16, 4096);
+    let sk = simulate(dev, &splitk_launch(dev, &shape,
+                                          &TileConfig::paper_splitk(), 4));
+    let dp = simulate(dev, &dp_launch(dev, &shape, &TileConfig::paper_dp()));
+    (sk, dp)
+}
+
+/// Render Table 7 + Table 8 side by side.
+pub fn render_nsight_table(sk: &NsightReport, dp: &NsightReport) -> String {
+    let rows: Vec<(&str, String, String)> = vec![
+        ("Latency", format!("{:.2}us", sk.latency_us), format!("{:.2}us", dp.latency_us)),
+        ("Global Memory Throughput", format!("{:.0} GB/s", sk.gmem_throughput_gbs),
+         format!("{:.0} GB/s", dp.gmem_throughput_gbs)),
+        ("Grid Size", sk.grid.to_string(), dp.grid.to_string()),
+        ("Registers", sk.registers.to_string(), dp.registers.to_string()),
+        ("Shared Memory Usage", format!("{:.2}KB", sk.smem_usage_kb),
+         format!("{:.2}KB", dp.smem_usage_kb)),
+        ("Block Limit (Registers)", sk.block_limit_regs.to_string(),
+         dp.block_limit_regs.to_string()),
+        ("Block Limit (SMEM)", sk.block_limit_smem.to_string(),
+         dp.block_limit_smem.to_string()),
+        ("Achieved Occupancy", format!("{:.2}", sk.achieved_occupancy_pct),
+         format!("{:.2}", dp.achieved_occupancy_pct)),
+        ("SM Utilization", format!("{:.2}%", sk.sm_utilization_pct),
+         format!("{:.2}%", dp.sm_utilization_pct)),
+        ("Active Warps", format!("{:.2}", sk.active_warps), format!("{:.2}", dp.active_warps)),
+        ("Eligible Warps", format!("{:.2}", sk.eligible_warps), format!("{:.2}", dp.eligible_warps)),
+        ("Issued Warps", format!("{:.2}", sk.issued_warps), format!("{:.2}", dp.issued_warps)),
+        ("Issued IPC Active", format!("{:.2}", sk.issued_ipc_active),
+         format!("{:.2}", dp.issued_ipc_active)),
+        ("Occupancy Limiter", format!("{:?}", sk.limiter), format!("{:?}", dp.limiter)),
+    ];
+    let mut s = format!("{:<26} {:>12} {:>14}\n", "Metrics", "SplitK", "Data Parallel");
+    for (name, a, b) in rows {
+        s.push_str(&format!("{name:<26} {a:>12} {b:>14}\n"));
+    }
+    s
+}
+
+/// Table 9: the device spec comparison.
+pub fn render_device_table() -> String {
+    let devs = DeviceConfig::paper_devices();
+    let mut s = format!("{:<18}", "Feature");
+    for d in &devs {
+        s.push_str(&format!(" {:>24}", d.name.replace("NVIDIA ", "")));
+    }
+    s.push('\n');
+    let row = |label: &str, f: &dyn Fn(&DeviceConfig) -> String| {
+        let mut line = format!("{label:<18}");
+        for d in &devs {
+            line.push_str(&format!(" {:>24}", f(d)));
+        }
+        line.push('\n');
+        line
+    };
+    s.push_str(&row("SMs", &|d| d.sms.to_string()));
+    s.push_str(&row("FP16 Tensor Core", &|d| format!("{:.0} TFLOPS", d.fp16_tflops)));
+    s.push_str(&row("Memory Bandwidth", &|d| format!("{:.1} TB/s", d.mem_bw_gbs / 1000.0)));
+    s.push_str(&row("L2 Cache", &|d| format!("{:.0}MB", d.l2_mb)));
+    s.push_str(&row("L1 Cache/SM", &|d| format!("{:.0}KB", d.l1_kb_per_sm)));
+    s.push_str(&row("Clock", &|d| format!("{:.2} GHz", d.clock_ghz)));
+    s
+}
+
+/// Extension (paper §4 future work): StreamK vs tuned SplitK vs DP over
+/// the n = k sweep at m = 16 — one row per size with simulated µs.
+pub fn streamk_comparison(dev: &DeviceConfig, m: u64) -> Vec<(u64, f64, f64, f64)> {
+    use crate::kernels::streamk_launch;
+    let tiles = TileConfig::paper_splitk();
+    NK_SWEEP
+        .iter()
+        .map(|&nk| {
+            let shape = GemmShape::square(m, nk);
+            let dp = simulate(dev, &dp_launch(dev, &shape, &TileConfig::paper_dp()))
+                .timing.kernel_s * 1e6;
+            let sk = simulate(dev, &splitk_launch(dev, &shape, &tiles,
+                                                  paper_split_k(dev)))
+                .timing.kernel_s * 1e6;
+            let st = simulate(dev, &streamk_launch(dev, &shape, &tiles))
+                .timing.kernel_s * 1e6;
+            (nk, dp, sk, st)
+        })
+        .collect()
+}
+
+/// Render the StreamK extension table.
+pub fn render_streamk(dev: &DeviceConfig, m: u64) -> String {
+    let mut s = format!(
+        "StreamK extension (paper §4) — {} — M={}\n{:>7} {:>12} {:>12} {:>12}\n",
+        dev.name, m, "N=K", "DP µs", "SplitK µs", "StreamK µs");
+    for (nk, dp, sk, st) in streamk_comparison(dev, m) {
+        s.push_str(&format!("{nk:>7} {dp:>12.1} {sk:>12.1} {st:>12.1}\n"));
+    }
+    s
+}
+
+/// §2.2 ablation: "SplitK improves as GPU SM count improves". Sweep a
+/// synthetic device's SM count and report the SplitK/DP speedup at
+/// m = 16, n = k = 4096 — the mechanism behind the paper's H100 story.
+pub fn sm_scaling_ablation(m: u64, nk: u64) -> Vec<(u32, f64)> {
+    let base = DeviceConfig::a100_40gb_pcie();
+    let tiles = TileConfig::paper_splitk();
+    let dp_tiles = TileConfig::paper_dp();
+    [60u32, 80, 108, 132, 160, 200]
+        .iter()
+        .map(|&sms| {
+            let dev = DeviceConfig { sms, name: format!("synthetic-{sms}sm"),
+                                     ..base.clone() };
+            let shape = GemmShape::square(m, nk);
+            let sk = simulate(&dev, &splitk_launch(&dev, &shape, &tiles, 4));
+            let dp = simulate(&dev, &dp_launch(&dev, &shape, &dp_tiles));
+            (sms, dp.timing.kernel_s / sk.timing.kernel_s)
+        })
+        .collect()
+}
+
+/// Autotune sweep used by the `autotune_splitk` example.
+pub fn autotune_all_devices(m: u64, nk: u64) -> Vec<AutotuneResult> {
+    DeviceConfig::paper_devices()
+        .iter()
+        .map(|d| autotune_split_k(d, &GemmShape::square(m, nk),
+                                  &TileConfig::paper_splitk()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_all_sweep_rows() {
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let t = tflops_table(&dev, 16);
+        assert_eq!(t.rows.len(), NK_SWEEP.len());
+        assert!(t.rows.iter().all(|r| r.splitk_tflops > 0.0));
+    }
+
+    #[test]
+    fn m16_is_16x_m1() {
+        // Same launch geometry -> identical latency -> TFLOPS scale with m.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let t1 = tflops_table(&dev, 1);
+        let t16 = tflops_table(&dev, 16);
+        for (r1, r16) in t1.rows.iter().zip(&t16.rows) {
+            assert!((r16.splitk_tflops / r1.splitk_tflops - 16.0).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn splitk_wins_at_large_sizes_everywhere() {
+        for dev in DeviceConfig::paper_devices() {
+            let t = tflops_table(&dev, 16);
+            for r in t.rows.iter().filter(|r| r.n >= 2048) {
+                assert!(r.speedup > 1.0,
+                        "{} n={} speedup {}", dev.name, r.n, r.speedup);
+            }
+        }
+    }
+
+    #[test]
+    fn h100_gains_exceed_a100_gains() {
+        // Paper §2.2: the SplitK advantage grows with SM count.
+        let a40 = tflops_table(&DeviceConfig::a100_40gb_pcie(), 16);
+        let h = tflops_table(&DeviceConfig::h100_pcie(), 16);
+        assert!(h.mean_speedup() > a40.mean_speedup(),
+                "h100 {:.2} vs a100 {:.2}", h.mean_speedup(), a40.mean_speedup());
+    }
+
+    #[test]
+    fn nsight_comparison_shape() {
+        // Table 7's qualitative content: SplitK has 4x grid, fewer regs,
+        // less smem, higher occupancy + utilization + bandwidth, lower
+        // latency.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let (sk, dp) = nsight_comparison(&dev);
+        let (skr, dpr) = (sk.report(), dp.report());
+        assert_eq!(skr.grid, 4 * dpr.grid);
+        assert!(skr.registers < dpr.registers);
+        assert!(skr.achieved_occupancy_pct > 2.0 * dpr.achieved_occupancy_pct);
+        assert!(skr.sm_utilization_pct > 1.5 * dpr.sm_utilization_pct);
+        assert!(skr.gmem_throughput_gbs > 1.5 * dpr.gmem_throughput_gbs);
+        assert!(skr.latency_us < dpr.latency_us);
+    }
+
+    #[test]
+    fn split_factor_sweep_renders() {
+        let dev = DeviceConfig::h100_pcie();
+        let sweep = split_factor_sweep(&dev, 16);
+        assert_eq!(sweep.series.len(), 4);
+        let text = sweep.render();
+        assert!(text.contains("split=8"));
+    }
+
+    #[test]
+    fn streamk_extension_wins_at_scale() {
+        // The §4 hypothesis: StreamK >= tuned SplitK at large sizes.
+        let dev = DeviceConfig::h100_pcie();
+        for (nk, dp, sk, st) in streamk_comparison(&dev, 16) {
+            assert!(st < dp, "streamk must beat DP at nk={nk}");
+            if nk >= 8192 {
+                assert!(st < sk * 1.15,
+                        "nk={nk}: streamk {st} vs splitk {sk}");
+            }
+        }
+    }
+
+    #[test]
+    fn sm_scaling_speedup_grows_with_sm_count() {
+        // §2.2: more SMs -> DP wave-quantizes more -> SplitK gains grow.
+        let sweep = sm_scaling_ablation(16, 4096);
+        let first = sweep.first().unwrap().1;
+        let last = sweep.last().unwrap().1;
+        assert!(last > first,
+                "speedup should grow with SMs: {first:.2} -> {last:.2}");
+    }
+
+    #[test]
+    fn device_table_renders() {
+        let t = render_device_table();
+        assert!(t.contains("A100 80GB SXM"));
+        assert!(t.contains("132"));
+    }
+}

@@ -1,0 +1,161 @@
+//! Micro-benchmark harness (no `criterion` in this environment): warmup,
+//! repeated timed samples, robust statistics, criterion-like output, and
+//! JSON dumps for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    fn fmt_time(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    /// One line, criterion-style.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]   ({} samples)",
+            self.name,
+            Self::fmt_time(self.min_ns),
+            Self::fmt_time(self.p50_ns),
+            Self::fmt_time(self.p95_ns),
+            self.samples
+        )
+    }
+
+    /// JSON record for result files.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("samples", Json::num(self.samples as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("max_ns", Json::num(self.max_ns)),
+        ])
+    }
+}
+
+/// The harness: collects results, prints as it goes.
+pub struct Bench {
+    /// Target wall-clock time per benchmark.
+    pub budget: Duration,
+    /// Max samples per benchmark.
+    pub max_samples: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new(Duration::from_secs(2), 200, 3)
+    }
+}
+
+impl Bench {
+    pub fn new(budget: Duration, max_samples: usize, warmup: usize) -> Self {
+        Bench { budget, max_samples, warmup, results: Vec::new() }
+    }
+
+    /// Quick harness for slow (multi-ms) benchmarks.
+    pub fn quick() -> Self {
+        Bench::new(Duration::from_millis(1500), 50, 1)
+    }
+
+    /// Run `f` repeatedly, record, and print one line.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let started = Instant::now();
+        let mut samples_ns: Vec<f64> = Vec::new();
+        while samples_ns.len() < self.max_samples
+            && (started.elapsed() < self.budget || samples_ns.len() < 5)
+        {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let result = BenchResult {
+            name: name.to_string(),
+            samples: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p50_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n * 95 / 100).min(n - 1)],
+            min_ns: samples_ns[0],
+            max_ns: samples_ns[n - 1],
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Dump results to a JSON file (for EXPERIMENTS.md bookkeeping).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_records() {
+        let mut b = Bench::new(Duration::from_millis(50), 20, 1);
+        b.run("noop", || {});
+        b.run("spin", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(b.results().len(), 2);
+        let r = &b.results()[0];
+        assert!(r.samples >= 5);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn json_dump() {
+        let mut b = Bench::new(Duration::from_millis(10), 6, 0);
+        b.run("x", || {});
+        let j = b.results()[0].to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "x");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(BenchResult::fmt_time(500.0).contains("ns"));
+        assert!(BenchResult::fmt_time(5e4).contains("µs"));
+        assert!(BenchResult::fmt_time(5e7).contains("ms"));
+        assert!(BenchResult::fmt_time(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (no `clap` in this environment).
+//!
+//! Grammar: `binary <subcommand> [--key value | --flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` pairs (also `--key=value`).
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn opt_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.options
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required option --{key}"))
+    }
+
+    /// Numeric option with default.
+    pub fn opt_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("option --{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Was a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --requests 32 --artifacts path/x --verbose");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.opt_str("artifacts", ""), "path/x");
+        assert_eq!(a.opt_num::<usize>("requests", 0).unwrap(), 32);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("tables --which=t7");
+        assert_eq!(a.opt_str("which", ""), "t7");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("tables t1 t2");
+        assert_eq!(a.command.as_deref(), Some("tables"));
+        assert_eq!(a.positional, vec!["t1", "t2"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("x");
+        assert_eq!(a.opt_str("missing", "d"), "d");
+        assert_eq!(a.opt_num::<u32>("missing", 7).unwrap(), 7);
+        assert!(a.req_str("missing").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.opt_num::<u32>("n", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --fast");
+        assert!(a.has_flag("fast"));
+        assert!(a.options.is_empty());
+    }
+}

@@ -1,0 +1,14 @@
+//! In-tree substrate utilities (this environment is offline with a fixed
+//! crate set — DESIGN.md §2): JSON, PRNG, CLI parsing, and the
+//! micro-benchmark harness used by `rust/benches/`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+pub use bench::Bench;
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

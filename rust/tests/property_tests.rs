@@ -1,0 +1,244 @@
+//! Randomized property tests (in-tree harness — no proptest crate in
+//! this environment): packing round-trips, quantizer error bounds,
+//! batcher conservation/FIFO invariants, simulator monotonicity, JSON
+//! round-trips. Each runs a few hundred random cases off a fixed seed.
+
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::coordinator::{DynamicBatcher, GenerateRequest};
+use splitk_w4a16::gpusim::{simulate, DeviceConfig, Decomposition, Occupancy};
+use splitk_w4a16::kernels::{splitk_launch, GemmShape, TileConfig};
+use splitk_w4a16::quant::{
+    dequantize, pack_along_cols, pack_along_rows, quantize_weight,
+    unpack_along_cols, unpack_along_rows, MatF32,
+};
+use splitk_w4a16::util::{Json, Rng};
+
+#[test]
+fn prop_pack_rows_roundtrip() {
+    let mut rng = Rng::seed_from(1);
+    for _ in 0..200 {
+        let kp = rng.gen_range(1, 16) as usize;
+        let n = rng.gen_range(1, 48) as usize;
+        let q: Vec<u8> = (0..kp * 8 * n).map(|_| rng.index(16) as u8).collect();
+        let packed = pack_along_rows(&q, kp * 8, n);
+        assert_eq!(unpack_along_rows(&packed), q);
+    }
+}
+
+#[test]
+fn prop_pack_cols_roundtrip() {
+    let mut rng = Rng::seed_from(2);
+    for _ in 0..200 {
+        let g = rng.gen_range(1, 8) as usize;
+        let np = rng.gen_range(1, 16) as usize;
+        let z: Vec<u8> = (0..g * np * 8).map(|_| rng.index(16) as u8).collect();
+        let packed = pack_along_cols(&z, g, np * 8);
+        assert_eq!(unpack_along_cols(&packed), z);
+    }
+}
+
+#[test]
+fn prop_quantize_error_bounded() {
+    // |w - dq(q(w))| <= scale/2 elementwise, for random shapes/groups.
+    let mut rng = Rng::seed_from(3);
+    for _ in 0..50 {
+        let group = [8usize, 16, 32, 64][rng.index(4)];
+        let groups = rng.gen_range(1, 5) as usize;
+        let k = group * groups;
+        let n = rng.gen_range(1, 5) as usize * 8;
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let wd = dequantize(&q);
+        for r in 0..k {
+            for c in 0..n {
+                let bound = q.scales.at(r / group, c) * 0.5 + 1e-6;
+                let err = (wd.at(r, c) - w.at(r, c)).abs();
+                assert!(err <= bound, "err {err} > {bound} at ({r},{c})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // Every pushed request is dispatched exactly once, in FIFO order,
+    // and every batch respects bucket sizing.
+    let mut rng = Rng::seed_from(4);
+    for _ in 0..100 {
+        let buckets = vec![1usize, 2, 4, 8, 16];
+        let mut b = DynamicBatcher::new(buckets.clone(), Duration::ZERO, 10_000);
+        let total = rng.gen_range(1, 80) as usize;
+        let t0 = Instant::now();
+        for id in 0..total {
+            b.push(GenerateRequest {
+                id: id as u64,
+                prompt: vec![1],
+                max_new_tokens: 1,
+                stop_token: None,
+                accepted_at: t0,
+            })
+            .unwrap();
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.poll(t0 + Duration::from_millis(1)) {
+            assert!(batch.requests.len() <= batch.bucket);
+            assert!(buckets.contains(&batch.bucket), "bucket {}", batch.bucket);
+            seen.extend(batch.requests.iter().map(|r| r.id));
+        }
+        assert!(b.is_empty(), "queue drained");
+        let want: Vec<u64> = (0..total as u64).collect();
+        assert_eq!(seen, want, "served exactly once, FIFO");
+    }
+}
+
+#[test]
+fn prop_batcher_backpressure_capacity() {
+    let mut rng = Rng::seed_from(5);
+    for _ in 0..50 {
+        let cap = rng.gen_range(1, 32) as usize;
+        let mut b = DynamicBatcher::new(vec![16], Duration::from_secs(1), cap);
+        let t0 = Instant::now();
+        let mut accepted = 0;
+        for id in 0..cap + 10 {
+            if b
+                .push(GenerateRequest {
+                    id: id as u64,
+                    prompt: vec![1],
+                    max_new_tokens: 1,
+                    stop_token: None,
+                    accepted_at: t0,
+                })
+                .is_ok()
+            {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, cap);
+    }
+}
+
+#[test]
+fn prop_occupancy_limits_respected() {
+    // blocks_per_sm never exceeds any individual limit, achieved never
+    // exceeds theoretical, and more registers can't increase occupancy.
+    let mut rng = Rng::seed_from(6);
+    let dev = DeviceConfig::a100_40gb_pcie();
+    for _ in 0..300 {
+        let regs = rng.gen_range(16, 256) as u32;
+        let smem = rng.gen_range(0, 160) as u32 * 1024;
+        let grid = rng.gen_range(1, 10_000) as u64;
+        let launch = splitk_w4a16::gpusim::KernelLaunch {
+            name: "p".into(),
+            grid,
+            threads_per_block: 128,
+            regs_per_thread: regs,
+            smem_per_block: smem,
+            flops_per_block: 1.0,
+            dram_bytes_per_block: 1.0,
+            l2_bytes_per_block: 1.0,
+            atomic_bytes_per_block: 0.0,
+            inner_iters: 1,
+            stages: 2,
+            decomposition: Decomposition::DataParallel,
+            output_tiles: grid,
+        };
+        let occ = Occupancy::compute(&dev, &launch);
+        assert!(occ.blocks_per_sm <= occ.limit_regs);
+        assert!(occ.blocks_per_sm <= occ.limit_smem);
+        assert!(occ.blocks_per_sm <= occ.limit_blocks);
+        assert!(occ.blocks_per_sm <= occ.limit_warps);
+        assert!(occ.achieved_pct <= occ.theoretical_pct + 1e-9);
+
+        let mut heavier = launch.clone();
+        heavier.regs_per_thread = regs + 32;
+        let occ2 = Occupancy::compute(&dev, &heavier);
+        assert!(occ2.blocks_per_sm <= occ.blocks_per_sm);
+    }
+}
+
+#[test]
+fn prop_sim_time_monotone_in_traffic() {
+    // More DRAM traffic (same geometry) can never be faster.
+    let mut rng = Rng::seed_from(7);
+    let dev = DeviceConfig::h100_pcie();
+    let tiles = TileConfig::paper_splitk();
+    for _ in 0..100 {
+        let m = [1u64, 4, 16][rng.index(3)];
+        let nk = [512u64, 1024, 2048, 4096][rng.index(4)];
+        let shape_small = GemmShape::square(m, nk);
+        let shape_big = GemmShape::square(m, nk * 2);
+        let t_small =
+            simulate(&dev, &splitk_launch(&dev, &shape_small, &tiles, 4))
+                .timing
+                .kernel_s;
+        let t_big = simulate(&dev, &splitk_launch(&dev, &shape_big, &tiles, 4))
+            .timing
+            .kernel_s;
+        assert!(t_big > t_small, "nk={nk}: {t_big} <= {t_small}");
+    }
+}
+
+#[test]
+fn prop_sim_splitk_grid_scales() {
+    // Grid size must equal output_tiles * split_k for every feasible split.
+    let mut rng = Rng::seed_from(8);
+    let dev = DeviceConfig::a100_80gb_sxm();
+    let tiles = TileConfig::paper_splitk();
+    for _ in 0..100 {
+        let m = rng.gen_range(1, 17) as u64;
+        let nk = [1024u64, 2048, 4096, 8192][rng.index(4)];
+        let split = [2u32, 4, 8][rng.index(3)];
+        let shape = GemmShape::square(m, nk);
+        let launch = splitk_launch(&dev, &shape, &tiles, split);
+        assert_eq!(launch.grid, launch.output_tiles * split as u64);
+        assert_eq!(
+            launch.output_tiles,
+            m.div_ceil(tiles.block_m) * nk.div_ceil(tiles.block_n)
+        );
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    // Random JSON trees survive serialize -> parse.
+    let mut rng = Rng::seed_from(9);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.gen_range(-1_000_000, 1_000_000) as f64)
+                           / 64.0),
+            3 => {
+                let len = rng.index(12);
+                Json::Str((0..len)
+                    .map(|_| {
+                        let c = rng.index(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect())
+            }
+            4 => Json::Arr((0..rng.index(4)).map(|_| gen(rng, depth - 1))
+                           .collect()),
+            _ => Json::obj(
+                (0..rng.index(4))
+                    .map(|i| {
+                        let key = format!("k{i}");
+                        (key, gen(rng, depth - 1))
+                    })
+                    .collect::<Vec<_>>()
+                    .iter()
+                    .map(|(k, v)| (k.as_str(), v.clone()))
+                    .collect(),
+            ),
+        }
+    }
+    for _ in 0..300 {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| {
+            panic!("parse failed on {text}: {e}")
+        });
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    }
+}

@@ -1,0 +1,206 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have been run (skips gracefully if not,
+//! so `cargo test` stays green on a fresh checkout).
+
+use std::path::PathBuf;
+
+use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32};
+use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
+use splitk_w4a16::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn literal_roundtrip_f32() {
+    // HostTensor <-> xla::Literal, both dtypes and a scalar.
+    let _rt = Runtime::cpu().expect("pjrt cpu client");
+    let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    let lit = t.to_literal().unwrap();
+    let back = HostTensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+
+    let ti = HostTensor::i32(vec![4], vec![-1, 0, 7, 2_000_000_000]);
+    let back = HostTensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+    assert_eq!(ti, back);
+
+    let ts = HostTensor::scalar_i32(42);
+    let back = HostTensor::from_literal(&ts.to_literal().unwrap()).unwrap();
+    assert_eq!(ts, back);
+}
+
+#[test]
+fn manifest_loads_and_covers_buckets() {
+    let dir = require_artifacts!();
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.format, 1);
+    for &b in &m.model.batch_buckets {
+        m.find_decode(&m.model.variant, b)
+            .unwrap_or_else(|_| panic!("missing decode bucket {b}"));
+    }
+    assert!(!m.gemm_shapes("splitk").is_empty());
+    assert!(!m.gemm_shapes("dp").is_empty());
+}
+
+fn check_gemm_artifact(variant: &str, m: usize, nk: usize) {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.find_gemm(variant, m, nk, nk).unwrap().clone();
+    let group = entry.group_size.unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let mut cache = ExecutableCache::new(runtime, manifest);
+    let exe = cache.get(&entry).unwrap();
+
+    let mut rng = Rng::seed_from(99);
+    let a = MatF32::new(m, nk,
+                        (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+    let w = MatF32::new(nk, nk,
+                        (0..nk * nk).map(|_| rng.uniform_f32(-0.05, 0.05)).collect());
+    let q = quantize_weight(&w, group);
+
+    let inputs = [
+        HostTensor::f32(vec![m, nk], a.data.clone()),
+        HostTensor::i32(vec![q.qweight.rows, q.qweight.cols],
+                        q.qweight.data.clone()),
+        HostTensor::f32(vec![q.scales.rows, q.scales.cols],
+                        q.scales.data.clone()),
+        HostTensor::i32(vec![q.qzeros.rows, q.qzeros.cols],
+                        q.qzeros.data.clone()),
+    ];
+    // Validate inputs against the manifest specs, then execute.
+    for (t, spec) in inputs.iter().zip(&entry.inputs) {
+        t.check_spec(spec).unwrap();
+    }
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    out[0].check_spec(&entry.outputs[0]).unwrap();
+
+    // Cross-check against the Rust CPU oracle: the kernel that Python
+    // validated against ref.py must agree with the Rust reference too.
+    let want = w4a16_gemm_ref(&a, &q);
+    let got = out[0].as_f32().unwrap();
+    let max_err = got
+        .iter()
+        .zip(&want.data)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "{variant} m={m} nk={nk}: max err {max_err}");
+}
+
+#[test]
+fn gemm_splitk_m1_matches_oracle() {
+    check_gemm_artifact("splitk", 1, 512);
+}
+
+#[test]
+fn gemm_splitk_m16_matches_oracle() {
+    check_gemm_artifact("splitk", 16, 512);
+}
+
+#[test]
+fn gemm_dp_m1_matches_oracle() {
+    check_gemm_artifact("dp", 1, 512);
+}
+
+#[test]
+fn gemm_dp_m16_matches_oracle() {
+    check_gemm_artifact("dp", 16, 512);
+}
+
+#[test]
+fn gemm_splitk_1024_matches_oracle() {
+    check_gemm_artifact("splitk", 16, 1024);
+}
+
+#[test]
+fn splitk_and_dp_artifacts_agree() {
+    // The two decompositions are the same math — their artifacts must
+    // produce (nearly) identical C for identical inputs.
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let (m, nk) = (16, 512);
+    let sk_e = manifest.find_gemm("splitk", m, nk, nk).unwrap().clone();
+    let dp_e = manifest.find_gemm("dp", m, nk, nk).unwrap().clone();
+    let group = sk_e.group_size.unwrap();
+    let runtime = Runtime::cpu().unwrap();
+    let mut cache = ExecutableCache::new(runtime, manifest);
+
+    let mut rng = Rng::seed_from(5);
+    let a: Vec<f32> = (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+    let w = MatF32::new(nk, nk,
+                        (0..nk * nk).map(|_| rng.uniform_f32(-0.05, 0.05)).collect());
+    let q = quantize_weight(&w, group);
+    let inputs = [
+        HostTensor::f32(vec![m, nk], a),
+        HostTensor::i32(vec![q.qweight.rows, q.qweight.cols],
+                        q.qweight.data.clone()),
+        HostTensor::f32(vec![q.scales.rows, q.scales.cols],
+                        q.scales.data.clone()),
+        HostTensor::i32(vec![q.qzeros.rows, q.qzeros.cols],
+                        q.qzeros.data.clone()),
+    ];
+    let sk = cache.get(&sk_e).unwrap().run(&inputs).unwrap();
+    let dp = cache.get(&dp_e).unwrap().run(&inputs).unwrap();
+    let max_err = sk[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(dp[0].as_f32().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "decompositions disagree: {max_err}");
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.find_gemm("splitk", 1, 512, 512).unwrap().clone();
+    let runtime = Runtime::cpu().unwrap();
+    let mut cache = ExecutableCache::new(runtime, manifest);
+    assert!(cache.is_empty());
+    let _ = cache.get(&entry).unwrap();
+    assert_eq!(cache.len(), 1);
+    let _ = cache.get(&entry).unwrap();
+    assert_eq!(cache.len(), 1, "second get must hit the cache");
+}
+
+#[test]
+fn decode_artifact_executes_with_correct_shapes() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = manifest.model.clone();
+    let entry = manifest.find_decode(&model.variant, 2).unwrap().clone();
+    let runtime = Runtime::cpu().unwrap();
+    let mut cache = ExecutableCache::new(runtime, manifest);
+    let exe = cache.get(&entry).unwrap();
+
+    let kv_elems: usize = entry.inputs[1].shape.iter().product();
+    let inputs = [
+        HostTensor::i32(vec![2], vec![3, 5]),
+        HostTensor::f32(entry.inputs[1].shape.clone(), vec![0.0; kv_elems]),
+        HostTensor::scalar_i32(0),
+        HostTensor::i32(vec![2], vec![0, 0]),
+    ];
+    let out = exe.run(&inputs).unwrap();
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].shape(), &[2, model.vocab]);
+    assert_eq!(out[1].shape(), entry.inputs[1].shape.as_slice());
+    // Logits must be finite.
+    assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+}

@@ -1,0 +1,188 @@
+//! Integration: the full serving coordinator against the real decode
+//! artifacts — batching, determinism, padding-correctness, back-pressure.
+//!
+//! Skips gracefully when artifacts are not built.
+
+use std::path::PathBuf;
+
+use splitk_w4a16::config::ServeConfig;
+use splitk_w4a16::coordinator::{Coordinator, FinishReason};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn config(dir: PathBuf) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: dir,
+        batch_window_ms: 1,
+        max_new_tokens: 8,
+        warm_start: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn single_request_completes() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::start(&config(dir)).unwrap();
+    let r = coord.submit(vec![3, 5, 7], 4, None).unwrap().wait().unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    assert_eq!(r.finish_reason, FinishReason::Length);
+    assert!(r.latency_ms > 0.0);
+    assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::start(&config(dir)).unwrap();
+    let a = coord.submit(vec![10, 20, 30], 6, None).unwrap().wait().unwrap();
+    let b = coord.submit(vec![10, 20, 30], 6, None).unwrap().wait().unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy decode must be reproducible");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn batched_equals_solo_even_with_unequal_prompts() {
+    // The batcher left-pads unequal prompts; the `start` attention mask
+    // must make a sequence's output independent of its batch-mates.
+    let dir = require_artifacts!();
+
+    // Solo run.
+    let coord = Coordinator::start(&config(dir.clone())).unwrap();
+    let solo = coord.submit(vec![42, 17], 5, None).unwrap().wait().unwrap();
+    coord.shutdown().unwrap();
+
+    // Batched run: longer window so all four land in one batch, with
+    // different prompt lengths.
+    let mut cfg = config(dir);
+    cfg.batch_window_ms = 200;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let mut pending = vec![
+        coord.submit(vec![1, 2, 3, 4, 5, 6, 7], 5, None).unwrap(),
+        coord.submit(vec![42, 17], 5, None).unwrap(),
+        coord.submit(vec![9], 5, None).unwrap(),
+        coord.submit(vec![100, 200, 300], 5, None).unwrap(),
+    ];
+    let batched = pending.remove(1).wait().unwrap();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    assert!(batched.bucket >= 4, "four requests should share a bucket");
+    assert_eq!(solo.tokens, batched.tokens,
+               "batching must not change a sequence's tokens");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn full_bucket_dispatches_batch_of_16() {
+    let dir = require_artifacts!();
+    let mut cfg = config(dir);
+    cfg.batch_window_ms = 500;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let pending: Vec<_> = (0..16)
+        .map(|i| coord.submit(vec![i as i32 + 1, 7], 2, None).unwrap())
+        .collect();
+    for p in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.bucket, 16, "16 queued requests must fill the bucket");
+        assert_eq!(r.tokens.len(), 2);
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn stop_token_finishes_early() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::start(&config(dir.clone())).unwrap();
+    // Discover the first generated token, then use it as the stop token.
+    let probe = coord.submit(vec![8, 8], 3, None).unwrap().wait().unwrap();
+    let stop = probe.tokens[0];
+    let r = coord.submit(vec![8, 8], 3, Some(stop)).unwrap().wait().unwrap();
+    assert_eq!(r.finish_reason, FinishReason::Stop);
+    assert_eq!(r.tokens, vec![stop]);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn greedy_tokens_match_jax_reference() {
+    // Cross-language consistency: the same prompt through jax's own
+    // runtime (python/tests/test_model.py::test_greedy_reference_tokens)
+    // yields [61, 460, 399, 88] for seed-0 weights. The Rust engine runs
+    // the AOT artifact of the same model and must agree exactly.
+    let dir = require_artifacts!();
+    let coord = Coordinator::start(&config(dir)).unwrap();
+    let r = coord.submit(vec![3, 5, 7], 4, None).unwrap().wait().unwrap();
+    assert_eq!(r.tokens, vec![61, 460, 399, 88]);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn rejects_invalid_requests() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::start(&config(dir)).unwrap();
+    assert!(coord.submit(vec![], 4, None).is_err(), "empty prompt");
+    assert!(coord.submit(vec![9999], 4, None).is_err(), "out of vocab");
+    assert!(coord.submit(vec![1], 0, None).is_err(), "zero max_new");
+    assert!(coord.submit(vec![1; 1000], 4, None).is_err(), "prompt too long");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn metrics_accumulate() {
+    let dir = require_artifacts!();
+    let coord = Coordinator::start(&config(dir)).unwrap();
+    let n = 3;
+    let pending: Vec<_> = (0..n)
+        .map(|i| coord.submit(vec![i as i32 + 1], 2, None).unwrap())
+        .collect();
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let m = coord.metrics();
+    use std::sync::atomic::Ordering;
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), n);
+    assert_eq!(m.tokens_generated.load(Ordering::Relaxed), n * 2);
+    assert!(m.decode_steps.load(Ordering::Relaxed) > 0);
+    assert!(m.throughput_tps() > 0.0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn concurrent_submitters() {
+    // Multiple caller threads sharing the coordinator.
+    let dir = require_artifacts!();
+    let mut cfg = config(dir);
+    cfg.batch_window_ms = 5;
+    let coord = std::sync::Arc::new(Coordinator::start(&cfg).unwrap());
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let c = coord.clone();
+        joins.push(std::thread::spawn(move || {
+            let r = c
+                .submit(vec![t + 1, 2 * t + 1], 3, None)
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(r.tokens.len(), 3);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
