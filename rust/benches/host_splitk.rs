@@ -1,0 +1,103 @@
+//! Bench: the executable fused W4A16 host backend across the paper's
+//! sweep — m ∈ {1, 16}, n = k ∈ {2048, 4096, 8192} — comparing:
+//!
+//! * `naive_ref`      — `quant::w4a16_gemm_ref` (materializes the dense
+//!                      f32 weight, then dense GEMM; what every consumer
+//!                      paid before the exec backend landed);
+//! * `fused_dp`       — `kernels::exec::fused_gemm_dp`;
+//! * `fused_splitk{S}` — `kernels::exec::fused_gemm_splitk`,
+//!                      S ∈ {1, 2, 4, 8}.
+//!
+//! Both fused variants run the paper's tile config so only the
+//! decomposition differs (the paper's own controlled comparison).
+//! Results land in `BENCH_host_splitk.json` at the repo root — the
+//! perf-trajectory record future PRs regress against.
+//!
+//! ```sh
+//! cargo bench --bench host_splitk
+//! ```
+
+use std::time::Duration;
+
+use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk,
+                            HostKernelConfig, TileConfig};
+use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32};
+use splitk_w4a16::util::{Bench, Rng};
+
+const SPLITS: [u32; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let mut bench = Bench::new(Duration::from_millis(600), 24, 1);
+    let mut rng = Rng::seed_from(17);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // Paper tile config for both variants: decomposition isolated.
+    let tiles = TileConfig::paper_splitk();
+    println!("fused W4A16 host backend sweep ({threads} worker threads, \
+              tiles {}x{}x{})",
+             tiles.block_m, tiles.block_n, tiles.block_k);
+
+    let mut lines = Vec::new();
+    for &nk in &[2048usize, 4096, 8192] {
+        let q = {
+            let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
+            quantize_weight(&w, 128)
+        };
+        for &m in &[1usize, 16] {
+            let a = MatF32::new(
+                m, nk,
+                (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+
+            let naive = bench
+                .run(&format!("naive_ref_m{m}_nk{nk}"), || {
+                    std::hint::black_box(w4a16_gemm_ref(&a, &q));
+                })
+                .p50_ns;
+
+            let dp_cfg = HostKernelConfig {
+                tiles,
+                split_k: 1,
+                threads,
+            };
+            let dp = bench
+                .run(&format!("fused_dp_m{m}_nk{nk}"), || {
+                    std::hint::black_box(fused_gemm_dp(&a, &q, &dp_cfg));
+                })
+                .p50_ns;
+
+            let mut best_sk = f64::MAX;
+            let mut best_split = 1u32;
+            for &split in &SPLITS {
+                let cfg = HostKernelConfig {
+                    tiles,
+                    split_k: split,
+                    threads,
+                };
+                let t = bench
+                    .run(&format!("fused_splitk{split}_m{m}_nk{nk}"), || {
+                        std::hint::black_box(fused_gemm_splitk(&a, &q, &cfg));
+                    })
+                    .p50_ns;
+                if t < best_sk {
+                    best_sk = t;
+                    best_split = split;
+                }
+            }
+            lines.push(format!(
+                "m={m:>2} n=k={nk:>5}: naive/DP {:>6.2}x   naive/SplitK \
+                 {:>6.2}x   DP/SplitK {:>5.2}x (best split {best_split})",
+                naive / dp, naive / best_sk, dp / best_sk));
+        }
+    }
+
+    println!("── speedups (p50) ────────────────────────────────────────");
+    for l in &lines {
+        println!("{l}");
+    }
+
+    match bench.write_repo_root_json("BENCH_host_splitk.json") {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_host_splitk.json: {e}"),
+    }
+}

@@ -1,29 +1,50 @@
-//! Bench: the REAL fused W4A16 kernels (AOT Pallas -> PJRT CPU), SplitK
-//! vs Data-Parallel, across the paper's m ∈ {1, 16} and n = k sweep —
-//! the real-numerics counterpart of Tables 1–6. Absolute times are
-//! CPU-PJRT (interpret-lowered) and not GPU-comparable; what matters is
-//! that both variants run the identical math from the same artifacts.
+//! Bench: the fused W4A16 kernels on the CPU.
 //!
-//! Skips (exit 0) if artifacts are not built.
+//! Two tiers:
+//!
+//! * **Host exec backend** (`kernels::exec`) — always runs, no artifacts
+//!   needed: fused-DP and fused-SplitK vs the naive
+//!   materialize-then-GEMM reference on small shapes. (The full paper
+//!   sweep lives in `benches/host_splitk.rs`.)
+//! * **AOT Pallas -> PJRT CPU artifacts** — SplitK vs Data-Parallel from
+//!   the same artifacts the serving path uses; skipped when
+//!   `artifacts/manifest.json` is absent (run `make artifacts`).
 
 use std::path::PathBuf;
 
-use splitk_w4a16::quant::{quantize_weight, MatF32};
+use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk,
+                            HostKernelConfig};
+use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32};
 use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
 use splitk_w4a16::util::{Bench, Rng};
 
-fn main() {
-    let dir = PathBuf::from("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping kernel_cpu bench: run `make artifacts` first");
-        return;
+fn host_backend(bench: &mut Bench, rng: &mut Rng) {
+    for (m, nk) in [(1usize, 512usize), (16, 512), (16, 1024)] {
+        let q = {
+            let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
+            quantize_weight(&w, 128)
+        };
+        let a = MatF32::new(
+            m, nk, (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        bench.run(&format!("host_naive_ref_m{m}_nk{nk}"), || {
+            std::hint::black_box(w4a16_gemm_ref(&a, &q));
+        });
+        let dp = HostKernelConfig::dp();
+        bench.run(&format!("host_fused_dp_m{m}_nk{nk}"), || {
+            std::hint::black_box(fused_gemm_dp(&a, &q, &dp));
+        });
+        let sk = HostKernelConfig::splitk(4);
+        bench.run(&format!("host_fused_splitk4_m{m}_nk{nk}"), || {
+            std::hint::black_box(fused_gemm_splitk(&a, &q, &sk));
+        });
     }
+}
+
+fn pjrt_artifacts(bench: &mut Bench, rng: &mut Rng, dir: PathBuf) {
     let manifest = Manifest::load(&dir).expect("manifest");
     let shapes = manifest.gemm_shapes("splitk");
     let runtime = Runtime::cpu().expect("pjrt");
     let mut cache = ExecutableCache::new(runtime, manifest);
-    let mut bench = Bench::quick();
-    let mut rng = Rng::seed_from(11);
 
     for (m, n, k) in shapes {
         let entry_sk = cache.manifest().find_gemm("splitk", m, n, k)
@@ -54,6 +75,21 @@ fn main() {
             dp.run(&inputs).unwrap();
         });
     }
+}
+
+fn main() {
+    let mut bench = Bench::quick();
+    let mut rng = Rng::seed_from(11);
+
+    host_backend(&mut bench, &mut rng);
+
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        pjrt_artifacts(&mut bench, &mut rng, dir);
+    } else {
+        eprintln!("skipping PJRT artifact benches: run `make artifacts` first");
+    }
+
     std::fs::create_dir_all("results").ok();
     bench.write_json("results/bench_kernel_cpu.json").ok();
 }

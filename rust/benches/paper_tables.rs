@@ -33,4 +33,10 @@ fn main() {
     }
     std::fs::create_dir_all("results").ok();
     bench.write_json("results/bench_paper_tables.json").ok();
+    // Canonical perf-trajectory record at the repo root (same format as
+    // BENCH_host_splitk.json; future PRs regress against these).
+    match bench.write_repo_root_json("BENCH_paper_tables.json") {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_paper_tables.json: {e}"),
+    }
 }

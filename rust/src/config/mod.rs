@@ -28,6 +28,10 @@ pub struct ServeConfig {
     /// Compile every decode bucket at startup (production default).
     /// Disable for fast-start tools/tests; buckets then compile lazily.
     pub warm_start: bool,
+    /// Verify the fused host GEMM backend against the naive oracle at
+    /// engine startup (`kernels::exec::self_check`); cheap, on by
+    /// default.
+    pub self_check: bool,
 }
 
 impl Default for ServeConfig {
@@ -42,6 +46,7 @@ impl Default for ServeConfig {
             greedy: true,
             variant: "splitk".into(),
             warm_start: true,
+            self_check: true,
         }
     }
 }
@@ -96,6 +101,10 @@ impl ServeConfig {
                 Some(b) => b.as_bool()?,
                 None => d.warm_start,
             },
+            self_check: match v.opt("self_check") {
+                Some(b) => b.as_bool()?,
+                None => d.self_check,
+            },
         })
     }
 
@@ -114,6 +123,7 @@ impl ServeConfig {
             ("greedy", Json::Bool(self.greedy)),
             ("variant", Json::str(self.variant.clone())),
             ("warm_start", Json::Bool(self.warm_start)),
+            ("self_check", Json::Bool(self.self_check)),
         ])
     }
 
@@ -198,6 +208,14 @@ mod tests {
             &Json::parse(r#"{"max_new_tokens": 8}"#).unwrap()).unwrap();
         assert_eq!(cfg.max_new_tokens, 8);
         assert_eq!(cfg.batch_buckets, vec![1, 2, 4, 8, 16]);
+        assert!(cfg.self_check, "self-check is on by default");
+    }
+
+    #[test]
+    fn self_check_can_be_disabled() {
+        let cfg = ServeConfig::from_json(
+            &Json::parse(r#"{"self_check": false}"#).unwrap()).unwrap();
+        assert!(!cfg.self_check);
     }
 
     #[test]

@@ -4,10 +4,10 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::metrics::ServingMetrics;
-use crate::runtime::{ExecutableCache, HostTensor};
+use crate::runtime::{ExecutableCache, HostTensor, ModelMeta};
 
 use super::batcher::Batch;
 use super::kvcache::KvCacheSpec;
@@ -47,6 +47,20 @@ impl Engine {
     /// Model metadata helper.
     pub fn vocab(&self) -> usize {
         self.cache.manifest().model.vocab
+    }
+
+    /// The engine's GEMM verification path: run the fused host backend
+    /// (both decompositions) against the naive `w4a16_gemm_ref` oracle at
+    /// this model's projection scale. Returns the max abs error; the
+    /// coordinator runs this before accepting traffic so a miscompiled /
+    /// misported kernel fails loudly at startup, not in generation
+    /// quality.
+    pub fn verify_host_gemm(model: &ModelMeta) -> Result<f32> {
+        // Keep the check O(small): cap the square side, but never below
+        // one quantization group.
+        let nk = model.d_model.min(512).max(model.group_size);
+        crate::kernels::exec::self_check(4, nk, model.group_size)
+            .map_err(|e| anyhow!("engine GEMM self-check failed: {e}"))
     }
 
     /// Serve one batch to completion (static batching), returning one
@@ -231,6 +245,24 @@ mod tests {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
         assert_eq!(argmax(&[2.0, 2.0]), 0); // first on ties
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn verify_host_gemm_passes() {
+        let model = ModelMeta {
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 128,
+            group_size: 64,
+            variant: "splitk".into(),
+            batch_buckets: vec![1, 2, 4],
+            seed: 0,
+        };
+        let err = Engine::verify_host_gemm(&model).expect("self-check");
+        assert!(err <= 1e-3);
     }
 
     // Engine execution paths are covered by rust/tests/serving_integration.rs

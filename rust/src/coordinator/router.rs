@@ -105,6 +105,7 @@ impl Coordinator {
         let artifacts_dir: PathBuf = cfg.artifacts_dir.clone();
         let variant = cfg.variant.clone();
         let warm_start = cfg.warm_start;
+        let self_check = cfg.self_check;
         let engine = std::thread::Builder::new()
             .name("engine".into())
             .spawn(move || -> Result<()> {
@@ -112,6 +113,15 @@ impl Coordinator {
                     let runtime = Runtime::cpu()?;
                     let manifest = Manifest::load(&artifacts_dir)?;
                     let mut cache = ExecutableCache::new(runtime, manifest);
+                    if self_check {
+                        // Verify the fused host GEMM backend against the
+                        // naive oracle before taking traffic.
+                        let max_err =
+                            Engine::verify_host_gemm(&cache.manifest().model)?;
+                        log::info!(
+                            "fused host GEMM self-check ok \
+                             (max |err| {max_err:.2e} vs naive oracle)");
+                    }
                     let warmed = if warm_start {
                         cache.warm_decode(&variant)?
                     } else {

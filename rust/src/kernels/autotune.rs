@@ -1,10 +1,15 @@
 //! SplitK autotuner — searches the splitting factor (and optionally tile
 //! width) on the simulator, reproducing the paper's §3.3 finding:
-//! split_k = 4 optimal on A100, 8 on H100 (Figures 9/10).
+//! split_k = 4 optimal on A100, 8 on H100 (Figures 9/10) — and, via
+//! [`autotune_split_k_host`], on the executable CPU backend with real
+//! wall-clock times.
 
+use std::time::Instant;
 
 use crate::gpusim::{simulate, DeviceConfig};
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 
+use super::exec::{host_gemm, HostKernelConfig};
 use super::{dp_launch, splitk_launch, GemmShape, TileConfig};
 
 /// The splitting factors the paper sweeps (Figures 9/10).
@@ -57,9 +62,70 @@ pub fn autotune_split_k(dev: &DeviceConfig, shape: &GemmShape,
     }
 }
 
+/// Outcome of a wall-clock autotune run on the host execution backend.
+#[derive(Debug, Clone)]
+pub struct HostAutotuneResult {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Best splitting factor found (1 = data-parallel wins).
+    pub best_split_k: u32,
+    /// Measured kernel time at the best factor, microseconds (best of 3).
+    pub best_us: f64,
+    /// (split_k, measured µs) for every candidate, in sweep order.
+    pub sweep: Vec<(u32, f64)>,
+}
+
+/// Sweep `SPLIT_K_CANDIDATES` on the *executable* host backend
+/// ([`super::exec`]) and return the fastest — the real-time counterpart
+/// of [`autotune_split_k`], measuring wall-clock instead of simulating.
+///
+/// Candidates larger than the packed-row count are skipped (they would
+/// silently clamp); everything else is legal because the host kernel
+/// slices at 8-element granularity.
+pub fn autotune_split_k_host(a: &MatF32, q: &QuantizedLinear,
+                             tiles: &TileConfig, threads: usize)
+                             -> HostAutotuneResult {
+    let kp_total = (q.k / PACK_FACTOR).max(1);
+    let mut sweep = Vec::new();
+    let mut best: Option<(u32, f64)> = None;
+    for &sk in &SPLIT_K_CANDIDATES {
+        if sk as usize > kp_total {
+            continue;
+        }
+        let cfg = HostKernelConfig { tiles: *tiles, split_k: sk, threads };
+        // One warmup, then best-of-3 (min is the standard noise-robust
+        // statistic for short kernels). Deliberately not util::Bench:
+        // its run() prints a line per measurement, which a library
+        // search loop must not do.
+        std::hint::black_box(host_gemm(a, q, &cfg));
+        let mut best_run = f64::MAX;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            std::hint::black_box(host_gemm(a, q, &cfg));
+            best_run = best_run.min(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        sweep.push((sk, best_run));
+        if best.map_or(true, |(_, b)| best_run < b) {
+            best = Some((sk, best_run));
+        }
+    }
+    let (best_split_k, best_us) = best.expect("no feasible split_k candidate");
+    HostAutotuneResult {
+        m: a.rows,
+        n: q.n,
+        k: q.k,
+        best_split_k,
+        best_us,
+        sweep,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::quantize_weight;
+    use crate::util::Rng;
 
     #[test]
     fn sweep_covers_feasible_candidates() {
@@ -96,5 +162,34 @@ mod tests {
                                  &TileConfig::paper_splitk());
         let min = r.sweep.iter().map(|&(_, us)| us).fold(f64::MAX, f64::min);
         assert_eq!(r.best_us, min);
+    }
+
+    #[test]
+    fn host_autotune_measures_real_kernels() {
+        let mut rng = Rng::seed_from(31);
+        let nk = 256;
+        let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
+        let q = quantize_weight(&w, 64);
+        let a = MatF32::new(
+            2, nk, (0..2 * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 1);
+        // 256/8 = 32 packed rows: every candidate (1..16) is feasible.
+        assert_eq!(r.sweep.len(), SPLIT_K_CANDIDATES.len());
+        assert!(r.sweep.iter().all(|&(_, us)| us > 0.0));
+        let min = r.sweep.iter().map(|&(_, us)| us).fold(f64::MAX, f64::min);
+        assert_eq!(r.best_us, min);
+        assert_eq!((r.m, r.n, r.k), (2, nk, nk));
+    }
+
+    #[test]
+    fn host_autotune_skips_oversized_splits() {
+        let mut rng = Rng::seed_from(32);
+        // k = 64 -> 8 packed rows: split 16 must be skipped.
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.05));
+        let q = quantize_weight(&w, 32);
+        let a = MatF32::new(1, 64,
+                            (0..64).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 1);
+        assert!(r.sweep.iter().all(|&(sk, _)| sk != 16));
     }
 }

@@ -1,0 +1,154 @@
+//! Data-parallel host executor: one task per output tile, full k
+//! reduction per task — the CPU analog of the paper's baseline grid
+//! (`m_tiles × n_tiles` blocks, Fig. 2).
+//!
+//! Worker threads own tiles round-robin. Each tile is computed into a
+//! private buffer and stitched into C afterwards; tiles are disjoint, so
+//! neither the worker count nor completion order can affect a single
+//! output bit.
+
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
+
+use super::fused::fused_tile;
+use super::HostKernelConfig;
+
+/// Fused W4A16 GEMM, data-parallel decomposition: `C = A @ dequant(Q)`.
+///
+/// Matches [`crate::quant::w4a16_gemm_ref`] numerically (property tests
+/// bound the float drift; exactly-representable inputs agree bit for
+/// bit) without ever materializing the dense weight matrix.
+pub fn fused_gemm_dp(a: &MatF32, q: &QuantizedLinear,
+                     cfg: &HostKernelConfig) -> MatF32 {
+    cfg.check_shapes(a, q);
+    let (m, n) = (a.rows, q.n);
+    let kp_total = q.k / PACK_FACTOR;
+    let bm = (cfg.tiles.block_m as usize).max(1);
+    let bn = (cfg.tiles.block_n as usize).max(1);
+    let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
+
+    let mut c = MatF32::zeros(m, n);
+    if m == 0 || n == 0 || kp_total == 0 {
+        return c;
+    }
+
+    // Output-tile grid (the DP launch geometry).
+    let mut tiles = Vec::new();
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + bm).min(m);
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + bn).min(n);
+            tiles.push((r0, r1, c0, c1));
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+
+    let workers = cfg.effective_threads().min(tiles.len()).max(1);
+    if workers <= 1 {
+        // Single worker: accumulate straight into C, tile by tile.
+        for &(r0, r1, c0, c1) in &tiles {
+            fused_tile(a, q, r0, r1, c0, c1, 0, kp_total, kp_chunk,
+                       &mut c.data[r0 * n + c0..], n);
+        }
+        return c;
+    }
+
+    // Multi-worker: private tile buffers, stitched below. The copy is
+    // O(m·n) against an O(m·n·k) kernel — noise.
+    let tile_list: &[(usize, usize, usize, usize)] = &tiles;
+    let results: Vec<Vec<(usize, Vec<f32>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut done = Vec::new();
+                    let mut t = w;
+                    while t < tile_list.len() {
+                        let (r0, r1, c0, c1) = tile_list[t];
+                        let bw = c1 - c0;
+                        let mut buf = vec![0.0f32; (r1 - r0) * bw];
+                        fused_tile(a, q, r0, r1, c0, c1, 0, kp_total,
+                                   kp_chunk, &mut buf, bw);
+                        done.push((t, buf));
+                        t += workers;
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("dp worker panicked"))
+            .collect()
+    });
+
+    for worker_tiles in results {
+        for (t, buf) in worker_tiles {
+            let (r0, _r1, c0, c1) = tiles[t];
+            let bw = c1 - c0;
+            for (ri, row) in buf.chunks_exact(bw).enumerate() {
+                let dst = (r0 + ri) * n + c0;
+                c.data[dst..dst + bw].copy_from_slice(row);
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::TileConfig;
+    use crate::quant::{quantize_weight, w4a16_gemm_ref};
+    use crate::util::Rng;
+
+    fn case(m: usize, k: usize, n: usize, group: usize, seed: u64)
+            -> (MatF32, QuantizedLinear) {
+        let mut rng = Rng::seed_from(seed);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let a = MatF32::new(
+            m, k, (0..m * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        (a, q)
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        let (a, q) = case(7, 128, 40, 32, 10);
+        let got = fused_gemm_dp(&a, &q, &HostKernelConfig::dp());
+        let want = w4a16_gemm_ref(&a, &q);
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn thread_count_is_bit_invariant() {
+        let (a, q) = case(16, 256, 48, 64, 11);
+        let base = fused_gemm_dp(&a, &q, &HostKernelConfig::dp().with_threads(1));
+        for threads in [2, 3, 8] {
+            let got =
+                fused_gemm_dp(&a, &q, &HostKernelConfig::dp().with_threads(threads));
+            assert_eq!(base.data, got.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn odd_tile_shapes_cover_everything() {
+        // block sizes that divide neither m, n, nor k.
+        let (a, q) = case(5, 72, 16, 24, 12);
+        let tiles =
+            TileConfig { block_m: 2, block_n: 5, block_k: 40, warps: 1, stages: 1 };
+        let cfg = HostKernelConfig::dp().with_tiles(tiles).with_threads(2);
+        let got = fused_gemm_dp(&a, &q, &cfg);
+        let want = w4a16_gemm_ref(&a, &q);
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "activation k")]
+    fn rejects_mismatched_k() {
+        let (a, q) = case(1, 64, 8, 32, 13);
+        let bad = MatF32::zeros(1, 32);
+        let _ = (a, fused_gemm_dp(&bad, &q, &HostKernelConfig::dp()));
+    }
+}

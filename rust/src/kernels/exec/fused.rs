@@ -1,0 +1,184 @@
+//! The fused dequant-in-the-loop micro-kernel shared by both host
+//! decompositions (DESIGN.md §5).
+//!
+//! One call accumulates `A[r0..r1, k-range] @ dequant(B)[k-range, c0..c1]`
+//! into a caller-provided output window. Packed int4 nibbles are unpacked
+//! from the `i32` words *inside* the k loop — the eight nibbles of each
+//! word are dequantized into a small row buffer and immediately consumed
+//! by the rank-1 update — so no dense `f32[k, n]` weight matrix ever
+//! exists (the whole point vs `quant::w4a16_gemm_ref`, which
+//! materializes ~`k·n` temporaries per call).
+//!
+//! Cache blocking: per-group scale/zero panels (`block_n` wide) are
+//! unpacked once per quantization group; the k loop walks packed rows in
+//! `block_k`-bounded runs; the accumulator window is expected to be small
+//! enough to stay cache-resident (the decompositions in `dp.rs` /
+//! `splitk.rs` choose the window).
+//!
+//! Determinism: for every output element the k reduction runs in strictly
+//! ascending k order over `[8·kp0, 8·kp1)` — the same order regardless of
+//! tile shape, chunking, or how many worker threads the caller uses.
+
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
+
+/// Accumulate the fused product into `out`.
+///
+/// * `r0..r1` — activation rows (`< a.rows`).
+/// * `c0..c1` — weight columns (`< q.n`).
+/// * `kp0..kp1` — *packed* weight rows (`< q.k / 8`); the covered k range
+///   is `8·kp0 .. 8·kp1`.
+/// * `kp_chunk` — cache-block length of one packed-row run (from
+///   `block_k / 8`); runs also break at quantization-group boundaries.
+/// * `out` — row-major window with `out_stride` floats per row whose
+///   origin is element `(r0, c0)`; the tile is accumulated (`+=`), not
+///   stored, so callers can layer k ranges.
+pub(crate) fn fused_tile(
+    a: &MatF32,
+    q: &QuantizedLinear,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    kp0: usize,
+    kp1: usize,
+    kp_chunk: usize,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    debug_assert!(r0 < r1 && r1 <= a.rows);
+    debug_assert!(c0 < c1 && c1 <= q.n);
+    debug_assert!(kp1 <= q.k / PACK_FACTOR);
+    debug_assert!(out_stride >= c1 - c0);
+
+    let n = q.n;
+    let k = q.k;
+    let np = n / PACK_FACTOR;
+    let gp = q.group_size / PACK_FACTOR; // packed rows per quant group
+    let bw = c1 - c0;
+    let chunk = kp_chunk.max(1);
+
+    // Per-group dequant panels for this column span, plus the row buffer
+    // the rank-1 updates consume. Small (block_n-sized), so they live in
+    // L1 across the whole k sweep.
+    let mut scale = vec![0.0f32; bw];
+    let mut zero = vec![0.0f32; bw];
+    let mut wrow = vec![0.0f32; bw];
+
+    let mut kp = kp0;
+    while kp < kp1 {
+        let grp = kp / gp;
+        // Unpack this group's scale/zero panel once (qzeros packs eight
+        // zero points per word along n).
+        for (j, c) in (c0..c1).enumerate() {
+            let zword = q.qzeros.data[grp * np + c / PACK_FACTOR] as u32;
+            zero[j] = ((zword >> (4 * (c % PACK_FACTOR))) & 0xF) as f32;
+            scale[j] = q.scales.data[grp * n + c];
+        }
+        // Run until the group ends, the cache block ends, or the range
+        // ends — whichever comes first.
+        let run_end = kp1.min((grp + 1) * gp).min(kp + chunk);
+        while kp < run_end {
+            let qrow = &q.qweight.data[kp * n + c0..kp * n + c1];
+            for i in 0..PACK_FACTOR {
+                let shift = (4 * i) as u32;
+                // Dequantize nibble `i` of every word in the span:
+                // w = (nibble - zero) * scale, all in registers/L1.
+                for ((w, &word), (&s, &z)) in
+                    wrow.iter_mut().zip(qrow).zip(scale.iter().zip(zero.iter()))
+                {
+                    *w = ((((word as u32) >> shift) & 0xF) as f32 - z) * s;
+                }
+                let kk = kp * PACK_FACTOR + i;
+                for r in r0..r1 {
+                    let av = a.data[r * k + kk];
+                    if av == 0.0 {
+                        // Same skip the naive oracle takes; a zero
+                        // activation contributes exactly nothing either
+                        // way, so determinism is unaffected.
+                        continue;
+                    }
+                    let row_off = (r - r0) * out_stride;
+                    let orow = &mut out[row_off..row_off + bw];
+                    for (o, &w) in orow.iter_mut().zip(wrow.iter()) {
+                        *o += av * w;
+                    }
+                }
+            }
+            kp += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dequantize, gemm_f32, quantize_weight};
+    use crate::util::Rng;
+
+    fn case(m: usize, k: usize, n: usize, group: usize, seed: u64)
+            -> (MatF32, QuantizedLinear, MatF32) {
+        let mut rng = Rng::seed_from(seed);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let a = MatF32::new(
+            m, k, (0..m * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let want = gemm_f32(&a, &dequantize(&q));
+        (a, q, want)
+    }
+
+    #[test]
+    fn full_range_single_tile_matches_dense() {
+        let (a, q, want) = case(3, 64, 16, 32, 1);
+        let mut out = MatF32::zeros(3, 16);
+        fused_tile(&a, &q, 0, 3, 0, 16, 0, 64 / 8, 4, &mut out.data, 16);
+        assert!(out.max_abs_diff(&want) <= 1e-5, "{}", out.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn k_ranges_compose() {
+        // Two disjoint packed-row ranges accumulated into the same window
+        // must equal one full-range pass exactly (same per-element order).
+        let (a, q, _) = case(2, 128, 8, 64, 2);
+        let mut full = MatF32::zeros(2, 8);
+        fused_tile(&a, &q, 0, 2, 0, 8, 0, 16, 3, &mut full.data, 8);
+        let mut split = MatF32::zeros(2, 8);
+        fused_tile(&a, &q, 0, 2, 0, 8, 0, 5, 3, &mut split.data, 8);
+        fused_tile(&a, &q, 0, 2, 0, 8, 5, 16, 3, &mut split.data, 8);
+        assert_eq!(full.data, split.data);
+    }
+
+    #[test]
+    fn chunking_does_not_change_values() {
+        let (a, q, _) = case(4, 64, 24, 16, 3);
+        let mut c1 = MatF32::zeros(4, 24);
+        fused_tile(&a, &q, 0, 4, 0, 24, 0, 8, 1, &mut c1.data, 24);
+        let mut c2 = MatF32::zeros(4, 24);
+        fused_tile(&a, &q, 0, 4, 0, 24, 0, 8, 1000, &mut c2.data, 24);
+        assert_eq!(c1.data, c2.data);
+    }
+
+    #[test]
+    fn column_windows_tile_the_output() {
+        let (a, q, want) = case(2, 32, 40, 32, 4);
+        let mut out = MatF32::zeros(2, 40);
+        let mut c0 = 0;
+        while c0 < 40 {
+            let c1 = (c0 + 16).min(40);
+            fused_tile(&a, &q, 0, 2, c0, c1, 0, 4, 2, &mut out.data[c0..], 40);
+            c0 = c1;
+        }
+        assert!(out.max_abs_diff(&want) <= 1e-5);
+    }
+
+    #[test]
+    fn row_windows_tile_the_output() {
+        let (a, q, want) = case(5, 32, 8, 16, 5);
+        let mut out = MatF32::zeros(5, 8);
+        for r0 in (0..5).step_by(2) {
+            let r1 = (r0 + 2).min(5);
+            fused_tile(&a, &q, r0, r1, 0, 8, 0, 4, 2,
+                       &mut out.data[r0 * 8..], 8);
+        }
+        assert!(out.max_abs_diff(&want) <= 1e-5);
+    }
+}

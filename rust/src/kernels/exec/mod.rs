@@ -1,0 +1,202 @@
+//! Executable fused W4A16 GEMM for the CPU host path (DESIGN.md §5).
+//!
+//! `kernels::splitk_launch` / `kernels::dp_launch` only *describe* the
+//! paper's kernels for the simulator; this subsystem *runs* the same
+//! decompositions in Rust:
+//!
+//! * [`fused_gemm_dp`] — one task per output tile, full k reduction
+//!   (the data-parallel baseline, Fig. 2);
+//! * [`fused_gemm_splitk`] — `split_k` k-slices across `std::thread`
+//!   workers with private partial tiles and a deterministic tree
+//!   reduction (the CPU analog of the paper's atomic adds, Fig. 1).
+//!
+//! Both unpack int4 nibbles from the packed `i32` words inside the inner
+//! loop — no dense `f32[k, n]` weight is ever materialized — and reuse
+//! the existing [`TileConfig`] / [`GemmShape`](super::GemmShape) /
+//! [`Decomposition`] vocabulary so the autotuner can sweep real
+//! wall-clock times next to simulated ones
+//! ([`autotune_split_k_host`](super::autotune_split_k_host)).
+//!
+//! `quant::w4a16_gemm_ref` stays the naive correctness oracle; the
+//! property tests in `rust/tests/property_tests.rs` pin this backend to
+//! it.
+
+mod dp;
+mod fused;
+mod splitk;
+
+pub use dp::fused_gemm_dp;
+pub use splitk::fused_gemm_splitk;
+
+use crate::gpusim::Decomposition;
+use crate::quant::{quantize_weight, w4a16_gemm_ref, MatF32, QuantizedLinear,
+                   PACK_FACTOR};
+use crate::util::Rng;
+
+use super::TileConfig;
+
+/// Execution parameters of the host backend: tile geometry (reusing the
+/// Triton-side [`TileConfig`]; `warps`/`stages` have no CPU meaning and
+/// are ignored), the splitting factor, and the worker-thread budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostKernelConfig {
+    pub tiles: TileConfig,
+    /// k-slices; 1 = data-parallel semantics.
+    pub split_k: u32,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl HostKernelConfig {
+    /// Cache-oriented default tile geometry for the host backend.
+    pub fn host_tiles() -> TileConfig {
+        TileConfig { block_m: 16, block_n: 64, block_k: 256, warps: 1, stages: 1 }
+    }
+
+    /// Data-parallel config (split 1, auto threads).
+    pub fn dp() -> Self {
+        HostKernelConfig { tiles: Self::host_tiles(), split_k: 1, threads: 0 }
+    }
+
+    /// SplitK config (auto threads).
+    pub fn splitk(split_k: u32) -> Self {
+        HostKernelConfig { tiles: Self::host_tiles(), split_k, threads: 0 }
+    }
+
+    /// Builder: replace the tile geometry.
+    pub fn with_tiles(mut self, tiles: TileConfig) -> Self {
+        self.tiles = tiles;
+        self
+    }
+
+    /// Builder: pin the worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The decomposition this config executes.
+    pub fn decomposition(&self) -> Decomposition {
+        if self.split_k <= 1 {
+            Decomposition::DataParallel
+        } else {
+            Decomposition::SplitK { split_k: self.split_k }
+        }
+    }
+
+    /// Resolved worker count (0 ⇒ available cores).
+    pub(crate) fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// Panic (like the reference path) on layout violations. The W4
+    /// storage format guarantees these for any `quantize_weight` output;
+    /// hand-built [`QuantizedLinear`]s are checked here.
+    pub(crate) fn check_shapes(&self, a: &MatF32, q: &QuantizedLinear) {
+        assert_eq!(a.cols, q.k, "activation k != weight k");
+        assert_eq!(q.k % PACK_FACTOR, 0, "k must be a multiple of 8");
+        assert_eq!(q.group_size % PACK_FACTOR, 0,
+                   "group_size must be a multiple of 8");
+        assert_eq!(q.k % q.group_size, 0, "k must be a multiple of group_size");
+        assert_eq!(q.n % PACK_FACTOR, 0, "n must be a multiple of 8");
+    }
+}
+
+/// Dispatch on the configured decomposition.
+pub fn host_gemm(a: &MatF32, q: &QuantizedLinear,
+                 cfg: &HostKernelConfig) -> MatF32 {
+    match cfg.decomposition() {
+        Decomposition::DataParallel => fused_gemm_dp(a, q, cfg),
+        Decomposition::SplitK { .. } => fused_gemm_splitk(a, q, cfg),
+    }
+}
+
+/// Startup self-check: run both fused variants on a random quantized
+/// layer and compare against the naive oracle. Returns the max abs error
+/// observed, or an error if either variant drifts past `1e-3` — the
+/// serving engine runs this before accepting traffic.
+pub fn self_check(m: usize, nk: usize, group_size: usize)
+                  -> Result<f32, String> {
+    let group = group_size.max(PACK_FACTOR);
+    if group % PACK_FACTOR != 0 {
+        // Report invalid layouts as errors — this path exists to fail
+        // loudly *without* panicking the engine thread.
+        return Err(format!(
+            "group_size {group} is not a multiple of {PACK_FACTOR} \
+             (invalid W4 layout)"
+        ));
+    }
+    let nk = nk.max(group).next_multiple_of(group);
+    let m = m.max(1);
+    let mut rng = Rng::seed_from(0xC0FFEE);
+    let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
+    let q = quantize_weight(&w, group);
+    let a = MatF32::new(
+        m, nk, (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+
+    let want = w4a16_gemm_ref(&a, &q);
+    let dp = fused_gemm_dp(&a, &q, &HostKernelConfig::dp());
+    let sk = fused_gemm_splitk(&a, &q, &HostKernelConfig::splitk(4));
+    let err = dp.max_abs_diff(&want).max(sk.max_abs_diff(&want));
+    if err > 1e-3 {
+        return Err(format!(
+            "fused host backend disagrees with w4a16_gemm_ref: \
+             max |err| = {err:.3e} (m={m}, nk={nk}, group={group})"
+        ));
+    }
+    Ok(err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_constructors() {
+        let dp = HostKernelConfig::dp();
+        assert_eq!(dp.split_k, 1);
+        assert_eq!(dp.decomposition(), Decomposition::DataParallel);
+        let sk = HostKernelConfig::splitk(4).with_threads(2);
+        assert_eq!(sk.threads, 2);
+        assert_eq!(sk.decomposition(), Decomposition::SplitK { split_k: 4 });
+        assert!(HostKernelConfig::dp().effective_threads() >= 1);
+    }
+
+    #[test]
+    fn dispatch_routes_by_split() {
+        let mut rng = Rng::seed_from(30);
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.1));
+        let q = quantize_weight(&w, 32);
+        let a = MatF32::new(2, 64,
+                            (0..128).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let via_dp = host_gemm(&a, &q, &HostKernelConfig::dp());
+        let via_sk = host_gemm(&a, &q, &HostKernelConfig::splitk(2));
+        let want = w4a16_gemm_ref(&a, &q);
+        assert!(via_dp.max_abs_diff(&want) <= 1e-4);
+        assert!(via_sk.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn self_check_passes_on_healthy_build() {
+        let err = self_check(4, 96, 32).expect("self-check");
+        assert!(err <= 1e-3);
+    }
+
+    #[test]
+    fn self_check_rounds_shape_up() {
+        // nk not a multiple of the group is rounded, not rejected.
+        assert!(self_check(1, 100, 64).is_ok());
+    }
+
+    #[test]
+    fn self_check_rejects_invalid_group() {
+        // Invalid W4 layouts come back as Err, never a panic (this is
+        // the engine-startup path).
+        let err = self_check(1, 64, 12).unwrap_err();
+        assert!(err.contains("group_size"));
+    }
+}

@@ -1,0 +1,187 @@
+//! SplitK host executor: the k reduction is cut into `split_k` slices
+//! executed across worker threads, each accumulating a private partial
+//! C, followed by a deterministic pairwise tree reduction — the CPU
+//! analog of the paper's atomic-add merge (Fig. 1), but with a fixed
+//! merge order so results are reproducible bit for bit.
+//!
+//! Why this wins on skinny shapes: at `m = 1` the data-parallel grid
+//! degenerates into column-panel tasks whose packed-weight reads stride
+//! by the full row pitch (`block_n · 4` useful bytes every `n · 4`), while
+//! each SplitK worker streams its k-slice of `qweight` fully
+//! sequentially with an L1-resident accumulator row — the same
+//! "decomposition determines the memory behavior" story the paper tells
+//! about SM occupancy, translated to cache/prefetcher behavior.
+
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
+
+use super::fused::fused_tile;
+use super::HostKernelConfig;
+
+/// Fused W4A16 GEMM, SplitK decomposition: `C = A @ dequant(Q)`.
+///
+/// Slice boundaries sit on packed-row (8-element) granularity, so any
+/// `split_k` is legal — `k % split_k != 0` just makes the slices uneven
+/// (±8 k elements), mirroring how the launch-descriptor side relaxes the
+/// Triton kernel's divisibility constraint.
+///
+/// Results are identical for any worker-thread count: slice partials
+/// depend only on `split_k`, and the reduction tree is fixed.
+pub fn fused_gemm_splitk(a: &MatF32, q: &QuantizedLinear,
+                         cfg: &HostKernelConfig) -> MatF32 {
+    cfg.check_shapes(a, q);
+    let (m, n) = (a.rows, q.n);
+    let kp_total = q.k / PACK_FACTOR;
+    let split = (cfg.split_k.max(1) as usize).min(kp_total.max(1));
+    let bn = (cfg.tiles.block_n as usize).max(1);
+    let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
+
+    if m == 0 || n == 0 || kp_total == 0 {
+        return MatF32::zeros(m, n);
+    }
+
+    // Column span of one accumulation pass inside a worker. In the
+    // skinny (m <= 2) regime the partial row fits in L1, so the worker
+    // sweeps the full row width and reads its qweight slice perfectly
+    // sequentially; for taller m the accumulator window is tiled to
+    // block_n so it stays cache-resident.
+    let colw = if m <= 2 { n } else { bn.min(n) };
+
+    let slice_bounds: Vec<(usize, usize)> = (0..split)
+        .map(|s| (s * kp_total / split, (s + 1) * kp_total / split))
+        .collect();
+    let mut partials: Vec<MatF32> =
+        (0..split).map(|_| MatF32::zeros(m, n)).collect();
+
+    // Assign contiguous, balanced slice ranges to workers up front, so
+    // every reference handed to a scoped thread is created out here.
+    let workers = cfg.effective_threads().min(split).max(1);
+    let mut assignments: Vec<(&mut [MatF32], &[(usize, usize)])> =
+        Vec::with_capacity(workers);
+    {
+        let mut rest: &mut [MatF32] = &mut partials;
+        let mut next = 0usize;
+        for w in 0..workers {
+            let count = (split - next) / (workers - w);
+            let (mine, tail) = rest.split_at_mut(count);
+            rest = tail;
+            assignments.push((mine, &slice_bounds[next..next + count]));
+            next += count;
+        }
+    }
+    std::thread::scope(|scope| {
+        for (mine, my_bounds) in assignments {
+            scope.spawn(move || {
+                for (partial, &(kp0, kp1)) in mine.iter_mut().zip(my_bounds) {
+                    if kp0 >= kp1 {
+                        continue;
+                    }
+                    let mut c0 = 0;
+                    while c0 < n {
+                        let c1 = (c0 + colw).min(n);
+                        fused_tile(a, q, 0, m, c0, c1, kp0, kp1, kp_chunk,
+                                   &mut partial.data[c0..], n);
+                        c0 = c1;
+                    }
+                }
+            });
+        }
+    });
+
+    // Deterministic pairwise tree over the slice partials (fixed shape
+    // per split_k — the reproducible stand-in for the GPU's unordered
+    // atomic adds).
+    let mut gap = 1;
+    while gap < split {
+        let mut i = 0;
+        while i + gap < split {
+            let (head, tail) = partials.split_at_mut(i + gap);
+            let dst = &mut head[i].data;
+            let src = &tail[0].data;
+            for (d, &s) in dst.iter_mut().zip(src.iter()) {
+                *d += s;
+            }
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    partials.into_iter().next().expect("split >= 1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::TileConfig;
+    use crate::quant::{quantize_weight, w4a16_gemm_ref};
+    use crate::util::Rng;
+
+    fn case(m: usize, k: usize, n: usize, group: usize, seed: u64)
+            -> (MatF32, QuantizedLinear) {
+        let mut rng = Rng::seed_from(seed);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let a = MatF32::new(
+            m, k, (0..m * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        (a, q)
+    }
+
+    #[test]
+    fn matches_naive_reference_all_splits() {
+        let (a, q) = case(3, 192, 24, 32, 20);
+        let want = w4a16_gemm_ref(&a, &q);
+        for split in [1u32, 2, 3, 4, 7, 8, 16] {
+            let cfg = HostKernelConfig::splitk(split);
+            let got = fused_gemm_splitk(&a, &q, &cfg);
+            assert!(got.max_abs_diff(&want) <= 1e-4, "split={split}");
+        }
+    }
+
+    #[test]
+    fn uneven_slices_k_not_divisible() {
+        // k/8 = 9 packed rows over split 4 -> slices of 2/2/2/3 rows.
+        let (a, q) = case(2, 72, 16, 24, 21);
+        let want = w4a16_gemm_ref(&a, &q);
+        let got = fused_gemm_splitk(&a, &q, &HostKernelConfig::splitk(4));
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn thread_count_is_bit_invariant() {
+        let (a, q) = case(1, 256, 64, 64, 22);
+        let cfg = HostKernelConfig::splitk(8);
+        let base = fused_gemm_splitk(&a, &q, &cfg.clone().with_threads(1));
+        for threads in [2, 3, 5, 8] {
+            let got =
+                fused_gemm_splitk(&a, &q, &cfg.clone().with_threads(threads));
+            assert_eq!(base.data, got.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn split_one_equals_dp_exactly() {
+        // A single slice is the same sequential reduction DP runs.
+        let (a, q) = case(4, 128, 32, 32, 23);
+        let sk = fused_gemm_splitk(&a, &q, &HostKernelConfig::splitk(1));
+        let dp = crate::kernels::fused_gemm_dp(&a, &q, &HostKernelConfig::dp());
+        assert_eq!(sk.data, dp.data);
+    }
+
+    #[test]
+    fn split_larger_than_k_rows_degrades_gracefully() {
+        let (a, q) = case(2, 16, 8, 8, 24);
+        // Only 2 packed rows; split 16 clamps to 2.
+        let want = w4a16_gemm_ref(&a, &q);
+        let got = fused_gemm_splitk(&a, &q, &HostKernelConfig::splitk(16));
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn wide_m_uses_tiled_accumulator() {
+        let (a, q) = case(16, 128, 40, 64, 25);
+        let tiles =
+            TileConfig { block_m: 16, block_n: 8, block_k: 32, warps: 1, stages: 1 };
+        let cfg = HostKernelConfig::splitk(4).with_tiles(tiles);
+        let want = w4a16_gemm_ref(&a, &q);
+        let got = fused_gemm_splitk(&a, &q, &cfg);
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+}

@@ -1,19 +1,26 @@
-//! S9 — GEMM kernel descriptors and the autotuner.
+//! S9 — GEMM kernel descriptors, the autotuner, and the executable
+//! host backend.
 //!
 //! Translates a W4A16 GEMM problem (shape + tile config + decomposition)
 //! into the [`crate::gpusim::KernelLaunch`] the simulator executes —
 //! the Rust-side mirror of the Triton kernel's launch logic (grid
-//! computation, resource usage, per-block traffic accounting).
+//! computation, resource usage, per-block traffic accounting) — and,
+//! since the [`exec`] subsystem landed, *runs* the same fused
+//! dequant + GEMM decompositions on the CPU host path, so the autotuner
+//! can sweep real wall-clock times next to simulated ones.
 
 mod autotune;
 mod dataparallel;
+pub mod exec;
 mod resources;
 mod splitk;
 mod streamk;
 mod tiles;
 
-pub use autotune::{autotune_split_k, AutotuneResult, SPLIT_K_CANDIDATES};
+pub use autotune::{autotune_split_k, autotune_split_k_host, AutotuneResult,
+                   HostAutotuneResult, SPLIT_K_CANDIDATES};
 pub use dataparallel::dp_launch;
+pub use exec::{fused_gemm_dp, fused_gemm_splitk, host_gemm, HostKernelConfig};
 pub use resources::{resource_usage, ResourceUsage, PAD_FACTOR};
 pub use splitk::splitk_launch;
 pub use streamk::{streamk_launch, streamk_residency};

@@ -12,8 +12,10 @@
 //! * **L3** — this crate: the serving coordinator ([`coordinator`]), the
 //!   PJRT runtime that loads and executes the artifacts ([`runtime`]), the
 //!   GPU execution simulator that reproduces the paper's A100/H100
-//!   evaluation ([`gpusim`]), kernel launch descriptors and the autotuner
-//!   ([`kernels`]), and the table/figure regeneration harness ([`tables`]).
+//!   evaluation ([`gpusim`]), kernel launch descriptors, the autotuner,
+//!   and the executable fused W4A16 CPU backend ([`kernels`], with
+//!   [`kernels::exec`] running both decompositions for real on the
+//!   host), and the table/figure regeneration harness ([`tables`]).
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python entry point; the binary is self-contained afterwards.

@@ -124,6 +124,24 @@ impl Bench {
         let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         std::fs::write(path, arr.to_string())
     }
+
+    /// Dump results to `<repo root>/<name>` — the canonical
+    /// perf-trajectory records (`BENCH_*.json`) future PRs regress
+    /// against (DESIGN.md §7). Returns the path written.
+    pub fn write_repo_root_json(&self, name: &str)
+                                -> std::io::Result<std::path::PathBuf> {
+        // CARGO_MANIFEST_DIR is rust/; its parent is the repo root.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .unwrap_or_else(|| std::path::Path::new("."));
+        let path = root.join(name);
+        let path_str = path.to_str().ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidInput,
+                                "non-UTF-8 bench output path")
+        })?;
+        self.write_json(path_str)?;
+        Ok(path)
+    }
 }
 
 #[cfg(test)]

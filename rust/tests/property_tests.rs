@@ -1,16 +1,20 @@
 //! Randomized property tests (in-tree harness — no proptest crate in
 //! this environment): packing round-trips, quantizer error bounds,
-//! batcher conservation/FIFO invariants, simulator monotonicity, JSON
-//! round-trips. Each runs a few hundred random cases off a fixed seed.
+//! fused-host-backend vs naive-oracle agreement (including bit-exact
+//! decomposition invariance), batcher conservation/FIFO invariants,
+//! simulator monotonicity, JSON round-trips. Each runs a few hundred
+//! random cases off a fixed seed.
 
 use std::time::{Duration, Instant};
 
 use splitk_w4a16::coordinator::{DynamicBatcher, GenerateRequest};
 use splitk_w4a16::gpusim::{simulate, DeviceConfig, Decomposition, Occupancy};
-use splitk_w4a16::kernels::{splitk_launch, GemmShape, TileConfig};
+use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk, splitk_launch,
+                            GemmShape, HostKernelConfig, TileConfig};
 use splitk_w4a16::quant::{
     dequantize, pack_along_cols, pack_along_rows, quantize_weight,
-    unpack_along_cols, unpack_along_rows, MatF32,
+    unpack_along_cols, unpack_along_rows, MatF32, QuantizedLinear,
+    w4a16_gemm_ref,
 };
 use splitk_w4a16::util::{Json, Rng};
 
@@ -56,6 +60,158 @@ fn prop_quantize_error_bounded() {
                 let err = (wd.at(r, c) - w.at(r, c)).abs();
                 assert!(err <= bound, "err {err} > {bound} at ({r},{c})");
             }
+        }
+    }
+}
+
+// ---- fused host execution backend (kernels::exec) --------------------
+
+/// A random W4A16 GEMM problem: quantized weights + float activations
+/// (with some exact zeros, exercising the skip path).
+fn random_gemm_case(rng: &mut Rng)
+                    -> (MatF32, QuantizedLinear) {
+    let group = [8usize, 16, 24, 32, 64][rng.index(5)];
+    let k = group * rng.gen_range(1, 5) as usize;
+    let n = rng.gen_range(1, 8) as usize * 8;
+    let m = rng.gen_range(1, 20) as usize;
+    let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+    let q = quantize_weight(&w, group);
+    let a = MatF32::new(
+        m, k,
+        (0..m * k)
+            .map(|_| if rng.chance(0.1) { 0.0 } else { rng.uniform_f32(-1.0, 1.0) })
+            .collect(),
+    );
+    (a, q)
+}
+
+/// Random tile geometry that deliberately divides nothing: m, n, k and
+/// the quant group may all be non-multiples of the block sizes.
+fn random_tiles(rng: &mut Rng) -> TileConfig {
+    TileConfig {
+        block_m: [1u64, 2, 3, 8, 16, 33][rng.index(6)],
+        block_n: [1u64, 3, 5, 8, 16, 64, 1000][rng.index(7)],
+        block_k: [8u64, 24, 40, 64, 256, 10000][rng.index(6)],
+        warps: 1,
+        stages: 1,
+    }
+}
+
+#[test]
+fn prop_fused_dp_matches_naive_oracle() {
+    // fused-DP == w4a16_gemm_ref within 1e-4 for random shapes, tile
+    // configs (k % block_k != 0 included) and worker counts.
+    let mut rng = Rng::seed_from(21);
+    for _ in 0..40 {
+        let (a, q) = random_gemm_case(&mut rng);
+        let cfg = HostKernelConfig {
+            tiles: random_tiles(&mut rng),
+            split_k: 1,
+            threads: [0usize, 1, 2, 3][rng.index(4)],
+        };
+        let got = fused_gemm_dp(&a, &q, &cfg);
+        let want = w4a16_gemm_ref(&a, &q);
+        let err = got.max_abs_diff(&want);
+        assert!(err <= 1e-4,
+                "err {err} (m={} k={} n={} group={} tiles={:?})",
+                a.rows, q.k, q.n, q.group_size, cfg.tiles);
+    }
+}
+
+#[test]
+fn prop_fused_splitk_matches_naive_oracle() {
+    // fused-SplitK == w4a16_gemm_ref within 1e-4 for random split
+    // factors, including k % split_k != 0 (uneven slices).
+    let mut rng = Rng::seed_from(22);
+    for _ in 0..40 {
+        let (a, q) = random_gemm_case(&mut rng);
+        let cfg = HostKernelConfig {
+            tiles: random_tiles(&mut rng),
+            split_k: rng.gen_range(1, 12) as u32,
+            threads: [0usize, 1, 2, 3][rng.index(4)],
+        };
+        let got = fused_gemm_splitk(&a, &q, &cfg);
+        let want = w4a16_gemm_ref(&a, &q);
+        let err = got.max_abs_diff(&want);
+        assert!(err <= 1e-4,
+                "err {err} (m={} k={} n={} group={} split={} tiles={:?})",
+                a.rows, q.k, q.n, q.group_size, cfg.split_k, cfg.tiles);
+    }
+}
+
+#[test]
+fn prop_fused_backend_thread_count_invariant() {
+    // Same config, different worker counts -> bit-identical output
+    // (slice partials depend only on split_k; the reduction tree is
+    // fixed; DP tiles are disjoint).
+    let mut rng = Rng::seed_from(23);
+    for _ in 0..15 {
+        let (a, q) = random_gemm_case(&mut rng);
+        let split = rng.gen_range(1, 9) as u32;
+        let tiles = random_tiles(&mut rng);
+        let dp1 = fused_gemm_dp(
+            &a, &q, &HostKernelConfig { tiles, split_k: 1, threads: 1 });
+        let sk1 = fused_gemm_splitk(
+            &a, &q, &HostKernelConfig { tiles, split_k: split, threads: 1 });
+        for threads in [2usize, 5] {
+            let dp = fused_gemm_dp(
+                &a, &q, &HostKernelConfig { tiles, split_k: 1, threads });
+            assert_eq!(dp1.data, dp.data, "DP threads={threads}");
+            let sk = fused_gemm_splitk(
+                &a, &q, &HostKernelConfig { tiles, split_k: split, threads });
+            assert_eq!(sk1.data, sk.data,
+                       "SplitK split={split} threads={threads}");
+        }
+    }
+}
+
+/// Hand-built quantized layer whose dequantized values are all exactly
+/// representable (power-of-two scales), paired with small-integer
+/// activations: every partial sum stays an exact small-integer multiple
+/// of 2^-4, so *any* accumulation order yields the same f32 bits.
+fn exact_gemm_case(rng: &mut Rng)
+                   -> (MatF32, QuantizedLinear) {
+    let group = [8usize, 16, 32][rng.index(3)];
+    let k = group * rng.gen_range(1, 5) as usize;
+    let n = rng.gen_range(1, 5) as usize * 8;
+    let m = rng.gen_range(1, 8) as usize;
+    let groups = k / group;
+    let nib: Vec<u8> = (0..k * n).map(|_| rng.index(16) as u8).collect();
+    let zeros: Vec<u8> = (0..groups * n).map(|_| rng.index(16) as u8).collect();
+    let scales: Vec<f32> =
+        (0..groups * n).map(|_| [0.25f32, 0.125, 0.0625][rng.index(3)]).collect();
+    let q = QuantizedLinear {
+        k,
+        n,
+        group_size: group,
+        qweight: pack_along_rows(&nib, k, n),
+        scales: MatF32::new(groups, n, scales),
+        qzeros: pack_along_cols(&zeros, groups, n),
+    };
+    let a = MatF32::new(
+        m, k, (0..m * k).map(|_| rng.gen_range(-4, 5) as f32).collect());
+    (a, q)
+}
+
+#[test]
+fn prop_fused_dp_splitk_bit_identical_on_exact_inputs() {
+    // The acceptance bar for the exec backend: fused-DP, fused-SplitK at
+    // every split factor, and the naive oracle agree BIT FOR BIT when
+    // the arithmetic is exact, proving the decompositions compute the
+    // same function and differ only in (deterministically ordered)
+    // float rounding.
+    let mut rng = Rng::seed_from(24);
+    for _ in 0..25 {
+        let (a, q) = exact_gemm_case(&mut rng);
+        let want = w4a16_gemm_ref(&a, &q);
+        let dp = fused_gemm_dp(&a, &q, &HostKernelConfig::dp());
+        assert_eq!(dp.data, want.data, "DP vs naive oracle");
+        for split in [2u32, 3, 5, 8] {
+            let sk = fused_gemm_splitk(
+                &a, &q,
+                &HostKernelConfig::splitk(split)
+                    .with_threads([0usize, 2][rng.index(2)]));
+            assert_eq!(dp.data, sk.data, "DP vs SplitK split={split}");
         }
     }
 }

@@ -1,0 +1,293 @@
+//! Vendored stand-in for the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The real crate wraps libxla_extension, which is not present in this
+//! offline environment (DESIGN.md §2). This stand-in keeps the same API
+//! surface the workspace uses, split into two tiers:
+//!
+//! * **Functional**: [`Literal`] is a real host-side typed tensor —
+//!   `vec1`, `reshape`, `array_shape`, `to_vec`, `to_tuple` all work, so
+//!   `HostTensor <-> Literal` round-trips (and their tests) run without
+//!   PJRT.
+//! * **Unavailable**: compiling or executing an HLO module needs the
+//!   native runtime, so [`PjRtClient::compile`] and
+//!   [`PjRtLoadedExecutable::execute`] return a descriptive [`Error`].
+//!   Callers that gate on `artifacts/manifest.json` skip before reaching
+//!   them.
+//!
+//! Swap this path dependency for the real bindings in `rust/Cargo.toml`
+//! to serve actual artifacts; no workspace code changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (implements `std::error::Error`,
+/// so `?` converts it into `anyhow::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the native XLA/PJRT runtime is not available in this \
+         build (vendored stub — see rust/Cargo.toml and DESIGN.md §2)"
+    ))
+}
+
+/// Element dtypes the manifest format can name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Dims + dtype of an array literal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side typed tensor (or tuple of tensors) — fully functional.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    payload: Payload,
+}
+
+/// Rust scalar types that map onto an XLA element type.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn literal_from_vec(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    #[doc(hidden)]
+    fn extract(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn literal_from_vec(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal { dims, payload: Payload::F32(data) }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<Self>> {
+        match &lit.payload {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn literal_from_vec(data: Vec<Self>, dims: Vec<i64>) -> Literal {
+        Literal { dims, payload: Payload::I32(data) }
+    }
+    fn extract(lit: &Literal) -> Option<Vec<Self>> {
+        match &lit.payload {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::literal_from_vec(data.to_vec(), vec![data.len() as i64])
+    }
+
+    /// Tuple literal from parts.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], payload: Payload::Tuple(parts) }
+    }
+
+    fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: usize = dims.iter().map(|&d| d as usize).product();
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {:?} -> {:?} changes element count",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), payload: self.payload.clone() })
+    }
+
+    /// Dims + dtype; errors on tuple literals.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+            Payload::Tuple(_) => {
+                return Err(Error("tuple literal has no array shape".into()))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements out as a typed vec.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+            .ok_or_else(|| Error("literal dtype mismatch in to_vec".into()))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.payload {
+            Payload::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: existence-checked, contents opaque).
+pub struct HloModuleProto {
+    _text_len: usize,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text file; parsing is deferred to the (absent) native
+    /// runtime, so this only validates that the file is readable.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("reading HLO text: {e}")))?;
+        Ok(HloModuleProto { _text_len: text.len() })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client handle. Construction succeeds (host tensors work without
+/// the native runtime); compilation does not.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no native PJRT)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// A compiled executable handle (never constructed by the stub client).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle (never constructed by the stub client).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap().len(), 6);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let lit = Literal::vec1(&[42i32]).reshape(&[]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert!(shape.dims().is_empty());
+        assert_eq!(shape.ty(), ElementType::S32);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![
+            Literal::vec1(&[1.0f32]),
+            Literal::vec1(&[2i32]),
+        ]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+        assert!(parts[0].to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_is_gated() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let comp = XlaComputation::from_proto(&HloModuleProto { _text_len: 0 });
+        assert!(client.compile(&comp).is_err());
+    }
+}
