@@ -11,7 +11,7 @@ TPU/Pallas adaptation of the paper's Triton kernel (Algorithm 1):
   On a real TPU the two k axes are ``"arbitrary"`` (sequential per core),
   which is the TPU-idiomatic analogue of the GPU's exclusive atomic write;
   under ``interpret=True`` grid steps are sequential by construction.
-  DESIGN.md §8 spells out the full mapping.
+  DESIGN.md §9 spells out the full mapping.
 
 The dequantization is fused: the packed int32 weight block is unpacked
 (shift/mask), shifted by the per-group zero point and scaled in-kernel,

@@ -1,0 +1,71 @@
+//! Bench: one full decode step of the pure-Rust host model per batch
+//! bucket — the batcher's bucket choice *is* the `m` of every fused
+//! W4A16 projection in the step, so this sweep is the serving-side view
+//! of the paper's m = 1..16 skinny-GEMM regime.
+//!
+//! Per-shape kernel configs come from the wall-clock autotuner (same as
+//! serving). Results land in `BENCH_decode.json` at the repo root, the
+//! decode-path perf-trajectory record (DESIGN.md §8).
+//!
+//! ```sh
+//! cargo bench --bench decode_step [-- --smoke]
+//! ```
+
+use std::time::Duration;
+
+use splitk_w4a16::model::HostModel;
+use splitk_w4a16::runtime::ModelMeta;
+use splitk_w4a16::util::Bench;
+
+/// Attention window depth the measured step runs at.
+const POS: usize = 16;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let buckets: &[usize] = if smoke { &[1, 16] } else { &[1, 2, 4, 8, 16] };
+    let meta = ModelMeta::synthetic(128, "splitk", vec![1, 2, 4, 8, 16], 0);
+    let mut model = HostModel::new(&meta).expect("host model");
+    let planned = model.warm(&meta.batch_buckets);
+    println!("host decode model ready ({planned} bucket-shapes autotuned, \
+              {:.1} MB packed weights)",
+             model.weights().packed_bytes() as f64 / 1e6);
+
+    let mut bench = if smoke {
+        Bench::new(Duration::from_millis(250), 12, 1)
+    } else {
+        Bench::new(Duration::from_millis(800), 48, 2)
+    };
+    for &b in buckets {
+        let starts = vec![0i32; b];
+        let mut state = model.begin(&starts);
+        // Prefill 0..POS so the measured step attends over a realistic
+        // window.
+        for pos in 0..POS {
+            let tokens: Vec<i32> =
+                (0..b).map(|i| ((7 * pos + i) % 512) as i32).collect();
+            // Prefill fast path: logits discarded, LM head skipped.
+            model
+                .decode_step(&mut state, &tokens, pos, false)
+                .expect("prefill");
+        }
+        let tokens: Vec<i32> =
+            (0..b).map(|i| ((3 * i + 11) % 512) as i32).collect();
+        bench.run(&format!("decode_step_b{b}"), || {
+            // Re-running the same position keeps the GEMM shapes and
+            // attention span constant across samples.
+            std::hint::black_box(
+                model
+                    .decode_step(&mut state, &tokens, POS, true)
+                    .expect("step"));
+        });
+    }
+
+    // Smoke runs write a separate file so a local `-- --smoke` never
+    // clobbers the canonical full-sweep trajectory record.
+    let out = if smoke { "BENCH_decode_smoke.json" }
+              else { "BENCH_decode.json" };
+    match bench.write_repo_root_json(out) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

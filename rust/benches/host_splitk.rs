@@ -14,8 +14,14 @@
 //! perf-trajectory record future PRs regress against.
 //!
 //! ```sh
-//! cargo bench --bench host_splitk
+//! cargo bench --bench host_splitk [-- --smoke]
 //! ```
+//!
+//! `--smoke` restricts the sweep to one shape pair (m ∈ {1, 16},
+//! n = k = 2048) with a short budget and writes
+//! `BENCH_host_splitk_smoke.json` instead — the CI mode that exercises
+//! the bench without paying for (or clobbering) the full-grid
+//! trajectory record.
 
 use std::time::Duration;
 
@@ -27,7 +33,13 @@ use splitk_w4a16::util::{Bench, Rng};
 const SPLITS: [u32; 4] = [1, 2, 4, 8];
 
 fn main() {
-    let mut bench = Bench::new(Duration::from_millis(600), 24, 1);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let nks: &[usize] = if smoke { &[2048] } else { &[2048, 4096, 8192] };
+    let mut bench = if smoke {
+        Bench::new(Duration::from_millis(200), 8, 1)
+    } else {
+        Bench::new(Duration::from_millis(600), 24, 1)
+    };
     let mut rng = Rng::seed_from(17);
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -39,7 +51,7 @@ fn main() {
              tiles.block_m, tiles.block_n, tiles.block_k);
 
     let mut lines = Vec::new();
-    for &nk in &[2048usize, 4096, 8192] {
+    for &nk in nks {
         let q = {
             let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
             quantize_weight(&w, 128)
@@ -96,8 +108,12 @@ fn main() {
         println!("{l}");
     }
 
-    match bench.write_repo_root_json("BENCH_host_splitk.json") {
+    // Smoke runs write a separate file so a local `-- --smoke` never
+    // clobbers the canonical full-sweep trajectory record.
+    let out = if smoke { "BENCH_host_splitk_smoke.json" }
+              else { "BENCH_host_splitk.json" };
+    match bench.write_repo_root_json(out) {
         Ok(path) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write BENCH_host_splitk.json: {e}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
     }
 }

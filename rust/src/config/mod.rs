@@ -32,6 +32,21 @@ pub struct ServeConfig {
     /// engine startup (`kernels::exec::self_check`); cheap, on by
     /// default.
     pub self_check: bool,
+    /// Decode backend: "artifacts" (AOT decode executables through
+    /// PJRT) or "host" (the pure-Rust fused model, `crate::model`).
+    /// "artifacts" auto-falls back to "host" when
+    /// `artifacts_dir/manifest.json` is missing, so a bare checkout
+    /// serves end to end (see [`Self::resolve_backend`]).
+    pub backend: String,
+}
+
+/// Which decode implementation the engine will build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeBackendKind {
+    /// AOT decode artifacts through the PJRT runtime.
+    Artifacts,
+    /// Pure-Rust host model on the fused W4A16 CPU backend.
+    Host,
 }
 
 impl Default for ServeConfig {
@@ -47,6 +62,7 @@ impl Default for ServeConfig {
             variant: "splitk".into(),
             warm_start: true,
             self_check: true,
+            backend: "artifacts".into(),
         }
     }
 }
@@ -105,6 +121,10 @@ impl ServeConfig {
                 Some(b) => b.as_bool()?,
                 None => d.self_check,
             },
+            backend: match v.opt("backend") {
+                Some(s) => s.as_str()?.to_string(),
+                None => d.backend,
+            },
         })
     }
 
@@ -124,6 +144,7 @@ impl ServeConfig {
             ("variant", Json::str(self.variant.clone())),
             ("warm_start", Json::Bool(self.warm_start)),
             ("self_check", Json::Bool(self.self_check)),
+            ("backend", Json::str(self.backend.clone())),
         ])
     }
 
@@ -145,7 +166,30 @@ impl ServeConfig {
             self.variant == "splitk" || self.variant == "dp",
             "variant must be 'splitk' or 'dp'"
         );
+        ensure!(
+            self.backend == "artifacts" || self.backend == "host",
+            "backend must be 'artifacts' or 'host'"
+        );
         Ok(())
+    }
+
+    /// Resolve the configured backend against the filesystem:
+    /// `"host"` always serves the pure-Rust model; `"artifacts"` does
+    /// only when `artifacts_dir/manifest.json` exists, falling back to
+    /// the host model otherwise so `serve` works on a bare machine.
+    /// Pure (no logging): the coordinator warns once when the fallback
+    /// actually engages.
+    pub fn resolve_backend(&self) -> DecodeBackendKind {
+        match self.backend.as_str() {
+            "host" => DecodeBackendKind::Host,
+            _ => {
+                if self.artifacts_dir.join("manifest.json").exists() {
+                    DecodeBackendKind::Artifacts
+                } else {
+                    DecodeBackendKind::Host
+                }
+            }
+        }
     }
 
     /// Smallest bucket that fits `n` waiting sequences, or the largest
@@ -216,6 +260,48 @@ mod tests {
         let cfg = ServeConfig::from_json(
             &Json::parse(r#"{"self_check": false}"#).unwrap()).unwrap();
         assert!(!cfg.self_check);
+    }
+
+    #[test]
+    fn rejects_bad_backend() {
+        let cfg = ServeConfig { backend: "gpu".into(), ..Default::default() };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn backend_json_roundtrip_and_default() {
+        let d = ServeConfig::default();
+        assert_eq!(d.backend, "artifacts");
+        let cfg = ServeConfig::from_json(
+            &Json::parse(r#"{"backend": "host"}"#).unwrap()).unwrap();
+        assert_eq!(cfg.backend, "host");
+    }
+
+    #[test]
+    fn backend_fallback_selection() {
+        // Explicit host: always host.
+        let host = ServeConfig { backend: "host".into(), ..Default::default() };
+        assert_eq!(host.resolve_backend(), DecodeBackendKind::Host);
+
+        // Artifacts with no manifest on disk: falls back to host, so a
+        // bare checkout can serve.
+        let missing = ServeConfig {
+            artifacts_dir: PathBuf::from("/definitely/not/a/path"),
+            ..Default::default()
+        };
+        assert_eq!(missing.resolve_backend(), DecodeBackendKind::Host);
+
+        // Artifacts with a manifest present: stays on artifacts.
+        let dir = std::env::temp_dir().join(format!(
+            "splitk-backend-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        let present = ServeConfig {
+            artifacts_dir: dir.clone(),
+            ..Default::default()
+        };
+        assert_eq!(present.resolve_backend(), DecodeBackendKind::Artifacts);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

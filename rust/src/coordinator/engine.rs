@@ -1,17 +1,154 @@
-//! Generation engine — executes batched prefill + decode steps against
-//! the AOT decode artifacts. Owns all PJRT state; lives on one thread.
+//! Generation engine — executes batched prefill + decode steps against a
+//! pluggable [`DecodeBackend`]. Owns all backend state; lives on one
+//! thread.
+//!
+//! Two backends implement the step contract (DESIGN.md §7):
+//!
+//! * [`ArtifactBackend`] — the AOT decode artifacts through PJRT (the
+//!   original path; needs `artifacts/` and the native runtime);
+//! * [`HostModelBackend`] — the pure-Rust [`crate::model::HostModel`],
+//!   every projection running the fused W4A16 `kernels::exec` backend.
+//!   Works on a bare machine.
 
+use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::metrics::ServingMetrics;
-use crate::runtime::{ExecutableCache, HostTensor, ModelMeta};
+use crate::model::{DecodeState, HostModel};
+use crate::runtime::{Executable, ExecutableCache, HostTensor, ModelMeta};
 
 use super::batcher::Batch;
 use super::kvcache::KvCacheSpec;
 use super::request::{FinishReason, GenerateRequest, GenerateResponse};
+
+/// One decode implementation: per-batch state setup plus a step
+/// function. The engine drives prefill and decode through this trait
+/// only, so serving logic (padding, harvesting, metrics) is shared
+/// between the artifact path and the host path.
+pub trait DecodeBackend {
+    /// Model metadata (vocab, max_seq, buckets).
+    fn meta(&self) -> &ModelMeta;
+
+    /// Reset state for a batch of `bucket` slots whose left-padding
+    /// offsets are `starts` (called once per batch, before any step).
+    fn begin(&mut self, bucket: usize, starts: &[i32]) -> Result<()>;
+
+    /// Feed `tokens[slot]` at absolute position `pos`; returns logits
+    /// as row-major `[bucket * vocab]`. When `need_logits` is false the
+    /// caller will discard the result (a non-final prefill position): a
+    /// backend may skip its output projection and return an empty vec,
+    /// but returning full logits is also allowed (the artifact path
+    /// computes them unconditionally).
+    fn step(&mut self, tokens: &[i32], pos: i32, need_logits: bool)
+            -> Result<Vec<f32>>;
+}
+
+/// The AOT-artifact backend: compiled decode executables + an
+/// engine-thread-resident KV literal (no per-step host copies of the
+/// multi-MB cache).
+pub struct ArtifactBackend {
+    cache: ExecutableCache,
+    kv_spec: KvCacheSpec,
+    variant: String,
+    exe: Option<Rc<Executable>>,
+    kv: Option<xla::Literal>,
+    start: Option<xla::Literal>,
+    bucket: usize,
+}
+
+impl ArtifactBackend {
+    /// Wrap a (warmed or cold) executable cache.
+    pub fn new(cache: ExecutableCache, variant: String) -> Self {
+        let kv_spec = KvCacheSpec::from_model(&cache.manifest().model);
+        ArtifactBackend {
+            cache,
+            kv_spec,
+            variant,
+            exe: None,
+            kv: None,
+            start: None,
+            bucket: 0,
+        }
+    }
+}
+
+impl DecodeBackend for ArtifactBackend {
+    fn meta(&self) -> &ModelMeta {
+        &self.cache.manifest().model
+    }
+
+    fn begin(&mut self, bucket: usize, starts: &[i32]) -> Result<()> {
+        self.exe = Some(self.cache.decode(&self.variant, bucket)?);
+        self.kv = Some(self.kv_spec.zeros(bucket).to_literal()?);
+        self.start =
+            Some(HostTensor::i32(vec![bucket], starts.to_vec()).to_literal()?);
+        self.bucket = bucket;
+        Ok(())
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: i32, _need_logits: bool)
+            -> Result<Vec<f32>> {
+        let exe = self
+            .exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("step before begin"))?;
+        let kv = self.kv.take().ok_or_else(|| anyhow!("kv state missing"))?;
+        let start = self
+            .start
+            .as_ref()
+            .ok_or_else(|| anyhow!("start tensor missing"))?;
+        let inputs = [
+            HostTensor::i32(vec![self.bucket], tokens.to_vec()).to_literal()?,
+            kv,
+            HostTensor::scalar_i32(pos).to_literal()?,
+            start.clone(),
+        ];
+        let mut out = exe.run_literals(&inputs)?;
+        ensure!(out.len() == 2, "decode artifact must return (logits, kv)");
+        self.kv = Some(out.pop().unwrap());
+        let logits = HostTensor::from_literal(&out.pop().unwrap())?;
+        Ok(logits.as_f32()?.to_vec())
+    }
+}
+
+/// The pure-Rust backend: seeded quantized weights, fused projections,
+/// artifact-shaped host KV cache. No files, no PJRT.
+pub struct HostModelBackend {
+    model: HostModel,
+    state: Option<DecodeState>,
+}
+
+impl HostModelBackend {
+    /// Wrap a generated host model.
+    pub fn new(model: HostModel) -> Self {
+        HostModelBackend { model, state: None }
+    }
+}
+
+impl DecodeBackend for HostModelBackend {
+    fn meta(&self) -> &ModelMeta {
+        self.model.meta()
+    }
+
+    fn begin(&mut self, bucket: usize, starts: &[i32]) -> Result<()> {
+        ensure!(starts.len() == bucket, "starts length != bucket");
+        self.state = Some(self.model.begin(starts));
+        Ok(())
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: i32, need_logits: bool)
+            -> Result<Vec<f32>> {
+        let state = self
+            .state
+            .as_mut()
+            .ok_or_else(|| anyhow!("step before begin"))?;
+        ensure!(pos >= 0, "negative position");
+        self.model.decode_step(state, tokens, pos as usize, need_logits)
+    }
+}
 
 /// Per-slot generation state inside a running batch.
 #[derive(Debug)]
@@ -26,27 +163,26 @@ struct Slot {
     next_token: i32,
 }
 
-/// The engine: compiled decode executables + batched generation loop.
+/// The engine: a decode backend + the batched generation loop.
 pub struct Engine {
-    cache: ExecutableCache,
-    kv_spec: KvCacheSpec,
-    variant: String,
+    backend: Box<dyn DecodeBackend>,
     max_seq: usize,
+    vocab: usize,
     metrics: Arc<ServingMetrics>,
 }
 
 impl Engine {
-    /// Build from a warmed (or cold) executable cache.
-    pub fn new(cache: ExecutableCache, variant: String,
+    /// Build from any decode backend.
+    pub fn new(backend: Box<dyn DecodeBackend>,
                metrics: Arc<ServingMetrics>) -> Self {
-        let kv_spec = KvCacheSpec::from_model(&cache.manifest().model);
-        let max_seq = cache.manifest().model.max_seq;
-        Engine { cache, kv_spec, variant, max_seq, metrics }
+        let max_seq = backend.meta().max_seq;
+        let vocab = backend.meta().vocab;
+        Engine { backend, max_seq, vocab, metrics }
     }
 
     /// Model metadata helper.
     pub fn vocab(&self) -> usize {
-        self.cache.manifest().model.vocab
+        self.vocab
     }
 
     /// The engine's GEMM verification path: run the fused host backend
@@ -70,14 +206,13 @@ impl Engine {
         ensure!(!requests.is_empty(), "empty batch");
         ensure!(requests.len() <= bucket, "batch exceeds bucket");
         let b = bucket;
-        let exe = self.cache.decode(&self.variant, b)?;
 
         let prompt_max = requests.iter().map(|r| r.prompt.len()).max().unwrap();
         ensure!(prompt_max < self.max_seq, "prompt exceeds context");
         let batch_started = Instant::now();
 
         // Left-pad prompts to a common length; padding positions are
-        // masked out of attention by the artifact's `start` input.
+        // masked out of attention by the backend's `start` input.
         let mut slots: Vec<Slot> = (0..b)
             .map(|i| {
                 if i < requests.len() {
@@ -96,16 +231,13 @@ impl Engine {
             })
             .collect();
 
-        let start_tensor = HostTensor::i32(
-            vec![b], slots.iter().map(|s| s.start).collect())
-            .to_literal()?;
-        // KV state stays as an XLA literal across steps: no per-step
-        // HostTensor <-> Literal copies of the (multi-MB) cache
-        // (EXPERIMENTS.md §Perf iteration 1).
-        let mut kv = self.kv_spec.zeros(b).to_literal()?;
+        let starts: Vec<i32> = slots.iter().map(|s| s.start).collect();
+        self.backend.begin(b, &starts)?;
 
         // ---- prefill: feed prompt tokens position by position ----
-        let mut logits: Option<HostTensor> = None;
+        // Only the last prefill position's logits are sampled from, so
+        // earlier positions skip the LM-head projection (host backend).
+        let mut logits: Option<Vec<f32>> = None;
         for pos in 0..prompt_max {
             let tokens: Vec<i32> = slots
                 .iter()
@@ -118,14 +250,15 @@ impl Engine {
                     None => 0,
                 })
                 .collect();
-            let (l, new_kv) = self.step(&exe, tokens, kv, pos as i32,
-                                        &start_tensor, b)?;
-            kv = new_kv;
-            logits = Some(l);
+            let need = pos + 1 == prompt_max;
+            let out = self.step(&tokens, pos as i32, b, need)?;
+            if need {
+                logits = Some(out);
+            }
         }
 
         // First generated token comes from the last prefill logits.
-        let vocab = self.vocab();
+        let vocab = self.vocab;
         let mut cur_logits = logits.expect("prompt_max >= 1");
         self.harvest(&requests, &mut slots, &cur_logits, vocab, prompt_max)?;
 
@@ -133,10 +266,7 @@ impl Engine {
         let mut pos = prompt_max;
         while slots.iter().any(|s| s.done.is_none()) && pos < self.max_seq {
             let tokens: Vec<i32> = slots.iter().map(|s| s.next_token).collect();
-            let (l, new_kv) = self.step(&exe, tokens, kv, pos as i32,
-                                        &start_tensor, b)?;
-            kv = new_kv;
-            cur_logits = l;
+            cur_logits = self.step(&tokens, pos as i32, b, true)?;
             pos += 1;
             self.harvest(&requests, &mut slots, &cur_logits, vocab, pos)?;
         }
@@ -172,41 +302,31 @@ impl Engine {
         Ok(responses)
     }
 
-    /// One decode-artifact execution + metrics. `kv` is consumed and
-    /// replaced by the step's output cache literal (device round-trip
-    /// without host-side tensor copies).
-    fn step(&self, exe: &std::rc::Rc<crate::runtime::Executable>,
-            tokens: Vec<i32>, kv: xla::Literal, pos: i32,
-            start: &xla::Literal, b: usize)
-            -> Result<(HostTensor, xla::Literal)> {
+    /// One backend step + metrics.
+    fn step(&mut self, tokens: &[i32], pos: i32, b: usize,
+            need_logits: bool) -> Result<Vec<f32>> {
         let t0 = Instant::now();
-        let inputs = [
-            HostTensor::i32(vec![b], tokens).to_literal()?,
-            kv,
-            HostTensor::scalar_i32(pos).to_literal()?,
-            start.clone(),
-        ];
-        let mut out = exe.run_literals(&inputs)?;
-        ensure!(out.len() == 2, "decode artifact must return (logits, kv)");
-        let new_kv = out.pop().unwrap();
-        let logits = HostTensor::from_literal(&out.pop().unwrap())?;
-        let active = b as u64;
+        let logits = self.backend.step(tokens, pos, need_logits)?;
+        if need_logits {
+            ensure!(logits.len() == b * self.vocab,
+                    "backend returned {} logits, expected {}",
+                    logits.len(), b * self.vocab);
+        }
         self.metrics
-            .record_step(t0.elapsed().as_secs_f64() * 1e6, active);
-        Ok((logits, new_kv))
+            .record_step(t0.elapsed().as_secs_f64() * 1e6, b as u64);
+        Ok(logits)
     }
 
     /// Greedy-sample next tokens from `logits`, update slot state.
     fn harvest(&self, requests: &[GenerateRequest], slots: &mut [Slot],
-               logits: &HostTensor, vocab: usize, next_pos: usize)
+               logits: &[f32], vocab: usize, next_pos: usize)
                -> Result<()> {
-        let data = logits.as_f32()?;
         for (i, slot) in slots.iter_mut().enumerate() {
             if slot.done.is_some() {
                 continue;
             }
             let ri = slot.req_idx.unwrap();
-            let row = &data[i * vocab..(i + 1) * vocab];
+            let row = &logits[i * vocab..(i + 1) * vocab];
             let tok = argmax(row) as i32;
             slot.generated.push(tok);
             slot.next_token = tok;
@@ -239,6 +359,7 @@ pub fn argmax(row: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{GemmPlan, HostModel};
 
     #[test]
     fn argmax_basic() {
@@ -265,6 +386,83 @@ mod tests {
         assert!(err <= 1e-3);
     }
 
-    // Engine execution paths are covered by rust/tests/serving_integration.rs
-    // against the real decode artifacts.
+    fn host_engine() -> Engine {
+        let meta = ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0);
+        let plan = GemmPlan::fixed(
+            crate::kernels::HostKernelConfig::splitk(4).with_threads(2));
+        let model = HostModel::with_plan(&meta, plan).unwrap();
+        Engine::new(Box::new(HostModelBackend::new(model)),
+                    Arc::new(ServingMetrics::new()))
+    }
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
+        GenerateRequest {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            stop_token: None,
+            accepted_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn host_backend_runs_a_batch() {
+        let mut e = host_engine();
+        let batch = Batch {
+            requests: vec![req(1, vec![3, 5, 7], 4), req(2, vec![9], 4)],
+            bucket: 2,
+        };
+        let out = e.run_batch(batch).unwrap();
+        assert_eq!(out.len(), 2);
+        for r in &out {
+            assert_eq!(r.tokens.len(), 4);
+            assert_eq!(r.finish_reason, FinishReason::Length);
+            assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn host_backend_is_deterministic_across_batches() {
+        let mut e = host_engine();
+        let a = e
+            .run_batch(Batch {
+                requests: vec![req(1, vec![10, 20, 30], 6)],
+                bucket: 1,
+            })
+            .unwrap();
+        let b = e
+            .run_batch(Batch {
+                requests: vec![req(2, vec![10, 20, 30], 6)],
+                bucket: 1,
+            })
+            .unwrap();
+        assert_eq!(a[0].tokens, b[0].tokens, "greedy decode must replay");
+        assert_eq!(a[0].tokens.len(), 6);
+    }
+
+    #[test]
+    fn host_backend_stop_token_finishes_early() {
+        let mut e = host_engine();
+        let probe = e
+            .run_batch(Batch { requests: vec![req(1, vec![8, 8], 3)], bucket: 1 })
+            .unwrap();
+        let stop = probe[0].tokens[0];
+        let mut r = req(2, vec![8, 8], 3);
+        r.stop_token = Some(stop);
+        let out = e
+            .run_batch(Batch { requests: vec![r], bucket: 1 })
+            .unwrap();
+        assert_eq!(out[0].finish_reason, FinishReason::Stop);
+        assert_eq!(out[0].tokens, vec![stop]);
+    }
+
+    #[test]
+    fn step_before_begin_errors() {
+        let meta = ModelMeta::synthetic(64, "splitk", vec![1], 0);
+        let model = HostModel::with_plan(
+            &meta,
+            GemmPlan::fixed(crate::kernels::HostKernelConfig::splitk(2))).unwrap();
+        let mut b = HostModelBackend::new(model);
+        assert!(b.step(&[1], 0, true).is_err());
+    }
 }

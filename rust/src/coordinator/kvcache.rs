@@ -44,6 +44,82 @@ impl KvCacheSpec {
     }
 }
 
+/// Mutable host-side KV cache for the pure-Rust decode path, laid out
+/// exactly like the artifact tensor ([`KvCacheSpec::shape`]):
+/// `[layers, 2, b, heads, max_seq, head_dim]`, index 0 of the second
+/// axis holding keys and index 1 values. Keeping the artifact layout
+/// means the two backends stay interchangeable state-wise and the spec's
+/// sizing math is shared.
+#[derive(Debug, Clone)]
+pub struct HostKvCache {
+    spec: KvCacheSpec,
+    b: usize,
+    data: Vec<f32>,
+}
+
+impl HostKvCache {
+    /// Zeroed cache for a batch of `b` sequences.
+    pub fn new(spec: KvCacheSpec, b: usize) -> Self {
+        let data = vec![0.0; spec.elements(b)];
+        HostKvCache { spec, b, data }
+    }
+
+    /// Batch size this cache was allocated for.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// The layout spec.
+    pub fn spec(&self) -> &KvCacheSpec {
+        &self.spec
+    }
+
+    #[inline]
+    fn offset(&self, layer: usize, kv: usize, slot: usize, head: usize,
+              pos: usize) -> usize {
+        debug_assert!(layer < self.spec.n_layers);
+        debug_assert!(kv < 2);
+        debug_assert!(slot < self.b);
+        debug_assert!(head < self.spec.n_heads);
+        debug_assert!(pos < self.spec.max_seq);
+        (((((layer * 2 + kv) * self.b + slot) * self.spec.n_heads + head)
+          * self.spec.max_seq) + pos) * self.spec.head_dim
+    }
+
+    /// Store a key row (`head_dim` floats) at a position.
+    pub fn write_k(&mut self, layer: usize, slot: usize, head: usize,
+                   pos: usize, row: &[f32]) {
+        let o = self.offset(layer, 0, slot, head, pos);
+        self.data[o..o + self.spec.head_dim].copy_from_slice(row);
+    }
+
+    /// Store a value row (`head_dim` floats) at a position.
+    pub fn write_v(&mut self, layer: usize, slot: usize, head: usize,
+                   pos: usize, row: &[f32]) {
+        let o = self.offset(layer, 1, slot, head, pos);
+        self.data[o..o + self.spec.head_dim].copy_from_slice(row);
+    }
+
+    /// Key row at a position.
+    pub fn k_row(&self, layer: usize, slot: usize, head: usize,
+                 pos: usize) -> &[f32] {
+        let o = self.offset(layer, 0, slot, head, pos);
+        &self.data[o..o + self.spec.head_dim]
+    }
+
+    /// Value row at a position.
+    pub fn v_row(&self, layer: usize, slot: usize, head: usize,
+                 pos: usize) -> &[f32] {
+        let o = self.offset(layer, 1, slot, head, pos);
+        &self.data[o..o + self.spec.head_dim]
+    }
+
+    /// Snapshot as a [`HostTensor`] in the artifact shape.
+    pub fn to_tensor(&self) -> HostTensor {
+        HostTensor::f32(self.spec.shape(self.b), self.data.clone())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +152,44 @@ mod tests {
     fn bytes_scale_with_batch() {
         let spec = KvCacheSpec::from_model(&meta());
         assert_eq!(spec.bytes(16), 16 * spec.bytes(1));
+    }
+
+    #[test]
+    fn host_cache_roundtrips_rows() {
+        let spec = KvCacheSpec::from_model(&meta());
+        let hd = spec.head_dim;
+        let mut c = HostKvCache::new(spec, 2);
+        let krow: Vec<f32> = (0..hd).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..hd).map(|i| -(i as f32)).collect();
+        c.write_k(3, 1, 2, 7, &krow);
+        c.write_v(3, 1, 2, 7, &vrow);
+        assert_eq!(c.k_row(3, 1, 2, 7), krow.as_slice());
+        assert_eq!(c.v_row(3, 1, 2, 7), vrow.as_slice());
+        // Neighbors untouched.
+        assert!(c.k_row(3, 1, 2, 6).iter().all(|&x| x == 0.0));
+        assert!(c.v_row(3, 0, 2, 7).iter().all(|&x| x == 0.0));
+        assert!(c.k_row(2, 1, 2, 7).iter().all(|&x| x == 0.0));
+        assert_eq!(c.batch(), 2);
+    }
+
+    #[test]
+    fn host_cache_layout_matches_artifact_tensor() {
+        // The flat offset math must agree with the row-major layout of
+        // the artifact-shaped tensor [layers, 2, b, heads, max_seq, hd].
+        let spec = KvCacheSpec::from_model(&meta());
+        let (b, hd) = (2usize, spec.head_dim);
+        let (layer, kv, slot, head, pos) = (1usize, 1usize, 0usize, 3usize, 5usize);
+        let mut c = HostKvCache::new(spec.clone(), b);
+        c.write_v(layer, slot, head, pos, &vec![9.0; hd]);
+        let t = c.to_tensor();
+        assert_eq!(t.shape(), spec.shape(b).as_slice());
+        let strides = [2 * b * spec.n_heads * spec.max_seq * hd,
+                       b * spec.n_heads * spec.max_seq * hd,
+                       spec.n_heads * spec.max_seq * hd,
+                       spec.max_seq * hd,
+                       hd];
+        let flat = layer * strides[0] + kv * strides[1] + slot * strides[2]
+            + head * strides[3] + pos * strides[4];
+        assert_eq!(t.as_f32().unwrap()[flat], 9.0);
     }
 }

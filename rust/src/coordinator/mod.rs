@@ -3,8 +3,10 @@
 //! vLLM-router-shaped serving for the W4A16 quantized model: requests are
 //! validated ([`request`]), queued and grouped into the paper's m = 1..16
 //! batch buckets ([`batcher`]), and executed as batched prefill + decode
-//! steps against the AOT artifacts ([`engine`]), orchestrated across a
-//! scheduler thread and a PJRT-owning engine thread ([`router`]).
+//! steps through a pluggable [`DecodeBackend`] ([`engine`]) — the AOT
+//! artifacts when present, else the pure-Rust fused host model
+//! (`crate::model`) — orchestrated across a scheduler thread and a
+//! backend-owning engine thread ([`router`]).
 //!
 //! The batch bucket chosen by the batcher *is* the `m` of every fused
 //! W4A16 GEMM in the decode step — the coordinator is the direct consumer
@@ -17,8 +19,9 @@ mod request;
 mod router;
 
 pub use batcher::{Batch, DynamicBatcher};
-pub use engine::{argmax, Engine};
-pub use kvcache::KvCacheSpec;
+pub use engine::{argmax, ArtifactBackend, DecodeBackend, Engine,
+                 HostModelBackend};
+pub use kvcache::{HostKvCache, KvCacheSpec};
 pub use request::{
     FinishReason, GenerateRequest, GenerateResponse, RequestId, RequestLimits,
 };

@@ -1,35 +1,47 @@
 //! Router + scheduler: the public serving facade.
 //!
 //! Thread topology (the xla handles are not `Send`, so all PJRT state
-//! stays on the engine thread):
+//! stays on the engine thread; the host backend keeps its weights there
+//! too for symmetry):
 //!
 //! ```text
-//! callers ──submit()──> DynamicBatcher (mutex'd queue)
-//!                          │   scheduler thread: poll/window
+//! callers ──submit()──> DynamicBatcher (mutex'd queue + condvar)
+//!                          │   scheduler thread: deadline-driven
 //!                          ▼
 //!                      mpsc channel of Batch
-//!                          │   engine thread: owns PJRT + artifacts
+//!                          │   engine thread: owns the DecodeBackend
 //!                          ▼
 //!                      per-request response channels
 //! ```
+//!
+//! The backend is selected by [`ServeConfig::resolve_backend`]: the AOT
+//! artifacts when present, else the pure-Rust fused host model — so
+//! `serve` works end to end on a bare machine (DESIGN.md §7).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::config::ServeConfig;
+use crate::config::{DecodeBackendKind, ServeConfig};
 use crate::metrics::ServingMetrics;
-use crate::runtime::{ExecutableCache, Manifest, Runtime};
+use crate::model::HostModel;
+use crate::runtime::{ExecutableCache, Manifest, ModelMeta, Runtime};
 
 use super::batcher::{Batch, DynamicBatcher};
-use super::engine::Engine;
+use super::engine::{ArtifactBackend, DecodeBackend, Engine, HostModelBackend};
 use super::request::{GenerateRequest, GenerateResponse, RequestId, RequestLimits};
+
+/// Upper bound on one scheduler sleep: the thread wakes at the earliest
+/// batching deadline or after this cap, whichever comes first (and
+/// `submit`/`shutdown` wake it immediately via the condvar). Replaces
+/// the old fixed 200 µs busy-poll.
+const SCHED_IDLE_POLL: Duration = Duration::from_millis(5);
 
 /// Handle to a submitted request.
 pub struct Pending {
@@ -38,7 +50,8 @@ pub struct Pending {
 }
 
 impl Pending {
-    /// Block until the response arrives.
+    /// Block until the response arrives. Errors if the engine died
+    /// before producing one (the response sender is dropped).
     pub fn wait(self) -> Result<GenerateResponse> {
         self.rx
             .recv()
@@ -55,8 +68,13 @@ type Waiters = Mutex<HashMap<RequestId, SyncSender<GenerateResponse>>>;
 
 struct Shared {
     batcher: Mutex<DynamicBatcher>,
+    /// Wakes the scheduler on submit/shutdown (deadline-driven sleeps).
+    batcher_cv: Condvar,
     waiters: Waiters,
     shutdown: AtomicBool,
+    /// Set (before the waiters map is swept) when the engine loop exits
+    /// for any reason; `submit` refuses new work once it is up.
+    engine_dead: AtomicBool,
     next_id: AtomicU64,
 }
 
@@ -70,13 +88,25 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the serving stack: load the manifest, spawn the engine
-    /// thread (which compiles the decode artifacts), spawn the scheduler.
-    /// Blocks until the engine has warmed every decode bucket.
+    /// Start the serving stack: resolve the backend, spawn the engine
+    /// thread (which builds it), spawn the scheduler. Blocks until the
+    /// engine has warmed up.
     pub fn start(cfg: &ServeConfig) -> Result<Self> {
         cfg.validate()?;
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let model = manifest.model.clone();
+        let kind = cfg.resolve_backend();
+        if kind == DecodeBackendKind::Host && cfg.backend != "host" {
+            log::warn!(
+                "no manifest at {}; falling back to the pure-Rust host \
+                 decode backend",
+                cfg.artifacts_dir.display());
+        }
+        let model: ModelMeta = match kind {
+            DecodeBackendKind::Artifacts => {
+                Manifest::load(&cfg.artifacts_dir)?.model
+            }
+            DecodeBackendKind::Host => ModelMeta::synthetic(
+                cfg.max_seq, &cfg.variant, cfg.batch_buckets.clone(), 0),
+        };
         let limits = RequestLimits {
             max_prompt_len: model
                 .max_seq
@@ -92,12 +122,15 @@ impl Coordinator {
                 Duration::from_millis(cfg.batch_window_ms),
                 cfg.queue_depth,
             )),
+            batcher_cv: Condvar::new(),
             waiters: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
+            engine_dead: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
         });
 
-        // Engine thread: all PJRT state is created *on* this thread.
+        // Engine thread: all backend state is created *on* this thread
+        // (PJRT handles are not Send; the host model just rides along).
         let (batch_tx, batch_rx) = sync_channel::<Batch>(4);
         let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(1);
         let engine_shared = shared.clone();
@@ -106,30 +139,51 @@ impl Coordinator {
         let variant = cfg.variant.clone();
         let warm_start = cfg.warm_start;
         let self_check = cfg.self_check;
+        let host_meta = model.clone();
         let engine = std::thread::Builder::new()
             .name("engine".into())
             .spawn(move || -> Result<()> {
                 let init = (|| -> Result<Engine> {
-                    let runtime = Runtime::cpu()?;
-                    let manifest = Manifest::load(&artifacts_dir)?;
-                    let mut cache = ExecutableCache::new(runtime, manifest);
                     if self_check {
                         // Verify the fused host GEMM backend against the
                         // naive oracle before taking traffic.
-                        let max_err =
-                            Engine::verify_host_gemm(&cache.manifest().model)?;
+                        let max_err = Engine::verify_host_gemm(&host_meta)?;
                         log::info!(
                             "fused host GEMM self-check ok \
                              (max |err| {max_err:.2e} vs naive oracle)");
                     }
-                    let warmed = if warm_start {
-                        cache.warm_decode(&variant)?
-                    } else {
-                        0
+                    let backend: Box<dyn DecodeBackend> = match kind {
+                        DecodeBackendKind::Artifacts => {
+                            let runtime = Runtime::cpu()?;
+                            let manifest = Manifest::load(&artifacts_dir)?;
+                            let mut cache =
+                                ExecutableCache::new(runtime, manifest);
+                            let warmed = if warm_start {
+                                cache.warm_decode(&variant)?
+                            } else {
+                                0
+                            };
+                            log::info!(
+                                "artifact engine ready \
+                                 ({warmed} buckets compiled)");
+                            let _ = ready_tx.send(Ok(warmed));
+                            Box::new(ArtifactBackend::new(cache, variant))
+                        }
+                        DecodeBackendKind::Host => {
+                            let mut model = HostModel::new(&host_meta)?;
+                            let warmed = if warm_start {
+                                model.warm(&host_meta.batch_buckets)
+                            } else {
+                                0
+                            };
+                            log::info!(
+                                "host engine ready ({warmed} bucket-shapes \
+                                 planned, no artifacts needed)");
+                            let _ = ready_tx.send(Ok(warmed));
+                            Box::new(HostModelBackend::new(model))
+                        }
                     };
-                    log::info!("engine ready ({warmed} buckets compiled)");
-                    let _ = ready_tx.send(Ok(warmed));
-                    Ok(Engine::new(cache, variant, engine_metrics))
+                    Ok(Engine::new(backend, engine_metrics))
                 })();
                 let mut engine = match init {
                     Ok(e) => e,
@@ -138,27 +192,30 @@ impl Coordinator {
                         return Err(e);
                     }
                 };
-                while let Ok(batch) = batch_rx.recv() {
-                    match engine.run_batch(batch) {
-                        Ok(responses) => {
-                            let mut waiters =
-                                engine_shared.waiters.lock().unwrap();
-                            for resp in responses {
-                                if let Some(tx) = waiters.remove(&resp.id) {
-                                    let _ = tx.send(resp);
-                                }
+                let run = (|| -> Result<()> {
+                    while let Ok(batch) = batch_rx.recv() {
+                        let responses = engine.run_batch(batch)?;
+                        let mut waiters =
+                            engine_shared.waiters.lock().unwrap();
+                        for resp in responses {
+                            if let Some(tx) = waiters.remove(&resp.id) {
+                                let _ = tx.send(resp);
                             }
                         }
-                        Err(e) => {
-                            // Fail every outstanding waiter (dropping the
-                            // senders unblocks their recv with an error)
-                            // rather than leaving callers hanging.
-                            engine_shared.waiters.lock().unwrap().clear();
-                            return Err(e);
-                        }
                     }
-                }
-                Ok(())
+                    Ok(())
+                })();
+                // The engine loop is over (graceful drain or error): no
+                // response will ever be produced again. Mark the engine
+                // dead *before* sweeping the waiters map, flip the
+                // shutdown flag so the scheduler exits, and drop every
+                // stranded response sender — recv() then errors instead
+                // of blocking forever (the serving-hang fix).
+                engine_shared.engine_dead.store(true, Ordering::SeqCst);
+                engine_shared.shutdown.store(true, Ordering::SeqCst);
+                engine_shared.waiters.lock().unwrap().clear();
+                engine_shared.batcher_cv.notify_all();
+                run
             })?;
 
         // Wait for warm-up (or propagate the engine's startup error).
@@ -173,7 +230,8 @@ impl Coordinator {
             }
         }
 
-        // Scheduler thread: forms batches per the window policy.
+        // Scheduler thread: forms batches per the window policy,
+        // sleeping until the earliest deadline instead of busy-polling.
         let sched_shared = shared.clone();
         let scheduler = std::thread::Builder::new()
             .name("scheduler".into())
@@ -192,18 +250,20 @@ impl Coordinator {
                     return;
                 }
                 let now = Instant::now();
-                let batch = {
-                    let mut b = sched_shared.batcher.lock().unwrap();
-                    b.poll(now)
-                };
-                match batch {
-                    Some(batch) => {
-                        if batch_tx.send(batch).is_err() {
-                            return;
-                        }
+                let mut b = sched_shared.batcher.lock().unwrap();
+                if let Some(batch) = b.poll(now) {
+                    drop(b);
+                    if batch_tx.send(batch).is_err() {
+                        return;
                     }
-                    None => std::thread::sleep(Duration::from_micros(200)),
+                    continue;
                 }
+                // Nothing dispatchable: sleep until the earliest batch
+                // deadline (capped), woken early by submit()/shutdown.
+                let wait = b
+                    .next_deadline(now)
+                    .map_or(SCHED_IDLE_POLL, |d| d.min(SCHED_IDLE_POLL));
+                let _unused = sched_shared.batcher_cv.wait_timeout(b, wait);
             })?;
 
         Ok(Coordinator {
@@ -216,14 +276,25 @@ impl Coordinator {
     }
 
     /// Validate and enqueue a request; returns a waitable handle.
+    /// Errors immediately once the engine thread has exited.
     pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
                   stop_token: Option<i32>) -> Result<Pending> {
+        ensure!(!self.shared.engine_dead.load(Ordering::SeqCst),
+                "engine is down; coordinator no longer accepts requests");
         self.limits
             .validate(&prompt, max_new_tokens)
             .map_err(|e| anyhow!("invalid request: {e}"))?;
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = sync_channel(1);
         self.shared.waiters.lock().unwrap().insert(id, tx);
+        // Re-check after publishing the waiter: the engine marks itself
+        // dead *before* its final waiter sweep, so either that sweep
+        // drops our sender (recv errors) or we observe the flag here and
+        // withdraw — a waiter can no longer be stranded forever.
+        if self.shared.engine_dead.load(Ordering::SeqCst) {
+            self.shared.waiters.lock().unwrap().remove(&id);
+            bail!("engine is down; coordinator no longer accepts requests");
+        }
         let req = GenerateRequest {
             id,
             prompt,
@@ -236,6 +307,7 @@ impl Coordinator {
             self.shared.waiters.lock().unwrap().remove(&id);
             return Err(anyhow!("queue full (back-pressure), retry later"));
         }
+        self.shared.batcher_cv.notify_one();
         Ok(Pending { id, rx })
     }
 
@@ -249,6 +321,14 @@ impl Coordinator {
         self.shared.batcher.lock().unwrap().len()
     }
 
+    /// Scheduler wakeups that found requests queued but nothing
+    /// dispatchable — the busy-wait diagnostic the scheduler-sleep
+    /// regression test pins (deadline-driven sleeps keep this near the
+    /// number of batching windows, not `window / 200 µs`).
+    pub fn scheduler_nonempty_polls(&self) -> u64 {
+        self.shared.batcher.lock().unwrap().nonempty_polls()
+    }
+
     /// Request validation limits in force.
     pub fn limits(&self) -> &RequestLimits {
         &self.limits
@@ -256,7 +336,8 @@ impl Coordinator {
 
     /// Drain outstanding work and stop all threads.
     pub fn shutdown(mut self) -> Result<()> {
-        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.batcher_cv.notify_all();
         if let Some(h) = self.scheduler.take() {
             let _ = h.join();
         }
@@ -272,7 +353,8 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.batcher_cv.notify_all();
         if let Some(h) = self.scheduler.take() {
             let _ = h.join();
         }

@@ -19,6 +19,17 @@ use super::HostKernelConfig;
 /// bit) without ever materializing the dense weight matrix.
 pub fn fused_gemm_dp(a: &MatF32, q: &QuantizedLinear,
                      cfg: &HostKernelConfig) -> MatF32 {
+    let mut out = MatF32::zeros(a.rows, q.n);
+    fused_gemm_dp_into(a, q, cfg, &mut out);
+    out
+}
+
+/// [`fused_gemm_dp`] writing into a caller-owned output (resized, not
+/// accumulated) — keeps `host_gemm_into`'s allocation-free contract
+/// when an autotuned plan lands on split 1. Bit-identical to the
+/// allocating wrapper.
+pub fn fused_gemm_dp_into(a: &MatF32, q: &QuantizedLinear,
+                          cfg: &HostKernelConfig, out: &mut MatF32) {
     cfg.check_shapes(a, q);
     let (m, n) = (a.rows, q.n);
     let kp_total = q.k / PACK_FACTOR;
@@ -26,9 +37,13 @@ pub fn fused_gemm_dp(a: &MatF32, q: &QuantizedLinear,
     let bn = (cfg.tiles.block_n as usize).max(1);
     let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
 
-    let mut c = MatF32::zeros(m, n);
+    if out.rows != m || out.cols != n {
+        *out = MatF32::zeros(m, n);
+    } else {
+        out.data.fill(0.0);
+    }
     if m == 0 || n == 0 || kp_total == 0 {
-        return c;
+        return;
     }
 
     // Output-tile grid (the DP launch geometry).
@@ -50,9 +65,9 @@ pub fn fused_gemm_dp(a: &MatF32, q: &QuantizedLinear,
         // Single worker: accumulate straight into C, tile by tile.
         for &(r0, r1, c0, c1) in &tiles {
             fused_tile(a, q, r0, r1, c0, c1, 0, kp_total, kp_chunk,
-                       &mut c.data[r0 * n + c0..], n);
+                       &mut out.data[r0 * n + c0..], n);
         }
-        return c;
+        return;
     }
 
     // Multi-worker: private tile buffers, stitched below. The copy is
@@ -89,11 +104,10 @@ pub fn fused_gemm_dp(a: &MatF32, q: &QuantizedLinear,
             let bw = c1 - c0;
             for (ri, row) in buf.chunks_exact(bw).enumerate() {
                 let dst = (r0 + ri) * n + c0;
-                c.data[dst..dst + bw].copy_from_slice(row);
+                out.data[dst..dst + bw].copy_from_slice(row);
             }
         }
     }
-    c
 }
 
 #[cfg(test)]

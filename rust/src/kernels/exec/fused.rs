@@ -90,13 +90,14 @@ pub(crate) fn fused_tile(
                 }
                 let kk = kp * PACK_FACTOR + i;
                 for r in r0..r1 {
+                    // Unconditional rank-1 update: no data-dependent
+                    // branch in the hot loop, so the compiler can keep
+                    // the whole span vectorized. Numerically identical
+                    // to skipping `av == 0.0` rows (the naive oracle
+                    // still does): `0 * w` is `±0.0`, accumulators
+                    // never hold `-0.0` (IEEE sums that cancel round to
+                    // `+0.0`), and `acc + ±0.0 == acc` bit for bit.
                     let av = a.data[r * k + kk];
-                    if av == 0.0 {
-                        // Same skip the naive oracle takes; a zero
-                        // activation contributes exactly nothing either
-                        // way, so determinism is unaffected.
-                        continue;
-                    }
                     let row_off = (r - r0) * out_stride;
                     let orow = &mut out[row_off..row_off + bw];
                     for (o, &w) in orow.iter_mut().zip(wrow.iter()) {
@@ -168,6 +169,25 @@ mod tests {
             c0 = c1;
         }
         assert!(out.max_abs_diff(&want) <= 1e-5);
+    }
+
+    #[test]
+    fn zero_activations_match_skipping_oracle_bitwise() {
+        // The branch-free inner loop adds `0 * w` where the naive oracle
+        // skips the row entirely; both must produce identical bits (the
+        // accumulator can never hold -0.0, so `acc + ±0.0 == acc`).
+        let mut rng = Rng::seed_from(6);
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.1));
+        let q = quantize_weight(&w, 32);
+        let a = MatF32::new(
+            3, 64,
+            (0..3 * 64)
+                .map(|i| if i % 3 == 0 { 0.0 } else { rng.uniform_f32(-1.0, 1.0) })
+                .collect());
+        let want = gemm_f32(&a, &dequantize(&q)); // gemm_f32 skips zeros
+        let mut out = MatF32::zeros(3, 16);
+        fused_tile(&a, &q, 0, 3, 0, 16, 0, 64 / 8, 1000, &mut out.data, 16);
+        assert_eq!(out.data, want.data);
     }
 
     #[test]

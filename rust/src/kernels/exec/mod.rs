@@ -25,8 +25,8 @@ mod dp;
 mod fused;
 mod splitk;
 
-pub use dp::fused_gemm_dp;
-pub use splitk::fused_gemm_splitk;
+pub use dp::{fused_gemm_dp, fused_gemm_dp_into};
+pub use splitk::{fused_gemm_splitk, fused_gemm_splitk_into, SplitKScratch};
 
 use crate::gpusim::Decomposition;
 use crate::quant::{quantize_weight, w4a16_gemm_ref, MatF32, QuantizedLinear,
@@ -109,10 +109,41 @@ impl HostKernelConfig {
 /// Dispatch on the configured decomposition.
 pub fn host_gemm(a: &MatF32, q: &QuantizedLinear,
                  cfg: &HostKernelConfig) -> MatF32 {
+    let mut out = MatF32::zeros(a.rows, q.n);
+    host_gemm_into(a, q, cfg, &mut SplitKScratch::new(), &mut out);
+    out
+}
+
+/// [`host_gemm`] writing into a caller-owned output, reusing the
+/// caller's [`SplitKScratch`] for slice partials. This is the decode
+/// path's per-worker entry point: a step issues six-plus skinny GEMMs
+/// back to back, and one scratch amortizes every SplitK partial
+/// allocation across them. Bit-identical to [`host_gemm`].
+pub fn host_gemm_into(a: &MatF32, q: &QuantizedLinear,
+                      cfg: &HostKernelConfig,
+                      scratch: &mut SplitKScratch, out: &mut MatF32) {
     match cfg.decomposition() {
-        Decomposition::DataParallel => fused_gemm_dp(a, q, cfg),
-        Decomposition::SplitK { .. } => fused_gemm_splitk(a, q, cfg),
+        Decomposition::DataParallel => fused_gemm_dp_into(a, q, cfg, out),
+        Decomposition::SplitK { .. } => {
+            fused_gemm_splitk_into(a, q, cfg, scratch, out)
+        }
     }
+}
+
+/// Batched multi-projection entry point: run one activation through
+/// several same-shaped quantized layers (the decode step's fused
+/// q/k/v projections), reusing a single scratch across all of them.
+/// Equivalent to calling [`host_gemm`] per layer, bit for bit.
+pub fn host_gemm_multi(a: &MatF32, qs: &[&QuantizedLinear],
+                       cfg: &HostKernelConfig,
+                       scratch: &mut SplitKScratch) -> Vec<MatF32> {
+    qs.iter()
+        .map(|q| {
+            let mut out = MatF32::zeros(a.rows, q.n);
+            host_gemm_into(a, q, cfg, scratch, &mut out);
+            out
+        })
+        .collect()
 }
 
 /// Startup self-check: run both fused variants on a random quantized
@@ -178,6 +209,47 @@ mod tests {
         let want = w4a16_gemm_ref(&a, &q);
         assert!(via_dp.max_abs_diff(&want) <= 1e-4);
         assert!(via_sk.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn multi_projection_matches_per_call_dispatch() {
+        // host_gemm_multi with one shared scratch == independent
+        // host_gemm calls, bit for bit, for both decompositions.
+        let mut rng = Rng::seed_from(33);
+        let k = 128;
+        let qs: Vec<QuantizedLinear> = (0..3)
+            .map(|_| {
+                let w = MatF32::new(k, 32, rng.normal_vec(k * 32, 0.1));
+                quantize_weight(&w, 32)
+            })
+            .collect();
+        let a = MatF32::new(
+            2, k, (0..2 * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let refs: Vec<&QuantizedLinear> = qs.iter().collect();
+        for cfg in [HostKernelConfig::dp(), HostKernelConfig::splitk(4)] {
+            let mut scratch = SplitKScratch::new();
+            let got = host_gemm_multi(&a, &refs, &cfg, &mut scratch);
+            assert_eq!(got.len(), 3);
+            for (out, q) in got.iter().zip(&qs) {
+                let want = host_gemm(&a, q, &cfg);
+                assert_eq!(out.data, want.data);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_into_resizes_output() {
+        let mut rng = Rng::seed_from(34);
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.1));
+        let q = quantize_weight(&w, 32);
+        let a = MatF32::new(1, 64,
+                            (0..64).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let mut out = MatF32::zeros(7, 3); // wrong shape on purpose
+        let mut scratch = SplitKScratch::new();
+        host_gemm_into(&a, &q, &HostKernelConfig::splitk(2), &mut scratch,
+                       &mut out);
+        assert_eq!((out.rows, out.cols), (1, 16));
+        assert!(out.max_abs_diff(&w4a16_gemm_ref(&a, &q)) <= 1e-4);
     }
 
     #[test]

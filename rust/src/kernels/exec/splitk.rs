@@ -17,6 +17,27 @@ use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 use super::fused::fused_tile;
 use super::HostKernelConfig;
 
+/// Reusable slice-partial buffers for [`fused_gemm_splitk_into`].
+///
+/// The SplitK executor needs `split_k` private `m × n` partial matrices
+/// per call; a decode step issues several skinny GEMMs back to back, so
+/// callers on that path keep one scratch alive and amortize the
+/// allocations (the buffers are zero-filled, never freshly allocated,
+/// when shapes repeat). Reuse cannot change output bits: partials start
+/// at exactly `0.0` either way and the accumulation/reduction order is
+/// unchanged.
+#[derive(Debug, Default)]
+pub struct SplitKScratch {
+    partials: Vec<MatF32>,
+}
+
+impl SplitKScratch {
+    /// Empty scratch; buffers are sized lazily on first use.
+    pub fn new() -> Self {
+        SplitKScratch { partials: Vec::new() }
+    }
+}
+
 /// Fused W4A16 GEMM, SplitK decomposition: `C = A @ dequant(Q)`.
 ///
 /// Slice boundaries sit on packed-row (8-element) granularity, so any
@@ -28,6 +49,19 @@ use super::HostKernelConfig;
 /// depend only on `split_k`, and the reduction tree is fixed.
 pub fn fused_gemm_splitk(a: &MatF32, q: &QuantizedLinear,
                          cfg: &HostKernelConfig) -> MatF32 {
+    let mut out = MatF32::zeros(a.rows, q.n);
+    fused_gemm_splitk_into(a, q, cfg, &mut SplitKScratch::new(), &mut out);
+    out
+}
+
+/// [`fused_gemm_splitk`] writing into a caller-owned output and reusing
+/// caller-owned slice partials — the allocation-free entry point the
+/// decode path's per-worker scratch rides on. `out` is resized (not
+/// accumulated) to `m × n`. Bit-identical to the allocating wrapper.
+pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
+                              cfg: &HostKernelConfig,
+                              scratch: &mut SplitKScratch,
+                              out: &mut MatF32) {
     cfg.check_shapes(a, q);
     let (m, n) = (a.rows, q.n);
     let kp_total = q.k / PACK_FACTOR;
@@ -35,8 +69,13 @@ pub fn fused_gemm_splitk(a: &MatF32, q: &QuantizedLinear,
     let bn = (cfg.tiles.block_n as usize).max(1);
     let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
 
+    if out.rows != m || out.cols != n {
+        *out = MatF32::zeros(m, n);
+    } else {
+        out.data.fill(0.0);
+    }
     if m == 0 || n == 0 || kp_total == 0 {
-        return MatF32::zeros(m, n);
+        return;
     }
 
     // Column span of one accumulation pass inside a worker. In the
@@ -49,8 +88,19 @@ pub fn fused_gemm_splitk(a: &MatF32, q: &QuantizedLinear,
     let slice_bounds: Vec<(usize, usize)> = (0..split)
         .map(|s| (s * kp_total / split, (s + 1) * kp_total / split))
         .collect();
-    let mut partials: Vec<MatF32> =
-        (0..split).map(|_| MatF32::zeros(m, n)).collect();
+    // Size/zero the reusable partials for this call's (split, m, n).
+    scratch.partials.truncate(split);
+    for p in scratch.partials.iter_mut() {
+        if p.rows != m || p.cols != n {
+            *p = MatF32::zeros(m, n);
+        } else {
+            p.data.fill(0.0);
+        }
+    }
+    while scratch.partials.len() < split {
+        scratch.partials.push(MatF32::zeros(m, n));
+    }
+    let partials: &mut [MatF32] = &mut scratch.partials[..split];
 
     // Assign contiguous, balanced slice ranges to workers up front, so
     // every reference handed to a scoped thread is created out here.
@@ -58,7 +108,7 @@ pub fn fused_gemm_splitk(a: &MatF32, q: &QuantizedLinear,
     let mut assignments: Vec<(&mut [MatF32], &[(usize, usize)])> =
         Vec::with_capacity(workers);
     {
-        let mut rest: &mut [MatF32] = &mut partials;
+        let mut rest: &mut [MatF32] = &mut partials[..];
         let mut next = 0usize;
         for w in 0..workers {
             let count = (split - next) / (workers - w);
@@ -104,7 +154,7 @@ pub fn fused_gemm_splitk(a: &MatF32, q: &QuantizedLinear,
         }
         gap *= 2;
     }
-    partials.into_iter().next().expect("split >= 1")
+    out.data.copy_from_slice(&partials[0].data);
 }
 
 #[cfg(test)]
@@ -172,6 +222,28 @@ mod tests {
         let want = w4a16_gemm_ref(&a, &q);
         let got = fused_gemm_splitk(&a, &q, &HostKernelConfig::splitk(16));
         assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // One scratch carried across calls — including shape and split
+        // changes between calls — must reproduce the fresh-scratch
+        // result bit for bit (the decode path reuses scratch per step).
+        let mut scratch = SplitKScratch::new();
+        for (seed, m, k, n, group, split) in [
+            (40u64, 1usize, 256usize, 64usize, 64usize, 8u32),
+            (41, 4, 128, 32, 32, 4),
+            (42, 1, 256, 64, 64, 8),
+            (43, 2, 64, 16, 16, 2),
+        ] {
+            let (a, q) = case(m, k, n, group, seed);
+            let cfg = HostKernelConfig::splitk(split).with_threads(2);
+            let fresh = fused_gemm_splitk(&a, &q, &cfg);
+            let mut out = MatF32::zeros(0, 0);
+            fused_gemm_splitk_into(&a, &q, &cfg, &mut scratch, &mut out);
+            assert_eq!(fresh.data, out.data, "seed={seed}");
+            assert_eq!((out.rows, out.cols), (m, n));
+        }
     }
 
     #[test]

@@ -13,9 +13,11 @@
 //!   PJRT runtime that loads and executes the artifacts ([`runtime`]), the
 //!   GPU execution simulator that reproduces the paper's A100/H100
 //!   evaluation ([`gpusim`]), kernel launch descriptors, the autotuner,
-//!   and the executable fused W4A16 CPU backend ([`kernels`], with
+//!   the executable fused W4A16 CPU backend ([`kernels`], with
 //!   [`kernels::exec`] running both decompositions for real on the
-//!   host), and the table/figure regeneration harness ([`tables`]).
+//!   host), the pure-Rust decode path serving that backend end to end
+//!   with no artifacts ([`model`]), and the table/figure regeneration
+//!   harness ([`tables`]).
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python entry point; the binary is self-contained afterwards.
@@ -28,6 +30,7 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod kernels;
 pub mod metrics;
+pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod tables;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! splitk-w4a16 serve    [--artifacts DIR] [--config FILE.json]
+//!                       [--backend artifacts|host]
 //!                       [--requests N] [--max-new N]
 //! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
 //!                       [--m M] [--nk NK] [--iters N]
@@ -46,18 +47,40 @@ fn main() -> Result<()> {
     }
 }
 
+/// Resolve the serving token limit: an explicit `--max-new` overrides
+/// the config default outright (it can *lower* it); no flag keeps the
+/// config value. The old `config.max(cli)` merge made the flag unable
+/// to reduce the limit below the default.
+fn resolve_max_new(config_default: usize, cli: Option<usize>) -> usize {
+    cli.unwrap_or(config_default)
+}
+
 fn serve(args: &Args) -> Result<()> {
     let mut cfg = match args.options.get("config") {
         Some(p) => ServeConfig::from_json_file(&PathBuf::from(p))?,
         None => ServeConfig::default(),
     };
-    cfg.artifacts_dir = PathBuf::from(args.opt_str("artifacts", "artifacts"));
+    // CLI flags override the config file only when actually given.
+    if let Some(dir) = args.options.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(backend) = args.options.get("backend") {
+        cfg.backend = backend.clone();
+    }
     let requests: usize = args.opt_num("requests", 32)?;
-    let max_new: usize = args.opt_num("max-new", 8)?;
-    cfg.max_new_tokens = cfg.max_new_tokens.max(max_new);
+    let cli_max_new: Option<usize> = match args.options.get("max-new") {
+        Some(_) => Some(args.opt_num("max-new", 0)?),
+        None => None,
+    };
+    cfg.max_new_tokens = resolve_max_new(cfg.max_new_tokens, cli_max_new);
+    // Per-request budget: the explicit flag, else a small default capped
+    // by the serving limit.
+    let max_new = cli_max_new.unwrap_or_else(|| cfg.max_new_tokens.min(8));
 
+    let backend = cfg.resolve_backend();
     let coord = Coordinator::start(&cfg)?;
-    println!("coordinator up; issuing {requests} synthetic requests");
+    println!("coordinator up ({backend:?} backend); issuing {requests} \
+              synthetic requests");
 
     let mut rng = Rng::seed_from(0);
     let mut pending = Vec::new();
@@ -310,4 +333,27 @@ fn autotune(args: &Args) -> Result<()> {
         println!("    split_k={sk:>2}: {us:>8.2} us");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::resolve_max_new;
+
+    #[test]
+    fn explicit_max_new_lowers_the_limit() {
+        // Regression: `serve --max-new 2` with a config default of 32
+        // must serve at most 2 tokens. The pre-fix max-merge
+        // (`cfg.max(cli)`) kept 32 and made the flag a no-op downward.
+        assert_eq!(resolve_max_new(32, Some(2)), 2);
+    }
+
+    #[test]
+    fn explicit_max_new_can_raise_the_limit() {
+        assert_eq!(resolve_max_new(32, Some(64)), 64);
+    }
+
+    #[test]
+    fn absent_flag_keeps_config_default() {
+        assert_eq!(resolve_max_new(32, None), 32);
+    }
 }

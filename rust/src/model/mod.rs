@@ -1,0 +1,343 @@
+//! S14 — the pure-Rust decode path (DESIGN.md §7).
+//!
+//! A tiny llama-style decoder whose **every projection runs the fused
+//! W4A16 backend** (`kernels::exec::host_gemm` and friends): seeded
+//! quantized weights ([`HostModelWeights`]), embedding lookup, RMSNorm,
+//! rotary multi-head attention over the artifact-shaped KV cache
+//! ([`HostKvCache`]), and a SiLU MLP ([`ops`]). This is what lets
+//! `serve` run end to end on a bare machine — no PJRT, no artifact
+//! files — while exercising the paper's kernel in its native habitat:
+//! the batcher's bucket choice becomes the literal `m` of every skinny
+//! GEMM in the decode step.
+//!
+//! Per-shape kernel configs come from the wall-clock autotuner
+//! ([`GemmPlan`] caches one [`HostKernelConfig`] per `(m, n, k)` via
+//! [`autotune_split_k_host`]), and all SplitK slice partials ride one
+//! reused [`SplitKScratch`] per model. Outputs are bit-stable across
+//! worker-thread counts for a fixed plan, and left-padded batched decode
+//! is bit-identical to solo decode (relative-position RoPE + start
+//! masking; see `rust/tests/host_model.rs`).
+
+mod ops;
+mod weights;
+
+pub use ops::{add_in_place, rms_norm, rope_in_place, silu_in_place,
+              softmax_in_place};
+pub use weights::{HostModelWeights, LayerWeights, ProjectionGemm};
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::{HostKvCache, KvCacheSpec};
+use crate::kernels::{autotune_split_k_host, host_gemm_into, host_gemm_multi,
+                     HostKernelConfig, SplitKScratch};
+use crate::quant::{MatF32, QuantizedLinear};
+use crate::runtime::ModelMeta;
+
+/// Per-shape kernel-config selection for the decode path's GEMMs.
+#[derive(Debug, Clone)]
+enum PlanMode {
+    /// Measure each new `(m, n, k)` once with [`autotune_split_k_host`]
+    /// and cache the winner (the serving default).
+    Autotune { threads: usize },
+    /// One pinned config for every shape — what the bit-level tests use
+    /// (autotune picks by wall clock, so its split choice may vary run
+    /// to run; a fixed config nails the reduction order down).
+    Fixed(HostKernelConfig),
+}
+
+/// Cache of the best [`HostKernelConfig`] per GEMM shape, keyed by
+/// `(m, n, k)` — the engine-side half of the ROADMAP item "cache best
+/// configs per shape".
+#[derive(Debug, Clone)]
+pub struct GemmPlan {
+    mode: PlanMode,
+    cache: HashMap<(usize, usize, usize), HostKernelConfig>,
+}
+
+impl GemmPlan {
+    /// Autotune each new shape on first use (`threads` = worker budget,
+    /// 0 = one per core).
+    pub fn autotuned(threads: usize) -> Self {
+        GemmPlan { mode: PlanMode::Autotune { threads }, cache: HashMap::new() }
+    }
+
+    /// Pin one config for every shape (bit-level reproducibility).
+    pub fn fixed(cfg: HostKernelConfig) -> Self {
+        GemmPlan { mode: PlanMode::Fixed(cfg), cache: HashMap::new() }
+    }
+
+    /// Config for this activation/layer pair (tuning it first if new).
+    pub fn config_for(&mut self, a: &MatF32, q: &QuantizedLinear)
+                      -> HostKernelConfig {
+        match self.mode {
+            PlanMode::Fixed(cfg) => cfg,
+            PlanMode::Autotune { threads } => {
+                *self.cache.entry((a.rows, q.n, q.k)).or_insert_with(|| {
+                    let tiles = HostKernelConfig::host_tiles();
+                    let r = autotune_split_k_host(a, q, &tiles, threads);
+                    log::debug!(
+                        "gemm plan m={} n={} k={}: split_k={} ({:.1} us)",
+                        a.rows, q.n, q.k, r.best_split_k, r.best_us);
+                    HostKernelConfig { tiles, split_k: r.best_split_k, threads }
+                })
+            }
+        }
+    }
+
+    /// Shapes planned so far.
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// True if no shape has been planned yet.
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}
+
+/// The serving-side [`ProjectionGemm`]: every projection dispatches
+/// through `kernels::exec` with the planned per-shape config, reusing
+/// one SplitK scratch across all projections of a step.
+struct FusedDispatch<'a> {
+    plan: &'a mut GemmPlan,
+    scratch: &'a mut SplitKScratch,
+}
+
+impl ProjectionGemm for FusedDispatch<'_> {
+    fn gemm(&mut self, a: &MatF32, q: &QuantizedLinear) -> MatF32 {
+        let cfg = self.plan.config_for(a, q);
+        let mut out = MatF32::zeros(a.rows, q.n);
+        host_gemm_into(a, q, &cfg, self.scratch, &mut out);
+        out
+    }
+
+    fn gemm_multi(&mut self, a: &MatF32, qs: &[&QuantizedLinear])
+                  -> Vec<MatF32> {
+        debug_assert!(qs.windows(2).all(|w| w[0].n == w[1].n
+                                        && w[0].k == w[1].k),
+                      "gemm_multi layers must share a shape");
+        let cfg = self.plan.config_for(a, qs[0]);
+        host_gemm_multi(a, qs, &cfg, self.scratch)
+    }
+}
+
+/// Mutable per-batch decode state: the KV cache plus each slot's
+/// left-padding start offset.
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    pub cache: HostKvCache,
+    pub starts: Vec<i32>,
+}
+
+/// The executable host model: weights + per-shape GEMM plan + scratch.
+pub struct HostModel {
+    weights: HostModelWeights,
+    plan: GemmPlan,
+    scratch: SplitKScratch,
+}
+
+impl HostModel {
+    /// Generate the model for `meta` with autotuned per-shape configs
+    /// (0 = one worker per core).
+    pub fn new(meta: &ModelMeta) -> Result<Self> {
+        Self::with_plan(meta, GemmPlan::autotuned(0))
+    }
+
+    /// Generate the model with an explicit GEMM plan.
+    pub fn with_plan(meta: &ModelMeta, plan: GemmPlan) -> Result<Self> {
+        Ok(HostModel {
+            weights: HostModelWeights::generate(meta)?,
+            plan,
+            scratch: SplitKScratch::new(),
+        })
+    }
+
+    /// Model metadata.
+    pub fn meta(&self) -> &ModelMeta {
+        &self.weights.meta
+    }
+
+    /// The underlying weights (oracle tests dequantize these).
+    pub fn weights(&self) -> &HostModelWeights {
+        &self.weights
+    }
+
+    /// Fresh decode state for a batch of `starts.len()` slots.
+    pub fn begin(&self, starts: &[i32]) -> DecodeState {
+        let spec = KvCacheSpec::from_model(&self.weights.meta);
+        DecodeState {
+            cache: HostKvCache::new(spec, starts.len()),
+            starts: starts.to_vec(),
+        }
+    }
+
+    /// Run one decode position through every fused projection; returns
+    /// logits as row-major `[b * vocab]`, or an empty vec when
+    /// `need_logits` is false (prefill positions whose logits are
+    /// discarded skip the LM-head GEMM; the KV cache still updates).
+    pub fn decode_step(&mut self, state: &mut DecodeState, tokens: &[i32],
+                       pos: usize, need_logits: bool) -> Result<Vec<f32>> {
+        ensure!(tokens.len() == state.cache.batch(),
+                "decode_step: {} tokens for a batch-{} state",
+                tokens.len(), state.cache.batch());
+        ensure!(pos < self.weights.meta.max_seq,
+                "decode_step: pos {pos} beyond max_seq {}",
+                self.weights.meta.max_seq);
+        let vocab = self.weights.meta.vocab as i32;
+        ensure!(tokens.iter().all(|&t| t >= 0 && t < vocab),
+                "decode_step: token out of vocab range 0..{vocab}");
+        let HostModel { weights, plan, scratch } = self;
+        let mut dispatch = FusedDispatch { plan, scratch };
+        Ok(weights.forward_with(&mut state.cache, tokens, pos,
+                                &state.starts, need_logits, &mut dispatch))
+    }
+
+    /// Pre-plan (autotune) the kernel config of every projection shape
+    /// for the given batch buckets — the host analog of warming the
+    /// decode-artifact cache. Returns the number of (bucket, shape)
+    /// combinations visited.
+    pub fn warm(&mut self, buckets: &[usize]) -> usize {
+        let HostModel { weights, plan, .. } = self;
+        let l0 = &weights.layers[0];
+        let shapes: [&QuantizedLinear; 4] =
+            [&l0.wq, &l0.w_up, &l0.w_down, &weights.lm_head];
+        let mut visited = 0;
+        for &b in buckets {
+            for q in shapes {
+                let a = MatF32::new(b, q.k, vec![0.5; b * q.k]);
+                let _ = plan.config_for(&a, q);
+                visited += 1;
+            }
+        }
+        visited
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic(32, "splitk", vec![1, 2, 4], 0)
+    }
+
+    fn fixed_model(threads: usize) -> HostModel {
+        let cfg = HostKernelConfig::splitk(4).with_threads(threads);
+        HostModel::with_plan(&meta(), GemmPlan::fixed(cfg)).unwrap()
+    }
+
+    #[test]
+    fn decode_step_produces_finite_logits() {
+        let mut m = fixed_model(1);
+        let mut st = m.begin(&[0]);
+        let logits = m.decode_step(&mut st, &[7], 0, true).unwrap();
+        assert_eq!(logits.len(), m.meta().vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // A second position must attend over two cache entries fine.
+        let l2 = m.decode_step(&mut st, &[9], 1, true).unwrap();
+        assert!(l2.iter().all(|v| v.is_finite()));
+        assert_ne!(logits, l2);
+    }
+
+    #[test]
+    fn decode_step_rejects_bad_inputs() {
+        let mut m = fixed_model(1);
+        let mut st = m.begin(&[0]);
+        assert!(m.decode_step(&mut st, &[1, 2], 0, true).is_err(), "batch mismatch");
+        assert!(m.decode_step(&mut st, &[1], 32, true).is_err(), "pos >= max_seq");
+        assert!(m.decode_step(&mut st, &[-1], 0, true).is_err(), "negative token");
+        assert!(m.decode_step(&mut st, &[512], 0, true).is_err(), "out of vocab");
+    }
+
+    #[test]
+    fn thread_count_is_bit_invariant() {
+        // Same fixed kernel config, different worker counts -> identical
+        // logits bits across a short greedy rollout (the serving
+        // determinism contract, inherited from the SplitK executor).
+        let mut m1 = fixed_model(1);
+        let mut m8 = fixed_model(8);
+        let mut s1 = m1.begin(&[0, 0]);
+        let mut s8 = m8.begin(&[0, 0]);
+        for (pos, toks) in [[3, 5], [10, 2], [400, 77]].iter().enumerate() {
+            let a = m1.decode_step(&mut s1, toks, pos, true).unwrap();
+            let b = m8.decode_step(&mut s8, toks, pos, true).unwrap();
+            assert_eq!(a, b, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn batched_equals_solo_bitwise() {
+        // Slot 1 of a left-padded batch must reproduce a solo run of the
+        // same tokens bit for bit: start masking + relative-position
+        // RoPE make a sequence independent of its batch-mates, and the
+        // fused kernel's per-row math is independent of other rows.
+        let mut solo = fixed_model(2);
+        let mut batched = fixed_model(2);
+        let tokens = [11i32, 42, 99];
+        let mut s_solo = solo.begin(&[0]);
+        let mut s_batch = batched.begin(&[2, 0, 1]); // slot 0 padded by 2
+        let mut got_solo = Vec::new();
+        let mut got_batch = Vec::new();
+        for (j, &t) in tokens.iter().enumerate() {
+            got_solo.push(solo.decode_step(&mut s_solo, &[t], j, true).unwrap());
+        }
+        // Batched: slot 0 is padded until pos 2, slot 2 until pos 1;
+        // slot 1 carries our sequence from pos 0.
+        for pos in 0..tokens.len() {
+            let step = [
+                if pos < 2 { 0 } else { 33 },              // slot 0, start 2
+                tokens[pos],                               // slot 1, start 0
+                if pos < 1 { 0 } else { 55 + pos as i32 }, // slot 2, start 1
+            ];
+            got_batch.push(
+                batched.decode_step(&mut s_batch, &step, pos, true).unwrap());
+        }
+        let vocab = solo.meta().vocab;
+        // Solo position j == batched slot 1 at the same absolute pos
+        // (start 0), for every prefill position.
+        for j in 0..tokens.len() {
+            let solo_row = &got_solo[j][..vocab];
+            let batch_row = &got_batch[j][vocab..2 * vocab];
+            assert_eq!(solo_row, batch_row, "position {j}");
+        }
+    }
+
+    #[test]
+    fn skipping_prefill_logits_changes_nothing_downstream() {
+        // need_logits=false returns empty and skips the LM head, but the
+        // KV cache must update identically: the next position's logits
+        // match a run that computed every position's logits.
+        let mut full = fixed_model(1);
+        let mut fast = fixed_model(1);
+        let mut s_full = full.begin(&[0]);
+        let mut s_fast = fast.begin(&[0]);
+        for (pos, t) in [3i32, 140, 77].iter().enumerate() {
+            let want = full.decode_step(&mut s_full, &[*t], pos, true).unwrap();
+            let last = pos == 2;
+            let got = fast.decode_step(&mut s_fast, &[*t], pos, last).unwrap();
+            if last {
+                assert_eq!(want, got, "final logits must match bitwise");
+            } else {
+                assert!(got.is_empty(), "skipped logits are empty");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_plans_every_bucket_shape() {
+        let mut m = HostModel::with_plan(
+            &meta(),
+            GemmPlan::autotuned(1)).unwrap();
+        assert!(m.plan.is_empty());
+        let visited = m.warm(&[1, 2]);
+        assert_eq!(visited, 8); // 2 buckets x 4 projections visited
+        // Distinct (m, n, k) keys per bucket: (256,256), (512,256)
+        // [w_up and lm_head coincide at this metadata], (256,512) -> 3.
+        assert_eq!(m.plan.len(), 6);
+        // Re-warming hits the cache, adds nothing.
+        m.warm(&[1, 2]);
+        assert_eq!(m.plan.len(), 6);
+    }
+}

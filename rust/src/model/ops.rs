@@ -1,0 +1,159 @@
+//! Non-GEMM decode-step primitives: RMSNorm, SiLU, softmax, rotary
+//! position embedding, residual adds.
+//!
+//! Everything here is single-threaded, allocation-light, and iterates in
+//! a fixed order, so the decode step's determinism reduces to the GEMM
+//! backend's (which is bit-stable across worker counts, DESIGN.md §5).
+//! These are `pub` so the oracle tests can run the *same* non-GEMM math
+//! around a dense-weight GEMM and isolate the fused kernel as the only
+//! difference.
+
+use crate::quant::MatF32;
+
+/// Row-wise RMSNorm: `out[r] = x[r] / rms(x[r]) * gain` (eps 1e-5).
+pub fn rms_norm(x: &MatF32, gain: &[f32]) -> MatF32 {
+    assert_eq!(x.cols, gain.len(), "rms_norm: gain length != columns");
+    let mut out = MatF32::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = &x.data[r * x.cols..(r + 1) * x.cols];
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        let orow = &mut out.data[r * x.cols..(r + 1) * x.cols];
+        for (o, (&v, &g)) in orow.iter_mut().zip(row.iter().zip(gain.iter())) {
+            *o = v * inv * g;
+        }
+    }
+    out
+}
+
+/// Elementwise SiLU: `x * sigmoid(x)`.
+pub fn silu_in_place(x: &mut MatF32) {
+    for v in x.data.iter_mut() {
+        *v /= 1.0 + (-*v).exp();
+    }
+}
+
+/// Numerically-stable in-place softmax (no-op on an empty slice).
+pub fn softmax_in_place(scores: &mut [f32]) {
+    if scores.is_empty() {
+        return;
+    }
+    let max = scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    for s in scores.iter_mut() {
+        *s /= sum;
+    }
+}
+
+/// Rotary position embedding over a `[d_model]` row, applied per head
+/// with the half-split pairing (`x[i]`, `x[i + head_dim/2]`).
+///
+/// `pos` must be the *sequence-relative* position (`abs_pos - start`):
+/// left-padded batches then rotate a token exactly as a solo run would,
+/// which is what makes batched decode bit-identical to solo decode.
+pub fn rope_in_place(row: &mut [f32], n_heads: usize, pos: usize) {
+    let hd = row.len() / n_heads;
+    let half = hd / 2;
+    debug_assert_eq!(row.len() % n_heads, 0);
+    debug_assert_eq!(hd % 2, 0, "head_dim must be even for RoPE");
+    for h in 0..n_heads {
+        let base = h * hd;
+        for i in 0..half {
+            let freq = 10_000.0f32.powf(-(2.0 * i as f32) / hd as f32);
+            let (sin, cos) = (pos as f32 * freq).sin_cos();
+            let a = row[base + i];
+            let b = row[base + half + i];
+            row[base + i] = a * cos - b * sin;
+            row[base + half + i] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Elementwise residual add: `x += y`.
+pub fn add_in_place(x: &mut MatF32, y: &MatF32) {
+    assert_eq!((x.rows, x.cols), (y.rows, y.cols), "add_in_place: shape");
+    for (a, &b) in x.data.iter_mut().zip(y.data.iter()) {
+        *a += b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rms_norm_unit_rows() {
+        let x = MatF32::new(2, 4, vec![1.0, 1.0, 1.0, 1.0,
+                                       2.0, -2.0, 2.0, -2.0]);
+        let out = rms_norm(&x, &[1.0; 4]);
+        for r in 0..2 {
+            let row = &out.data[r * 4..(r + 1) * 4];
+            let ms = row.iter().map(|v| v * v).sum::<f32>() / 4.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {r} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn rms_norm_applies_gain() {
+        let x = MatF32::new(1, 2, vec![3.0, 3.0]);
+        let out = rms_norm(&x, &[1.0, 2.0]);
+        assert!((out.data[1] / out.data[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        let mut x = MatF32::new(1, 3, vec![0.0, 20.0, -20.0]);
+        silu_in_place(&mut x);
+        assert_eq!(x.data[0], 0.0);
+        assert!((x.data[1] - 20.0).abs() < 1e-3); // sigmoid(20) ~ 1
+        assert!(x.data[2].abs() < 1e-3); // -20 * sigmoid(-20) ~ 0
+    }
+
+    #[test]
+    fn softmax_normalizes_and_orders() {
+        let mut s = vec![1.0f32, 3.0, 2.0];
+        softmax_in_place(&mut s);
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(s[1] > s[2] && s[2] > s[0]);
+        softmax_in_place(&mut []); // must not panic
+    }
+
+    #[test]
+    fn softmax_handles_large_scores() {
+        let mut s = vec![1000.0f32, 1001.0];
+        softmax_in_place(&mut s);
+        assert!(s.iter().all(|v| v.is_finite()));
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_position_zero_is_identity() {
+        let orig: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut row = orig.clone();
+        rope_in_place(&mut row, 2, 0);
+        assert_eq!(row, orig);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_depends_on_pos() {
+        let orig: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).sin()).collect();
+        let n2 = |v: &[f32]| v.iter().map(|x| x * x).sum::<f32>();
+        let mut r1 = orig.clone();
+        rope_in_place(&mut r1, 2, 3);
+        assert!((n2(&r1) - n2(&orig)).abs() < 1e-4, "rotation preserves norm");
+        let mut r2 = orig.clone();
+        rope_in_place(&mut r2, 2, 4);
+        assert_ne!(r1, r2, "different positions rotate differently");
+    }
+
+    #[test]
+    fn add_in_place_adds() {
+        let mut x = MatF32::new(1, 2, vec![1.0, 2.0]);
+        add_in_place(&mut x, &MatF32::new(1, 2, vec![0.5, -2.0]));
+        assert_eq!(x.data, vec![1.5, 0.0]);
+    }
+}

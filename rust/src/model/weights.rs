@@ -1,0 +1,267 @@
+//! Deterministic seeded quantized weights + the decode-step forward
+//! pass, parameterized over the GEMM executor.
+//!
+//! Weights are drawn from one [`Rng`] stream seeded by `ModelMeta::seed`
+//! in a fixed order (embedding, then per layer: attn norm, Wq, Wk, Wv,
+//! Wo, mlp norm, W_up, W_down; then final norm, LM head), so every
+//! process with the same metadata serves the identical model — no
+//! artifact files involved. Every projection is stored in the W4 packed
+//! format ([`QuantizedLinear`]), exactly like the AOT-exported model.
+//!
+//! [`HostModelWeights::forward_with`] runs one decode position and takes
+//! the GEMM as a [`ProjectionGemm`] so the serving path (fused
+//! `kernels::exec` backend) and the test oracle (materialize dense, then
+//! `gemm_f32`) share every non-GEMM instruction — the fused kernel is
+//! the only thing an oracle comparison can blame.
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::HostKvCache;
+use crate::quant::{quantize_weight, MatF32, QuantizedLinear, PACK_FACTOR};
+use crate::runtime::ModelMeta;
+use crate::util::Rng;
+
+use super::ops::{add_in_place, rms_norm, rope_in_place, silu_in_place,
+                 softmax_in_place};
+
+/// How the forward pass executes its projections.
+pub trait ProjectionGemm {
+    /// `C = A @ dequant(Q)`.
+    fn gemm(&mut self, a: &MatF32, q: &QuantizedLinear) -> MatF32;
+
+    /// Same activation through several same-shaped layers (the fused
+    /// q/k/v projections). Default: one [`Self::gemm`] per layer; the
+    /// serving dispatcher overrides this with the scratch-reusing
+    /// batched entry point, which is bit-identical.
+    fn gemm_multi(&mut self, a: &MatF32, qs: &[&QuantizedLinear])
+                  -> Vec<MatF32> {
+        qs.iter().map(|q| self.gemm(a, q)).collect()
+    }
+}
+
+/// One decoder layer's parameters (all projections W4-packed).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: QuantizedLinear,
+    pub wk: QuantizedLinear,
+    pub wv: QuantizedLinear,
+    pub wo: QuantizedLinear,
+    pub mlp_norm: Vec<f32>,
+    pub w_up: QuantizedLinear,
+    pub w_down: QuantizedLinear,
+}
+
+/// The full model: embedding + decoder stack + LM head.
+#[derive(Debug, Clone)]
+pub struct HostModelWeights {
+    pub meta: ModelMeta,
+    /// Dense `f32[vocab, d_model]` embedding (lookup, not a GEMM).
+    pub embedding: MatF32,
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    /// `[d_model, vocab]` output projection (W4-packed like the rest).
+    pub lm_head: QuantizedLinear,
+}
+
+fn gain_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect()
+}
+
+fn quantized(rng: &mut Rng, k: usize, n: usize, scale: f32,
+             group: usize) -> QuantizedLinear {
+    quantize_weight(&MatF32::new(k, n, rng.normal_vec(k * n, scale)), group)
+}
+
+impl HostModelWeights {
+    /// Generate the model for `meta` (W4 layout constraints checked up
+    /// front so the engine fails loudly at startup, not mid-batch).
+    pub fn generate(meta: &ModelMeta) -> Result<Self> {
+        let (d, ff, v, g) = (meta.d_model, meta.d_ff, meta.vocab,
+                             meta.group_size);
+        ensure!(meta.n_layers >= 1 && meta.n_heads >= 1, "empty model");
+        ensure!(d % meta.n_heads == 0, "d_model must divide into heads");
+        ensure!((d / meta.n_heads) % 2 == 0, "head_dim must be even (RoPE)");
+        ensure!(g % PACK_FACTOR == 0 && g > 0,
+                "group_size must be a positive multiple of {PACK_FACTOR}");
+        ensure!(d % g == 0 && ff % g == 0,
+                "d_model and d_ff must be multiples of group_size");
+        ensure!(d % PACK_FACTOR == 0 && ff % PACK_FACTOR == 0
+                && v % PACK_FACTOR == 0,
+                "d_model, d_ff, vocab must be multiples of {PACK_FACTOR}");
+        ensure!(meta.max_seq > 1, "max_seq must be > 1");
+
+        let mut rng = Rng::seed_from(meta.seed);
+        let proj = 1.0 / (d as f32).sqrt();
+        let down = 1.0 / (ff as f32).sqrt();
+        let embedding = MatF32::new(v, d, rng.normal_vec(v * d, 0.1));
+        let layers = (0..meta.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: gain_vec(&mut rng, d),
+                wq: quantized(&mut rng, d, d, proj, g),
+                wk: quantized(&mut rng, d, d, proj, g),
+                wv: quantized(&mut rng, d, d, proj, g),
+                wo: quantized(&mut rng, d, d, proj, g),
+                mlp_norm: gain_vec(&mut rng, d),
+                w_up: quantized(&mut rng, d, ff, proj, g),
+                w_down: quantized(&mut rng, ff, d, down, g),
+            })
+            .collect();
+        Ok(HostModelWeights {
+            meta: meta.clone(),
+            embedding,
+            layers,
+            final_norm: gain_vec(&mut rng, d),
+            lm_head: quantized(&mut rng, d, v, proj, g),
+        })
+    }
+
+    /// Packed bytes across every projection (the W4 memory story).
+    pub fn packed_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_up, &l.w_down])
+            .chain([&self.lm_head])
+            .map(|q| q.packed_bytes())
+            .sum()
+    }
+
+    /// One decode position for a batch: embed `tokens`, run every layer
+    /// (attention reading/writing `cache` at `pos`), and return logits
+    /// as a row-major `[b * vocab]` vector.
+    ///
+    /// `starts[i]` is slot `i`'s first valid cache position
+    /// (left-padding offset): earlier positions are masked out of
+    /// attention and RoPE runs on `pos - starts[i]`, so a sequence's
+    /// math is independent of its batch-mates — batched decode is
+    /// bit-identical to solo decode under a fixed kernel config.
+    ///
+    /// `need_logits: false` skips the final norm + LM-head projection
+    /// (the widest GEMM of the step) and returns an empty vec — the
+    /// prefill fast path for every position whose logits the engine
+    /// discards. The KV cache is updated identically either way.
+    pub fn forward_with(&self, cache: &mut HostKvCache, tokens: &[i32],
+                        pos: usize, starts: &[i32], need_logits: bool,
+                        gemm: &mut dyn ProjectionGemm) -> Vec<f32> {
+        let b = tokens.len();
+        let d = self.meta.d_model;
+        let heads = self.meta.n_heads;
+        let hd = d / heads;
+        assert_eq!(cache.batch(), b, "cache batch != token count");
+        assert_eq!(starts.len(), b, "starts length != token count");
+        assert!(pos < self.meta.max_seq, "position beyond max_seq");
+
+        // Embedding lookup.
+        let mut x = MatF32::zeros(b, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = t as usize;
+            assert!(t < self.meta.vocab, "token {t} out of vocab");
+            x.data[i * d..(i + 1) * d]
+                .copy_from_slice(&self.embedding.data[t * d..(t + 1) * d]);
+        }
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for (l, lw) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            let h = rms_norm(&x, &lw.attn_norm);
+            let mut qkv = gemm.gemm_multi(&h, &[&lw.wq, &lw.wk, &lw.wv]);
+            let vmat = qkv.pop().expect("v");
+            let mut kmat = qkv.pop().expect("k");
+            let mut qmat = qkv.pop().expect("q");
+
+            let mut attn = MatF32::zeros(b, d);
+            for i in 0..b {
+                let t0 = (starts[i].max(0) as usize).min(pos);
+                let rel = pos - t0;
+                let row = i * d;
+                rope_in_place(&mut qmat.data[row..row + d], heads, rel);
+                rope_in_place(&mut kmat.data[row..row + d], heads, rel);
+                for hh in 0..heads {
+                    let span = row + hh * hd..row + (hh + 1) * hd;
+                    cache.write_k(l, i, hh, pos, &kmat.data[span.clone()]);
+                    cache.write_v(l, i, hh, pos, &vmat.data[span.clone()]);
+                    let qrow = &qmat.data[span.clone()];
+                    // Scores over the visible window [t0, pos].
+                    let mut scores: Vec<f32> = (t0..=pos)
+                        .map(|t| {
+                            let krow = cache.k_row(l, i, hh, t);
+                            qrow.iter()
+                                .zip(krow.iter())
+                                .map(|(&a, &b)| a * b)
+                                .sum::<f32>() * scale
+                        })
+                        .collect();
+                    softmax_in_place(&mut scores);
+                    let orow = &mut attn.data[span];
+                    for (w, t) in scores.iter().zip(t0..=pos) {
+                        let vrow = cache.v_row(l, i, hh, t);
+                        for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                            *o += w * vv;
+                        }
+                    }
+                }
+            }
+            let o = gemm.gemm(&attn, &lw.wo);
+            add_in_place(&mut x, &o);
+
+            // ---- MLP ----
+            let h2 = rms_norm(&x, &lw.mlp_norm);
+            let mut up = gemm.gemm(&h2, &lw.w_up);
+            silu_in_place(&mut up);
+            let dn = gemm.gemm(&up, &lw.w_down);
+            add_in_place(&mut x, &dn);
+        }
+
+        if !need_logits {
+            return Vec::new();
+        }
+        let hfin = rms_norm(&x, &self.final_norm);
+        gemm.gemm(&hfin, &self.lm_head).data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic(32, "splitk", vec![1, 2, 4], 0)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = HostModelWeights::generate(&meta()).unwrap();
+        let b = HostModelWeights::generate(&meta()).unwrap();
+        assert_eq!(a.embedding.data, b.embedding.data);
+        assert_eq!(a.layers[0].wq.qweight.data, b.layers[0].wq.qweight.data);
+        assert_eq!(a.lm_head.scales.data, b.lm_head.scales.data);
+        let mut other = meta();
+        other.seed = 1;
+        let c = HostModelWeights::generate(&other).unwrap();
+        assert_ne!(a.embedding.data, c.embedding.data);
+    }
+
+    #[test]
+    fn shapes_match_meta() {
+        let w = HostModelWeights::generate(&meta()).unwrap();
+        let m = meta();
+        assert_eq!(w.layers.len(), m.n_layers);
+        assert_eq!((w.embedding.rows, w.embedding.cols), (m.vocab, m.d_model));
+        let l = &w.layers[0];
+        assert_eq!((l.wq.k, l.wq.n), (m.d_model, m.d_model));
+        assert_eq!((l.w_up.k, l.w_up.n), (m.d_model, m.d_ff));
+        assert_eq!((l.w_down.k, l.w_down.n), (m.d_ff, m.d_model));
+        assert_eq!((w.lm_head.k, w.lm_head.n), (m.d_model, m.vocab));
+        assert!(w.packed_bytes() > 0);
+    }
+
+    #[test]
+    fn rejects_invalid_layout() {
+        let mut bad = meta();
+        bad.group_size = 12; // not a multiple of 8
+        assert!(HostModelWeights::generate(&bad).is_err());
+        let mut bad = meta();
+        bad.n_heads = 3; // 256 % 3 != 0
+        assert!(HostModelWeights::generate(&bad).is_err());
+    }
+}

@@ -114,6 +114,26 @@ pub struct ModelMeta {
 }
 
 impl ModelMeta {
+    /// Metadata of the synthetic tiny llama-style model the pure-Rust
+    /// decode path serves when no artifacts are present — the same
+    /// dimensions `python/compile/model.py` exports, so request limits
+    /// and batch buckets behave identically across backends.
+    pub fn synthetic(max_seq: usize, variant: &str,
+                     batch_buckets: Vec<usize>, seed: u64) -> Self {
+        ModelMeta {
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq,
+            group_size: 64,
+            variant: variant.to_string(),
+            batch_buckets,
+            seed,
+        }
+    }
+
     fn from_json(v: &Json) -> Result<Self> {
         Ok(ModelMeta {
             vocab: v.get("vocab")?.as_usize()?,

@@ -127,7 +127,7 @@ impl Bench {
 
     /// Dump results to `<repo root>/<name>` — the canonical
     /// perf-trajectory records (`BENCH_*.json`) future PRs regress
-    /// against (DESIGN.md §7). Returns the path written.
+    /// against (DESIGN.md §8). Returns the path written.
     pub fn write_repo_root_json(&self, name: &str)
                                 -> std::io::Result<std::path::PathBuf> {
         // CARGO_MANIFEST_DIR is rust/; its parent is the repo root.

@@ -1,7 +1,11 @@
-//! Integration: the full serving coordinator against the real decode
-//! artifacts — batching, determinism, padding-correctness, back-pressure.
+//! Integration: the full serving coordinator — batching, determinism,
+//! padding-correctness, back-pressure — against both decode backends:
 //!
-//! Skips gracefully when artifacts are not built.
+//! * the **host backend** (pure-Rust fused model): runs everywhere,
+//!   no artifacts needed — plus the engine-death and scheduler-sleep
+//!   regression tests;
+//! * the **artifact backend**: skips gracefully when artifacts are not
+//!   built.
 
 use std::path::PathBuf;
 
@@ -33,6 +37,173 @@ fn config(dir: PathBuf) -> ServeConfig {
         warm_start: false,
         ..Default::default()
     }
+}
+
+// ---- host backend: serve with no artifacts at all --------------------
+
+fn host_config() -> ServeConfig {
+    ServeConfig {
+        backend: "host".into(),
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        batch_window_ms: 1,
+        max_new_tokens: 8,
+        max_seq: 64,
+        warm_start: false,
+        self_check: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn host_backend_serves_without_artifacts() {
+    let coord = Coordinator::start(&host_config()).unwrap();
+    let pending = vec![
+        coord.submit(vec![3, 5, 7], 4, None).unwrap(),
+        coord.submit(vec![9], 3, None).unwrap(),
+        coord.submit(vec![100, 200], 2, None).unwrap(),
+    ];
+    let want_lens = [4usize, 3, 2];
+    for (p, want) in pending.into_iter().zip(want_lens) {
+        let r = p.wait().unwrap();
+        assert_eq!(r.tokens.len(), want);
+        assert_eq!(r.finish_reason, FinishReason::Length);
+        assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert!(r.latency_ms > 0.0);
+    }
+    use std::sync::atomic::Ordering;
+    let m = coord.metrics();
+    assert_eq!(m.requests_completed.load(Ordering::Relaxed), 3);
+    assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 9);
+    assert!(m.decode_steps.load(Ordering::Relaxed) > 0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn host_backend_is_deterministic() {
+    let coord = Coordinator::start(&host_config()).unwrap();
+    let a = coord.submit(vec![10, 20, 30], 6, None).unwrap().wait().unwrap();
+    let b = coord.submit(vec![10, 20, 30], 6, None).unwrap().wait().unwrap();
+    assert_eq!(a.tokens, b.tokens, "greedy host decode must be reproducible");
+    assert_eq!(a.tokens.len(), 6);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn host_backend_batches_requests() {
+    let mut cfg = host_config();
+    cfg.batch_window_ms = 200;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let pending: Vec<_> = (0..4)
+        .map(|i| coord.submit(vec![i as i32 + 1, 7], 2, None).unwrap())
+        .collect();
+    for p in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.bucket, 4, "four queued requests fill bucket 4");
+        assert_eq!(r.tokens.len(), 2);
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn host_backend_stop_token_finishes_early() {
+    let coord = Coordinator::start(&host_config()).unwrap();
+    let probe = coord.submit(vec![8, 8], 3, None).unwrap().wait().unwrap();
+    let stop = probe.tokens[0];
+    let r = coord.submit(vec![8, 8], 3, Some(stop)).unwrap().wait().unwrap();
+    assert_eq!(r.finish_reason, FinishReason::Stop);
+    assert_eq!(r.tokens, vec![stop]);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn artifacts_config_falls_back_to_host_on_bare_machine() {
+    // Default backend ("artifacts") + no artifacts directory: the
+    // coordinator must still come up and serve, on the host model.
+    let mut cfg = host_config();
+    cfg.backend = "artifacts".into();
+    assert!(!cfg.artifacts_dir.join("manifest.json").exists());
+    let coord = Coordinator::start(&cfg).unwrap();
+    let r = coord.submit(vec![1, 2, 3], 2, None).unwrap().wait().unwrap();
+    assert_eq!(r.tokens.len(), 2);
+    coord.shutdown().unwrap();
+}
+
+// ---- regression: engine death must not strand callers ----------------
+
+/// A syntactically-valid manifest whose artifact list is empty: startup
+/// succeeds (nothing to compile), but the first batch cannot find a
+/// decode executable and kills the engine loop — the trigger for the
+/// serving-hang regression test.
+fn empty_artifacts_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "splitk-empty-artifacts-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{
+            "format": 1,
+            "model": {
+                "vocab": 512, "d_model": 256, "n_layers": 4, "n_heads": 4,
+                "d_ff": 512, "max_seq": 128, "group_size": 64,
+                "variant": "splitk", "batch_buckets": [1, 2, 4, 8, 16],
+                "seed": 0
+            },
+            "artifacts": []
+        }"#,
+    )
+    .unwrap();
+    dir
+}
+
+#[test]
+fn engine_death_fails_waiters_and_rejects_new_submits() {
+    let dir = empty_artifacts_dir("death");
+    let cfg = ServeConfig {
+        backend: "artifacts".into(),
+        artifacts_dir: dir.clone(),
+        batch_window_ms: 1,
+        max_new_tokens: 8,
+        warm_start: false,
+        self_check: false,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(&cfg).unwrap();
+
+    // The batch hits the engine, which dies on the missing decode
+    // executable. The in-flight waiter must error out, not block.
+    let p = coord.submit(vec![1, 2], 2, None).unwrap();
+    assert!(p.wait().is_err(), "waiter on a dead engine must error");
+
+    // The engine marks itself dead before failing the waiters, so by
+    // the time wait() returned, submit must refuse new work. Pre-fix,
+    // this submit succeeded and its wait() blocked forever.
+    let again = coord.submit(vec![1, 2], 2, None);
+    assert!(again.is_err(),
+            "submit after engine death must error, not queue a request \
+             nobody will ever serve");
+    drop(coord); // Drop joins threads; the engine's error is expected.
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- regression: scheduler sleeps instead of busy-polling ------------
+
+#[test]
+fn scheduler_sleeps_until_batch_deadline() {
+    // One queued request inside an 80 ms batching window. The
+    // deadline-driven scheduler wakes a handful of times (condvar
+    // notify + capped sleeps); the pre-fix 200 µs busy-poll spun ~400
+    // non-empty polls across the window.
+    let mut cfg = host_config();
+    cfg.batch_window_ms = 80;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let r = coord.submit(vec![5, 6], 2, None).unwrap().wait().unwrap();
+    assert_eq!(r.tokens.len(), 2);
+    let polls = coord.scheduler_nonempty_polls();
+    assert!(polls <= 60,
+            "scheduler made {polls} non-empty polls during one 80 ms \
+             window (busy-wait regression: the fixed 200 µs sleep made \
+             ~400; deadline-driven sleeps stay near window/5ms ≈ 16)");
+    coord.shutdown().unwrap();
 }
 
 #[test]
