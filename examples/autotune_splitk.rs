@@ -24,7 +24,8 @@ fn main() -> Result<()> {
         println!("{:>7} {:>9} {:>10}  sweep (split_k: µs)", "N=K", "best", "best µs");
         let mut votes = std::collections::BTreeMap::<u32, u32>::new();
         for &nk in &NK_SWEEP {
-            let r = autotune_split_k(&dev, &GemmShape::square(m, nk), &tiles);
+            let r = autotune_split_k(&dev, &GemmShape::square(m, nk), &tiles)
+                .map_err(|e| anyhow::anyhow!("autotune failed: {e}"))?;
             *votes.entry(r.best_split_k).or_default() += 1;
             let sweep: Vec<String> = r
                 .sweep

@@ -1,0 +1,220 @@
+"""Python mirror of the Rust StreamK host executor's index math and
+accumulation semantics (`rust/src/kernels/exec/streamk.rs`), plus the
+batcher flush policy (`rust/src/coordinator/batcher.rs`).
+
+The Rust growth environment has no cargo toolchain, so — as with the
+PR 1 kernel-index mirror — the span-partition logic is cross-validated
+here against exhaustive invariants and a float reference. This is
+auxiliary evidence next to the Rust unit/property tests, which run
+wherever a toolchain exists (CI).
+
+Mirrored contracts:
+
+* the flattened `(n-tile x k-unit)` iteration space is covered exactly
+  once by the per-span contribution descriptors (no gaps, no overlap),
+  span desc ranges are consecutive, and per tile the k-ranges ascend in
+  descriptor order (the merge order == ascending k);
+* the worker-assignment loop hands out contiguous span runs that
+  exhaust the descriptor list for any thread count;
+* float32 ascending-k accumulation per contribution + ascending-span
+  merge stays within 1e-4 of a float64 dense reference, collapses to
+  the DP order bitwise at one span, and is bit-identical across span
+  counts on exactly-representable inputs (the Rust property
+  `prop_fused_decompositions_bit_identical_on_exact_inputs`);
+* the batcher window flush drains the whole queue (no stranded tail —
+  the PR 3 regression).
+
+Run standalone for the full 20k-case partition sweep:
+`python tests/test_streamk_mirror.py`
+"""
+
+import random
+
+import numpy as np
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def partition(n, kp_total, bn, kp_chunk, workers):
+    """Mirror of the span/descriptor construction in streamk.rs."""
+    n_tiles = ceil_div(n, bn)
+    k_units = ceil_div(kp_total, kp_chunk)
+    total = n_tiles * k_units
+    spans = max(1, min(workers, total))
+    descs, span_ranges = [], []
+    for s in range(spans):
+        u0, u1 = s * total // spans, (s + 1) * total // spans
+        d0 = len(descs)
+        u = u0
+        while u < u1:
+            tile = u // k_units
+            s0 = u % k_units
+            s1 = min(s0 + (u1 - u), k_units)
+            descs.append((tile, s0 * kp_chunk, min(s1 * kp_chunk, kp_total)))
+            u += s1 - s0
+        span_ranges.append((d0, len(descs)))
+        assert u1 > u0, "empty span"
+    return n_tiles, k_units, descs, span_ranges
+
+
+def check_partition(n, kp_total, bn, kp_chunk, workers):
+    n_tiles, k_units, descs, span_ranges = partition(
+        n, kp_total, bn, kp_chunk, workers)
+    # Exact coverage, no overlap.
+    cover = set()
+    for tile, kp0, kp1 in descs:
+        assert 0 <= tile < n_tiles
+        assert 0 <= kp0 < kp1 <= kp_total
+        for kp in range(kp0, kp1):
+            assert (tile, kp) not in cover, "overlap"
+            cover.add((tile, kp))
+    assert len(cover) == n_tiles * kp_total
+    # Consecutive, exhaustive span ranges.
+    off = 0
+    for d0, d1 in span_ranges:
+        assert d0 == off and d1 >= d0
+        off = d1
+    assert off == len(descs)
+    # Per-tile k-ranges ascend in desc order (merge order == k order).
+    last = {}
+    for tile, kp0, kp1 in descs:
+        assert last.get(tile, -1) <= kp0
+        last[tile] = kp1
+    # Worker assignment: contiguous span runs, every desc handed out.
+    spans = len(span_ranges)
+    for threads in (1, 2, 3, 5, 8, 64):
+        w_eff = max(1, min(threads, spans))
+        next_span, desc_off = 0, 0
+        for w in range(w_eff):
+            count = (spans - next_span) // (w_eff - w)
+            assert count >= 1
+            desc_off = span_ranges[next_span + count - 1][1]
+            next_span += count
+        assert next_span == spans and desc_off == len(descs)
+
+
+def test_partition_invariants_random_sweep(cases=4000, seed=7):
+    rng = random.Random(seed)
+    for _ in range(cases):
+        check_partition(
+            n=rng.randint(1, 80),
+            kp_total=rng.randint(1, 64),
+            bn=rng.choice([1, 3, 5, 8, 16, 64, 1000]),
+            kp_chunk=rng.choice([1, 3, 4, 8, 32, 1000]),
+            workers=rng.randint(1, 40),
+        )
+
+
+# ---- numeric mirror --------------------------------------------------
+
+def _f32_ascending_dot(a_col, w_col):
+    """fused_tile inner-loop semantics: f32 acc += a*w, ascending k."""
+    acc = np.float32(0.0)
+    for av, wv in zip(a_col, w_col):
+        acc = np.float32(acc + np.float32(np.float32(av) * np.float32(wv)))
+    return acc
+
+
+def streamk_f32(a, w, bn, kp_chunk, workers):
+    m, k = a.shape
+    n = w.shape[1]
+    _, _, descs, _ = partition(n, k // 8, bn, kp_chunk, workers)
+    out = np.zeros((m, n), dtype=np.float32)
+    for tile, kp0, kp1 in descs:
+        c0, c1 = tile * bn, min((tile + 1) * bn, n)
+        contrib = np.zeros((m, c1 - c0), dtype=np.float32)
+        for r in range(m):
+            for j, c in enumerate(range(c0, c1)):
+                contrib[r, j] = _f32_ascending_dot(
+                    a[r, 8 * kp0:8 * kp1], w[8 * kp0:8 * kp1, c])
+        out[:, c0:c1] = np.float32(out[:, c0:c1] + contrib)
+    return out
+
+
+def dp_f32(a, w):
+    m, k = a.shape
+    n = w.shape[1]
+    out = np.zeros((m, n), dtype=np.float32)
+    for r in range(m):
+        for c in range(n):
+            out[r, c] = _f32_ascending_dot(a[r, :], w[:, c])
+    return out
+
+
+def test_streamk_matches_f64_reference(cases=12, seed=3):
+    rnd = random.Random(seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(cases):
+        m, k, n = rnd.randint(1, 4), 8 * rnd.randint(1, 6), rnd.randint(1, 14)
+        a = rng.uniform(-1, 1, (m, k)).astype(np.float32)
+        w = (rng.standard_normal((k, n)) * 0.1).astype(np.float32)
+        ref = a.astype(np.float64) @ w.astype(np.float64)
+        for workers in (1, 2, 3, 7, 16):
+            got = streamk_f32(a, w, rnd.choice([1, 3, 8, 1000]),
+                              rnd.choice([1, 2, 1000]), workers)
+            assert np.max(np.abs(got - ref)) <= 1e-4
+
+
+def test_single_span_is_dp_bitwise(seed=5):
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(-1, 1, (3, 32)).astype(np.float32)
+    w = (rng.standard_normal((32, 12)) * 0.1).astype(np.float32)
+    assert streamk_f32(a, w, 1000, 1000, 1).tobytes() == dp_f32(a, w).tobytes()
+
+
+def test_exact_inputs_bit_identical_across_span_counts(cases=8, seed=11):
+    rnd = random.Random(seed)
+    rng = np.random.default_rng(seed)
+    scales = np.array([0.25, 0.125, 0.0625], dtype=np.float32)
+    for _ in range(cases):
+        m, k, n = rnd.randint(1, 4), 8 * rnd.randint(1, 5), rnd.randint(1, 10)
+        a = rng.integers(-4, 5, (m, k)).astype(np.float32)
+        w = (rng.integers(0, 16, (k, n)).astype(np.float32)
+             - rng.integers(0, 16, (1, n)).astype(np.float32)) \
+            * scales[rng.integers(0, 3, (1, n))]
+        base = dp_f32(a, w).tobytes()
+        for workers in (2, 3, 5, 8, 13):
+            assert streamk_f32(a, w, 4, 2, workers).tobytes() == base
+
+
+# ---- batcher flush mirror -------------------------------------------
+
+def _covering(buckets, n):
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+def test_batcher_flush_never_strands(cases=2000, seed=1):
+    """Mirror of DynamicBatcher::poll: a window flush (queue below the
+    largest bucket) must drain the whole queue in one covering-bucket
+    batch — the PR 3 regression fix."""
+    rnd = random.Random(seed)
+    for _ in range(cases):
+        buckets = sorted(rnd.sample([1, 2, 4, 8, 16, 32], rnd.randint(1, 6)))
+        q = list(range(rnd.randint(1, 80)))
+        max_b = buckets[-1]
+        while q:
+            if len(q) >= max_b:
+                take, bucket = max_b, max_b
+            else:
+                take = min(len(q), max_b)
+                bucket = _covering(buckets, take)
+            batch, q = q[:take], q[take:]
+            assert len(batch) <= bucket and bucket in buckets
+            if take < max_b:
+                assert not q, "flush stranded a tail"
+
+
+if __name__ == "__main__":
+    test_partition_invariants_random_sweep(cases=20000)
+    test_streamk_matches_f64_reference(cases=40)
+    test_single_span_is_dp_bitwise()
+    test_exact_inputs_bit_identical_across_span_counts(cases=15)
+    test_batcher_flush_never_strands()
+    print("OK: partition invariants (20k cases), f64-reference tolerance, "
+          "DP bit-equality at one span, exact-input bit-identity, "
+          "batcher flush drain")

@@ -1,17 +1,21 @@
 //! Bench: the executable fused W4A16 host backend across the paper's
 //! sweep — m ∈ {1, 16}, n = k ∈ {2048, 4096, 8192} — comparing:
 //!
-//! * `naive_ref`      — `quant::w4a16_gemm_ref` (materializes the dense
-//!                      f32 weight, then dense GEMM; what every consumer
-//!                      paid before the exec backend landed);
-//! * `fused_dp`       — `kernels::exec::fused_gemm_dp`;
+//! * `naive_ref`       — `quant::w4a16_gemm_ref` (materializes the dense
+//!                       f32 weight, then dense GEMM; what every consumer
+//!                       paid before the exec backend landed);
+//! * `fused_dp`        — `kernels::exec::fused_gemm_dp`;
 //! * `fused_splitk{S}` — `kernels::exec::fused_gemm_splitk`,
-//!                      S ∈ {1, 2, 4, 8}.
+//!                       S ∈ {1, 2, 4, 8};
+//! * `fused_streamk{W}` — `kernels::exec::fused_gemm_streamk`,
+//!                       W ∈ {2, 4, 8} persistent spans — the third
+//!                       decomposition family, added with the StreamK
+//!                       host executor.
 //!
-//! Both fused variants run the paper's tile config so only the
+//! All fused variants run the paper's tile config so only the
 //! decomposition differs (the paper's own controlled comparison).
 //! Results land in `BENCH_host_splitk.json` at the repo root — the
-//! perf-trajectory record future PRs regress against.
+//! perf-trajectory record future PRs regress against (EXPERIMENTS.md).
 //!
 //! ```sh
 //! cargo bench --bench host_splitk [-- --smoke]
@@ -20,17 +24,18 @@
 //! `--smoke` restricts the sweep to one shape pair (m ∈ {1, 16},
 //! n = k = 2048) with a short budget and writes
 //! `BENCH_host_splitk_smoke.json` instead — the CI mode that exercises
-//! the bench without paying for (or clobbering) the full-grid
-//! trajectory record.
+//! the bench (including the StreamK series) without paying for (or
+//! clobbering) the full-grid trajectory record.
 
 use std::time::Duration;
 
 use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk,
-                            HostKernelConfig, TileConfig};
+                            fused_gemm_streamk, HostKernelConfig, TileConfig};
 use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32};
 use splitk_w4a16::util::{Bench, Rng};
 
 const SPLITS: [u32; 4] = [1, 2, 4, 8];
+const STREAMK_WORKERS: [u32; 3] = [2, 4, 8];
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -44,7 +49,7 @@ fn main() {
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    // Paper tile config for both variants: decomposition isolated.
+    // Paper tile config for every variant: decomposition isolated.
     let tiles = TileConfig::paper_splitk();
     println!("fused W4A16 host backend sweep ({threads} worker threads, \
               tiles {}x{}x{})",
@@ -67,11 +72,8 @@ fn main() {
                 })
                 .p50_ns;
 
-            let dp_cfg = HostKernelConfig {
-                tiles,
-                split_k: 1,
-                threads,
-            };
+            let dp_cfg =
+                HostKernelConfig::dp().with_tiles(tiles).with_threads(threads);
             let dp = bench
                 .run(&format!("fused_dp_m{m}_nk{nk}"), || {
                     std::hint::black_box(fused_gemm_dp(&a, &q, &dp_cfg));
@@ -81,11 +83,9 @@ fn main() {
             let mut best_sk = f64::MAX;
             let mut best_split = 1u32;
             for &split in &SPLITS {
-                let cfg = HostKernelConfig {
-                    tiles,
-                    split_k: split,
-                    threads,
-                };
+                let cfg = HostKernelConfig::splitk(split)
+                    .with_tiles(tiles)
+                    .with_threads(threads);
                 let t = bench
                     .run(&format!("fused_splitk{split}_m{m}_nk{nk}"), || {
                         std::hint::black_box(fused_gemm_splitk(&a, &q, &cfg));
@@ -96,10 +96,33 @@ fn main() {
                     best_split = split;
                 }
             }
+
+            // Third series: StreamK persistent spans over the flattened
+            // (n-tile x k-slice) iteration space.
+            let mut best_st = f64::MAX;
+            let mut best_workers = STREAMK_WORKERS[0];
+            for &workers in &STREAMK_WORKERS {
+                let cfg = HostKernelConfig::streamk(workers)
+                    .with_tiles(tiles)
+                    .with_threads(threads);
+                let t = bench
+                    .run(&format!("fused_streamk{workers}_m{m}_nk{nk}"), || {
+                        std::hint::black_box(fused_gemm_streamk(&a, &q, &cfg));
+                    })
+                    .p50_ns;
+                if t < best_st {
+                    best_st = t;
+                    best_workers = workers;
+                }
+            }
+
             lines.push(format!(
                 "m={m:>2} n=k={nk:>5}: naive/DP {:>6.2}x   naive/SplitK \
-                 {:>6.2}x   DP/SplitK {:>5.2}x (best split {best_split})",
-                naive / dp, naive / best_sk, dp / best_sk));
+                 {:>6.2}x (best split {best_split})   naive/StreamK \
+                 {:>6.2}x (best workers {best_workers})   DP/SplitK \
+                 {:>5.2}x   DP/StreamK {:>5.2}x",
+                naive / dp, naive / best_sk, naive / best_st, dp / best_sk,
+                dp / best_st));
         }
     }
 

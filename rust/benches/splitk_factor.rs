@@ -25,7 +25,9 @@ fn main() {
         let shape = GemmShape::square(16, 4096);
         let mut best = 0;
         bench.run(&format!("autotune_4096_{}", dev.name.replace(' ', "_")), || {
-            best = autotune_split_k(&dev, &shape, &tiles).best_split_k;
+            best = autotune_split_k(&dev, &shape, &tiles)
+                .expect("paper shape is feasible")
+                .best_split_k;
         });
         println!("    -> best split_k at n=k=4096: {best}");
     }

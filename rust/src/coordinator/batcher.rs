@@ -73,11 +73,6 @@ impl DynamicBatcher {
         Ok(())
     }
 
-    /// Largest bucket <= n, if any.
-    fn bucket_filled_by(&self, n: usize) -> Option<usize> {
-        self.buckets.iter().rev().find(|&&b| b <= n).copied()
-    }
-
     /// Smallest bucket >= n (or the largest bucket).
     fn bucket_covering(&self, n: usize) -> usize {
         for &b in &self.buckets {
@@ -105,10 +100,21 @@ impl DynamicBatcher {
         }
         let oldest_wait = now.duration_since(self.queue[0].accepted_at);
         if oldest_wait >= self.window {
-            // Flush: largest fillable bucket, padded to covering size.
+            // Flush whatever is queued into the smallest covering
+            // bucket, padding the difference. Taking only the largest
+            // *filled* bucket here (the old policy) stranded the tail —
+            // e.g. 2 of 3 queued — past its window until the next
+            // scheduler wakeup, and then served it at a smaller bucket.
+            // The padding is the cheaper side of the trade: one padded
+            // batch streams the quantized weights once, while a filled
+            // batch plus a tail batch re-streams them for a second full
+            // generation pass (skinny decode GEMMs are weight-bandwidth
+            // bound, so pass count dominates slot utilization).
+            // n is always in 1..max_bucket here (the full-bucket branch
+            // above handled >= max_bucket); the min is the documented
+            // contract, not a reachable clamp.
             let n = self.queue.len();
-            let take_n = self.bucket_filled_by(n).unwrap_or(n.min(max_bucket));
-            let take_n = take_n.max(1).min(n);
+            let take_n = n.min(max_bucket);
             let bucket = self.bucket_covering(take_n);
             return Some(self.take(take_n, bucket));
         }
@@ -178,10 +184,10 @@ mod tests {
         assert!(b.poll(t0).is_none(), "within window: wait");
         let later = t0 + Duration::from_millis(6);
         let batch = b.poll(later).expect("window expired: flush");
-        // 3 waiting -> take 2 (largest filled bucket), padded bucket 2.
-        assert_eq!(batch.requests.len(), 2);
-        assert_eq!(batch.bucket, 2);
-        assert_eq!(b.len(), 1);
+        // 3 waiting -> take all 3, padded to the covering bucket 4.
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.bucket, 4);
+        assert!(b.is_empty());
     }
 
     #[test]
@@ -195,16 +201,54 @@ mod tests {
     }
 
     #[test]
-    fn five_waiting_takes_four() {
+    fn five_waiting_flush_into_bucket_eight() {
         let mut b = batcher(0);
         let t0 = Instant::now();
         for i in 0..5 {
             b.push(req(i, t0)).unwrap();
         }
         let batch = b.poll(t0).unwrap();
-        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(batch.requests.len(), 5);
+        assert_eq!(batch.bucket, 8);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flush_does_not_strand_the_tail() {
+        // Regression: with buckets {1, 2, 4} and 3 requests past the
+        // window, the old flush took only bucket_filled_by(3) = 2
+        // requests, stranding the third — already over its latency
+        // window — until another scheduler wakeup. The documented
+        // policy ("flush whatever is queued into the smallest covering
+        // bucket") must serve all 3 in one bucket-4 batch.
+        let mut b = DynamicBatcher::new(vec![1, 2, 4],
+                                        Duration::from_millis(5), 64);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let batch = b.poll(t0 + Duration::from_millis(5)).expect("flush");
+        assert_eq!(batch.requests.len(), 3,
+                   "every over-window request rides the flush");
         assert_eq!(batch.bucket, 4);
-        assert_eq!(b.len(), 1);
+        assert!(b.is_empty(), "no stranded tail");
+    }
+
+    #[test]
+    fn over_max_bucket_queue_dispatches_full_bucket_first() {
+        // More queued than the largest bucket takes the full-bucket
+        // branch, not the flush: one max-sized batch leaves, the rest
+        // stay queued for the next poll.
+        let mut b = DynamicBatcher::new(vec![1, 2], Duration::ZERO, 64);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t0)).unwrap();
+        }
+        // len 5 >= max bucket 2 -> immediate full-bucket dispatch.
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.bucket, 2);
+        assert_eq!(b.len(), 3);
     }
 
     #[test]

@@ -16,6 +16,13 @@ pub enum Decomposition {
     /// SplitK: `split_k` blocks per output tile, each reducing a k-slice,
     /// merged with atomic adds (paper Fig. 1).
     SplitK { split_k: u32 },
+    /// StreamK (paper §4 future work; Osama et al. 2023): `workers`
+    /// persistent blocks each own a contiguous span of the flattened
+    /// (tile × k-slice) iteration space; tiles crossing a span boundary
+    /// merge through the same partial-sum path SplitK uses. On the GPU
+    /// model `workers` is the *expected* writers per tile (boundary
+    /// spread); on the host executor it is the exact span count.
+    StreamK { workers: u32 },
 }
 
 impl Decomposition {
@@ -24,6 +31,7 @@ impl Decomposition {
         match self {
             Decomposition::DataParallel => 1,
             Decomposition::SplitK { split_k } => *split_k,
+            Decomposition::StreamK { workers } => *workers,
         }
     }
 
@@ -32,6 +40,7 @@ impl Decomposition {
         match self {
             Decomposition::DataParallel => "dp".into(),
             Decomposition::SplitK { split_k } => format!("splitk{split_k}"),
+            Decomposition::StreamK { workers } => format!("streamk{workers}"),
         }
     }
 }
@@ -134,11 +143,13 @@ mod tests {
     fn writers_per_tile() {
         assert_eq!(Decomposition::DataParallel.writers_per_tile(), 1);
         assert_eq!(Decomposition::SplitK { split_k: 8 }.writers_per_tile(), 8);
+        assert_eq!(Decomposition::StreamK { workers: 3 }.writers_per_tile(), 3);
     }
 
     #[test]
     fn labels() {
         assert_eq!(Decomposition::DataParallel.label(), "dp");
         assert_eq!(Decomposition::SplitK { split_k: 4 }.label(), "splitk4");
+        assert_eq!(Decomposition::StreamK { workers: 8 }.label(), "streamk8");
     }
 }

@@ -1,19 +1,33 @@
-//! SplitK autotuner — searches the splitting factor (and optionally tile
-//! width) on the simulator, reproducing the paper's §3.3 finding:
-//! split_k = 4 optimal on A100, 8 on H100 (Figures 9/10) — and, via
-//! [`autotune_split_k_host`], on the executable CPU backend with real
-//! wall-clock times.
+//! Autotuners — search the work decomposition (and tile geometry /
+//! thread budget) for a W4A16 GEMM shape, on the simulator
+//! ([`autotune_split_k`], reproducing the paper's §3.3 finding:
+//! split_k = 4 optimal on A100, 8 on H100, Figures 9/10) and on the
+//! executable CPU backend with real wall-clock times
+//! ([`autotune_split_k_host`], which since the StreamK executor landed
+//! sweeps all three decomposition families —
+//! {DP, SplitK × factor, StreamK × workers} — crossed with tile
+//! geometry and worker-thread count).
+//!
+//! Both entry points return `Result`: an infeasible sweep (every
+//! candidate violating the kernel's divisibility constraints) is a
+//! caller-visible error, never a panic — the serving plan cache falls
+//! back to a known-good config instead of taking the engine down.
 
 use std::time::Instant;
 
-use crate::gpusim::{simulate, DeviceConfig};
+use crate::gpusim::{simulate, Decomposition, DeviceConfig};
 use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 
-use super::exec::{host_gemm, HostKernelConfig};
+use super::exec::{host_gemm_into, HostKernelConfig, SplitKScratch};
 use super::{dp_launch, splitk_launch, GemmShape, TileConfig};
 
 /// The splitting factors the paper sweeps (Figures 9/10).
 pub const SPLIT_K_CANDIDATES: [u32; 5] = [1, 2, 4, 8, 16];
+
+/// StreamK persistent-span counts the host autotuner sweeps (the CPU
+/// stand-in for "one block per SM residency slot" at typical core
+/// counts).
+pub const STREAMK_WORKER_CANDIDATES: [u32; 3] = [2, 4, 8];
 
 /// Outcome of an autotune search.
 #[derive(Debug, Clone)]
@@ -32,9 +46,12 @@ pub struct AutotuneResult {
 ///
 /// Candidates that violate the kernel's divisibility constraints
 /// (`k % (block_k · split_k) != 0`) are skipped, mirroring the Triton
-/// kernel's launchable configs.
+/// kernel's launchable configs. If *every* candidate is infeasible the
+/// sweep is an `Err` describing the constraint — previously this
+/// panicked, killing whatever thread asked the question.
 pub fn autotune_split_k(dev: &DeviceConfig, shape: &GemmShape,
-                        tiles: &TileConfig) -> AutotuneResult {
+                        tiles: &TileConfig)
+                        -> Result<AutotuneResult, String> {
     let mut sweep = Vec::new();
     let mut best: Option<(u32, f64)> = None;
     for &sk in &SPLIT_K_CANDIDATES {
@@ -52,14 +69,20 @@ pub fn autotune_split_k(dev: &DeviceConfig, shape: &GemmShape,
             best = Some((sk, us));
         }
     }
-    let (best_split_k, best_us) = best.expect("no feasible split_k candidate");
-    AutotuneResult {
+    let (best_split_k, best_us) = best.ok_or_else(|| {
+        format!(
+            "no feasible split_k candidate for m={} n={} k={} (block_k={}, \
+             group_size={}): every factor in {SPLIT_K_CANDIDATES:?} violates \
+             the kernel's divisibility constraints",
+            shape.m, shape.n, shape.k, tiles.block_k, shape.group_size)
+    })?;
+    Ok(AutotuneResult {
         shape: *shape,
         device: dev.name.clone(),
         best_split_k,
         best_us,
         sweep,
-    }
+    })
 }
 
 /// Outcome of a wall-clock autotune run on the host execution backend.
@@ -68,57 +91,164 @@ pub struct HostAutotuneResult {
     pub m: usize,
     pub n: usize,
     pub k: usize,
-    /// Best splitting factor found (1 = data-parallel wins).
-    pub best_split_k: u32,
-    /// Measured kernel time at the best factor, microseconds (best of 3).
+    /// The winning config (decomposition + tiles + threads), ready to
+    /// hand to [`host_gemm_into`] / `model::GemmPlan`.
+    pub best: HostKernelConfig,
+    /// Measured time of the winner, microseconds (best of 3).
     pub best_us: f64,
-    /// (split_k, measured µs) for every candidate, in sweep order.
-    pub sweep: Vec<(u32, f64)>,
+    /// (config, measured µs) for every candidate, in sweep order.
+    pub sweep: Vec<(HostKernelConfig, f64)>,
 }
 
-/// Sweep `SPLIT_K_CANDIDATES` on the *executable* host backend
-/// ([`super::exec`]) and return the fastest — the real-time counterpart
-/// of [`autotune_split_k`], measuring wall-clock instead of simulating.
-///
-/// Candidates larger than the packed-row count are skipped (they would
-/// silently clamp); everything else is legal because the host kernel
-/// slices at 8-element granularity.
-pub fn autotune_split_k_host(a: &MatF32, q: &QuantizedLinear,
-                             tiles: &TileConfig, threads: usize)
-                             -> HostAutotuneResult {
-    let kp_total = (q.k / PACK_FACTOR).max(1);
-    let mut sweep = Vec::new();
-    let mut best: Option<(u32, f64)> = None;
-    for &sk in &SPLIT_K_CANDIDATES {
-        if sk as usize > kp_total {
-            continue;
-        }
-        let cfg = HostKernelConfig { tiles: *tiles, split_k: sk, threads };
-        // One warmup, then best-of-3 (min is the standard noise-robust
-        // statistic for short kernels). Deliberately not util::Bench:
-        // its run() prints a line per measurement, which a library
-        // search loop must not do.
-        std::hint::black_box(host_gemm(a, q, &cfg));
-        let mut best_run = f64::MAX;
-        for _ in 0..3 {
-            let t0 = Instant::now();
-            std::hint::black_box(host_gemm(a, q, &cfg));
-            best_run = best_run.min(t0.elapsed().as_secs_f64() * 1e6);
-        }
-        sweep.push((sk, best_run));
-        if best.map_or(true, |(_, b)| best_run < b) {
-            best = Some((sk, best_run));
+impl HostAutotuneResult {
+    /// Best splitting factor (1 when DP or StreamK won) — the paper's
+    /// headline knob, kept as an accessor for reporting.
+    pub fn best_split_k(&self) -> u32 {
+        self.best.split_k()
+    }
+}
+
+/// Tile geometries the host sweep crosses with the decompositions: the
+/// base config plus narrower/wider cache-blocking variants (the host
+/// executors have no divisibility constraints — slices cut at 8-element
+/// packed granularity — so every geometry is legal).
+fn host_tile_candidates(base: &TileConfig) -> Vec<TileConfig> {
+    let mut tiles = vec![*base];
+    for (bn, bk) in [(32u64, 128u64), (128, 512)] {
+        let t = TileConfig { block_n: bn, block_k: bk, ..*base };
+        if !tiles.contains(&t) {
+            tiles.push(t);
         }
     }
-    let (best_split_k, best_us) = best.expect("no feasible split_k candidate");
-    HostAutotuneResult {
+    tiles
+}
+
+/// Decomposition-aware wall-clock autotune on the *executable* host
+/// backend ([`super::exec`]) — the real-time counterpart of
+/// [`autotune_split_k`]. Sweeps
+/// `{DP, SplitK × SPLIT_K_CANDIDATES, StreamK × STREAMK_WORKER_CANDIDATES}`
+/// crossed with [`host_tile_candidates`] and the thread budget
+/// (`threads` if pinned, else {1, all cores}), and returns the fastest.
+///
+/// Every candidate is measured through the scratch-reusing
+/// [`host_gemm_into`] path — one persistent output and [`SplitKScratch`]
+/// across the whole sweep, one warmup call per candidate, then best of
+/// 3 — so rankings reflect the decode loop's allocation-free steady
+/// state, not the allocating wrapper the sweep used to time. SplitK
+/// factors larger than the packed-row count and StreamK span counts
+/// larger than the iteration space are skipped (they would silently
+/// clamp onto duplicates of smaller candidates).
+pub fn autotune_split_k_host(a: &MatF32, q: &QuantizedLinear,
+                             tiles: &TileConfig, threads: usize)
+                             -> Result<HostAutotuneResult, String> {
+    if a.rows == 0 || q.n == 0 || q.k == 0 {
+        return Err(format!(
+            "degenerate GEMM shape m={} n={} k={}: nothing to autotune",
+            a.rows, q.n, q.k));
+    }
+    let kp_total = (q.k / PACK_FACTOR).max(1);
+    // Thread-budget axis. A single-threaded candidate only ever wins on
+    // small problems (thread-spawn overhead vs useful work), so it is
+    // swept only below a FLOP cutoff — on big shapes a forced
+    // threads=1 run would dominate the sweep's wall-clock cost while
+    // having no chance of being selected.
+    let flops = 2.0 * a.rows as f64 * q.n as f64 * q.k as f64;
+    let thread_candidates: Vec<usize> = if threads > 0 {
+        vec![threads]
+    } else {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores > 1 && flops <= 64e6 { vec![1, cores] } else { vec![cores] }
+    };
+
+    // Persistent output + scratch: the measured calls are the same
+    // allocation-free path the serving decode loop runs.
+    let mut out = MatF32::zeros(a.rows, q.n);
+    let mut scratch = SplitKScratch::new();
+    let mut sweep: Vec<(HostKernelConfig, f64)> = Vec::new();
+    let mut best: Option<(HostKernelConfig, f64)> = None;
+
+    // StreamK span counts: the fixed candidates plus each swept thread
+    // budget, so "one persistent span per worker thread" — the
+    // decomposition's intended operating point — is always measured
+    // even on hosts whose core count is not a power of two.
+    let mut streamk_workers: Vec<u32> = STREAMK_WORKER_CANDIDATES.to_vec();
+    for &t in &thread_candidates {
+        if t > 1 && !streamk_workers.contains(&(t as u32)) {
+            streamk_workers.push(t as u32);
+        }
+    }
+
+    for tile in host_tile_candidates(tiles) {
+        let kp_chunk = ((tile.block_k as usize) / PACK_FACTOR).max(1);
+        let n_tiles = (q.n as u64).div_ceil(tile.block_n).max(1) as usize;
+        let total_units = n_tiles * kp_total.div_ceil(kp_chunk);
+
+        let mut decomps = vec![Decomposition::DataParallel];
+        decomps.extend(
+            SPLIT_K_CANDIDATES.iter()
+                .filter(|&&sk| sk > 1 && sk as usize <= kp_total)
+                .map(|&sk| Decomposition::SplitK { split_k: sk }));
+        decomps.extend(
+            streamk_workers.iter()
+                .filter(|&&w| (w as usize) <= total_units)
+                .map(|&w| Decomposition::StreamK { workers: w }));
+
+        for decomposition in decomps {
+            for &t in &thread_candidates {
+                let cfg = HostKernelConfig {
+                    tiles: tile,
+                    decomposition,
+                    threads: t,
+                };
+                // Untimed warmup sizes the scratch (its allocations
+                // must not pollute any measurement), then one timed
+                // steady-state run; a candidate already 3x slower than
+                // the current best is recorded at that single run and
+                // skips the best-of-3 refinement, so the sweep's cost
+                // concentrates on contenders. Min-of-runs is the
+                // standard noise-robust statistic for short kernels.
+                // Deliberately not util::Bench: its run() prints a line
+                // per measurement, which a library search loop must not
+                // do.
+                host_gemm_into(a, q, &cfg, &mut scratch, &mut out);
+                let t0 = Instant::now();
+                host_gemm_into(a, q, &cfg, &mut scratch, &mut out);
+                let first_us = t0.elapsed().as_secs_f64() * 1e6;
+                let prune = best
+                    .as_ref()
+                    .is_some_and(|&(_, b)| first_us > 3.0 * b);
+                let mut best_run = first_us;
+                if !prune {
+                    for _ in 0..2 {
+                        let t0 = Instant::now();
+                        host_gemm_into(a, q, &cfg, &mut scratch, &mut out);
+                        best_run =
+                            best_run.min(t0.elapsed().as_secs_f64() * 1e6);
+                    }
+                }
+                std::hint::black_box(&out);
+                sweep.push((cfg, best_run));
+                if best.as_ref().map_or(true, |&(_, b)| best_run < b) {
+                    best = Some((cfg, best_run));
+                }
+            }
+        }
+    }
+    let (best, best_us) = best.ok_or_else(|| {
+        format!("empty host autotune sweep for m={} n={} k={} (unreachable \
+                 for any legal W4 shape: DP is always a candidate)",
+                a.rows, q.n, q.k)
+    })?;
+    Ok(HostAutotuneResult {
         m: a.rows,
         n: q.n,
         k: q.k,
-        best_split_k,
+        best,
         best_us,
         sweep,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -131,7 +261,8 @@ mod tests {
     fn sweep_covers_feasible_candidates() {
         let dev = DeviceConfig::a100_40gb_pcie();
         let r = autotune_split_k(&dev, &GemmShape::square(16, 4096),
-                                 &TileConfig::paper_splitk());
+                                 &TileConfig::paper_splitk())
+            .expect("feasible shape");
         assert_eq!(r.sweep.len(), 5); // 4096 divisible by 64*16
         assert!(SPLIT_K_CANDIDATES.contains(&r.best_split_k));
     }
@@ -141,8 +272,23 @@ mod tests {
         let dev = DeviceConfig::a100_40gb_pcie();
         // k = 512: split 16 needs k % 1024 == 0 -> skipped.
         let r = autotune_split_k(&dev, &GemmShape::square(16, 512),
-                                 &TileConfig::paper_splitk());
+                                 &TileConfig::paper_splitk())
+            .expect("smaller splits remain feasible");
         assert!(r.sweep.iter().all(|&(sk, _)| sk != 16));
+    }
+
+    #[test]
+    fn fully_infeasible_shape_is_an_error_not_a_panic() {
+        // Regression: k = 100 violates k % (block_k * split_k) for every
+        // candidate (block_k = 64). The old `.expect("no feasible
+        // split_k candidate")` panicked here; the sweep must come back
+        // as a descriptive Err instead.
+        let dev = DeviceConfig::a100_40gb_pcie();
+        let r = autotune_split_k(&dev, &GemmShape::square(16, 100),
+                                 &TileConfig::paper_splitk());
+        let msg = r.expect_err("no candidate is feasible at k=100");
+        assert!(msg.contains("no feasible split_k candidate"), "{msg}");
+        assert!(msg.contains("k=100"), "{msg}");
     }
 
     #[test]
@@ -150,7 +296,8 @@ mod tests {
         // The headline: for skinny GEMMs a split > 1 wins on every device.
         for dev in DeviceConfig::paper_devices() {
             let r = autotune_split_k(&dev, &GemmShape::square(16, 4096),
-                                     &TileConfig::paper_splitk());
+                                     &TileConfig::paper_splitk())
+                .expect("feasible shape");
             assert!(r.best_split_k > 1, "{}: best {}", dev.name, r.best_split_k);
         }
     }
@@ -159,37 +306,91 @@ mod tests {
     fn best_is_min_of_sweep() {
         let dev = DeviceConfig::h100_pcie();
         let r = autotune_split_k(&dev, &GemmShape::square(16, 8192),
-                                 &TileConfig::paper_splitk());
+                                 &TileConfig::paper_splitk())
+            .expect("feasible shape");
         let min = r.sweep.iter().map(|&(_, us)| us).fold(f64::MAX, f64::min);
         assert_eq!(r.best_us, min);
     }
 
-    #[test]
-    fn host_autotune_measures_real_kernels() {
-        let mut rng = Rng::seed_from(31);
-        let nk = 256;
+    fn host_case(m: usize, nk: usize, group: usize, seed: u64)
+                 -> (MatF32, QuantizedLinear) {
+        let mut rng = Rng::seed_from(seed);
         let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
-        let q = quantize_weight(&w, 64);
+        let q = quantize_weight(&w, group);
         let a = MatF32::new(
-            2, nk, (0..2 * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
-        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 1);
-        // 256/8 = 32 packed rows: every candidate (1..16) is feasible.
-        assert_eq!(r.sweep.len(), SPLIT_K_CANDIDATES.len());
+            m, nk, (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        (a, q)
+    }
+
+    #[test]
+    fn host_sweep_covers_all_three_families() {
+        let (a, q) = host_case(2, 256, 64, 31);
+        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 1)
+            .expect("legal shape");
+        // 256/8 = 32 packed rows: every family has feasible candidates.
+        let has = |f: fn(&Decomposition) -> bool| {
+            r.sweep.iter().any(|(cfg, _)| f(&cfg.decomposition))
+        };
+        assert!(has(|d| matches!(d, Decomposition::DataParallel)));
+        assert!(has(|d| matches!(d, Decomposition::SplitK { .. })));
+        assert!(has(|d| matches!(d, Decomposition::StreamK { .. })));
+        // Tile geometry is swept too.
+        let widths: std::collections::HashSet<u64> =
+            r.sweep.iter().map(|(cfg, _)| cfg.tiles.block_n).collect();
+        assert!(widths.len() > 1, "expected >1 block_n in {widths:?}");
         assert!(r.sweep.iter().all(|&(_, us)| us > 0.0));
         let min = r.sweep.iter().map(|&(_, us)| us).fold(f64::MAX, f64::min);
         assert_eq!(r.best_us, min);
-        assert_eq!((r.m, r.n, r.k), (2, nk, nk));
+        assert_eq!((r.m, r.n, r.k), (2, 256, 256));
     }
 
     #[test]
-    fn host_autotune_skips_oversized_splits() {
+    fn host_autotune_skips_oversized_candidates() {
+        // k = 64 -> 8 packed rows: split 16 must be skipped; StreamK
+        // span counts beyond the iteration space too.
         let mut rng = Rng::seed_from(32);
-        // k = 64 -> 8 packed rows: split 16 must be skipped.
         let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.05));
         let q = quantize_weight(&w, 32);
         let a = MatF32::new(1, 64,
                             (0..64).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
-        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 1);
-        assert!(r.sweep.iter().all(|&(sk, _)| sk != 16));
+        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 1)
+            .expect("legal shape");
+        assert!(r.sweep.iter().all(|(cfg, _)| cfg.split_k() != 16));
+        for (cfg, _) in &r.sweep {
+            if let Decomposition::StreamK { workers } = cfg.decomposition {
+                let kp_chunk = (cfg.tiles.block_k as usize / 8).max(1);
+                let units = (q.n as u64).div_ceil(cfg.tiles.block_n) as usize
+                    * (q.k / 8).div_ceil(kp_chunk);
+                assert!(workers as usize <= units,
+                        "streamk{workers} exceeds {units} units");
+            }
+        }
+    }
+
+    #[test]
+    fn host_autotune_never_errs_on_awkward_legal_shapes() {
+        // k % block_k != 0 and group not a power of two: the host
+        // executors have no divisibility constraints, so the sweep must
+        // always produce a winner (acceptance bar: "returns a config
+        // from all three families without panicking on any legal shape").
+        let mut rng = Rng::seed_from(33);
+        let (k, n, group) = (72usize, 24usize, 24usize);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let a = MatF32::new(3, k,
+                            (0..3 * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 2)
+            .expect("host sweep is total on legal W4 shapes");
+        assert!(r.sweep.len() >= 3);
+        assert!(r.best_us > 0.0);
+    }
+
+    #[test]
+    fn host_autotune_pins_threads_when_requested() {
+        let (a, q) = host_case(1, 64, 32, 34);
+        let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 3)
+            .expect("legal shape");
+        assert!(r.sweep.iter().all(|(cfg, _)| cfg.threads == 3));
+        assert_eq!(r.best.threads, 3);
     }
 }

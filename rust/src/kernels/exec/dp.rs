@@ -37,11 +37,7 @@ pub fn fused_gemm_dp_into(a: &MatF32, q: &QuantizedLinear,
     let bn = (cfg.tiles.block_n as usize).max(1);
     let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
 
-    if out.rows != m || out.cols != n {
-        *out = MatF32::zeros(m, n);
-    } else {
-        out.data.fill(0.0);
-    }
+    super::reset_output(out, m, n);
     if m == 0 || n == 0 || kp_total == 0 {
         return;
     }

@@ -17,24 +17,55 @@ use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 use super::fused::fused_tile;
 use super::HostKernelConfig;
 
-/// Reusable slice-partial buffers for [`fused_gemm_splitk_into`].
+/// Reusable partial-sum buffers for the k-splitting executors
+/// ([`fused_gemm_splitk_into`] slice partials and
+/// [`fused_gemm_streamk_into`](super::fused_gemm_streamk_into) span
+/// fixups).
 ///
 /// The SplitK executor needs `split_k` private `m × n` partial matrices
-/// per call; a decode step issues several skinny GEMMs back to back, so
-/// callers on that path keep one scratch alive and amortize the
-/// allocations (the buffers are zero-filled, never freshly allocated,
-/// when shapes repeat). Reuse cannot change output bits: partials start
-/// at exactly `0.0` either way and the accumulation/reduction order is
-/// unchanged.
+/// per call and StreamK one `m × block_n` contribution buffer per
+/// span-tile descriptor; a decode step issues several skinny GEMMs back
+/// to back, so callers on that path keep one scratch alive and amortize
+/// the allocations (the buffers are zero-filled, never freshly
+/// allocated, when shapes repeat). Reuse cannot change output bits:
+/// buffers start at exactly `0.0` either way and the
+/// accumulation/reduction order is unchanged.
 #[derive(Debug, Default)]
 pub struct SplitKScratch {
-    partials: Vec<MatF32>,
+    pub(crate) partials: Vec<MatF32>,
+    /// StreamK span-contribution buffers (disjoint from `partials` so
+    /// an autotune sweep alternating decompositions does not thrash
+    /// either family's steady-state shapes).
+    pub(crate) fixups: Vec<MatF32>,
+    /// Buffer (re)allocation events — see [`Self::alloc_events`].
+    pub(crate) allocs: u64,
 }
 
 impl SplitKScratch {
     /// Empty scratch; buffers are sized lazily on first use.
     pub fn new() -> Self {
-        SplitKScratch { partials: Vec::new() }
+        SplitKScratch::default()
+    }
+
+    /// How many buffer allocations (fresh or reshaping) this scratch has
+    /// performed so far. At a steady state — repeated calls with the
+    /// same shape and config — the count must not grow after the first
+    /// call: the serving decode loop and the autotuner's timed
+    /// measurements both rely on the reused path being allocation-free.
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
+    }
+}
+
+/// Zero `buf` in place, reallocating (and counting the event in
+/// `allocs`) only when the requested shape differs.
+pub(crate) fn ensure_zeroed(buf: &mut MatF32, rows: usize, cols: usize,
+                            allocs: &mut u64) {
+    if buf.rows != rows || buf.cols != cols {
+        *buf = MatF32::zeros(rows, cols);
+        *allocs += 1;
+    } else {
+        buf.data.fill(0.0);
     }
 }
 
@@ -65,15 +96,11 @@ pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
     cfg.check_shapes(a, q);
     let (m, n) = (a.rows, q.n);
     let kp_total = q.k / PACK_FACTOR;
-    let split = (cfg.split_k.max(1) as usize).min(kp_total.max(1));
+    let split = (cfg.split_k() as usize).min(kp_total.max(1));
     let bn = (cfg.tiles.block_n as usize).max(1);
     let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
 
-    if out.rows != m || out.cols != n {
-        *out = MatF32::zeros(m, n);
-    } else {
-        out.data.fill(0.0);
-    }
+    super::reset_output(out, m, n);
     if m == 0 || n == 0 || kp_total == 0 {
         return;
     }
@@ -89,18 +116,16 @@ pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
         .map(|s| (s * kp_total / split, (s + 1) * kp_total / split))
         .collect();
     // Size/zero the reusable partials for this call's (split, m, n).
-    scratch.partials.truncate(split);
-    for p in scratch.partials.iter_mut() {
-        if p.rows != m || p.cols != n {
-            *p = MatF32::zeros(m, n);
-        } else {
-            p.data.fill(0.0);
-        }
+    let SplitKScratch { partials, allocs, .. } = scratch;
+    partials.truncate(split);
+    for p in partials.iter_mut() {
+        ensure_zeroed(p, m, n, allocs);
     }
-    while scratch.partials.len() < split {
-        scratch.partials.push(MatF32::zeros(m, n));
+    while partials.len() < split {
+        partials.push(MatF32::zeros(m, n));
+        *allocs += 1;
     }
-    let partials: &mut [MatF32] = &mut scratch.partials[..split];
+    let partials: &mut [MatF32] = &mut partials[..split];
 
     // Assign contiguous, balanced slice ranges to workers up front, so
     // every reference handed to a scoped thread is created out here.

@@ -1,0 +1,315 @@
+//! StreamK host executor: a fixed number of persistent workers each own
+//! a contiguous span of the flattened `(n-tile × k-slice)` iteration
+//! space — the CPU analog of StreamK's one-persistent-block-per-SM story
+//! (Osama et al. 2023; the paper's §4 future-work direction, simulated
+//! by `kernels::streamk_launch` and executed here).
+//!
+//! Where DP assigns whole output tiles and SplitK a fixed k-split of
+//! every tile, StreamK assigns *MAC iterations*: the iteration space is
+//! `n_tiles × k_units` (an m-row output tile per `block_n` columns,
+//! reduced in `block_k`-sized k slices), flattened tile-major, and cut
+//! into `workers` equal contiguous spans. A span therefore covers the
+//! tail slices of one tile, a run of whole tiles, and the head slices of
+//! another — load balance is perfect up to one k-slice of skew
+//! regardless of how the tile count divides the worker count (the wave
+//! quantization SplitK suffers at awkward shapes simply cannot occur).
+//!
+//! Every span accumulates each tile contribution into its own
+//! statically-assigned fixup buffer (the deterministic stand-in for the
+//! GPU's partial-sum atomics), and a sequential merge pass then adds the
+//! contributions tile by tile in ascending span order — which, because
+//! the flattening is tile-major, is ascending k order. Consequences:
+//!
+//! * the span partition depends only on `(workers, shape, tiles)`, never
+//!   on the OS-thread count executing the spans, so outputs are
+//!   **bit-identical across thread counts under a fixed plan** — the
+//!   same contract the SplitK executor guarantees;
+//! * boundary tiles merge in a fixed order through fixed buffers — no
+//!   scheduling-dependent float rounding, unlike real atomic adds;
+//! * `k % block_k != 0` and `n % block_n != 0` just shorten the last
+//!   k-slice / narrow the last tile.
+
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
+
+use super::fused::fused_tile;
+use super::splitk::{ensure_zeroed, SplitKScratch};
+use super::HostKernelConfig;
+
+/// One span-tile contribution: this span reduces packed k rows
+/// `kp0..kp1` of output tile `tile`.
+type Contribution = (usize, usize, usize);
+
+/// Fused W4A16 GEMM, StreamK decomposition: `C = A @ dequant(Q)`.
+///
+/// `cfg.decomposition` selects the span count (`workers`, clamped to the
+/// iteration-space size); `cfg.threads` only bounds the OS threads that
+/// execute the spans and cannot change a single output bit.
+pub fn fused_gemm_streamk(a: &MatF32, q: &QuantizedLinear,
+                          cfg: &HostKernelConfig) -> MatF32 {
+    let mut out = MatF32::zeros(a.rows, q.n);
+    fused_gemm_streamk_into(a, q, cfg, &mut SplitKScratch::new(), &mut out);
+    out
+}
+
+/// [`fused_gemm_streamk`] writing into a caller-owned output and reusing
+/// caller-owned fixup buffers — the allocation-free entry point the
+/// decode path's per-worker scratch rides on. `out` is resized (not
+/// accumulated) to `m × n`. Bit-identical to the allocating wrapper.
+pub fn fused_gemm_streamk_into(a: &MatF32, q: &QuantizedLinear,
+                               cfg: &HostKernelConfig,
+                               scratch: &mut SplitKScratch,
+                               out: &mut MatF32) {
+    cfg.check_shapes(a, q);
+    let (m, n) = (a.rows, q.n);
+    let kp_total = q.k / PACK_FACTOR;
+
+    super::reset_output(out, m, n);
+    if m == 0 || n == 0 || kp_total == 0 {
+        return;
+    }
+
+    let bn = (cfg.tiles.block_n as usize).max(1);
+    let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
+    let n_tiles = n.div_ceil(bn);
+    let k_units = kp_total.div_ceil(kp_chunk);
+    let total_units = n_tiles * k_units;
+    let spans = (cfg.streamk_workers() as usize).max(1).min(total_units);
+    let tile_width = |tile: usize| ((tile + 1) * bn).min(n) - tile * bn;
+
+    // Statically partition the flattened (tile-major) iteration space
+    // into `spans` contiguous, balanced spans, and expand each span into
+    // its per-tile contributions. `span_descs[s]` is span `s`'s index
+    // range into `descs`; ranges are consecutive, so the fixup buffers
+    // below can be handed to workers as disjoint contiguous slices.
+    let mut descs: Vec<Contribution> = Vec::new();
+    let mut span_descs: Vec<(usize, usize)> = Vec::with_capacity(spans);
+    for s in 0..spans {
+        let u0 = s * total_units / spans;
+        let u1 = (s + 1) * total_units / spans;
+        let d0 = descs.len();
+        let mut u = u0;
+        while u < u1 {
+            let tile = u / k_units;
+            let s0 = u % k_units;
+            let s1 = (s0 + (u1 - u)).min(k_units);
+            let kp0 = s0 * kp_chunk;
+            let kp1 = (s1 * kp_chunk).min(kp_total);
+            descs.push((tile, kp0, kp1));
+            u += s1 - s0;
+        }
+        span_descs.push((d0, descs.len()));
+    }
+
+    // Size/zero one fixup buffer per contribution (reused across calls;
+    // shapes are stable for a fixed shape + config, so steady state is
+    // allocation-free).
+    let SplitKScratch { fixups, allocs, .. } = scratch;
+    fixups.truncate(descs.len());
+    for (buf, &(tile, _, _)) in fixups.iter_mut().zip(&descs) {
+        ensure_zeroed(buf, m, tile_width(tile), allocs);
+    }
+    while fixups.len() < descs.len() {
+        let (tile, _, _) = descs[fixups.len()];
+        fixups.push(MatF32::zeros(m, tile_width(tile)));
+        *allocs += 1;
+    }
+
+    // Execute the spans on up to `threads` OS threads, each thread
+    // owning a contiguous run of spans (and thus a contiguous, disjoint
+    // slice of the fixup buffers). Which thread runs which span cannot
+    // matter: every contribution is a single-threaded ascending-k
+    // `fused_tile` pass into its own buffer.
+    let workers = cfg.effective_threads().min(spans).max(1);
+    let mut assignments: Vec<(&mut [MatF32], &[Contribution])> =
+        Vec::with_capacity(workers);
+    {
+        let mut rest: &mut [MatF32] = &mut fixups[..descs.len()];
+        let mut next_span = 0usize;
+        let mut desc_off = 0usize;
+        for w in 0..workers {
+            let count = (spans - next_span) / (workers - w);
+            let d_end = span_descs[next_span + count - 1].1;
+            let (mine, tail) = rest.split_at_mut(d_end - desc_off);
+            rest = tail;
+            assignments.push((mine, &descs[desc_off..d_end]));
+            desc_off = d_end;
+            next_span += count;
+        }
+    }
+    std::thread::scope(|scope| {
+        for (bufs, my_descs) in assignments {
+            scope.spawn(move || {
+                for (buf, &(tile, kp0, kp1)) in bufs.iter_mut().zip(my_descs) {
+                    let c0 = tile * bn;
+                    let c1 = (c0 + bn).min(n);
+                    fused_tile(a, q, 0, m, c0, c1, kp0, kp1, kp_chunk,
+                               &mut buf.data, c1 - c0);
+                }
+            });
+        }
+    });
+
+    // Deterministic merge: contributions in desc order, which per tile
+    // is ascending span order == ascending k order (the reproducible
+    // stand-in for StreamK's boundary-tile atomic fixups).
+    for (buf, &(tile, _, _)) in fixups[..descs.len()].iter().zip(&descs) {
+        let c0 = tile * bn;
+        let w = tile_width(tile);
+        for r in 0..m {
+            let dst = &mut out.data[r * n + c0..r * n + c0 + w];
+            for (d, &s) in dst.iter_mut().zip(&buf.data[r * w..(r + 1) * w]) {
+                *d += s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::TileConfig;
+    use crate::quant::{quantize_weight, w4a16_gemm_ref};
+    use crate::util::Rng;
+
+    fn case(m: usize, k: usize, n: usize, group: usize, seed: u64)
+            -> (MatF32, QuantizedLinear) {
+        let mut rng = Rng::seed_from(seed);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let a = MatF32::new(
+            m, k, (0..m * k).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        (a, q)
+    }
+
+    #[test]
+    fn matches_naive_reference_all_worker_counts() {
+        let (a, q) = case(3, 192, 24, 32, 50);
+        // Small tiles so the iteration space is genuinely multi-span:
+        // n_tiles = 3, k_units = 6 -> 18 units.
+        let tiles =
+            TileConfig { block_m: 16, block_n: 8, block_k: 32, warps: 1, stages: 1 };
+        let want = w4a16_gemm_ref(&a, &q);
+        for workers in [1u32, 2, 3, 4, 7, 8, 16] {
+            let cfg = HostKernelConfig::streamk(workers).with_tiles(tiles);
+            let got = fused_gemm_streamk(&a, &q, &cfg);
+            assert!(got.max_abs_diff(&want) <= 1e-4, "workers={workers}");
+        }
+        // The default (wide) host tiles must agree too, even when they
+        // collapse the space to a single span.
+        let got = fused_gemm_streamk(&a, &q, &HostKernelConfig::streamk(4));
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn uneven_k_and_n_tiles_cover_everything() {
+        // k/8 = 9 packed rows with block_k = 32 (4-row slices) -> the
+        // last k unit is short (1 row); n = 24 with block_n = 5 ->
+        // tiles of width 5/5/5/5/4.
+        let (a, q) = case(2, 72, 24, 24, 51);
+        let tiles =
+            TileConfig { block_m: 16, block_n: 5, block_k: 32, warps: 1, stages: 1 };
+        let want = w4a16_gemm_ref(&a, &q);
+        for workers in [1u32, 3, 5, 11] {
+            let cfg = HostKernelConfig::streamk(workers).with_tiles(tiles);
+            let got = fused_gemm_streamk(&a, &q, &cfg);
+            assert!(got.max_abs_diff(&want) <= 1e-4, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn thread_count_is_bit_invariant_under_fixed_plan() {
+        // The StreamK determinism contract: the span partition is fixed
+        // by `workers`; the OS-thread budget executing it must not
+        // change a single bit. Tiles chosen so the 8 spans are real
+        // (n_tiles = 4 x k_units = 4 -> 16 units).
+        let (a, q) = case(1, 256, 64, 64, 52);
+        let tiles =
+            TileConfig { block_m: 16, block_n: 16, block_k: 64, warps: 1, stages: 1 };
+        let cfg = HostKernelConfig::streamk(8).with_tiles(tiles);
+        let base = fused_gemm_streamk(&a, &q, &cfg.with_threads(1));
+        for threads in [2, 3, 5, 8, 13] {
+            let got = fused_gemm_streamk(&a, &q, &cfg.with_threads(threads));
+            assert_eq!(base.data, got.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn single_span_matches_dp_bitwise() {
+        // One span owns the whole iteration space: every tile is a
+        // single full-k contribution merged into a zeroed output — the
+        // exact per-element order DP runs (m <= block_m keeps DP's row
+        // tiling trivial too).
+        let (a, q) = case(4, 128, 32, 32, 53);
+        let st = fused_gemm_streamk(&a, &q, &HostKernelConfig::streamk(1));
+        let dp = crate::kernels::fused_gemm_dp(
+            &a, &q, &HostKernelConfig::dp().with_threads(1));
+        assert_eq!(st.data, dp.data);
+    }
+
+    #[test]
+    fn workers_beyond_iteration_space_clamp() {
+        // 2 packed k rows (1 unit at block_k = 256) x 1 n-tile -> the
+        // span count clamps to the single unit.
+        let (a, q) = case(2, 16, 8, 8, 54);
+        let want = w4a16_gemm_ref(&a, &q);
+        let got = fused_gemm_streamk(&a, &q, &HostKernelConfig::streamk(64));
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // One scratch carried across calls — including shape and worker
+        // changes between calls — must reproduce the fresh-scratch
+        // result bit for bit (the decode path reuses scratch per step).
+        let mut scratch = SplitKScratch::new();
+        let tiles =
+            TileConfig { block_m: 16, block_n: 16, block_k: 64, warps: 1, stages: 1 };
+        for (seed, m, k, n, group, workers) in [
+            (60u64, 1usize, 256usize, 64usize, 64usize, 8u32),
+            (61, 4, 128, 32, 32, 4),
+            (62, 1, 256, 64, 64, 8),
+            (63, 2, 64, 16, 16, 2),
+        ] {
+            let (a, q) = case(m, k, n, group, seed);
+            let cfg = HostKernelConfig::streamk(workers)
+                .with_tiles(tiles)
+                .with_threads(2);
+            let fresh = fused_gemm_streamk(&a, &q, &cfg);
+            let mut out = MatF32::zeros(0, 0);
+            fused_gemm_streamk_into(&a, &q, &cfg, &mut scratch, &mut out);
+            assert_eq!(fresh.data, out.data, "seed={seed}");
+            assert_eq!((out.rows, out.cols), (m, n));
+        }
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        // Warmup sizes the fixup buffers; repeated same-shape calls must
+        // not allocate again (the autotuner times exactly this path).
+        let (a, q) = case(2, 256, 64, 64, 64);
+        let tiles =
+            TileConfig { block_m: 16, block_n: 16, block_k: 64, warps: 1, stages: 1 };
+        let cfg = HostKernelConfig::streamk(4).with_tiles(tiles).with_threads(2);
+        let mut scratch = SplitKScratch::new();
+        let mut out = MatF32::zeros(2, 64);
+        fused_gemm_streamk_into(&a, &q, &cfg, &mut scratch, &mut out);
+        let after_warmup = scratch.alloc_events();
+        assert!(after_warmup > 0, "warmup must have sized the buffers");
+        for _ in 0..3 {
+            fused_gemm_streamk_into(&a, &q, &cfg, &mut scratch, &mut out);
+        }
+        assert_eq!(scratch.alloc_events(), after_warmup,
+                   "steady-state StreamK calls must not allocate fixups");
+    }
+
+    #[test]
+    fn wide_m_uses_narrow_tiles() {
+        let (a, q) = case(16, 128, 40, 64, 55);
+        let tiles =
+            TileConfig { block_m: 16, block_n: 8, block_k: 32, warps: 1, stages: 1 };
+        let cfg = HostKernelConfig::streamk(6).with_tiles(tiles);
+        let want = w4a16_gemm_ref(&a, &q);
+        let got = fused_gemm_streamk(&a, &q, &cfg);
+        assert!(got.max_abs_diff(&want) <= 1e-4);
+    }
+}

@@ -18,10 +18,12 @@ mod streamk;
 mod tiles;
 
 pub use autotune::{autotune_split_k, autotune_split_k_host, AutotuneResult,
-                   HostAutotuneResult, SPLIT_K_CANDIDATES};
+                   HostAutotuneResult, SPLIT_K_CANDIDATES,
+                   STREAMK_WORKER_CANDIDATES};
 pub use dataparallel::dp_launch;
 pub use exec::{fused_gemm_dp, fused_gemm_dp_into, fused_gemm_splitk,
-               fused_gemm_splitk_into, host_gemm, host_gemm_into,
+               fused_gemm_splitk_into, fused_gemm_streamk,
+               fused_gemm_streamk_into, host_gemm, host_gemm_into,
                host_gemm_multi, HostKernelConfig, SplitKScratch};
 pub use resources::{resource_usage, ResourceUsage, PAD_FACTOR};
 pub use splitk::splitk_launch;

@@ -37,7 +37,9 @@ pub fn resource_usage(tiles: &TileConfig, decomp: Decomposition) -> ResourceUsag
     let stage_term = 9 * tiles.stages as u64 * (tiles.block_k / 32);
     let dp_surcharge = match decomp {
         Decomposition::DataParallel => 22,
-        Decomposition::SplitK { .. } => 0,
+        // SplitK and StreamK share the slice-accumulator register shape
+        // (partial tile + merge bookkeeping).
+        Decomposition::SplitK { .. } | Decomposition::StreamK { .. } => 0,
     };
     let regs = 40 + 4 * acc + stage_term + dp_surcharge;
 

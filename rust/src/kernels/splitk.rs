@@ -63,7 +63,11 @@ pub(crate) fn build_gemm_launch(dev: &DeviceConfig, shape: &GemmShape,
     // tile through the L2 atomic path.
     let atomic_bytes_per_block = match decomp {
         Decomposition::DataParallel => 0.0,
-        Decomposition::SplitK { .. } => 2.0 * tile_bytes,
+        // StreamK boundary fixups ride the same L2 atomic RMW path as
+        // SplitK's partial-sum merge.
+        Decomposition::SplitK { .. } | Decomposition::StreamK { .. } => {
+            2.0 * tile_bytes
+        }
     };
     let l2_bytes_per_block = dram_bytes_per_block
         + atomic_bytes_per_block

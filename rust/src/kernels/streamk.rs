@@ -27,7 +27,7 @@ use super::{GemmShape, TileConfig};
 /// (resource-limited residency, the StreamK grid-sizing rule).
 pub fn streamk_residency(dev: &DeviceConfig, tiles: &TileConfig) -> u32 {
     // Occupancy needs a launch; geometry fields don't affect the limits.
-    let res = resource_usage(tiles, Decomposition::SplitK { split_k: 2 });
+    let res = resource_usage(tiles, Decomposition::StreamK { workers: 2 });
     let probe = KernelLaunch {
         name: "streamk-probe".into(),
         grid: 1,
@@ -40,7 +40,7 @@ pub fn streamk_residency(dev: &DeviceConfig, tiles: &TileConfig) -> u32 {
         atomic_bytes_per_block: 0.0,
         inner_iters: 1,
         stages: tiles.stages,
-        decomposition: Decomposition::SplitK { split_k: 2 },
+        decomposition: Decomposition::StreamK { workers: 2 },
         output_tiles: 1,
     };
     Occupancy::compute(dev, &probe).blocks_per_sm.max(1)
@@ -73,7 +73,7 @@ pub fn streamk_launch(dev: &DeviceConfig, shape: &GemmShape,
     let boundary_tiles = grid.min(output_tiles) as f64;
     let atomic_total = 2.0 * boundary_tiles * 2.0 * tile_bytes;
 
-    let res = resource_usage(tiles, Decomposition::SplitK { split_k: 2 });
+    let res = resource_usage(tiles, Decomposition::StreamK { workers: 2 });
     // Effective writers per tile (drives the contention model): spread of
     // boundaries over tiles, never below 1.
     let writers = (1 + (grid / output_tiles.max(1)) as u32).min(8);
@@ -90,7 +90,7 @@ pub fn streamk_launch(dev: &DeviceConfig, shape: &GemmShape,
         atomic_bytes_per_block: atomic_total / grid as f64,
         inner_iters: iters_per_block as u32,
         stages: tiles.stages,
-        decomposition: Decomposition::SplitK { split_k: writers },
+        decomposition: Decomposition::StreamK { workers: writers },
         output_tiles,
     }
 }

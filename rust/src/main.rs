@@ -6,8 +6,8 @@
 //!                       [--requests N] [--max-new N]
 //! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
 //!                       [--m M] [--nk NK] [--iters N]
-//! splitk-w4a16 hostgemm [--m M] [--nk NK] [--split-k S] [--threads T]
-//!                       [--iters N]
+//! splitk-w4a16 hostgemm [--m M] [--nk NK] [--split-k S] [--workers W]
+//!                       [--threads T] [--iters N]
 //! splitk-w4a16 simulate [--device a100-40|a100-80|h100] [--m M]
 //!                       [--nk NK] [--split-k S]
 //! splitk-w4a16 tables   [all|t1..t6|f9|f10|t7|t8|t9]
@@ -22,8 +22,9 @@ use splitk_w4a16::config::ServeConfig;
 use splitk_w4a16::coordinator::Coordinator;
 use splitk_w4a16::gpusim::{simulate, DeviceConfig};
 use splitk_w4a16::kernels::{autotune_split_k_host, dp_launch, fused_gemm_dp,
-                            fused_gemm_splitk, host_gemm, splitk_launch,
-                            GemmShape, HostKernelConfig, TileConfig};
+                            fused_gemm_splitk, fused_gemm_streamk, host_gemm,
+                            splitk_launch, GemmShape, HostKernelConfig,
+                            TileConfig};
 use splitk_w4a16::quant::{quantize_weight, w4a16_gemm_ref, MatF32,
                           QuantizedLinear};
 use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
@@ -165,12 +166,16 @@ fn group_for(nk: usize) -> Result<usize> {
 
 /// Demo of the executable fused W4A16 host backend — runs everywhere,
 /// no artifacts or PJRT needed: naive materialize-then-GEMM vs fused
-/// data-parallel vs fused SplitK, verified against the naive oracle.
+/// data-parallel vs fused SplitK vs fused StreamK, verified against the
+/// naive oracle.
 fn hostgemm(args: &Args) -> Result<()> {
     let m: usize = args.opt_num("m", 16)?;
     let nk: usize = args.opt_num("nk", 4096)?;
     let split_k: u32 = args.opt_num("split-k", 4)?;
     let threads: usize = args.opt_num("threads", 0)?;
+    // StreamK span count; 0 = one persistent span per worker thread
+    // (the CPU analog of one block per SM residency slot).
+    let workers: u32 = args.opt_num("workers", 0)?;
     let iters: usize = args.opt_num("iters", 5)?.max(1);
     let group = group_for(nk)?;
     ensure!(m >= 1, "--m must be >= 1");
@@ -188,17 +193,26 @@ fn hostgemm(args: &Args) -> Result<()> {
 
     let dp_cfg = HostKernelConfig::dp().with_threads(threads);
     let sk_cfg = HostKernelConfig::splitk(split_k).with_threads(threads);
+    let workers = if workers > 0 {
+        workers
+    } else {
+        dp_cfg.effective_threads() as u32
+    };
+    let st_cfg = HostKernelConfig::streamk(workers).with_threads(threads);
 
-    // Correctness first: both fused variants vs the naive oracle. (These
+    // Correctness first: all fused variants vs the naive oracle. (These
     // runs double as the warmup for the timed loops below.)
     let want = w4a16_gemm_ref(&a, &q);
     let dp = fused_gemm_dp(&a, &q, &dp_cfg);
     let sk = fused_gemm_splitk(&a, &q, &sk_cfg);
-    let err = dp.max_abs_diff(&want).max(sk.max_abs_diff(&want));
+    let st = fused_gemm_streamk(&a, &q, &st_cfg);
+    let err = dp.max_abs_diff(&want)
+        .max(sk.max_abs_diff(&want))
+        .max(st.max_abs_diff(&want));
     println!("max |err| vs naive oracle: {err:.2e}");
     ensure!(err < 1e-3, "fused backend disagrees with the oracle");
 
-    // All three paths timed identically: warmed up above, averaged over
+    // All four paths timed identically: warmed up above, averaged over
     // the same iteration count.
     let time = |f: &mut dyn FnMut()| -> f64 {
         let t0 = std::time::Instant::now();
@@ -216,14 +230,20 @@ fn hostgemm(args: &Args) -> Result<()> {
     let sk_s = time(&mut || {
         std::hint::black_box(fused_gemm_splitk(&a, &q, &sk_cfg));
     });
+    let st_s = time(&mut || {
+        std::hint::black_box(fused_gemm_streamk(&a, &q, &st_cfg));
+    });
     let flops = 2.0 * m as f64 * nk as f64 * nk as f64;
-    println!("naive ref      : {:>9.2} ms  ({:.2} GFLOP/s)",
+    println!("naive ref       : {:>9.2} ms  ({:.2} GFLOP/s)",
              naive_s * 1e3, flops / naive_s / 1e9);
-    println!("fused DP       : {:>9.2} ms  ({:.2} GFLOP/s)  {:.2}x vs naive",
+    println!("fused DP        : {:>9.2} ms  ({:.2} GFLOP/s)  {:.2}x vs naive",
              dp_s * 1e3, flops / dp_s / 1e9, naive_s / dp_s);
-    println!("fused SplitK {split_k:<2}: {:>9.2} ms  ({:.2} GFLOP/s)  \
+    println!("fused SplitK {split_k:<3}: {:>9.2} ms  ({:.2} GFLOP/s)  \
               {:.2}x vs naive, {:.2}x vs DP",
              sk_s * 1e3, flops / sk_s / 1e9, naive_s / sk_s, dp_s / sk_s);
+    println!("fused StreamK {workers:<2}: {:>9.2} ms  ({:.2} GFLOP/s)  \
+              {:.2}x vs naive, {:.2}x vs DP",
+             st_s * 1e3, flops / st_s / 1e9, naive_s / st_s, dp_s / st_s);
     Ok(())
 }
 
@@ -292,7 +312,9 @@ fn print_tables(args: &Args) -> Result<()> {
 fn autotune(args: &Args) -> Result<()> {
     let m: u64 = args.opt_num("m", 16)?;
     let nk: u64 = args.opt_num("nk", 4096)?;
-    for r in tables::autotune_all_devices(m, nk) {
+    let results = tables::autotune_all_devices(m, nk)
+        .map_err(|e| anyhow!("simulated autotune failed: {e}"))?;
+    for r in results {
         println!("{}: best split_k = {} ({:.2} us)", r.device, r.best_split_k,
                  r.best_us);
         for (sk, us) in &r.sweep {
@@ -326,11 +348,15 @@ fn autotune(args: &Args) -> Result<()> {
                         (0..(m * nk) as usize)
                             .map(|_| rng.uniform_f32(-1.0, 1.0))
                             .collect());
-    let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 0);
-    println!("host (measured): best split_k = {} ({:.2} us)",
-             r.best_split_k, r.best_us);
-    for (sk, us) in &r.sweep {
-        println!("    split_k={sk:>2}: {us:>8.2} us");
+    // Decomposition-aware sweep: {DP, SplitK x factor, StreamK x
+    // workers} x tile geometry x thread budget, timed on the
+    // scratch-reusing serving path.
+    let r = autotune_split_k_host(&a, &q, &HostKernelConfig::host_tiles(), 0)
+        .map_err(|e| anyhow!("host autotune failed: {e}"))?;
+    println!("host (measured): best {} ({:.2} us, split_k = {})",
+             r.best.label(), r.best_us, r.best_split_k());
+    for (cfg, us) in &r.sweep {
+        println!("    {:<26} {us:>8.2} us", cfg.label());
     }
     Ok(())
 }

@@ -69,6 +69,13 @@ impl GemmPlan {
     }
 
     /// Config for this activation/layer pair (tuning it first if new).
+    ///
+    /// Autotune mode runs the decomposition-aware wall-clock sweep
+    /// ({DP, SplitK × factor, StreamK × workers} × tile geometry ×
+    /// threads) and caches the winning config whole. An autotune error
+    /// (degenerate shape) falls back to the data-parallel config — the
+    /// serving loop must never die because a sweep had nothing to
+    /// measure.
     pub fn config_for(&mut self, a: &MatF32, q: &QuantizedLinear)
                       -> HostKernelConfig {
         match self.mode {
@@ -76,11 +83,21 @@ impl GemmPlan {
             PlanMode::Autotune { threads } => {
                 *self.cache.entry((a.rows, q.n, q.k)).or_insert_with(|| {
                     let tiles = HostKernelConfig::host_tiles();
-                    let r = autotune_split_k_host(a, q, &tiles, threads);
-                    log::debug!(
-                        "gemm plan m={} n={} k={}: split_k={} ({:.1} us)",
-                        a.rows, q.n, q.k, r.best_split_k, r.best_us);
-                    HostKernelConfig { tiles, split_k: r.best_split_k, threads }
+                    match autotune_split_k_host(a, q, &tiles, threads) {
+                        Ok(r) => {
+                            log::debug!(
+                                "gemm plan m={} n={} k={}: {} ({:.1} us)",
+                                a.rows, q.n, q.k, r.best.label(), r.best_us);
+                            r.best
+                        }
+                        Err(e) => {
+                            log::warn!(
+                                "gemm plan m={} n={} k={}: autotune failed \
+                                 ({e}); falling back to data-parallel",
+                                a.rows, q.n, q.k);
+                            HostKernelConfig::dp().with_threads(threads)
+                        }
+                    }
                 })
             }
         }
@@ -115,6 +132,12 @@ impl ProjectionGemm for FusedDispatch<'_> {
 
     fn gemm_multi(&mut self, a: &MatF32, qs: &[&QuantizedLinear])
                   -> Vec<MatF32> {
+        // Empty projection lists must stay total: the qs[0] plan lookup
+        // below would otherwise be an unchecked index panic in release
+        // builds (debug_asserts compiled out).
+        if qs.is_empty() {
+            return Vec::new();
+        }
         debug_assert!(qs.windows(2).all(|w| w[0].n == w[1].n
                                         && w[0].k == w[1].k),
                       "gemm_multi layers must share a shape");
@@ -147,11 +170,13 @@ impl HostModel {
 
     /// Generate the model with an explicit GEMM plan.
     pub fn with_plan(meta: &ModelMeta, plan: GemmPlan) -> Result<Self> {
-        Ok(HostModel {
-            weights: HostModelWeights::generate(meta)?,
-            plan,
-            scratch: SplitKScratch::new(),
-        })
+        Ok(Self::from_weights(HostModelWeights::generate(meta)?, plan))
+    }
+
+    /// Wrap pre-built weights (tests use this to exercise architectures
+    /// `generate` cannot produce, e.g. per-projection shape variations).
+    pub fn from_weights(weights: HostModelWeights, plan: GemmPlan) -> Self {
+        HostModel { weights, plan, scratch: SplitKScratch::new() }
     }
 
     /// Model metadata.
@@ -198,14 +223,22 @@ impl HostModel {
     /// for the given batch buckets — the host analog of warming the
     /// decode-artifact cache. Returns the number of (bucket, shape)
     /// combinations visited.
+    ///
+    /// Shapes are the *actual* distinct `(n, k)` pairs across every
+    /// projection in the weights ([`HostModelWeights::projections`]) —
+    /// the old hardcoded `[wq, w_up, w_down, lm_head]` list silently
+    /// missed any wk/wv/wo whose shape differs, leaving those GEMMs to
+    /// autotune mid-request.
     pub fn warm(&mut self, buckets: &[usize]) -> usize {
         let HostModel { weights, plan, .. } = self;
-        let l0 = &weights.layers[0];
-        let shapes: [&QuantizedLinear; 4] =
-            [&l0.wq, &l0.w_up, &l0.w_down, &weights.lm_head];
+        let mut seen = std::collections::HashSet::new();
+        let shapes: Vec<&QuantizedLinear> = weights
+            .projections()
+            .filter(|q| seen.insert((q.n, q.k)))
+            .collect();
         let mut visited = 0;
         for &b in buckets {
-            for q in shapes {
+            for q in &shapes {
                 let a = MatF32::new(b, q.k, vec![0.5; b * q.k]);
                 let _ = plan.config_for(&a, q);
                 visited += 1;
@@ -332,12 +365,63 @@ mod tests {
             GemmPlan::autotuned(1)).unwrap();
         assert!(m.plan.is_empty());
         let visited = m.warm(&[1, 2]);
-        assert_eq!(visited, 8); // 2 buckets x 4 projections visited
-        // Distinct (m, n, k) keys per bucket: (256,256), (512,256)
-        // [w_up and lm_head coincide at this metadata], (256,512) -> 3.
-        assert_eq!(m.plan.len(), 6);
+        // Distinct (n, k) pairs at this metadata: (256,256)
+        // [wq/wk/wv/wo], (512,256) [w_up and lm_head coincide],
+        // (256,512) [w_down] -> 3 per bucket.
+        assert_eq!(visited, 6);
+        assert_eq!(m.plan.len(), 6); // x 2 buckets
         // Re-warming hits the cache, adds nothing.
         m.warm(&[1, 2]);
         assert_eq!(m.plan.len(), 6);
+    }
+
+    #[test]
+    fn warm_covers_every_distinct_projection_shape() {
+        // Regression: the old warm() hardcoded [wq, w_up, w_down,
+        // lm_head] and silently missed any wk/wv/wo whose shape differs
+        // — that GEMM then autotuned mid-request instead of at startup.
+        // Give wv a shape no hardcoded projection has and check it gets
+        // planned.
+        let mut w = HostModelWeights::generate(&meta()).unwrap();
+        let mut rng = crate::util::Rng::seed_from(9);
+        let alt = MatF32::new(256, 64, rng.normal_vec(256 * 64, 0.1));
+        w.layers[0].wv = crate::quant::quantize_weight(&alt, 32);
+        let mut m = HostModel::from_weights(w, GemmPlan::autotuned(1));
+        let visited = m.warm(&[1]);
+        // (256,256), (64,256), (512,256), (256,512) -> 4 distinct.
+        assert_eq!(visited, 4);
+        assert_eq!(m.plan.len(), 4,
+                   "the modified wv shape must be planned at warm time");
+    }
+
+    #[test]
+    fn dispatch_with_empty_projection_list_returns_empty() {
+        // Regression: FusedDispatch::gemm_multi indexed qs[0]
+        // unconditionally — an unchecked panic in release builds (its
+        // debug_assert is compiled out). Empty input must yield empty
+        // output.
+        let mut plan = GemmPlan::fixed(HostKernelConfig::splitk(2));
+        let mut scratch = SplitKScratch::new();
+        let mut dispatch =
+            FusedDispatch { plan: &mut plan, scratch: &mut scratch };
+        let a = MatF32::new(1, 256, vec![0.5; 256]);
+        assert!(dispatch.gemm_multi(&a, &[]).is_empty());
+    }
+
+    #[test]
+    fn autotuned_plan_caches_full_config() {
+        // The cached entry is the sweep winner as-is: concrete threads,
+        // one of the three decomposition families, swept tile geometry.
+        let mut plan = GemmPlan::autotuned(2);
+        let mut rng = crate::util::Rng::seed_from(11);
+        let w = MatF32::new(128, 32, rng.normal_vec(128 * 32, 0.1));
+        let q = crate::quant::quantize_weight(&w, 32);
+        let a = MatF32::new(1, 128, vec![0.25; 128]);
+        let cfg = plan.config_for(&a, &q);
+        assert_eq!(cfg.threads, 2, "pinned thread budget is honored");
+        assert_eq!(plan.len(), 1);
+        // Second lookup is a cache hit returning the identical config.
+        assert_eq!(plan.config_for(&a, &q), cfg);
+        assert_eq!(plan.len(), 1);
     }
 }

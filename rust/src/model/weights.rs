@@ -116,14 +116,20 @@ impl HostModelWeights {
         })
     }
 
-    /// Packed bytes across every projection (the W4 memory story).
-    pub fn packed_bytes(&self) -> usize {
+    /// Every quantized projection in forward-pass order (per layer:
+    /// Wq, Wk, Wv, Wo, W_up, W_down; then the LM head) — the ground
+    /// truth for anything that must cover *all* GEMM shapes the decode
+    /// step can issue (plan warming, memory accounting).
+    pub fn projections(&self) -> impl Iterator<Item = &QuantizedLinear> {
         self.layers
             .iter()
             .flat_map(|l| [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_up, &l.w_down])
             .chain([&self.lm_head])
-            .map(|q| q.packed_bytes())
-            .sum()
+    }
+
+    /// Packed bytes across every projection (the W4 memory story).
+    pub fn packed_bytes(&self) -> usize {
+        self.projections().map(|q| q.packed_bytes()).sum()
     }
 
     /// One decode position for a batch: embed `tokens`, run every layer

@@ -305,8 +305,11 @@ pub fn sm_scaling_ablation(m: u64, nk: u64) -> Vec<(u32, f64)> {
         .collect()
 }
 
-/// Autotune sweep used by the `autotune_splitk` example.
-pub fn autotune_all_devices(m: u64, nk: u64) -> Vec<AutotuneResult> {
+/// Autotune sweep used by the `autotune` command and `autotune_splitk`
+/// example. Errs when the shape is infeasible for every splitting
+/// factor (propagated from [`autotune_split_k`] — no longer a panic).
+pub fn autotune_all_devices(m: u64, nk: u64)
+                            -> Result<Vec<AutotuneResult>, String> {
     DeviceConfig::paper_devices()
         .iter()
         .map(|d| autotune_split_k(d, &GemmShape::square(m, nk),

@@ -9,8 +9,9 @@ use std::time::{Duration, Instant};
 
 use splitk_w4a16::coordinator::{DynamicBatcher, GenerateRequest};
 use splitk_w4a16::gpusim::{simulate, DeviceConfig, Decomposition, Occupancy};
-use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk, splitk_launch,
-                            GemmShape, HostKernelConfig, TileConfig};
+use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk,
+                            fused_gemm_streamk, splitk_launch, GemmShape,
+                            HostKernelConfig, TileConfig};
 use splitk_w4a16::quant::{
     dequantize, pack_along_cols, pack_along_rows, quantize_weight,
     unpack_along_cols, unpack_along_rows, MatF32, QuantizedLinear,
@@ -106,7 +107,7 @@ fn prop_fused_dp_matches_naive_oracle() {
         let (a, q) = random_gemm_case(&mut rng);
         let cfg = HostKernelConfig {
             tiles: random_tiles(&mut rng),
-            split_k: 1,
+            decomposition: Decomposition::DataParallel,
             threads: [0usize, 1, 2, 3][rng.index(4)],
         };
         let got = fused_gemm_dp(&a, &q, &cfg);
@@ -127,7 +128,9 @@ fn prop_fused_splitk_matches_naive_oracle() {
         let (a, q) = random_gemm_case(&mut rng);
         let cfg = HostKernelConfig {
             tiles: random_tiles(&mut rng),
-            split_k: rng.gen_range(1, 12) as u32,
+            decomposition: Decomposition::SplitK {
+                split_k: rng.gen_range(1, 12) as u32,
+            },
             threads: [0usize, 1, 2, 3][rng.index(4)],
         };
         let got = fused_gemm_splitk(&a, &q, &cfg);
@@ -135,7 +138,32 @@ fn prop_fused_splitk_matches_naive_oracle() {
         let err = got.max_abs_diff(&want);
         assert!(err <= 1e-4,
                 "err {err} (m={} k={} n={} group={} split={} tiles={:?})",
-                a.rows, q.k, q.n, q.group_size, cfg.split_k, cfg.tiles);
+                a.rows, q.k, q.n, q.group_size, cfg.split_k(), cfg.tiles);
+    }
+}
+
+#[test]
+fn prop_fused_streamk_matches_naive_oracle() {
+    // fused-StreamK == w4a16_gemm_ref within 1e-4 for random span
+    // counts and tile configs (k % block_k != 0 and n % block_n != 0
+    // included: short last k-slice, narrow last tile).
+    let mut rng = Rng::seed_from(26);
+    for _ in 0..40 {
+        let (a, q) = random_gemm_case(&mut rng);
+        let cfg = HostKernelConfig {
+            tiles: random_tiles(&mut rng),
+            decomposition: Decomposition::StreamK {
+                workers: rng.gen_range(1, 14) as u32,
+            },
+            threads: [0usize, 1, 2, 3][rng.index(4)],
+        };
+        let got = fused_gemm_streamk(&a, &q, &cfg);
+        let want = w4a16_gemm_ref(&a, &q);
+        let err = got.max_abs_diff(&want);
+        assert!(err <= 1e-4,
+                "err {err} (m={} k={} n={} group={} workers={} tiles={:?})",
+                a.rows, q.k, q.n, q.group_size, cfg.streamk_workers(),
+                cfg.tiles);
     }
 }
 
@@ -148,19 +176,23 @@ fn prop_fused_backend_thread_count_invariant() {
     for _ in 0..15 {
         let (a, q) = random_gemm_case(&mut rng);
         let split = rng.gen_range(1, 9) as u32;
+        let workers = rng.gen_range(1, 9) as u32;
         let tiles = random_tiles(&mut rng);
-        let dp1 = fused_gemm_dp(
-            &a, &q, &HostKernelConfig { tiles, split_k: 1, threads: 1 });
-        let sk1 = fused_gemm_splitk(
-            &a, &q, &HostKernelConfig { tiles, split_k: split, threads: 1 });
+        let dp_cfg = HostKernelConfig::dp().with_tiles(tiles);
+        let sk_cfg = HostKernelConfig::splitk(split).with_tiles(tiles);
+        let st_cfg = HostKernelConfig::streamk(workers).with_tiles(tiles);
+        let dp1 = fused_gemm_dp(&a, &q, &dp_cfg.with_threads(1));
+        let sk1 = fused_gemm_splitk(&a, &q, &sk_cfg.with_threads(1));
+        let st1 = fused_gemm_streamk(&a, &q, &st_cfg.with_threads(1));
         for threads in [2usize, 5] {
-            let dp = fused_gemm_dp(
-                &a, &q, &HostKernelConfig { tiles, split_k: 1, threads });
+            let dp = fused_gemm_dp(&a, &q, &dp_cfg.with_threads(threads));
             assert_eq!(dp1.data, dp.data, "DP threads={threads}");
-            let sk = fused_gemm_splitk(
-                &a, &q, &HostKernelConfig { tiles, split_k: split, threads });
+            let sk = fused_gemm_splitk(&a, &q, &sk_cfg.with_threads(threads));
             assert_eq!(sk1.data, sk.data,
                        "SplitK split={split} threads={threads}");
+            let st = fused_gemm_streamk(&a, &q, &st_cfg.with_threads(threads));
+            assert_eq!(st1.data, st.data,
+                       "StreamK workers={workers} threads={threads}");
         }
     }
 }
@@ -194,12 +226,12 @@ fn exact_gemm_case(rng: &mut Rng)
 }
 
 #[test]
-fn prop_fused_dp_splitk_bit_identical_on_exact_inputs() {
+fn prop_fused_decompositions_bit_identical_on_exact_inputs() {
     // The acceptance bar for the exec backend: fused-DP, fused-SplitK at
-    // every split factor, and the naive oracle agree BIT FOR BIT when
-    // the arithmetic is exact, proving the decompositions compute the
-    // same function and differ only in (deterministically ordered)
-    // float rounding.
+    // every split factor, fused-StreamK at every span count, and the
+    // naive oracle agree BIT FOR BIT when the arithmetic is exact,
+    // proving the decompositions compute the same function and differ
+    // only in (deterministically ordered) float rounding.
     let mut rng = Rng::seed_from(24);
     for _ in 0..25 {
         let (a, q) = exact_gemm_case(&mut rng);
@@ -212,6 +244,13 @@ fn prop_fused_dp_splitk_bit_identical_on_exact_inputs() {
                 &HostKernelConfig::splitk(split)
                     .with_threads([0usize, 2][rng.index(2)]));
             assert_eq!(dp.data, sk.data, "DP vs SplitK split={split}");
+        }
+        for workers in [2u32, 3, 5, 8] {
+            let st = fused_gemm_streamk(
+                &a, &q,
+                &HostKernelConfig::streamk(workers)
+                    .with_threads([0usize, 2][rng.index(2)]));
+            assert_eq!(dp.data, st.data, "DP vs StreamK workers={workers}");
         }
     }
 }

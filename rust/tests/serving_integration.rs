@@ -105,6 +105,29 @@ fn host_backend_batches_requests() {
 }
 
 #[test]
+fn window_flush_serves_all_queued_requests_in_one_batch() {
+    // Regression (batcher flush): three requests queued inside one
+    // batching window must all ride the deadline flush together, in one
+    // bucket-4 batch. The pre-fix flush took only the largest *filled*
+    // bucket (2 of 3), stranding the third — already past its latency
+    // window — for another scheduler wakeup and serving it alone at
+    // bucket 1 (observable here as differing r.bucket values).
+    let mut cfg = host_config();
+    cfg.batch_window_ms = 200;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let pending: Vec<_> = (0..3)
+        .map(|i| coord.submit(vec![i as i32 + 1, 9], 2, None).unwrap())
+        .collect();
+    for p in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.bucket, 4,
+                   "every queued request flushes into the covering bucket");
+        assert_eq!(r.tokens.len(), 2);
+    }
+    coord.shutdown().unwrap();
+}
+
+#[test]
 fn host_backend_stop_token_finishes_early() {
     let coord = Coordinator::start(&host_config()).unwrap();
     let probe = coord.submit(vec![8, 8], 3, None).unwrap().wait().unwrap();
