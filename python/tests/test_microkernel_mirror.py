@@ -1,0 +1,309 @@
+"""Python mirror of the Rust register-blocked LUT micro-kernel (PR 4).
+
+The growth container has no Rust toolchain (DESIGN.md §2), so — as with
+the SplitK/StreamK mirrors of PRs 1 and 3 — this file re-implements the
+*exact* loop structure of `rust/src/kernels/exec/microkernel.rs` in
+numpy float32 (every multiply and add rounded to f32, like the Rust
+f32 ops) and pins it bit-identical to a plain reference loop that
+mirrors `exec/fused.rs::fused_tile`. What this validates:
+
+* the per-(group, column) 16-entry LUT (`lut[v] = (v - zero) * scale`)
+  substitutes bit-exactly for the in-loop dequant expression;
+* the register-tile decomposition (16-column blocks x 4-row blocks with
+  monomorphized remainders, accumulators "live" across a run and
+  store back once) preserves every element's ascending-k operation
+  chain;
+* run boundaries (quant-group end, `block_k` chunk end, range end) and
+  column segmentation at prepacked-panel boundaries are bit-neutral;
+* the `PackedLinear` panel layout (tile-major words at closed-form
+  offset `kp_total * p * block_n`, panel-major scale/zero streams)
+  round-trips the flat tensors exactly, including ragged last panels.
+
+Run: pytest python/tests/test_microkernel_mirror.py -q
+"""
+
+import numpy as np
+import pytest
+
+f32 = np.float32
+PACK = 8
+
+
+def quantize(rng, k, n, group):
+    """Random W4 layer in the flat storage format (unpacked views)."""
+    nib = rng.integers(0, 16, size=(k, n), dtype=np.int64)
+    groups = k // group
+    zeros = rng.integers(0, 16, size=(groups, n), dtype=np.int64)
+    scales = rng.uniform(0.01, 0.3, size=(groups, n)).astype(f32)
+    # Packed words exactly as pack_along_rows: nibble i of word kp is
+    # weight row kp*8 + i, bits 4i..4i+3.
+    kp_total = k // PACK
+    words = np.zeros((kp_total, n), dtype=np.int64)
+    for kp in range(kp_total):
+        for i in range(PACK):
+            words[kp] |= (nib[kp * PACK + i] & 0xF) << (4 * i)
+    return nib, words, zeros, scales
+
+
+def reference_tile(a, words, zeros, scales, group, r0, r1, c0, c1, kp0,
+                   kp1, out, out_stride):
+    """Mirror of fused_tile: plain k-ascending loop, f32 ops."""
+    k = a.shape[1]
+    for kp in range(kp0, kp1):
+        grp = (kp * PACK) // group
+        for i in range(PACK):
+            kk = kp * PACK + i
+            for r in range(r0, r1):
+                av = f32(a[r, kk])
+                for c in range(c0, c1):
+                    v = (words[kp, c] >> (4 * i)) & 0xF
+                    w = f32((f32(v) - f32(zeros[grp, c])) * scales[grp, c])
+                    o = (r - r0) * out_stride + (c - c0)
+                    out[o] = f32(out[o] + f32(av * w))
+
+
+class PackedLinear:
+    """Mirror of exec/layout.rs: tile-major panels + unpacked meta."""
+
+    def __init__(self, words, zeros, scales, block_n):
+        kp_total, n = words.shape
+        groups = zeros.shape[0]
+        bn = max(1, min(block_n, max(n, 1)))
+        self.block_n = bn
+        self.n = n
+        self.words = np.zeros(kp_total * n, dtype=np.int64)
+        self.scales = np.zeros(groups * n, dtype=f32)
+        self.zeros = np.zeros(groups * n, dtype=f32)
+        self.kp_total, self.groups = kp_total, groups
+        panels = (n + bn - 1) // bn
+        for p in range(panels):
+            c0 = p * bn
+            w = min((p + 1) * bn, n) - c0
+            base = kp_total * c0          # closed-form offset (Rust)
+            for kp in range(kp_total):
+                for j in range(w):
+                    self.words[base + kp * w + j] = words[kp, c0 + j]
+            mbase = groups * c0
+            for g in range(groups):
+                for j in range(w):
+                    self.scales[mbase + g * w + j] = scales[g, c0 + j]
+                    self.zeros[mbase + g * w + j] = f32(zeros[g, c0 + j])
+
+    def panel_width(self, p):
+        return min((p + 1) * self.block_n, self.n) - p * self.block_n
+
+    def panel_words(self, p):
+        start = self.kp_total * p * self.block_n
+        return self.words[start:start + self.kp_total * self.panel_width(p)]
+
+    def panel_meta(self, p):
+        start = self.groups * p * self.block_n
+        end = start + self.groups * self.panel_width(p)
+        return self.scales[start:end], self.zeros[start:end]
+
+
+MR = 4
+LANE_SPAN = 16
+FLAT_SEGMENT_COLS = 64  # flat spans segment at 64 cols (4 KiB LUT cap)
+
+
+def kernel_tile(a, words, zeros, scales, group, r0, r1, c0, c1, kp0, kp1,
+                kp_chunk, out, out_stride, pack=None):
+    """Mirror of microkernel.rs::kernel_tile (flat or prepacked)."""
+    if r0 >= r1 or c0 >= c1 or kp0 >= kp1:
+        return
+    k = a.shape[1]
+    gp = group // PACK
+    chunk = max(kp_chunk, 1)
+
+    def segment_sweep(row_of, lut_of, s0, s1):
+        bw = s1 - s0
+        col_off = s0 - c0
+        lut = np.zeros(bw * 16, dtype=f32)
+        wrow = np.zeros(bw, dtype=f32)
+        kp = kp0
+        cur_grp = -1
+        while kp < kp1:
+            grp = kp // gp
+            if grp != cur_grp:
+                for t in range(bw):
+                    z, s = lut_of(grp, t)
+                    for v in range(16):
+                        lut[t * 16 + v] = f32((f32(v) - z) * s)
+                cur_grp = grp
+            run_end = min(kp1, (grp + 1) * gp, kp + chunk)
+            run_span(row_of, lut, wrow, kp, run_end, bw, col_off)
+            kp = run_end
+
+    def run_span(row_of, lut, wrow, kpa, kpb, bw, col_off):
+        j = 0
+        while j + LANE_SPAN <= bw:                      # vector path
+            r = r0
+            while r < r1:
+                mr = min(MR, r1 - r)
+                run_tile(row_of, lut, kpa, kpb, r, mr, j, col_off)
+                r += mr
+            j += LANE_SPAN
+        if j < bw:                                       # scalar tail
+            for kp in range(kpa, kpb):
+                row = row_of(kp)
+                for i in range(PACK):
+                    for t in range(j, bw):
+                        v = (row[t] >> (4 * i)) & 0xF
+                        wrow[t] = lut[t * 16 + v]
+                    kk = kp * PACK + i
+                    for r in range(r0, r1):
+                        av = f32(a[r, kk])
+                        o = (r - r0) * out_stride + col_off
+                        for t in range(j, bw):
+                            out[o + t] = f32(out[o + t] + f32(av * wrow[t]))
+
+    def run_tile(row_of, lut, kpa, kpb, r_abs, mr, j, col_off):
+        # Accumulators live in locals for the whole run (register tile).
+        acc = np.zeros((mr, LANE_SPAN), dtype=f32)
+        for r in range(mr):
+            o = (r_abs + r - r0) * out_stride + col_off + j
+            acc[r] = out[o:o + LANE_SPAN]
+        for kp in range(kpa, kpb):
+            row = row_of(kp)
+            for i in range(PACK):
+                wvec = np.zeros(LANE_SPAN, dtype=f32)
+                for t in range(LANE_SPAN):
+                    v = (row[j + t] >> (4 * i)) & 0xF
+                    wvec[t] = lut[(j + t) * 16 + v]
+                kk = kp * PACK + i
+                for r in range(mr):
+                    av = f32(a[r_abs + r, kk])
+                    for t in range(LANE_SPAN):
+                        acc[r, t] = f32(acc[r, t] + f32(av * wvec[t]))
+        for r in range(mr):
+            o = (r_abs + r - r0) * out_stride + col_off + j
+            out[o:o + LANE_SPAN] = acc[r]
+
+    if pack is None:
+        s0 = c0
+        while s0 < c1:
+            s1 = min(s0 + FLAT_SEGMENT_COLS, c1)
+
+            def row_of(kp, s0=s0, s1=s1):
+                return words[kp, s0:s1]
+
+            def lut_of(grp, t, s0=s0):
+                return f32(zeros[grp, s0 + t]), scales[grp, s0 + t]
+
+            segment_sweep(row_of, lut_of, s0, s1)
+            s0 = s1
+    else:
+        bn = pack.block_n
+        s0 = c0
+        while s0 < c1:
+            p = s0 // bn
+            pc0 = p * bn
+            s1 = min(pc0 + bn, c1)
+            w = pack.panel_width(p)
+            pwords = pack.panel_words(p)
+            pscales, pzeros = pack.panel_meta(p)
+            j0 = s0 - pc0
+
+            def row_of(kp, pw=pwords, w=w, j0=j0, j1=s1 - pc0):
+                return pw[kp * w + j0:kp * w + j1]
+
+            def lut_of(grp, t, ps=pscales, pz=pzeros, w=w, j0=j0):
+                return pz[grp * w + j0 + t], ps[grp * w + j0 + t]
+
+            segment_sweep(row_of, lut_of, s0, s1)
+            s0 = s1
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_lut_kernel_bit_identical_to_reference(seed):
+    """Flat LUT kernel == reference loop, bit for bit, ragged grid."""
+    rng = np.random.default_rng(seed)
+    group = int(rng.choice([8, 16, 24, 32]))
+    k = group * int(rng.integers(1, 5))
+    n = int(rng.integers(1, 11)) * 8
+    m = int(rng.integers(1, 12))
+    nib, words, zeros, scales = quantize(rng, k, n, group)
+    a = rng.uniform(-1, 1, size=(m, k)).astype(f32)
+    a[rng.random(size=a.shape) < 0.1] = 0.0  # exact-zero activations
+    kp_total = k // PACK
+
+    for _ in range(4):
+        r0 = int(rng.integers(0, m))
+        r1 = int(rng.integers(r0 + 1, m + 1))
+        c0 = int(rng.integers(0, n))
+        c1 = int(rng.integers(c0 + 1, n + 1))
+        kp0 = int(rng.integers(0, kp_total))
+        kp1 = int(rng.integers(kp0 + 1, kp_total + 1))
+        chunk = int(rng.choice([1, 2, 3, 8, 1000]))
+        stride = c1 - c0 + int(rng.integers(0, 3))
+        seed_out = (rng.integers(0, 5, size=(r1 - r0) * stride)
+                    .astype(f32) * f32(0.25))
+
+        want = seed_out.copy()
+        reference_tile(a, words, zeros, scales, group, r0, r1, c0, c1,
+                       kp0, kp1, want, stride)
+        got = seed_out.copy()
+        kernel_tile(a, words, zeros, scales, group, r0, r1, c0, c1, kp0,
+                    kp1, chunk, got, stride)
+        assert want.tobytes() == got.tobytes(), (
+            f"flat mismatch r{r0}:{r1} c{c0}:{c1} kp{kp0}:{kp1} "
+            f"chunk={chunk}")
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_prepacked_kernel_bit_identical_to_flat(seed):
+    """Prepacked traversal == flat, bit for bit, any panel width."""
+    rng = np.random.default_rng(100 + seed)
+    group = int(rng.choice([8, 16, 32]))
+    k = group * int(rng.integers(1, 4))
+    n = int(rng.integers(1, 9)) * 8
+    m = int(rng.integers(1, 7))
+    nib, words, zeros, scales = quantize(rng, k, n, group)
+    a = rng.uniform(-1, 1, size=(m, k)).astype(f32)
+    kp_total = k // PACK
+
+    for bn in [1, 5, 8, 16, 64]:
+        pack = PackedLinear(words, zeros, scales, bn)
+        # Panel round-trip: every word/scale/zero must survive exactly.
+        for p in range((n + pack.block_n - 1) // pack.block_n):
+            c0 = p * pack.block_n
+            w = pack.panel_width(p)
+            pw = pack.panel_words(p)
+            ps, pz = pack.panel_meta(p)
+            for kp in range(kp_total):
+                for j in range(w):
+                    assert pw[kp * w + j] == words[kp, c0 + j]
+            for g in range(zeros.shape[0]):
+                for j in range(w):
+                    assert ps[g * w + j] == scales[g, c0 + j]
+                    assert pz[g * w + j] == f32(zeros[g, c0 + j])
+
+        c0 = int(rng.integers(0, n))
+        c1 = int(rng.integers(c0 + 1, n + 1))
+        chunk = int(rng.choice([1, 4, 1000]))
+        flat = np.zeros(m * (c1 - c0), dtype=f32)
+        kernel_tile(a, words, zeros, scales, group, 0, m, c0, c1, 0,
+                    kp_total, chunk, flat, c1 - c0)
+        packed = np.zeros(m * (c1 - c0), dtype=f32)
+        kernel_tile(a, words, zeros, scales, group, 0, m, c0, c1, 0,
+                    kp_total, chunk, packed, c1 - c0, pack=pack)
+        assert flat.tobytes() == packed.tobytes(), f"bn={bn} c{c0}:{c1}"
+
+
+def test_k_ranges_compose_bitwise():
+    """Two k-ranges layered into one window == one full pass (the SplitK
+    slice-partial property the executors rely on)."""
+    rng = np.random.default_rng(7)
+    group, k, n, m = 16, 64, 24, 3
+    nib, words, zeros, scales = quantize(rng, k, n, group)
+    a = rng.uniform(-1, 1, size=(m, k)).astype(f32)
+    full = np.zeros(m * n, dtype=f32)
+    kernel_tile(a, words, zeros, scales, group, 0, m, 0, n, 0, 8, 3,
+                full, n)
+    split = np.zeros(m * n, dtype=f32)
+    kernel_tile(a, words, zeros, scales, group, 0, m, 0, n, 0, 3, 3,
+                split, n)
+    kernel_tile(a, words, zeros, scales, group, 0, m, 0, n, 3, 8, 3,
+                split, n)
+    assert full.tobytes() == split.tobytes()

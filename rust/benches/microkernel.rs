@@ -1,0 +1,132 @@
+//! Bench: micro-kernel generations head to head — the measurement that
+//! motivated the register-blocked rewrite (EXPERIMENTS.md).
+//!
+//! Three series per `(m, n = k)` cell, same tile geometry and thread
+//! budget so only the kernel generation differs:
+//!
+//! * `legacy_dp_*`        — the pre-LUT reference executor
+//!                          (`fused_gemm_legacy`: per-nibble
+//!                          shift/mask/convert/sub/mul, output row
+//!                          streamed through memory every k step);
+//! * `fused_lut_dp_*`     — the register-blocked LUT micro-kernel on
+//!                          the flat weight layout;
+//! * `fused_lut_pk_dp_*`  — the same kernel traversing the tile-major
+//!                          prepacked layout (`PackedLinear`, built
+//!                          once outside the timing loop — exactly how
+//!                          the serving plan cache amortizes it).
+//!
+//! A second trio (`*_splitk4_*`) repeats the comparison under the
+//! SplitK decomposition for the decode-relevant skinny shapes; the
+//! legacy kernel has no SplitK wrapper anymore, so that trio compares
+//! LUT flat vs LUT prepacked only.
+//!
+//! Results land in `BENCH_microkernel.json` at the repo root
+//! (`BENCH_microkernel_smoke.json` under `--smoke`, the CI mode).
+//!
+//! ```sh
+//! cargo bench --bench microkernel [-- --smoke]
+//! ```
+
+use std::time::Duration;
+
+use splitk_w4a16::kernels::{fused_gemm_legacy, host_gemm_into,
+                            host_gemm_packed_into, HostKernelConfig,
+                            KernelLayout, PackedLinear, SplitKScratch};
+use splitk_w4a16::quant::{quantize_weight, MatF32};
+use splitk_w4a16::util::{Bench, Rng};
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let nks: &[usize] = if smoke { &[2048] } else { &[2048, 4096, 8192] };
+    let mut bench = if smoke {
+        Bench::new(Duration::from_millis(200), 8, 1)
+    } else {
+        Bench::new(Duration::from_millis(600), 24, 1)
+    };
+    let mut rng = Rng::seed_from(23);
+    let threads = splitk_w4a16::kernels::available_cores();
+    let tiles = HostKernelConfig::host_tiles();
+    println!("micro-kernel generations ({threads} worker threads, tiles \
+              {}x{}x{}, group 128)",
+             tiles.block_m, tiles.block_n, tiles.block_k);
+
+    let mut lines = Vec::new();
+    for &nk in nks {
+        let q = {
+            let w = MatF32::new(nk, nk, rng.normal_vec(nk * nk, 0.05));
+            quantize_weight(&w, 128)
+        };
+        // Built once, outside every timing window (the serving path
+        // builds it at plan-warm time).
+        let pack = PackedLinear::new(&q, tiles.block_n as usize);
+        for &m in &[1usize, 16] {
+            let a = MatF32::new(
+                m, nk,
+                (0..m * nk).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+
+            let dp_cfg =
+                HostKernelConfig::dp().with_tiles(tiles).with_threads(threads);
+            let legacy = bench
+                .run(&format!("legacy_dp_m{m}_nk{nk}"), || {
+                    std::hint::black_box(fused_gemm_legacy(&a, &q, &dp_cfg));
+                })
+                .p50_ns;
+
+            // The LUT series measure the scratch-reusing entry points —
+            // the decode loop's steady state (one warmup run inside
+            // Bench sizes the buffers before sampling starts).
+            let mut scratch = SplitKScratch::new();
+            let mut out = MatF32::zeros(m, nk);
+            let lut = bench
+                .run(&format!("fused_lut_dp_m{m}_nk{nk}"), || {
+                    host_gemm_into(&a, &q, &dp_cfg, &mut scratch, &mut out);
+                    std::hint::black_box(&out);
+                })
+                .p50_ns;
+
+            let pk_cfg = dp_cfg.with_layout(KernelLayout::Prepacked);
+            let lut_pk = bench
+                .run(&format!("fused_lut_pk_dp_m{m}_nk{nk}"), || {
+                    host_gemm_packed_into(&a, &q, &pack, &pk_cfg,
+                                          &mut scratch, &mut out);
+                    std::hint::black_box(&out);
+                })
+                .p50_ns;
+
+            let sk_cfg = HostKernelConfig::splitk(4)
+                .with_tiles(tiles)
+                .with_threads(threads);
+            let sk_lut = bench
+                .run(&format!("fused_lut_splitk4_m{m}_nk{nk}"), || {
+                    host_gemm_into(&a, &q, &sk_cfg, &mut scratch, &mut out);
+                    std::hint::black_box(&out);
+                })
+                .p50_ns;
+            let sk_pk_cfg = sk_cfg.with_layout(KernelLayout::Prepacked);
+            let sk_lut_pk = bench
+                .run(&format!("fused_lut_pk_splitk4_m{m}_nk{nk}"), || {
+                    host_gemm_packed_into(&a, &q, &pack, &sk_pk_cfg,
+                                          &mut scratch, &mut out);
+                    std::hint::black_box(&out);
+                })
+                .p50_ns;
+
+            lines.push(format!(
+                "m={m:>2} n=k={nk:>5}: legacy/LUT {:>5.2}x   legacy/LUT+pk \
+                 {:>5.2}x   splitk4 LUT/LUT+pk {:>5.2}x",
+                legacy / lut, legacy / lut_pk, sk_lut / sk_lut_pk));
+        }
+    }
+
+    println!("── micro-kernel speedups (p50) ───────────────────────────");
+    for l in &lines {
+        println!("{l}");
+    }
+
+    let out = if smoke { "BENCH_microkernel_smoke.json" }
+              else { "BENCH_microkernel.json" };
+    match bench.write_repo_root_json(out) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

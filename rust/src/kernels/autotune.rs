@@ -13,12 +13,15 @@
 //! caller-visible error, never a panic — the serving plan cache falls
 //! back to a known-good config instead of taking the engine down.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::gpusim::{simulate, Decomposition, DeviceConfig};
 use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 
-use super::exec::{host_gemm_into, HostKernelConfig, SplitKScratch};
+use super::exec::{available_cores, host_gemm_into, host_gemm_packed_into,
+                  HostKernelConfig, KernelLayout, PackedLinear,
+                  SplitKScratch};
 use super::{dp_launch, splitk_launch, GemmShape, TileConfig};
 
 /// The splitting factors the paper sweeps (Figures 9/10).
@@ -127,8 +130,10 @@ fn host_tile_candidates(base: &TileConfig) -> Vec<TileConfig> {
 /// backend ([`super::exec`]) — the real-time counterpart of
 /// [`autotune_split_k`]. Sweeps
 /// `{DP, SplitK × SPLIT_K_CANDIDATES, StreamK × STREAMK_WORKER_CANDIDATES}`
-/// crossed with [`host_tile_candidates`] and the thread budget
-/// (`threads` if pinned, else {1, all cores}), and returns the fastest.
+/// crossed with [`host_tile_candidates`], the thread budget
+/// (`threads` if pinned, else {1, all cores}), and the weight layout
+/// ({flat, tile-major prepacked} — each `block_n`'s [`PackedLinear`] is
+/// built once, outside every timing window), and returns the fastest.
 ///
 /// Every candidate is measured through the scratch-reusing
 /// [`host_gemm_into`] path — one persistent output and [`SplitKScratch`]
@@ -156,16 +161,17 @@ pub fn autotune_split_k_host(a: &MatF32, q: &QuantizedLinear,
     let thread_candidates: Vec<usize> = if threads > 0 {
         vec![threads]
     } else {
-        let cores = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
+        let cores = available_cores();
         if cores > 1 && flops <= 64e6 { vec![1, cores] } else { vec![cores] }
     };
 
     // Persistent output + scratch: the measured calls are the same
-    // allocation-free path the serving decode loop runs.
+    // allocation-free path the serving decode loop runs. Prepacked
+    // layouts are built once per block_n, before any of their timing
+    // windows open — the plan cache amortizes the build the same way.
     let mut out = MatF32::zeros(a.rows, q.n);
     let mut scratch = SplitKScratch::new();
+    let mut packs: HashMap<u64, PackedLinear> = HashMap::new();
     let mut sweep: Vec<(HostKernelConfig, f64)> = Vec::new();
     let mut best: Option<(HostKernelConfig, f64)> = None;
 
@@ -197,41 +203,64 @@ pub fn autotune_split_k_host(a: &MatF32, q: &QuantizedLinear,
 
         for decomposition in decomps {
             for &t in &thread_candidates {
-                let cfg = HostKernelConfig {
-                    tiles: tile,
-                    decomposition,
-                    threads: t,
-                };
-                // Untimed warmup sizes the scratch (its allocations
-                // must not pollute any measurement), then one timed
-                // steady-state run; a candidate already 3x slower than
-                // the current best is recorded at that single run and
-                // skips the best-of-3 refinement, so the sweep's cost
-                // concentrates on contenders. Min-of-runs is the
-                // standard noise-robust statistic for short kernels.
-                // Deliberately not util::Bench: its run() prints a line
-                // per measurement, which a library search loop must not
-                // do.
-                host_gemm_into(a, q, &cfg, &mut scratch, &mut out);
-                let t0 = Instant::now();
-                host_gemm_into(a, q, &cfg, &mut scratch, &mut out);
-                let first_us = t0.elapsed().as_secs_f64() * 1e6;
-                let prune = best
-                    .as_ref()
-                    .is_some_and(|&(_, b)| first_us > 3.0 * b);
-                let mut best_run = first_us;
-                if !prune {
-                    for _ in 0..2 {
-                        let t0 = Instant::now();
-                        host_gemm_into(a, q, &cfg, &mut scratch, &mut out);
-                        best_run =
-                            best_run.min(t0.elapsed().as_secs_f64() * 1e6);
+                for layout in [KernelLayout::Flat, KernelLayout::Prepacked] {
+                    let cfg = HostKernelConfig {
+                        tiles: tile,
+                        decomposition,
+                        threads: t,
+                        layout,
+                    };
+                    // Sweep-local packs, dropped at return: when the
+                    // winner is Prepacked the model's PackCache rebuilds
+                    // it once — one O(k·n) reorder per planned shape,
+                    // dwarfed by the timing sweep itself, and cheaper
+                    // than widening HostAutotuneResult to smuggle the
+                    // pack (and its lifetime) out.
+                    let pack: Option<&PackedLinear> = match layout {
+                        KernelLayout::Prepacked => {
+                            Some(packs.entry(tile.block_n).or_insert_with(
+                                || PackedLinear::new(
+                                    q, tile.block_n as usize)))
+                        }
+                        KernelLayout::Flat => None,
+                    };
+                    let mut run_once = || match pack {
+                        Some(p) => host_gemm_packed_into(
+                            a, q, p, &cfg, &mut scratch, &mut out),
+                        None => host_gemm_into(
+                            a, q, &cfg, &mut scratch, &mut out),
+                    };
+                    // Untimed warmup sizes the scratch (its allocations
+                    // must not pollute any measurement), then one timed
+                    // steady-state run; a candidate already 3x slower
+                    // than the current best is recorded at that single
+                    // run and skips the best-of-3 refinement, so the
+                    // sweep's cost concentrates on contenders.
+                    // Min-of-runs is the standard noise-robust statistic
+                    // for short kernels. Deliberately not util::Bench:
+                    // its run() prints a line per measurement, which a
+                    // library search loop must not do.
+                    run_once();
+                    let t0 = Instant::now();
+                    run_once();
+                    let first_us = t0.elapsed().as_secs_f64() * 1e6;
+                    let prune = best
+                        .as_ref()
+                        .is_some_and(|&(_, b)| first_us > 3.0 * b);
+                    let mut best_run = first_us;
+                    if !prune {
+                        for _ in 0..2 {
+                            let t0 = Instant::now();
+                            run_once();
+                            best_run = best_run
+                                .min(t0.elapsed().as_secs_f64() * 1e6);
+                        }
                     }
-                }
-                std::hint::black_box(&out);
-                sweep.push((cfg, best_run));
-                if best.as_ref().map_or(true, |&(_, b)| best_run < b) {
-                    best = Some((cfg, best_run));
+                    std::hint::black_box(&out);
+                    sweep.push((cfg, best_run));
+                    if best.as_ref().map_or(true, |&(_, b)| best_run < b) {
+                        best = Some((cfg, best_run));
+                    }
                 }
             }
         }
@@ -338,6 +367,12 @@ mod tests {
         let widths: std::collections::HashSet<u64> =
             r.sweep.iter().map(|(cfg, _)| cfg.tiles.block_n).collect();
         assert!(widths.len() > 1, "expected >1 block_n in {widths:?}");
+        // ... and the weight-layout axis: every (decomposition, tile,
+        // threads) point is measured both flat and prepacked.
+        let flat = r.sweep.iter().filter(|(c, _)| !c.prepacked()).count();
+        let packed = r.sweep.iter().filter(|(c, _)| c.prepacked()).count();
+        assert_eq!(flat, packed, "layout axis must double the sweep");
+        assert!(packed > 0);
         assert!(r.sweep.iter().all(|&(_, us)| us > 0.0));
         let min = r.sweep.iter().map(|&(_, us)| us).fold(f64::MAX, f64::min);
         assert_eq!(r.best_us, min);

@@ -9,7 +9,8 @@
 
 use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 
-use super::fused::fused_tile;
+use super::microkernel::{kernel_tile, WeightsRef};
+use super::splitk::SplitKScratch;
 use super::HostKernelConfig;
 
 /// Fused W4A16 GEMM, data-parallel decomposition: `C = A @ dequant(Q)`.
@@ -25,11 +26,23 @@ pub fn fused_gemm_dp(a: &MatF32, q: &QuantizedLinear,
 }
 
 /// [`fused_gemm_dp`] writing into a caller-owned output (resized, not
-/// accumulated) — keeps `host_gemm_into`'s allocation-free contract
-/// when an autotuned plan lands on split 1. Bit-identical to the
-/// allocating wrapper.
+/// accumulated). Bit-identical to the allocating wrapper. (This
+/// convenience entry allocates its own micro-kernel scratch;
+/// `host_gemm_into` routes DP through the caller's [`SplitKScratch`]
+/// instead, so the decode path's LUT buffers stay warm.)
 pub fn fused_gemm_dp_into(a: &MatF32, q: &QuantizedLinear,
                           cfg: &HostKernelConfig, out: &mut MatF32) {
+    dp_exec(a, WeightsRef::Flat(q), cfg, &mut SplitKScratch::new(), out);
+}
+
+/// The executor proper, generic over the weight storage (flat or
+/// prepacked) — [`super::host_gemm_packed_into`] routes here too. Only
+/// the `tile` micro-kernel scratches of `scratch` are used (DP has no
+/// partial matrices).
+pub(crate) fn dp_exec(a: &MatF32, wr: WeightsRef<'_>,
+                      cfg: &HostKernelConfig,
+                      scratch: &mut SplitKScratch, out: &mut MatF32) {
+    let q = wr.q();
     cfg.check_shapes(a, q);
     let (m, n) = (a.rows, q.n);
     let kp_total = q.k / PACK_FACTOR;
@@ -57,48 +70,73 @@ pub fn fused_gemm_dp_into(a: &MatF32, q: &QuantizedLinear,
     }
 
     let workers = cfg.effective_threads().min(tiles.len()).max(1);
+    scratch.ensure_tile_scratches(workers);
+    scratch.ensure_stitch_arenas(workers);
+    let SplitKScratch { tile: tile_scratches, stitch, .. } = scratch;
     if workers <= 1 {
         // Single worker: accumulate straight into C, tile by tile.
+        let ts = &mut tile_scratches[0];
         for &(r0, r1, c0, c1) in &tiles {
-            fused_tile(a, q, r0, r1, c0, c1, 0, kp_total, kp_chunk,
-                       &mut out.data[r0 * n + c0..], n);
+            kernel_tile(a, wr, r0, r1, c0, c1, 0, kp_total, kp_chunk, ts,
+                        &mut out.data[r0 * n + c0..], n);
         }
         return;
     }
 
-    // Multi-worker: private tile buffers, stitched below. The copy is
-    // O(m·n) against an O(m·n·k) kernel — noise.
+    // Multi-worker: each worker packs its private tile buffers into its
+    // reusable stitch arena (grow-only; growth counted as an alloc
+    // event, so steady state is allocation-free like the k-splitting
+    // paths), recording `(tile, offset, len)` per tile. The stitch copy
+    // below is O(m·n) against an O(m·n·k) kernel — noise.
     let tile_list: &[(usize, usize, usize, usize)] = &tiles;
-    let results: Vec<Vec<(usize, Vec<f32>)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
-                scope.spawn(move || {
-                    let mut done = Vec::new();
-                    let mut t = w;
-                    while t < tile_list.len() {
-                        let (r0, r1, c0, c1) = tile_list[t];
-                        let bw = c1 - c0;
-                        let mut buf = vec![0.0f32; (r1 - r0) * bw];
-                        fused_tile(a, q, r0, r1, c0, c1, 0, kp_total,
-                                   kp_chunk, &mut buf, bw);
-                        done.push((t, buf));
-                        t += workers;
-                    }
-                    done
+    let results: Vec<Vec<(usize, usize, usize)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = tile_scratches[..workers]
+                .iter_mut()
+                .zip(stitch[..workers].iter_mut())
+                .enumerate()
+                .map(|(w, (ts, arena))| {
+                    scope.spawn(move || {
+                        let mut done = Vec::new();
+                        let mut off = 0usize;
+                        let mut t = w;
+                        while t < tile_list.len() {
+                            let (r0, r1, c0, c1) = tile_list[t];
+                            let bw = c1 - c0;
+                            let len = (r1 - r0) * bw;
+                            if arena.len() < off + len {
+                                arena.resize(off + len, 0.0);
+                                ts.allocs += 1;
+                            }
+                            // kernel_tile accumulates — the segment must
+                            // start at exactly 0.0 (same memset the old
+                            // fresh `vec![0.0; ..]` paid, without the
+                            // allocation).
+                            arena[off..off + len].fill(0.0);
+                            kernel_tile(a, wr, r0, r1, c0, c1, 0, kp_total,
+                                        kp_chunk, ts,
+                                        &mut arena[off..off + len], bw);
+                            done.push((t, off, len));
+                            off += len;
+                            t += workers;
+                        }
+                        done
+                    })
                 })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("dp worker panicked"))
-            .collect()
-    });
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("dp worker panicked"))
+                .collect()
+        });
 
-    for worker_tiles in results {
-        for (t, buf) in worker_tiles {
+    for (arena, worker_tiles) in stitch.iter().zip(&results) {
+        for &(t, off, len) in worker_tiles {
             let (r0, _r1, c0, c1) = tiles[t];
             let bw = c1 - c0;
-            for (ri, row) in buf.chunks_exact(bw).enumerate() {
+            for (ri, row) in arena[off..off + len].chunks_exact(bw)
+                .enumerate()
+            {
                 let dst = (r0 + ri) * n + c0;
                 out.data[dst..dst + bw].copy_from_slice(row);
             }

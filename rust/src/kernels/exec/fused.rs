@@ -1,5 +1,15 @@
-//! The fused dequant-in-the-loop micro-kernel shared by both host
-//! decompositions (DESIGN.md §5).
+//! The *reference* fused dequant-in-the-loop micro-kernel
+//! (DESIGN.md §5).
+//!
+//! Since the register-blocked LUT micro-kernel
+//! ([`kernel_tile`](super::microkernel::kernel_tile)) took over the
+//! executors, this kernel's job is to be the **bit-identity oracle**:
+//! it computes the same per-element `acc += a·w` chain in the same
+//! strictly-ascending-k order with the plainest possible loop, and the
+//! property tests pin the fast path to it bit for bit across the full
+//! ragged-shape grid. [`fused_gemm_legacy`] wraps it in the pre-LUT
+//! data-parallel executor so benches can measure the generation gap
+//! (`benches/microkernel.rs`).
 //!
 //! One call accumulates `A[r0..r1, k-range] @ dequant(B)[k-range, c0..c1]`
 //! into a caller-provided output window. Packed int4 nibbles are unpacked
@@ -32,7 +42,7 @@ use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 /// * `out` — row-major window with `out_stride` floats per row whose
 ///   origin is element `(r0, c0)`; the tile is accumulated (`+=`), not
 ///   stored, so callers can layer k ranges.
-pub(crate) fn fused_tile(
+pub fn fused_tile(
     a: &MatF32,
     q: &QuantizedLinear,
     r0: usize,
@@ -108,6 +118,87 @@ pub(crate) fn fused_tile(
             kp += 1;
         }
     }
+}
+
+/// The pre-LUT data-parallel executor, preserved verbatim: one task per
+/// output tile, full k reduction per task, running [`fused_tile`]. This
+/// is what `fused_gemm_dp` executed before the register-blocked LUT
+/// micro-kernel landed — benches use it as the "old kernel" series and
+/// property tests as a whole-GEMM bit-identity reference (worker count
+/// cannot change a bit, exactly as in the live executor).
+pub fn fused_gemm_legacy(a: &MatF32, q: &QuantizedLinear,
+                         cfg: &super::HostKernelConfig) -> MatF32 {
+    cfg.check_shapes(a, q);
+    let (m, n) = (a.rows, q.n);
+    let kp_total = q.k / PACK_FACTOR;
+    let bm = (cfg.tiles.block_m as usize).max(1);
+    let bn = (cfg.tiles.block_n as usize).max(1);
+    let kp_chunk = ((cfg.tiles.block_k as usize) / PACK_FACTOR).max(1);
+
+    let mut out = MatF32::zeros(m, n);
+    if m == 0 || n == 0 || kp_total == 0 {
+        return out;
+    }
+
+    let mut tiles = Vec::new();
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + bm).min(m);
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + bn).min(n);
+            tiles.push((r0, r1, c0, c1));
+            c0 = c1;
+        }
+        r0 = r1;
+    }
+
+    let workers = cfg.effective_threads().min(tiles.len()).max(1);
+    if workers <= 1 {
+        for &(r0, r1, c0, c1) in &tiles {
+            fused_tile(a, q, r0, r1, c0, c1, 0, kp_total, kp_chunk,
+                       &mut out.data[r0 * n + c0..], n);
+        }
+        return out;
+    }
+
+    let tile_list: &[(usize, usize, usize, usize)] = &tiles;
+    let results: Vec<Vec<(usize, Vec<f32>)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut done = Vec::new();
+                    let mut t = w;
+                    while t < tile_list.len() {
+                        let (r0, r1, c0, c1) = tile_list[t];
+                        let bw = c1 - c0;
+                        let mut buf = vec![0.0f32; (r1 - r0) * bw];
+                        fused_tile(a, q, r0, r1, c0, c1, 0, kp_total,
+                                   kp_chunk, &mut buf, bw);
+                        done.push((t, buf));
+                        t += workers;
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("legacy dp worker panicked"))
+            .collect()
+    });
+
+    for worker_tiles in results {
+        for (t, buf) in worker_tiles {
+            let (r0, _r1, c0, c1) = tiles[t];
+            let bw = c1 - c0;
+            for (ri, row) in buf.chunks_exact(bw).enumerate() {
+                let dst = (r0 + ri) * n + c0;
+                out.data[dst..dst + bw].copy_from_slice(row);
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -188,6 +279,20 @@ mod tests {
         let mut out = MatF32::zeros(3, 16);
         fused_tile(&a, &q, 0, 3, 0, 16, 0, 64 / 8, 1000, &mut out.data, 16);
         assert_eq!(out.data, want.data);
+    }
+
+    #[test]
+    fn legacy_executor_matches_dense_and_is_thread_invariant() {
+        let (a, q, want) = case(5, 128, 24, 32, 7);
+        let cfg = super::super::HostKernelConfig::dp().with_threads(1);
+        let base = fused_gemm_legacy(&a, &q, &cfg);
+        assert!(base.max_abs_diff(&want) <= 1e-4);
+        for threads in [2usize, 3] {
+            let got = fused_gemm_legacy(
+                &a, &q,
+                &super::super::HostKernelConfig::dp().with_threads(threads));
+            assert_eq!(base.data, got.data, "threads={threads}");
+        }
     }
 
     #[test]

@@ -1,0 +1,262 @@
+//! Prepacked tile-major weight layout for the LUT micro-kernel
+//! (DESIGN.md §5).
+//!
+//! `QuantizedLinear` stores `qweight` row-major over the full `n` — the
+//! layout the simulator's traffic model and the Python exporter share.
+//! The CPU micro-kernel, however, sweeps k within one `block_n`-wide
+//! column panel at a time, so every packed-row read strides by the full
+//! row pitch (`panel_width · 4` useful bytes out of every `n · 4`).
+//! [`PackedLinear`] reorders the three tensors once, at plan-warm time,
+//! into panel-major storage:
+//!
+//! * `words`: panel `p` holds its `kp_total × w_p` weight words
+//!   contiguously, k-major — the k sweep inside a panel is one
+//!   sequential stream (`w_p · 4` bytes per packed row, no gaps);
+//! * `scales` / `zeros`: per-(group, column) dequant parameters in the
+//!   same panel-major order, with the zero points already unpacked to
+//!   `f32` — the LUT build reads two contiguous slices instead of
+//!   bit-twiddling `qzeros` words per column.
+//!
+//! The reorder is pure data movement: every value is copied (or, for
+//! zeros, unpacked with the exact expression the flat path uses), so a
+//! kernel reading a `PackedLinear` computes bit-identical results to one
+//! reading the original `QuantizedLinear` — property tests pin this.
+
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
+
+/// A [`QuantizedLinear`] reordered into `block_n`-wide, tile-major
+/// column panels (plus unpacked per-panel scale/zero streams), built
+/// once per (layer, `block_n`) and cached by the host model next to its
+/// `GemmPlan`.
+#[derive(Debug, Clone)]
+pub struct PackedLinear {
+    /// Logical shape (copied from the source layer).
+    pub k: usize,
+    pub n: usize,
+    pub group_size: usize,
+    /// Panel width the layout was built for.
+    block_n: usize,
+    /// Packed weight words, panel-major: panel `p` occupies
+    /// `kp_total · w_p` words starting at `kp_total · p · block_n`
+    /// (every panel before the last has width `block_n`, so offsets are
+    /// closed-form); within a panel, row `kp` is `w_p` contiguous words.
+    words: Vec<i32>,
+    /// Per-(group, column) scales, panel-major: panel `p` occupies
+    /// `groups · w_p` floats starting at `groups · p · block_n`.
+    scales: Vec<f32>,
+    /// Per-(group, column) zero points, unpacked to `f32`, same layout
+    /// as `scales`.
+    zeros: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Reorder `q` into `block_n`-wide panels. `block_n` is clamped to
+    /// `[1, n]`; any width is legal (the last panel is simply narrower
+    /// when `n % block_n != 0`).
+    pub fn new(q: &QuantizedLinear, block_n: usize) -> Self {
+        let (k, n) = (q.k, q.n);
+        let bn = block_n.clamp(1, n.max(1));
+        let kp_total = k / PACK_FACTOR;
+        let groups = if q.group_size > 0 { k / q.group_size } else { 0 };
+
+        let mut words = vec![0i32; kp_total * n];
+        let mut scales = vec![0.0f32; groups * n];
+        let mut zeros = vec![0.0f32; groups * n];
+
+        let panels = if n == 0 { 0 } else { n.div_ceil(bn) };
+        for p in 0..panels {
+            let c0 = p * bn;
+            let w = ((p + 1) * bn).min(n) - c0;
+            let base = kp_total * c0;
+            for kp in 0..kp_total {
+                for j in 0..w {
+                    words[base + kp * w + j] = q.qword(kp, c0 + j);
+                }
+            }
+            let mbase = groups * c0;
+            for grp in 0..groups {
+                for j in 0..w {
+                    scales[mbase + grp * w + j] = q.scale_at(grp, c0 + j);
+                    // Unpacked with the flat path's exact expression, so
+                    // LUTs built from either source are bit-identical.
+                    zeros[mbase + grp * w + j] = q.zero_at(grp, c0 + j) as f32;
+                }
+            }
+        }
+        PackedLinear { k, n, group_size: q.group_size, block_n: bn,
+                       words, scales, zeros }
+    }
+
+    /// Panel width the layout was built for.
+    pub fn block_n(&self) -> usize {
+        self.block_n
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        if self.n == 0 { 0 } else { self.n.div_ceil(self.block_n) }
+    }
+
+    /// Width of panel `p` (only the last panel can be narrower).
+    #[inline]
+    pub fn panel_width(&self, p: usize) -> usize {
+        ((p + 1) * self.block_n).min(self.n) - p * self.block_n
+    }
+
+    /// Panel `p`'s weight words (`kp_total · width`, k-major).
+    #[inline]
+    pub(crate) fn panel_words(&self, p: usize) -> &[i32] {
+        let kp_total = self.k / PACK_FACTOR;
+        let start = kp_total * p * self.block_n;
+        &self.words[start..start + kp_total * self.panel_width(p)]
+    }
+
+    /// Panel `p`'s scales (`groups · width`, group-major).
+    #[inline]
+    pub(crate) fn panel_scales(&self, p: usize) -> &[f32] {
+        let groups = self.k / self.group_size;
+        let start = groups * p * self.block_n;
+        &self.scales[start..start + groups * self.panel_width(p)]
+    }
+
+    /// Panel `p`'s zero points (`groups · width`, group-major, `f32`).
+    #[inline]
+    pub(crate) fn panel_zeros(&self, p: usize) -> &[f32] {
+        let groups = self.k / self.group_size;
+        let start = groups * p * self.block_n;
+        &self.zeros[start..start + groups * self.panel_width(p)]
+    }
+
+    /// Bytes this prepacked copy occupies (the serving-memory cost of
+    /// caching it: ~the packed source + unpacked zeros).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 4 + self.scales.len() * 4 + self.zeros.len() * 4
+    }
+
+    /// True when this layout plausibly belongs to `q`: same shape, and
+    /// the first/last packed words agree (an O(1) content spot-check —
+    /// the gate `host_gemm_packed_into` applies on every dispatch, so a
+    /// cache that ever hands back a pack built from *different* weights
+    /// of the same shape — e.g. after a hypothetical weight reload
+    /// reusing an allocation address — fails loudly instead of serving
+    /// silently wrong results; full content equality is the prepack
+    /// tests' job).
+    pub fn matches(&self, q: &QuantizedLinear) -> bool {
+        if self.k != q.k || self.n != q.n || self.group_size != q.group_size {
+            return false;
+        }
+        let kp_total = self.k / PACK_FACTOR;
+        if kp_total == 0 || self.n == 0 {
+            return true;
+        }
+        // words[0] holds (kp 0, col 0); the arena's last word holds
+        // (kp_total-1, col n-1) — both in any panel decomposition.
+        self.words.first() == Some(&q.qword(0, 0))
+            && self.words.last() == Some(&q.qword(kp_total - 1, self.n - 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_weight;
+    use crate::util::Rng;
+
+    fn case(k: usize, n: usize, group: usize, seed: u64) -> QuantizedLinear {
+        let mut rng = Rng::seed_from(seed);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        quantize_weight(&w, group)
+    }
+
+    /// Every (kp, c) word and (grp, c) scale/zero must survive the
+    /// reorder exactly, including ragged last panels.
+    fn assert_roundtrip(q: &QuantizedLinear, bn: usize) {
+        let p = PackedLinear::new(q, bn);
+        assert!(p.matches(q));
+        let kp_total = q.k / 8;
+        let groups = q.k / q.group_size;
+        let mut width_sum = 0;
+        for panel in 0..p.panels() {
+            let c0 = panel * p.block_n();
+            let w = p.panel_width(panel);
+            width_sum += w;
+            let words = p.panel_words(panel);
+            assert_eq!(words.len(), kp_total * w);
+            for kp in 0..kp_total {
+                for j in 0..w {
+                    assert_eq!(words[kp * w + j], q.qword(kp, c0 + j),
+                               "word ({kp},{})", c0 + j);
+                }
+            }
+            let scales = p.panel_scales(panel);
+            let zeros = p.panel_zeros(panel);
+            for grp in 0..groups {
+                for j in 0..w {
+                    assert_eq!(scales[grp * w + j], q.scale_at(grp, c0 + j));
+                    assert_eq!(zeros[grp * w + j],
+                               q.zero_at(grp, c0 + j) as f32);
+                }
+            }
+        }
+        assert_eq!(width_sum, q.n, "panels must tile the columns");
+    }
+
+    #[test]
+    fn roundtrip_even_panels() {
+        let q = case(64, 32, 16, 1);
+        assert_roundtrip(&q, 8);
+        assert_roundtrip(&q, 32);
+    }
+
+    #[test]
+    fn roundtrip_ragged_last_panel() {
+        // n = 40 with bn = 16 -> widths 16/16/8; bn = 64 -> one panel.
+        let q = case(72, 40, 24, 2);
+        assert_roundtrip(&q, 16);
+        assert_roundtrip(&q, 64);
+        assert_roundtrip(&q, 7); // width dividing nothing
+    }
+
+    #[test]
+    fn block_n_is_clamped() {
+        let q = case(16, 8, 8, 3);
+        let p = PackedLinear::new(&q, 0);
+        assert_eq!(p.block_n(), 1);
+        let p = PackedLinear::new(&q, 1000);
+        assert_eq!(p.block_n(), 8);
+        assert_eq!(p.panels(), 1);
+    }
+
+    #[test]
+    fn bytes_accounts_all_streams() {
+        let q = case(64, 16, 32, 4);
+        let p = PackedLinear::new(&q, 8);
+        // words: 8*16 i32; scales+zeros: 2*16 f32 each.
+        assert_eq!(p.bytes(), (8 * 16 + 2 * 16 + 2 * 16) * 4);
+    }
+
+    #[test]
+    fn mismatch_detected() {
+        let q = case(64, 16, 32, 5);
+        let other = case(64, 24, 32, 6);
+        let p = PackedLinear::new(&q, 8);
+        assert!(!p.matches(&other));
+    }
+
+    #[test]
+    fn same_shape_different_weights_detected() {
+        // The O(1) content spot-check: a pack must refuse a layer of
+        // the same shape whose weights differ at the probed words
+        // (guards a cache handing back packs for reused allocation
+        // addresses after a hypothetical weight reload).
+        let q = case(64, 16, 32, 7);
+        let p = PackedLinear::new(&q, 8);
+        assert!(p.matches(&q));
+        let mut head = q.clone();
+        head.qweight.data[0] ^= 0xF;
+        assert!(!p.matches(&head), "first-word change must be detected");
+        let mut tail = q.clone();
+        *tail.qweight.data.last_mut().unwrap() ^= 0xF0;
+        assert!(!p.matches(&tail), "last-word change must be detected");
+    }
+}

@@ -1,0 +1,636 @@
+//! Register-blocked LUT micro-kernel — the successor of
+//! [`fused_tile`](super::fused::fused_tile) (DESIGN.md §5).
+//!
+//! Three changes over the reference micro-kernel, each bit-neutral:
+//!
+//! * **Per-group dequant LUTs** (LUT-GEMM / FLUTE's trick): an int4
+//!   weight can only take 16 values, so for every (quantization group,
+//!   column) the kernel precomputes `lut[v] = (v - zero) * scale` — the
+//!   *exact* expression the reference kernel evaluates per nibble — and
+//!   the inner loop replaces shift/mask/convert/sub/mul with
+//!   shift/mask/load. One LUT panel (`16 × span_width` floats, ≤ 4 KiB
+//!   at the default `block_n`) is built per (group, column span) and
+//!   stays L1-resident across the whole k sweep of that group.
+//! * **Register blocking**: instead of streaming the output row through
+//!   memory once per k step, an `MR × (2·8)` accumulator tile lives in
+//!   registers for a whole `block_k`-bounded run — loaded from the
+//!   output window once per run and stored once, with 8-wide portable
+//!   lanes ([`F32x8`]: a `[f32; 8]` wrapper whose elementwise ops the
+//!   compiler keeps vectorized). The `scalar-microkernel` cargo feature
+//!   swaps in a plain scalar loop — same operations, same order, same
+//!   bits — so the SIMD path can always be differentially tested
+//!   against it (CI runs the full test suite under both).
+//! * **Prepacked traversal** ([`PackedLinear`]): when the caller hands a
+//!   tile-major prepacked copy of the weights, the k sweep reads one
+//!   contiguous panel stream instead of striding by the full row pitch,
+//!   and scale/zero streams arrive unpacked.
+//!
+//! **Determinism contract (unchanged):** for every output element the k
+//! reduction runs in strictly ascending k order over `[8·kp0, 8·kp1)`
+//! with the same `acc + (a · w)` operation chain as the reference
+//! kernel. Column/row sub-blocking, lane width, run boundaries, and the
+//! flat-vs-prepacked source never touch a given element's chain, so
+//! every output bit matches `fused_tile` — property tests pin this
+//! across the full ragged-shape grid.
+
+use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
+
+use super::layout::PackedLinear;
+
+/// Column cap of one flat-layout segment: bounds the LUT panel at
+/// `16 · 64` floats (4 KiB, L1-resident) regardless of the caller's
+/// span width. Prepacked segments are bounded by their panel width
+/// instead.
+const FLAT_SEGMENT_COLS: usize = 64;
+
+/// Register-tile height (rows per accumulator block).
+#[cfg(not(feature = "scalar-microkernel"))]
+const MR: usize = 4;
+/// Register-tile width (columns per accumulator block: two 8-lane
+/// vectors).
+#[cfg(not(feature = "scalar-microkernel"))]
+const LANE_SPAN: usize = 16;
+
+/// Which storage the micro-kernel reads the weights from.
+#[derive(Clone, Copy)]
+pub(crate) enum WeightsRef<'a> {
+    /// The canonical row-major `QuantizedLinear`.
+    Flat(&'a QuantizedLinear),
+    /// A tile-major prepacked copy (plus the source layer for shape
+    /// metadata). Must satisfy `pack.matches(q)`.
+    Packed {
+        q: &'a QuantizedLinear,
+        pack: &'a PackedLinear,
+    },
+}
+
+impl<'a> WeightsRef<'a> {
+    /// The underlying layer (shape/metadata source).
+    pub(crate) fn q(&self) -> &'a QuantizedLinear {
+        match self {
+            WeightsRef::Flat(q) => q,
+            WeightsRef::Packed { q, .. } => q,
+        }
+    }
+}
+
+/// Reusable per-worker micro-kernel scratch: the dequant LUT panel and
+/// the row buffer the scalar tail consumes. Buffers grow to the widest
+/// span seen and are then reused allocation-free (`allocs` counts the
+/// growth events; [`super::SplitKScratch::alloc_events`] folds them into
+/// the steady-state assertion the autotuner and decode loop rely on).
+#[derive(Debug, Default)]
+pub(crate) struct TileScratch {
+    /// Dequant LUT panel, `16 · span` floats: entry `t·16 + v` is column
+    /// `t`'s dequantized value for nibble `v` in the current group.
+    lut: Vec<f32>,
+    /// Dequantized row span for the scalar (non-register-tiled) path.
+    wrow: Vec<f32>,
+    /// Buffer growth events (see [`super::SplitKScratch::alloc_events`]).
+    pub(crate) allocs: u64,
+}
+
+impl TileScratch {
+    /// Grow the buffers to cover a `bw`-wide span (never shrinks — the
+    /// decode loop alternates projection widths and must not thrash).
+    fn ensure(&mut self, bw: usize) {
+        if self.wrow.len() < bw {
+            self.wrow.resize(bw, 0.0);
+            self.lut.resize(bw * 16, 0.0);
+            self.allocs += 1;
+        }
+    }
+}
+
+/// Where a LUT panel's scale/zero parameters come from.
+#[derive(Clone, Copy)]
+enum LutSrc<'a> {
+    /// Flat layer + first column of the span (zeros unpacked on the
+    /// fly with [`QuantizedLinear::zero_at`]).
+    Flat(&'a QuantizedLinear, usize),
+    /// Prepacked panel streams of width `w`; the span starts at column
+    /// offset `j0` inside the panel.
+    Panel {
+        scales: &'a [f32],
+        zeros: &'a [f32],
+        w: usize,
+        j0: usize,
+    },
+}
+
+/// Build the 16-entry-per-column LUT for group `grp` over a `bw`-wide
+/// span: `lut[t·16 + v] = (v - zero) * scale` — bit-identical to the
+/// reference kernel's in-loop `(nibble - zero) * scale`.
+fn build_lut(src: &LutSrc<'_>, grp: usize, bw: usize, lut: &mut [f32]) {
+    match *src {
+        LutSrc::Flat(q, s0) => {
+            for t in 0..bw {
+                let z = q.zero_at(grp, s0 + t) as f32;
+                let s = q.scale_at(grp, s0 + t);
+                for v in 0..16 {
+                    lut[t * 16 + v] = (v as f32 - z) * s;
+                }
+            }
+        }
+        LutSrc::Panel { scales, zeros, w, j0 } => {
+            for t in 0..bw {
+                let z = zeros[grp * w + j0 + t];
+                let s = scales[grp * w + j0 + t];
+                for v in 0..16 {
+                    lut[t * 16 + v] = (v as f32 - z) * s;
+                }
+            }
+        }
+    }
+}
+
+/// Packed-word row access for one column span, monomorphized per
+/// storage layout so the inner loops carry no dispatch.
+trait WordRows {
+    /// The span's packed words of k row `kp` (length = span width).
+    fn row(&self, kp: usize) -> &[i32];
+}
+
+/// Span `s0..s1` of the flat row-major `qweight`.
+struct FlatRows<'a> {
+    data: &'a [i32],
+    n: usize,
+    s0: usize,
+    s1: usize,
+}
+
+impl WordRows for FlatRows<'_> {
+    #[inline(always)]
+    fn row(&self, kp: usize) -> &[i32] {
+        &self.data[kp * self.n + self.s0..kp * self.n + self.s1]
+    }
+}
+
+/// Columns `j0..j1` of one prepacked panel of width `w`.
+struct PanelRows<'a> {
+    words: &'a [i32],
+    w: usize,
+    j0: usize,
+    j1: usize,
+}
+
+impl WordRows for PanelRows<'_> {
+    #[inline(always)]
+    fn row(&self, kp: usize) -> &[i32] {
+        &self.words[kp * self.w + self.j0..kp * self.w + self.j1]
+    }
+}
+
+/// Portable 8-lane f32 vector: a `[f32; 8]` whose elementwise ops stay
+/// in one basic block so the optimizer lowers them to the target's
+/// native SIMD. Lane ops are exactly the scalar ops applied per lane —
+/// no horizontal operations, no FMA contraction — so results are
+/// bit-identical to the scalar fallback.
+#[cfg(not(feature = "scalar-microkernel"))]
+#[derive(Clone, Copy)]
+struct F32x8([f32; 8]);
+
+#[cfg(not(feature = "scalar-microkernel"))]
+impl F32x8 {
+    #[inline(always)]
+    fn load(s: &[f32]) -> Self {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        F32x8([x; 8])
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        let mut r = self.0;
+        for t in 0..8 {
+            r[t] *= o.0[t];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        let mut r = self.0;
+        for t in 0..8 {
+            r[t] += o.0[t];
+        }
+        F32x8(r)
+    }
+
+    #[inline(always)]
+    fn store(self, d: &mut [f32]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+}
+
+/// One `MR_ROWS × 16` register tile over a `[kp0, kp1)` run: load the
+/// accumulators from the output window once, sweep the run with the
+/// LUT-gathered weight vectors, store once. Per element this is the
+/// reference kernel's exact `acc += a·w` chain in ascending k — only
+/// where the accumulator *lives* changed (registers vs a memory
+/// round-trip per k step).
+#[cfg(not(feature = "scalar-microkernel"))]
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn run_tile<const MR_ROWS: usize, W: WordRows>(
+    a: &MatF32,
+    rows: &W,
+    kp0: usize,
+    kp1: usize,
+    r_abs: usize,
+    win_r0: usize,
+    j: usize,
+    lut: &[f32],
+    out: &mut [f32],
+    out_stride: usize,
+    col_off: usize,
+    k: usize,
+) {
+    let mut acc = [[F32x8::splat(0.0); 2]; MR_ROWS];
+    for r in 0..MR_ROWS {
+        let o = (r_abs + r - win_r0) * out_stride + col_off + j;
+        acc[r][0] = F32x8::load(&out[o..o + 8]);
+        acc[r][1] = F32x8::load(&out[o + 8..o + 16]);
+    }
+    for kp in kp0..kp1 {
+        let row = rows.row(kp);
+        let words = &row[j..j + LANE_SPAN];
+        for i in 0..PACK_FACTOR {
+            let sh = (4 * i) as u32;
+            // Gather this nibble's dequantized values from the LUT
+            // (each column's 16 entries are one cache line).
+            let mut lo = [0.0f32; 8];
+            let mut hi = [0.0f32; 8];
+            for t in 0..8 {
+                lo[t] = lut[(j + t) * 16
+                    + (((words[t] as u32) >> sh) & 0xF) as usize];
+                hi[t] = lut[(j + 8 + t) * 16
+                    + (((words[8 + t] as u32) >> sh) & 0xF) as usize];
+            }
+            let (wlo, whi) = (F32x8(lo), F32x8(hi));
+            let kk = kp * PACK_FACTOR + i;
+            for r in 0..MR_ROWS {
+                let av = F32x8::splat(a.data[(r_abs + r) * k + kk]);
+                acc[r][0] = acc[r][0].add(av.mul(wlo));
+                acc[r][1] = acc[r][1].add(av.mul(whi));
+            }
+        }
+    }
+    for r in 0..MR_ROWS {
+        let o = (r_abs + r - win_r0) * out_stride + col_off + j;
+        acc[r][0].store(&mut out[o..o + 8]);
+        acc[r][1].store(&mut out[o + 8..o + 16]);
+    }
+}
+
+/// Scalar path: columns `j0..bw` of the span, all rows, reference loop
+/// structure (dequantize a row span via the LUT, then rank-1 updates).
+/// Serves as the ragged-width tail of the vector path and, under the
+/// `scalar-microkernel` feature, as the whole kernel.
+#[allow(clippy::too_many_arguments)]
+fn scalar_run<W: WordRows>(
+    a: &MatF32,
+    rows: &W,
+    kp0: usize,
+    kp1: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    bw: usize,
+    lut: &[f32],
+    wrow: &mut [f32],
+    out: &mut [f32],
+    out_stride: usize,
+    col_off: usize,
+    k: usize,
+) {
+    for kp in kp0..kp1 {
+        let row = rows.row(kp);
+        for i in 0..PACK_FACTOR {
+            let sh = (4 * i) as u32;
+            for t in j0..bw {
+                wrow[t] =
+                    lut[t * 16 + (((row[t] as u32) >> sh) & 0xF) as usize];
+            }
+            let kk = kp * PACK_FACTOR + i;
+            for r in r0..r1 {
+                let av = a.data[r * k + kk];
+                let o = (r - r0) * out_stride + col_off;
+                let orow = &mut out[o + j0..o + bw];
+                for (oo, &ww) in orow.iter_mut().zip(&wrow[j0..bw]) {
+                    *oo += av * ww;
+                }
+            }
+        }
+    }
+}
+
+/// One `[kp0, kp1)` run over the whole span: 16-column register tiles
+/// (rows in blocks of [`MR`], monomorphized remainders) plus a scalar
+/// tail for the ragged columns.
+#[allow(clippy::too_many_arguments)]
+fn run_span<W: WordRows>(
+    a: &MatF32,
+    rows: &W,
+    kp0: usize,
+    kp1: usize,
+    r0: usize,
+    r1: usize,
+    bw: usize,
+    lut: &[f32],
+    wrow: &mut [f32],
+    out: &mut [f32],
+    out_stride: usize,
+    col_off: usize,
+    k: usize,
+) {
+    #[cfg(not(feature = "scalar-microkernel"))]
+    let j0 = {
+        let mut j = 0;
+        while j + LANE_SPAN <= bw {
+            let mut r = r0;
+            while r + MR <= r1 {
+                run_tile::<MR, W>(a, rows, kp0, kp1, r, r0, j, lut, out,
+                                  out_stride, col_off, k);
+                r += MR;
+            }
+            match r1 - r {
+                1 => run_tile::<1, W>(a, rows, kp0, kp1, r, r0, j, lut, out,
+                                      out_stride, col_off, k),
+                2 => run_tile::<2, W>(a, rows, kp0, kp1, r, r0, j, lut, out,
+                                      out_stride, col_off, k),
+                3 => run_tile::<3, W>(a, rows, kp0, kp1, r, r0, j, lut, out,
+                                      out_stride, col_off, k),
+                _ => {}
+            }
+            j += LANE_SPAN;
+        }
+        j
+    };
+    #[cfg(feature = "scalar-microkernel")]
+    let j0 = 0;
+    if j0 < bw {
+        scalar_run(a, rows, kp0, kp1, r0, r1, j0, bw, lut, wrow, out,
+                   out_stride, col_off, k);
+    }
+}
+
+/// Sweep one column segment `[s0, s1)` over `[kp0, kp1)`: build the LUT
+/// panel whenever the quantization group changes, and hand each
+/// `block_k`-bounded run to [`run_span`]. Run boundaries mirror the
+/// reference kernel exactly (group end, cache block end, range end).
+#[allow(clippy::too_many_arguments)]
+fn segment_sweep<W: WordRows>(
+    a: &MatF32,
+    lut_src: &LutSrc<'_>,
+    rows: &W,
+    r0: usize,
+    r1: usize,
+    c0_win: usize,
+    s0: usize,
+    s1: usize,
+    kp0: usize,
+    kp1: usize,
+    chunk: usize,
+    gp: usize,
+    k: usize,
+    ts: &mut TileScratch,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    let bw = s1 - s0;
+    ts.ensure(bw);
+    let col_off = s0 - c0_win;
+    let TileScratch { lut, wrow, .. } = ts;
+    let lut = &mut lut[..bw * 16];
+    let wrow = &mut wrow[..bw];
+
+    let mut kp = kp0;
+    let mut cur_grp = usize::MAX;
+    while kp < kp1 {
+        let grp = kp / gp;
+        if grp != cur_grp {
+            build_lut(lut_src, grp, bw, lut);
+            cur_grp = grp;
+        }
+        let run_end = kp1.min((grp + 1) * gp).min(kp + chunk);
+        run_span(a, rows, kp, run_end, r0, r1, bw, lut, wrow, out,
+                 out_stride, col_off, k);
+        kp = run_end;
+    }
+}
+
+/// Accumulate the fused product into `out` — the drop-in successor of
+/// [`fused_tile`](super::fused::fused_tile), same window contract
+/// (`out` origin at `(r0, c0)`, accumulated not stored), same
+/// per-element reduction order, bit-identical output.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn kernel_tile(
+    a: &MatF32,
+    wr: WeightsRef<'_>,
+    r0: usize,
+    r1: usize,
+    c0: usize,
+    c1: usize,
+    kp0: usize,
+    kp1: usize,
+    kp_chunk: usize,
+    ts: &mut TileScratch,
+    out: &mut [f32],
+    out_stride: usize,
+) {
+    if r0 >= r1 || c0 >= c1 || kp0 >= kp1 {
+        return;
+    }
+    let q = wr.q();
+    debug_assert!(r1 <= a.rows && c1 <= q.n);
+    debug_assert!(kp1 <= q.k / PACK_FACTOR);
+    debug_assert!(out_stride >= c1 - c0);
+    let k = q.k;
+    let gp = q.group_size / PACK_FACTOR;
+    let chunk = kp_chunk.max(1);
+
+    match wr {
+        WeightsRef::Flat(q) => {
+            // Cap flat segments at FLAT_SEGMENT_COLS so the LUT panel
+            // stays L1-resident (16 × 64 floats = 4 KiB) no matter how
+            // wide the caller's span is — the skinny-m SplitK path
+            // sweeps full rows (`colw = n`). Column segmentation is
+            // bit-neutral (it partitions elements, never an element's
+            // k chain).
+            let mut s0 = c0;
+            while s0 < c1 {
+                let s1 = (s0 + FLAT_SEGMENT_COLS).min(c1);
+                let rows = FlatRows { data: &q.qweight.data, n: q.n, s0,
+                                      s1 };
+                let src = LutSrc::Flat(q, s0);
+                segment_sweep(a, &src, &rows, r0, r1, c0, s0, s1, kp0, kp1,
+                              chunk, gp, k, ts, out, out_stride);
+                s0 = s1;
+            }
+        }
+        WeightsRef::Packed { q: _, pack } => {
+            debug_assert!(pack.matches(q));
+            // Split the span at panel boundaries so each segment reads
+            // one contiguous panel stream. Column segmentation cannot
+            // affect any element's k chain, so this is bit-neutral.
+            let bn = pack.block_n();
+            let mut s0 = c0;
+            while s0 < c1 {
+                let p = s0 / bn;
+                let pc0 = p * bn;
+                let s1 = (pc0 + bn).min(c1);
+                let w = pack.panel_width(p);
+                let rows = PanelRows { words: pack.panel_words(p), w,
+                                       j0: s0 - pc0, j1: s1 - pc0 };
+                let src = LutSrc::Panel { scales: pack.panel_scales(p),
+                                          zeros: pack.panel_zeros(p), w,
+                                          j0: s0 - pc0 };
+                segment_sweep(a, &src, &rows, r0, r1, c0, s0, s1, kp0, kp1,
+                              chunk, gp, k, ts, out, out_stride);
+                s0 = s1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fused::fused_tile;
+    use super::*;
+    use crate::quant::quantize_weight;
+    use crate::util::Rng;
+
+    fn case(m: usize, k: usize, n: usize, group: usize, seed: u64)
+            -> (MatF32, QuantizedLinear) {
+        let mut rng = Rng::seed_from(seed);
+        let w = MatF32::new(k, n, rng.normal_vec(k * n, 0.1));
+        let q = quantize_weight(&w, group);
+        let a = MatF32::new(
+            m, k,
+            (0..m * k)
+                .map(|i| if i % 7 == 0 { 0.0 } else { rng.uniform_f32(-1.0, 1.0) })
+                .collect());
+        (a, q)
+    }
+
+    /// The acceptance bar at tile granularity: for a grid of ragged
+    /// windows, the LUT kernel (flat and prepacked at several panel
+    /// widths) must reproduce the reference `fused_tile` bit for bit.
+    #[test]
+    fn bit_identical_to_reference_tile_across_window_grid() {
+        // Shapes divide into the windows unevenly on purpose.
+        for (m, k, n, group, seed) in [
+            (1usize, 64usize, 16usize, 32usize, 1u64),
+            (3, 192, 40, 24, 2),
+            (7, 72, 24, 24, 3),
+            (16, 128, 72, 64, 4),
+        ] {
+            let (a, q) = case(m, k, n, group, seed);
+            let kp_total = k / 8;
+            let windows = [
+                (0, m, 0, n, 0, kp_total, 4),
+                (0, m, 0, n, 0, kp_total, 1),
+                (0, 1, 0, n, 0, kp_total, 1000),
+                (0, m, 3.min(n - 1), n, 0, kp_total, 3),
+                (m / 2, m, 0, 17.min(n), kp_total / 3, kp_total, 2),
+                (0, m, 5.min(n - 1), 21.min(n), 1.min(kp_total - 1),
+                 kp_total, 5),
+            ];
+            for &(r0, r1, c0, c1, kp0, kp1, chunk) in &windows {
+                if r0 >= r1 || c0 >= c1 || kp0 >= kp1 {
+                    continue;
+                }
+                let bw = c1 - c0;
+                let rows = r1 - r0;
+                // Seed the windows with a nonzero pattern so the
+                // accumulate (+=) contract is exercised too.
+                let seed_out: Vec<f32> =
+                    (0..rows * bw).map(|i| (i % 5) as f32 * 0.25).collect();
+                let mut want = seed_out.clone();
+                fused_tile(&a, &q, r0, r1, c0, c1, kp0, kp1, chunk,
+                           &mut want, bw);
+                let mut ts = TileScratch::default();
+                let mut got = seed_out.clone();
+                kernel_tile(&a, WeightsRef::Flat(&q), r0, r1, c0, c1, kp0,
+                            kp1, chunk, &mut ts, &mut got, bw);
+                assert_eq!(want, got,
+                           "flat window r{r0}..{r1} c{c0}..{c1} kp{kp0}..{kp1}");
+                for bn in [5usize, 8, 16, 64] {
+                    let pack = PackedLinear::new(&q, bn);
+                    let mut got = seed_out.clone();
+                    kernel_tile(&a,
+                                WeightsRef::Packed { q: &q, pack: &pack },
+                                r0, r1, c0, c1, kp0, kp1, chunk, &mut ts,
+                                &mut got, bw);
+                    assert_eq!(want, got,
+                               "packed bn={bn} window r{r0}..{r1} c{c0}..{c1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_ranges_compose_bitwise() {
+        // Two disjoint packed-row ranges accumulated into one window ==
+        // one full-range pass, exactly (same per-element order) — the
+        // property the SplitK slice partials rely on.
+        let (a, q) = case(2, 128, 24, 64, 10);
+        let mut ts = TileScratch::default();
+        let mut full = vec![0.0f32; 2 * 24];
+        kernel_tile(&a, WeightsRef::Flat(&q), 0, 2, 0, 24, 0, 16, 3,
+                    &mut ts, &mut full, 24);
+        let mut split = vec![0.0f32; 2 * 24];
+        kernel_tile(&a, WeightsRef::Flat(&q), 0, 2, 0, 24, 0, 5, 3,
+                    &mut ts, &mut split, 24);
+        kernel_tile(&a, WeightsRef::Flat(&q), 0, 2, 0, 24, 5, 16, 3,
+                    &mut ts, &mut split, 24);
+        assert_eq!(full, split);
+    }
+
+    #[test]
+    fn scratch_reuse_across_spans_is_bit_stable() {
+        // One TileScratch carried across different widths/groups must
+        // not leak state between calls (the LUT is rebuilt per group,
+        // the row buffer fully overwritten per span).
+        let (a1, q1) = case(2, 64, 40, 16, 11);
+        let (a2, q2) = case(1, 96, 8, 32, 12);
+        let mut ts = TileScratch::default();
+        for _ in 0..2 {
+            let mut got = vec![0.0f32; 2 * 40];
+            kernel_tile(&a1, WeightsRef::Flat(&q1), 0, 2, 0, 40, 0, 8, 2,
+                        &mut ts, &mut got, 40);
+            let mut want = vec![0.0f32; 2 * 40];
+            fused_tile(&a1, &q1, 0, 2, 0, 40, 0, 8, 2, &mut want, 40);
+            assert_eq!(want, got);
+            let mut got = vec![0.0f32; 8];
+            kernel_tile(&a2, WeightsRef::Flat(&q2), 0, 1, 0, 8, 0, 12, 4,
+                        &mut ts, &mut got, 8);
+            let mut want = vec![0.0f32; 8];
+            fused_tile(&a2, &q2, 0, 1, 0, 8, 0, 12, 4, &mut want, 8);
+            assert_eq!(want, got);
+        }
+        // Two growth events at most (one per distinct max width) — the
+        // second pass reused both buffers.
+        assert!(ts.allocs <= 2, "allocs {}", ts.allocs);
+    }
+
+    #[test]
+    fn empty_windows_are_no_ops() {
+        let (a, q) = case(2, 64, 16, 32, 13);
+        let mut ts = TileScratch::default();
+        let mut out = vec![7.0f32; 2 * 16];
+        kernel_tile(&a, WeightsRef::Flat(&q), 0, 0, 0, 16, 0, 8, 1, &mut ts,
+                    &mut out, 16);
+        kernel_tile(&a, WeightsRef::Flat(&q), 0, 2, 4, 4, 0, 8, 1, &mut ts,
+                    &mut out, 16);
+        kernel_tile(&a, WeightsRef::Flat(&q), 0, 2, 0, 16, 3, 3, 1, &mut ts,
+                    &mut out, 16);
+        assert!(out.iter().all(|&v| v == 7.0));
+    }
+}

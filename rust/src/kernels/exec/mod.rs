@@ -14,9 +14,14 @@
 //!   deterministic boundary-tile fixup merge (the paper's §4
 //!   future-work direction, executable).
 //!
-//! Both unpack int4 nibbles from the packed `i32` words inside the inner
-//! loop — no dense `f32[k, n]` weight is ever materialized — and reuse
-//! the existing [`TileConfig`] / [`GemmShape`](super::GemmShape) /
+//! All three decompositions feed the register-blocked LUT micro-kernel
+//! ([`microkernel`]): int4 nibbles are unpacked from the packed `i32`
+//! words inside the inner loop — no dense `f32[k, n]` weight is ever
+//! materialized — through a per-(group, column) 16-entry dequant LUT,
+//! with `m_r × n_r` accumulator tiles in registers and, when the plan
+//! says so ([`KernelLayout::Prepacked`]), a tile-major [`PackedLinear`]
+//! weight copy whose k sweep is one contiguous stream. They reuse the
+//! existing [`TileConfig`] / [`GemmShape`](super::GemmShape) /
 //! [`Decomposition`] vocabulary so the autotuner can sweep real
 //! wall-clock times next to simulated ones
 //! ([`autotune_split_k_host`](super::autotune_split_k_host)).
@@ -27,19 +32,46 @@
 
 mod dp;
 mod fused;
+mod layout;
+mod microkernel;
 mod splitk;
 mod streamk;
 
 pub use dp::{fused_gemm_dp, fused_gemm_dp_into};
+pub use fused::{fused_gemm_legacy, fused_tile};
+pub use layout::PackedLinear;
 pub use splitk::{fused_gemm_splitk, fused_gemm_splitk_into, SplitKScratch};
 pub use streamk::{fused_gemm_streamk, fused_gemm_streamk_into};
+
+use std::sync::OnceLock;
 
 use crate::gpusim::Decomposition;
 use crate::quant::{quantize_weight, w4a16_gemm_ref, MatF32, QuantizedLinear,
                    PACK_FACTOR};
 use crate::util::Rng;
 
+use microkernel::WeightsRef;
+
 use super::TileConfig;
+
+/// Which weight storage an executor traverses.
+///
+/// The layout is *plan metadata*: both layouts compute bit-identical
+/// results (the prepack is pure data movement — see [`PackedLinear`]),
+/// so the autotuner sweeps it like any other knob and the serving plan
+/// cache records the winner. `Flat` reads the canonical
+/// [`QuantizedLinear`]; `Prepacked` expects the caller to supply a
+/// [`PackedLinear`] via [`host_gemm_packed_into`] (entry points without
+/// one simply run flat — the config is a preference, the entry point
+/// the mechanism).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelLayout {
+    /// Row-major `QuantizedLinear` storage (the artifact format).
+    Flat,
+    /// Tile-major [`PackedLinear`] panels, built once per (layer,
+    /// `block_n`) and cached by the host model.
+    Prepacked,
+}
 
 /// Execution parameters of the host backend: tile geometry (reusing the
 /// Triton-side [`TileConfig`]; `warps`/`stages` have no CPU meaning and
@@ -56,6 +88,10 @@ pub struct HostKernelConfig {
     pub decomposition: Decomposition,
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
+    /// Weight traversal layout (flat vs tile-major prepacked) — the
+    /// third plan axis the autotuner sweeps. Bit-neutral by
+    /// construction.
+    pub layout: KernelLayout,
 }
 
 impl HostKernelConfig {
@@ -70,6 +106,7 @@ impl HostKernelConfig {
             tiles: Self::host_tiles(),
             decomposition: Decomposition::DataParallel,
             threads: 0,
+            layout: KernelLayout::Flat,
         }
     }
 
@@ -79,6 +116,7 @@ impl HostKernelConfig {
             tiles: Self::host_tiles(),
             decomposition: Decomposition::SplitK { split_k },
             threads: 0,
+            layout: KernelLayout::Flat,
         }
     }
 
@@ -88,6 +126,7 @@ impl HostKernelConfig {
             tiles: Self::host_tiles(),
             decomposition: Decomposition::StreamK { workers },
             threads: 0,
+            layout: KernelLayout::Flat,
         }
     }
 
@@ -101,6 +140,17 @@ impl HostKernelConfig {
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
+    }
+
+    /// Builder: select the weight traversal layout.
+    pub fn with_layout(mut self, layout: KernelLayout) -> Self {
+        self.layout = layout;
+        self
+    }
+
+    /// True when the plan wants the tile-major prepacked traversal.
+    pub fn prepacked(&self) -> bool {
+        self.layout == KernelLayout::Prepacked
     }
 
     /// The decomposition this config executes (normalized: a SplitK
@@ -131,24 +181,30 @@ impl HostKernelConfig {
         }
     }
 
-    /// Compact sweep label, e.g. `splitk4/bn64/bk256/t8`.
+    /// Compact sweep label, e.g. `splitk4/bn64/bk256/t8` (with a `/pk`
+    /// suffix when the plan uses the prepacked layout).
     pub fn label(&self) -> String {
-        format!("{}/bn{}/bk{}/t{}", self.decomposition().label(),
+        let pk = if self.prepacked() { "/pk" } else { "" };
+        format!("{}/bn{}/bk{}/t{}{pk}", self.decomposition().label(),
                 self.tiles.block_n, self.tiles.block_k, self.threads)
     }
 
-    /// Resolved worker count (0 ⇒ available cores).
+    /// Resolved worker count (0 ⇒ available cores, via the process-wide
+    /// [`available_cores`] cache).
     pub fn effective_threads(&self) -> usize {
         if self.threads > 0 {
             self.threads
         } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            available_cores()
         }
     }
 
     /// Panic (like the reference path) on layout violations. The W4
     /// storage format guarantees these for any `quantize_weight` output;
-    /// hand-built [`QuantizedLinear`]s are checked here.
+    /// hand-built [`QuantizedLinear`]s are checked here — including the
+    /// *buffer dimensions* of all three packed tensors against
+    /// `(k, n, group_size)`, since a short `qweight`/`scales`/`qzeros`
+    /// would otherwise reach the kernels' unchecked hot-loop indexing.
     pub(crate) fn check_shapes(&self, a: &MatF32, q: &QuantizedLinear) {
         assert_eq!(a.cols, q.k, "activation k != weight k");
         assert_eq!(q.k % PACK_FACTOR, 0, "k must be a multiple of 8");
@@ -156,7 +212,27 @@ impl HostKernelConfig {
                    "group_size must be a multiple of 8");
         assert_eq!(q.k % q.group_size, 0, "k must be a multiple of group_size");
         assert_eq!(q.n % PACK_FACTOR, 0, "n must be a multiple of 8");
+        let groups = q.k / q.group_size;
+        assert_eq!((q.qweight.rows, q.qweight.cols),
+                   (q.k / PACK_FACTOR, q.n),
+                   "qweight buffer is not [k/8, n]");
+        assert_eq!((q.scales.rows, q.scales.cols), (groups, q.n),
+                   "scales buffer is not [k/group_size, n]");
+        assert_eq!((q.qzeros.rows, q.qzeros.cols),
+                   (groups, q.n / PACK_FACTOR),
+                   "qzeros buffer is not [k/group_size, n/8]");
     }
+}
+
+/// Process-wide cached core count. `effective_threads()` used to query
+/// `available_parallelism` on every GEMM dispatch — a syscall (cgroup
+/// probing on Linux) on the decode loop's hottest path; one lookup per
+/// process is enough, serving machines don't hot-swap CPUs.
+pub fn available_cores() -> usize {
+    static CORES: OnceLock<usize> = OnceLock::new();
+    *CORES.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Resize `out` to `rows × cols` (reallocating only on shape change)
@@ -186,23 +262,46 @@ pub fn host_gemm(a: &MatF32, q: &QuantizedLinear,
 pub fn host_gemm_into(a: &MatF32, q: &QuantizedLinear,
                       cfg: &HostKernelConfig,
                       scratch: &mut SplitKScratch, out: &mut MatF32) {
+    gemm_exec(a, WeightsRef::Flat(q), cfg, scratch, out);
+}
+
+/// [`host_gemm_into`] traversing a tile-major [`PackedLinear`] copy of
+/// `q` instead of the flat layer — the entry point a
+/// `layout: Prepacked` plan dispatches through. Bit-identical to the
+/// flat path (the prepack is pure data movement; property tests pin
+/// this), so callers may mix entry points freely. Panics if `pack` was
+/// built from a layer of a different shape.
+pub fn host_gemm_packed_into(a: &MatF32, q: &QuantizedLinear,
+                             pack: &PackedLinear, cfg: &HostKernelConfig,
+                             scratch: &mut SplitKScratch, out: &mut MatF32) {
+    assert!(pack.matches(q),
+            "prepacked layout shape mismatch: pack is [{}, {}] g{}, layer \
+             is [{}, {}] g{}",
+            pack.k, pack.n, pack.group_size, q.k, q.n, q.group_size);
+    gemm_exec(a, WeightsRef::Packed { q, pack }, cfg, scratch, out);
+}
+
+/// Decomposition dispatch shared by the flat and prepacked entry points.
+fn gemm_exec(a: &MatF32, wr: WeightsRef<'_>, cfg: &HostKernelConfig,
+             scratch: &mut SplitKScratch, out: &mut MatF32) {
     match cfg.decomposition() {
-        Decomposition::DataParallel => fused_gemm_dp_into(a, q, cfg, out),
+        Decomposition::DataParallel => dp::dp_exec(a, wr, cfg, scratch, out),
         Decomposition::SplitK { .. } => {
-            fused_gemm_splitk_into(a, q, cfg, scratch, out)
+            splitk::splitk_exec(a, wr, cfg, scratch, out)
         }
         Decomposition::StreamK { .. } => {
-            fused_gemm_streamk_into(a, q, cfg, scratch, out)
+            streamk::streamk_exec(a, wr, cfg, scratch, out)
         }
     }
 }
 
 /// Batched multi-projection entry point: run one activation through
-/// several same-shaped quantized layers (the decode step's fused
-/// q/k/v projections), reusing a single scratch across all of them.
-/// Equivalent to calling [`host_gemm`] per layer, bit for bit. An empty
-/// layer list yields an empty result (never an index panic — callers
-/// like the serving dispatcher must stay total in release builds).
+/// several same-shaped quantized layers, reusing a single scratch
+/// across all of them. Equivalent to calling [`host_gemm`] per layer,
+/// bit for bit. An empty layer list yields an empty result (never an
+/// index panic — batched callers must stay total in release builds).
+/// Flat-layout convenience; the serving dispatcher routes per layer
+/// itself so each layer can use its cached prepacked copy.
 pub fn host_gemm_multi(a: &MatF32, qs: &[&QuantizedLinear],
                        cfg: &HostKernelConfig,
                        scratch: &mut SplitKScratch) -> Vec<MatF32> {
@@ -277,6 +376,22 @@ mod tests {
         assert!(HostKernelConfig::dp().effective_threads() >= 1);
         assert_eq!(HostKernelConfig::streamk(4).with_threads(3).label(),
                    "streamk4/bn64/bk256/t3");
+        // The layout axis: Flat by default, builder + label suffix.
+        assert_eq!(dp.layout, KernelLayout::Flat);
+        assert!(!dp.prepacked());
+        let pk = HostKernelConfig::splitk(4)
+            .with_threads(2)
+            .with_layout(KernelLayout::Prepacked);
+        assert!(pk.prepacked());
+        assert_eq!(pk.label(), "splitk4/bn64/bk256/t2/pk");
+    }
+
+    #[test]
+    fn available_cores_is_stable_and_positive() {
+        let c = available_cores();
+        assert!(c >= 1);
+        // Cached: repeated lookups agree (and are now syscall-free).
+        assert_eq!(c, available_cores());
     }
 
     #[test]
@@ -335,36 +450,161 @@ mod tests {
     }
 
     #[test]
+    fn packed_layout_is_bit_identical_to_flat() {
+        // host_gemm_packed_into == host_gemm_into, bit for bit, for all
+        // three decompositions — including a pack whose panel width
+        // differs from the executing tile geometry (the kernel segments
+        // at panel boundaries internally).
+        let mut rng = Rng::seed_from(36);
+        let w = MatF32::new(192, 40, rng.normal_vec(192 * 40, 0.1));
+        let q = quantize_weight(&w, 24);
+        let a = MatF32::new(
+            3, 192, (0..3 * 192).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let tiles =
+            TileConfig { block_m: 16, block_n: 16, block_k: 64, warps: 1, stages: 1 };
+        for cfg in [HostKernelConfig::dp(), HostKernelConfig::splitk(4),
+                    HostKernelConfig::streamk(4)] {
+            let cfg = cfg.with_tiles(tiles).with_threads(2);
+            let mut want = MatF32::zeros(0, 0);
+            host_gemm_into(&a, &q, &cfg, &mut SplitKScratch::new(), &mut want);
+            for bn in [16usize, 7, 64] {
+                let pack = PackedLinear::new(&q, bn);
+                let mut got = MatF32::zeros(0, 0);
+                host_gemm_packed_into(&a, &q, &pack, &cfg,
+                                      &mut SplitKScratch::new(), &mut got);
+                assert_eq!(want.data, got.data,
+                           "{:?} bn={bn}", cfg.decomposition);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "prepacked layout shape mismatch")]
+    fn packed_entry_rejects_mismatched_pack() {
+        let mut rng = Rng::seed_from(37);
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.1));
+        let q = quantize_weight(&w, 32);
+        let other = quantize_weight(&MatF32::zeros(64, 24), 32);
+        let pack = PackedLinear::new(&other, 8);
+        let a = MatF32::new(1, 64, vec![0.5; 64]);
+        let mut out = MatF32::zeros(0, 0);
+        host_gemm_packed_into(&a, &q, &pack, &HostKernelConfig::dp(),
+                              &mut SplitKScratch::new(), &mut out);
+    }
+
+    /// Regression (hand-built layers with short buffers): a truncated
+    /// `qzeros` used to sail past `check_shapes` straight into the
+    /// kernels' unchecked indexing; now every packed tensor's dimensions
+    /// are validated against `(k, n, group_size)` up front.
+    fn truncated_qzeros_layer() -> QuantizedLinear {
+        let mut rng = Rng::seed_from(38);
+        let w = MatF32::new(128, 16, rng.normal_vec(128 * 16, 0.1));
+        let mut q = quantize_weight(&w, 32); // 4 groups
+        // Keep only the first group's zero words: rows 4 -> 1.
+        let kept: Vec<i32> = q.qzeros.data[..q.qzeros.cols].to_vec();
+        q.qzeros = crate::quant::MatI32::new(1, q.qzeros.cols, kept);
+        q
+    }
+
+    #[test]
+    #[should_panic(expected = "qzeros buffer")]
+    fn rejects_truncated_qzeros() {
+        let q = truncated_qzeros_layer();
+        let a = MatF32::new(1, 128, vec![0.5; 128]);
+        let _ = host_gemm(&a, &q, &HostKernelConfig::splitk(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "scales buffer")]
+    fn rejects_truncated_scales() {
+        let mut rng = Rng::seed_from(39);
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.1));
+        let mut q = quantize_weight(&w, 32);
+        let kept: Vec<f32> = q.scales.data[..16].to_vec();
+        q.scales = MatF32::new(1, 16, kept);
+        let a = MatF32::new(1, 64, vec![0.5; 64]);
+        let _ = host_gemm(&a, &q, &HostKernelConfig::dp());
+    }
+
+    #[test]
+    #[should_panic(expected = "qweight buffer")]
+    fn rejects_truncated_qweight() {
+        let mut rng = Rng::seed_from(40);
+        let w = MatF32::new(64, 16, rng.normal_vec(64 * 16, 0.1));
+        let mut q = quantize_weight(&w, 32);
+        let kept: Vec<i32> = q.qweight.data[..4 * 16].to_vec();
+        q.qweight = crate::quant::MatI32::new(4, 16, kept);
+        let a = MatF32::new(1, 64, vec![0.5; 64]);
+        let _ = host_gemm(&a, &q, &HostKernelConfig::streamk(2));
+    }
+
+    #[test]
     fn measured_entry_point_allocates_no_partials_after_warmup() {
         // The autotuner times host_gemm_into with a persistent scratch
-        // and output (one warmup call, then the measured runs). For the
-        // k-splitting decompositions — the ones with partial-sum
-        // buffers — the measured calls must allocate no partials, so
-        // rankings don't charge serving steady state for allocator
-        // noise it never pays. (DP has no partials; its per-tile stitch
-        // buffers exist identically on the serving path, so its ranking
-        // is steady-state-faithful too.)
+        // and output (one warmup call, then the measured runs). The
+        // measured calls must allocate none of the scratch-tracked
+        // buffers — SplitK partials, StreamK fixups, per-worker LUT/row
+        // buffers, and DP's multi-worker stitch arenas — so rankings
+        // don't charge serving steady state for allocator noise it
+        // never pays. (Small per-call bookkeeping Vecs — tile lists,
+        // worker handles — are not tracked by alloc_events and are the
+        // known remainder.)
         let mut rng = Rng::seed_from(35);
         let w = MatF32::new(256, 64, rng.normal_vec(256 * 64, 0.1));
         let q = quantize_weight(&w, 64);
         let a = MatF32::new(
             2, 256, (0..512).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
         // Narrow tiles so SplitK partials and StreamK fixups are both
-        // genuinely multi-buffer.
+        // genuinely multi-buffer. DP rides along since its workers now
+        // hold LUT/row buffers in the same scratch, and alloc_events()
+        // folds those TileScratch growth events in.
         let tiles =
             TileConfig { block_m: 16, block_n: 16, block_k: 64, warps: 1, stages: 1 };
-        for cfg in [HostKernelConfig::splitk(4), HostKernelConfig::streamk(4)] {
+        for cfg in [HostKernelConfig::dp(), HostKernelConfig::splitk(4),
+                    HostKernelConfig::streamk(4)] {
             let cfg = cfg.with_tiles(tiles);
             let mut scratch = SplitKScratch::new();
             let mut out = MatF32::zeros(a.rows, q.n);
             host_gemm_into(&a, &q, &cfg, &mut scratch, &mut out); // warmup
             let warm = scratch.alloc_events();
-            assert!(warm > 0, "warmup must size the partial buffers");
+            assert!(warm > 0, "warmup must size the partial/LUT buffers");
             for _ in 0..3 {
                 host_gemm_into(&a, &q, &cfg, &mut scratch, &mut out);
             }
             assert_eq!(scratch.alloc_events(), warm,
                        "{:?}: timed calls must reuse scratch", cfg.decomposition);
+        }
+    }
+
+    #[test]
+    fn prepacked_path_allocates_nothing_after_warmup() {
+        // The LUT/prepack extension of the steady-state contract: with
+        // the pack built up front (as the host model's warm() does), the
+        // prepacked entry point must be allocation-free after one
+        // warmup call too.
+        let mut rng = Rng::seed_from(41);
+        let w = MatF32::new(256, 64, rng.normal_vec(256 * 64, 0.1));
+        let q = quantize_weight(&w, 64);
+        let a = MatF32::new(
+            1, 256, (0..256).map(|_| rng.uniform_f32(-1.0, 1.0)).collect());
+        let tiles =
+            TileConfig { block_m: 16, block_n: 16, block_k: 64, warps: 1, stages: 1 };
+        let pack = PackedLinear::new(&q, tiles.block_n as usize);
+        for cfg in [HostKernelConfig::dp(), HostKernelConfig::splitk(4),
+                    HostKernelConfig::streamk(4)] {
+            let cfg = cfg.with_tiles(tiles).with_layout(KernelLayout::Prepacked);
+            let mut scratch = SplitKScratch::new();
+            let mut out = MatF32::zeros(a.rows, q.n);
+            host_gemm_packed_into(&a, &q, &pack, &cfg, &mut scratch, &mut out);
+            let warm = scratch.alloc_events();
+            assert!(warm > 0, "warmup must size the LUT buffers");
+            for _ in 0..3 {
+                host_gemm_packed_into(&a, &q, &pack, &cfg, &mut scratch,
+                                      &mut out);
+            }
+            assert_eq!(scratch.alloc_events(), warm,
+                       "{:?}: prepacked steady state must not allocate",
+                       cfg.decomposition);
         }
     }
 

@@ -14,13 +14,15 @@
 
 use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 
-use super::fused::fused_tile;
+use super::microkernel::{kernel_tile, TileScratch, WeightsRef};
 use super::HostKernelConfig;
 
 /// Reusable partial-sum buffers for the k-splitting executors
 /// ([`fused_gemm_splitk_into`] slice partials and
 /// [`fused_gemm_streamk_into`](super::fused_gemm_streamk_into) span
-/// fixups).
+/// fixups), plus the per-worker micro-kernel scratches (dequant LUT
+/// panels + row buffers) every decomposition's workers dequantize
+/// through.
 ///
 /// The SplitK executor needs `split_k` private `m × n` partial matrices
 /// per call and StreamK one `m × block_n` contribution buffer per
@@ -28,8 +30,9 @@ use super::HostKernelConfig;
 /// to back, so callers on that path keep one scratch alive and amortize
 /// the allocations (the buffers are zero-filled, never freshly
 /// allocated, when shapes repeat). Reuse cannot change output bits:
-/// buffers start at exactly `0.0` either way and the
-/// accumulation/reduction order is unchanged.
+/// buffers start at exactly `0.0` either way (and LUT panels are fully
+/// rebuilt per group) and the accumulation/reduction order is
+/// unchanged.
 #[derive(Debug, Default)]
 pub struct SplitKScratch {
     pub(crate) partials: Vec<MatF32>,
@@ -37,6 +40,15 @@ pub struct SplitKScratch {
     /// an autotune sweep alternating decompositions does not thrash
     /// either family's steady-state shapes).
     pub(crate) fixups: Vec<MatF32>,
+    /// Per-worker micro-kernel scratches (LUT panel + row buffer), one
+    /// per OS-thread slot, handed to scoped workers as disjoint `&mut`s.
+    pub(crate) tile: Vec<TileScratch>,
+    /// Per-worker DP stitch arenas: each multi-worker DP worker packs
+    /// its private output-tile buffers into one grow-only arena
+    /// (`dp.rs`), so the per-tile `vec![..]` the stitch used to pay on
+    /// every call happens once at warmup. Growth is counted into the
+    /// matching worker's [`TileScratch::allocs`].
+    pub(crate) stitch: Vec<Vec<f32>>,
     /// Buffer (re)allocation events — see [`Self::alloc_events`].
     pub(crate) allocs: u64,
 }
@@ -48,12 +60,29 @@ impl SplitKScratch {
     }
 
     /// How many buffer allocations (fresh or reshaping) this scratch has
-    /// performed so far. At a steady state — repeated calls with the
+    /// performed so far — partial/fixup matrices *and* the micro-kernel
+    /// LUT/row buffers. At a steady state — repeated calls with the
     /// same shape and config — the count must not grow after the first
     /// call: the serving decode loop and the autotuner's timed
     /// measurements both rely on the reused path being allocation-free.
     pub fn alloc_events(&self) -> u64 {
-        self.allocs
+        self.allocs + self.tile.iter().map(|t| t.allocs).sum::<u64>()
+    }
+
+    /// Make sure at least `workers` micro-kernel scratches exist (their
+    /// buffers are sized lazily inside the kernel).
+    pub(crate) fn ensure_tile_scratches(&mut self, workers: usize) {
+        while self.tile.len() < workers {
+            self.tile.push(TileScratch::default());
+        }
+    }
+
+    /// Make sure at least `workers` DP stitch arenas exist (sized
+    /// lazily by the DP workers).
+    pub(crate) fn ensure_stitch_arenas(&mut self, workers: usize) {
+        while self.stitch.len() < workers {
+            self.stitch.push(Vec::new());
+        }
     }
 }
 
@@ -93,6 +122,16 @@ pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
                               cfg: &HostKernelConfig,
                               scratch: &mut SplitKScratch,
                               out: &mut MatF32) {
+    splitk_exec(a, WeightsRef::Flat(q), cfg, scratch, out);
+}
+
+/// The executor proper, generic over the weight storage (flat or
+/// prepacked) — [`super::host_gemm_packed_into`] routes here too.
+pub(crate) fn splitk_exec(a: &MatF32, wr: WeightsRef<'_>,
+                          cfg: &HostKernelConfig,
+                          scratch: &mut SplitKScratch,
+                          out: &mut MatF32) {
+    let q = wr.q();
     cfg.check_shapes(a, q);
     let (m, n) = (a.rows, q.n);
     let kp_total = q.k / PACK_FACTOR;
@@ -107,16 +146,19 @@ pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
 
     // Column span of one accumulation pass inside a worker. In the
     // skinny (m <= 2) regime the partial row fits in L1, so the worker
-    // sweeps the full row width and reads its qweight slice perfectly
-    // sequentially; for taller m the accumulator window is tiled to
-    // block_n so it stays cache-resident.
+    // hands the kernel the full row width in one call (the kernel
+    // internally segments flat spans at 64 columns to keep its LUT
+    // panel L1-resident); for taller m the accumulator window is tiled
+    // to block_n so it stays cache-resident.
     let colw = if m <= 2 { n } else { bn.min(n) };
 
     let slice_bounds: Vec<(usize, usize)> = (0..split)
         .map(|s| (s * kp_total / split, (s + 1) * kp_total / split))
         .collect();
+    let workers = cfg.effective_threads().min(split).max(1);
+    scratch.ensure_tile_scratches(workers);
     // Size/zero the reusable partials for this call's (split, m, n).
-    let SplitKScratch { partials, allocs, .. } = scratch;
+    let SplitKScratch { partials, tile, allocs, .. } = scratch;
     partials.truncate(split);
     for p in partials.iter_mut() {
         ensure_zeroed(p, m, n, allocs);
@@ -127,24 +169,29 @@ pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
     }
     let partials: &mut [MatF32] = &mut partials[..split];
 
-    // Assign contiguous, balanced slice ranges to workers up front, so
-    // every reference handed to a scoped thread is created out here.
-    let workers = cfg.effective_threads().min(split).max(1);
-    let mut assignments: Vec<(&mut [MatF32], &[(usize, usize)])> =
+    // Assign contiguous, balanced slice ranges (and one micro-kernel
+    // scratch each) to workers up front, so every reference handed to a
+    // scoped thread is created out here.
+    let mut assignments: Vec<(&mut [MatF32], &[(usize, usize)],
+                              &mut TileScratch)> =
         Vec::with_capacity(workers);
     {
         let mut rest: &mut [MatF32] = &mut partials[..];
+        let mut ts_rest: &mut [TileScratch] = &mut tile[..workers];
         let mut next = 0usize;
         for w in 0..workers {
             let count = (split - next) / (workers - w);
             let (mine, tail) = rest.split_at_mut(count);
             rest = tail;
-            assignments.push((mine, &slice_bounds[next..next + count]));
+            let (ts, ts_tail) = ts_rest.split_at_mut(1);
+            ts_rest = ts_tail;
+            assignments.push((mine, &slice_bounds[next..next + count],
+                              &mut ts[0]));
             next += count;
         }
     }
     std::thread::scope(|scope| {
-        for (mine, my_bounds) in assignments {
+        for (mine, my_bounds, ts) in assignments {
             scope.spawn(move || {
                 for (partial, &(kp0, kp1)) in mine.iter_mut().zip(my_bounds) {
                     if kp0 >= kp1 {
@@ -153,8 +200,8 @@ pub fn fused_gemm_splitk_into(a: &MatF32, q: &QuantizedLinear,
                     let mut c0 = 0;
                     while c0 < n {
                         let c1 = (c0 + colw).min(n);
-                        fused_tile(a, q, 0, m, c0, c1, kp0, kp1, kp_chunk,
-                                   &mut partial.data[c0..], n);
+                        kernel_tile(a, wr, 0, m, c0, c1, kp0, kp1, kp_chunk,
+                                    ts, &mut partial.data[c0..], n);
                         c0 = c1;
                     }
                 }

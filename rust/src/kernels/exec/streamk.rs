@@ -31,7 +31,7 @@
 
 use crate::quant::{MatF32, QuantizedLinear, PACK_FACTOR};
 
-use super::fused::fused_tile;
+use super::microkernel::{kernel_tile, TileScratch, WeightsRef};
 use super::splitk::{ensure_zeroed, SplitKScratch};
 use super::HostKernelConfig;
 
@@ -59,6 +59,16 @@ pub fn fused_gemm_streamk_into(a: &MatF32, q: &QuantizedLinear,
                                cfg: &HostKernelConfig,
                                scratch: &mut SplitKScratch,
                                out: &mut MatF32) {
+    streamk_exec(a, WeightsRef::Flat(q), cfg, scratch, out);
+}
+
+/// The executor proper, generic over the weight storage (flat or
+/// prepacked) — [`super::host_gemm_packed_into`] routes here too.
+pub(crate) fn streamk_exec(a: &MatF32, wr: WeightsRef<'_>,
+                           cfg: &HostKernelConfig,
+                           scratch: &mut SplitKScratch,
+                           out: &mut MatF32) {
+    let q = wr.q();
     cfg.check_shapes(a, q);
     let (m, n) = (a.rows, q.n);
     let kp_total = q.k / PACK_FACTOR;
@@ -103,7 +113,9 @@ pub fn fused_gemm_streamk_into(a: &MatF32, q: &QuantizedLinear,
     // Size/zero one fixup buffer per contribution (reused across calls;
     // shapes are stable for a fixed shape + config, so steady state is
     // allocation-free).
-    let SplitKScratch { fixups, allocs, .. } = scratch;
+    let workers = cfg.effective_threads().min(spans).max(1);
+    scratch.ensure_tile_scratches(workers);
+    let SplitKScratch { fixups, tile: tile_scratches, allocs, .. } = scratch;
     fixups.truncate(descs.len());
     for (buf, &(tile, _, _)) in fixups.iter_mut().zip(&descs) {
         ensure_zeroed(buf, m, tile_width(tile), allocs);
@@ -116,14 +128,16 @@ pub fn fused_gemm_streamk_into(a: &MatF32, q: &QuantizedLinear,
 
     // Execute the spans on up to `threads` OS threads, each thread
     // owning a contiguous run of spans (and thus a contiguous, disjoint
-    // slice of the fixup buffers). Which thread runs which span cannot
-    // matter: every contribution is a single-threaded ascending-k
-    // `fused_tile` pass into its own buffer.
-    let workers = cfg.effective_threads().min(spans).max(1);
-    let mut assignments: Vec<(&mut [MatF32], &[Contribution])> =
+    // slice of the fixup buffers) plus one micro-kernel scratch. Which
+    // thread runs which span cannot matter: every contribution is a
+    // single-threaded ascending-k `kernel_tile` pass into its own
+    // buffer.
+    let mut assignments: Vec<(&mut [MatF32], &[Contribution],
+                              &mut TileScratch)> =
         Vec::with_capacity(workers);
     {
         let mut rest: &mut [MatF32] = &mut fixups[..descs.len()];
+        let mut ts_rest: &mut [TileScratch] = &mut tile_scratches[..workers];
         let mut next_span = 0usize;
         let mut desc_off = 0usize;
         for w in 0..workers {
@@ -131,19 +145,21 @@ pub fn fused_gemm_streamk_into(a: &MatF32, q: &QuantizedLinear,
             let d_end = span_descs[next_span + count - 1].1;
             let (mine, tail) = rest.split_at_mut(d_end - desc_off);
             rest = tail;
-            assignments.push((mine, &descs[desc_off..d_end]));
+            let (ts, ts_tail) = ts_rest.split_at_mut(1);
+            ts_rest = ts_tail;
+            assignments.push((mine, &descs[desc_off..d_end], &mut ts[0]));
             desc_off = d_end;
             next_span += count;
         }
     }
     std::thread::scope(|scope| {
-        for (bufs, my_descs) in assignments {
+        for (bufs, my_descs, ts) in assignments {
             scope.spawn(move || {
                 for (buf, &(tile, kp0, kp1)) in bufs.iter_mut().zip(my_descs) {
                     let c0 = tile * bn;
                     let c1 = (c0 + bn).min(n);
-                    fused_tile(a, q, 0, m, c0, c1, kp0, kp1, kp_chunk,
-                               &mut buf.data, c1 - c0);
+                    kernel_tile(a, wr, 0, m, c0, c1, kp0, kp1, kp_chunk, ts,
+                                &mut buf.data, c1 - c0);
                 }
             });
         }

@@ -21,10 +21,12 @@ pub use autotune::{autotune_split_k, autotune_split_k_host, AutotuneResult,
                    HostAutotuneResult, SPLIT_K_CANDIDATES,
                    STREAMK_WORKER_CANDIDATES};
 pub use dataparallel::dp_launch;
-pub use exec::{fused_gemm_dp, fused_gemm_dp_into, fused_gemm_splitk,
-               fused_gemm_splitk_into, fused_gemm_streamk,
-               fused_gemm_streamk_into, host_gemm, host_gemm_into,
-               host_gemm_multi, HostKernelConfig, SplitKScratch};
+pub use exec::{available_cores, fused_gemm_dp, fused_gemm_dp_into,
+               fused_gemm_legacy, fused_gemm_splitk, fused_gemm_splitk_into,
+               fused_gemm_streamk, fused_gemm_streamk_into, fused_tile,
+               host_gemm, host_gemm_into, host_gemm_multi,
+               host_gemm_packed_into, HostKernelConfig, KernelLayout,
+               PackedLinear, SplitKScratch};
 pub use resources::{resource_usage, ResourceUsage, PAD_FACTOR};
 pub use splitk::splitk_launch;
 pub use streamk::{streamk_launch, streamk_residency};

@@ -30,8 +30,9 @@ use std::collections::HashMap;
 use anyhow::{ensure, Result};
 
 use crate::coordinator::{HostKvCache, KvCacheSpec};
-use crate::kernels::{autotune_split_k_host, host_gemm_into, host_gemm_multi,
-                     HostKernelConfig, SplitKScratch};
+use crate::kernels::{autotune_split_k_host, host_gemm_into,
+                     host_gemm_packed_into, HostKernelConfig, PackedLinear,
+                     SplitKScratch};
 use crate::quant::{MatF32, QuantizedLinear};
 use crate::runtime::ModelMeta;
 
@@ -114,36 +115,85 @@ impl GemmPlan {
     }
 }
 
+/// Cache of tile-major [`PackedLinear`] weight copies, keyed by
+/// (layer identity, panel width). Layers are identified by their
+/// `qweight` buffer address: the cache lives inside a [`HostModel`]
+/// whose weights are immutable and never replaced after construction
+/// (private field, no `&mut` accessor), so the address is stable for
+/// the cache's whole lifetime and two distinct layers can never share
+/// one.
+///
+/// Memory bound: entries only exist for (layer, `block_n`) pairs some
+/// plan actually selected, and the autotuner's tile candidates carry
+/// three `block_n` values, so the worst case is three packs per layer
+/// (different m-buckets legitimately picking different widths — packs
+/// for both must coexist or interleaved decode steps would rebuild
+/// per GEMM). [`Self::bytes`] surfaces the resident total
+/// ([`HostModel::packed_layout_bytes`]).
+#[derive(Debug, Default)]
+struct PackCache {
+    map: HashMap<(usize, u64), PackedLinear>,
+}
+
+impl PackCache {
+    /// The cached pack for `(q, block_n)`, building it on first use
+    /// (`HostModel::warm` prebuilds, so the decode hot path normally
+    /// only ever hits).
+    fn get_or_build(&mut self, q: &QuantizedLinear, block_n: u64)
+                    -> &PackedLinear {
+        self.map
+            .entry((q.qweight.data.as_ptr() as usize, block_n))
+            .or_insert_with(|| PackedLinear::new(q, block_n as usize))
+    }
+
+    /// Cached packs.
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Total bytes held by the cached prepacked copies.
+    fn bytes(&self) -> usize {
+        self.map.values().map(|p| p.bytes()).sum()
+    }
+}
+
 /// The serving-side [`ProjectionGemm`]: every projection dispatches
-/// through `kernels::exec` with the planned per-shape config, reusing
-/// one SplitK scratch across all projections of a step.
+/// through `kernels::exec` with the planned per-shape config — via the
+/// prepacked weight copy when the plan's layout says so — reusing one
+/// SplitK scratch across all projections of a step.
 struct FusedDispatch<'a> {
     plan: &'a mut GemmPlan,
     scratch: &'a mut SplitKScratch,
+    packs: &'a mut PackCache,
+}
+
+impl FusedDispatch<'_> {
+    /// One planned GEMM through the layout the config asks for.
+    fn gemm_with(&mut self, a: &MatF32, q: &QuantizedLinear,
+                 cfg: &HostKernelConfig, out: &mut MatF32) {
+        if cfg.prepacked() {
+            let pack = self.packs.get_or_build(q, cfg.tiles.block_n);
+            host_gemm_packed_into(a, q, pack, cfg, self.scratch, out);
+        } else {
+            host_gemm_into(a, q, cfg, self.scratch, out);
+        }
+    }
 }
 
 impl ProjectionGemm for FusedDispatch<'_> {
     fn gemm(&mut self, a: &MatF32, q: &QuantizedLinear) -> MatF32 {
         let cfg = self.plan.config_for(a, q);
         let mut out = MatF32::zeros(a.rows, q.n);
-        host_gemm_into(a, q, &cfg, self.scratch, &mut out);
+        self.gemm_with(a, q, &cfg, &mut out);
         out
     }
 
-    fn gemm_multi(&mut self, a: &MatF32, qs: &[&QuantizedLinear])
-                  -> Vec<MatF32> {
-        // Empty projection lists must stay total: the qs[0] plan lookup
-        // below would otherwise be an unchecked index panic in release
-        // builds (debug_asserts compiled out).
-        if qs.is_empty() {
-            return Vec::new();
-        }
-        debug_assert!(qs.windows(2).all(|w| w[0].n == w[1].n
-                                        && w[0].k == w[1].k),
-                      "gemm_multi layers must share a shape");
-        let cfg = self.plan.config_for(a, qs[0]);
-        host_gemm_multi(a, qs, &cfg, self.scratch)
-    }
+    // gemm_multi deliberately NOT overridden: the trait default — one
+    // `gemm` per layer — already reuses this dispatcher's scratch and
+    // per-layer packs, is total on empty lists, and hits the plan cache
+    // per layer (same-shaped sister projections share the entry). The
+    // old override duplicated `exec::host_gemm_multi`'s loop for no
+    // behavioral difference.
 }
 
 /// Mutable per-batch decode state: the KV cache plus each slot's
@@ -154,11 +204,13 @@ pub struct DecodeState {
     pub starts: Vec<i32>,
 }
 
-/// The executable host model: weights + per-shape GEMM plan + scratch.
+/// The executable host model: weights + per-shape GEMM plan + scratch +
+/// prepacked-weight cache.
 pub struct HostModel {
     weights: HostModelWeights,
     plan: GemmPlan,
     scratch: SplitKScratch,
+    packs: PackCache,
 }
 
 impl HostModel {
@@ -176,7 +228,8 @@ impl HostModel {
     /// Wrap pre-built weights (tests use this to exercise architectures
     /// `generate` cannot produce, e.g. per-projection shape variations).
     pub fn from_weights(weights: HostModelWeights, plan: GemmPlan) -> Self {
-        HostModel { weights, plan, scratch: SplitKScratch::new() }
+        HostModel { weights, plan, scratch: SplitKScratch::new(),
+                    packs: PackCache::default() }
     }
 
     /// Model metadata.
@@ -213,8 +266,8 @@ impl HostModel {
         let vocab = self.weights.meta.vocab as i32;
         ensure!(tokens.iter().all(|&t| t >= 0 && t < vocab),
                 "decode_step: token out of vocab range 0..{vocab}");
-        let HostModel { weights, plan, scratch } = self;
-        let mut dispatch = FusedDispatch { plan, scratch };
+        let HostModel { weights, plan, scratch, packs } = self;
+        let mut dispatch = FusedDispatch { plan, scratch, packs };
         Ok(weights.forward_with(&mut state.cache, tokens, pos,
                                 &state.starts, need_logits, &mut dispatch))
     }
@@ -230,21 +283,49 @@ impl HostModel {
     /// missed any wk/wv/wo whose shape differs, leaving those GEMMs to
     /// autotune mid-request.
     pub fn warm(&mut self, buckets: &[usize]) -> usize {
-        let HostModel { weights, plan, .. } = self;
+        let HostModel { weights, plan, packs, .. } = self;
         let mut seen = std::collections::HashSet::new();
         let shapes: Vec<&QuantizedLinear> = weights
             .projections()
             .filter(|q| seen.insert((q.n, q.k)))
             .collect();
         let mut visited = 0;
+        let mut prepacked: std::collections::HashSet<(usize, usize, u64)> =
+            std::collections::HashSet::new();
         for &b in buckets {
             for q in &shapes {
                 let a = MatF32::new(b, q.k, vec![0.5; b * q.k]);
-                let _ = plan.config_for(&a, q);
+                let cfg = plan.config_for(&a, q);
+                if cfg.prepacked() {
+                    prepacked.insert((q.n, q.k, cfg.tiles.block_n));
+                }
                 visited += 1;
             }
         }
+        // Prebuild the tile-major weight copies every prepacked plan
+        // will traverse — for *every* projection of a planned shape
+        // (plans are keyed by shape; same-shaped sister projections like
+        // wq/wk/wv share the plan but each needs its own pack), so the
+        // decode hot path never pays a prepack.
+        for &(n, k, bn) in &prepacked {
+            for q in weights.projections().filter(|q| q.n == n && q.k == k) {
+                let _ = packs.get_or_build(q, bn);
+            }
+        }
         visited
+    }
+
+    /// Prepacked weight copies cached so far (diagnostics/tests).
+    pub fn packed_layouts(&self) -> usize {
+        self.packs.len()
+    }
+
+    /// Resident bytes of the prepacked weight copies — the memory cost
+    /// of the layout cache, next to [`HostModelWeights::packed_bytes`]
+    /// for the weights themselves (bounded: at most one pack per
+    /// (projection, autotuner `block_n` candidate)).
+    pub fn packed_layout_bytes(&self) -> usize {
+        self.packs.bytes()
     }
 }
 
@@ -396,16 +477,67 @@ mod tests {
 
     #[test]
     fn dispatch_with_empty_projection_list_returns_empty() {
-        // Regression: FusedDispatch::gemm_multi indexed qs[0]
-        // unconditionally — an unchecked panic in release builds (its
-        // debug_assert is compiled out). Empty input must yield empty
-        // output.
+        // Regression: an old gemm_multi override indexed qs[0]
+        // unconditionally — an unchecked panic in release builds. The
+        // dispatcher now rides the trait default (one gemm per layer),
+        // which this pins as total on empty input.
         let mut plan = GemmPlan::fixed(HostKernelConfig::splitk(2));
         let mut scratch = SplitKScratch::new();
-        let mut dispatch =
-            FusedDispatch { plan: &mut plan, scratch: &mut scratch };
+        let mut packs = PackCache::default();
+        let mut dispatch = FusedDispatch {
+            plan: &mut plan,
+            scratch: &mut scratch,
+            packs: &mut packs,
+        };
         let a = MatF32::new(1, 256, vec![0.5; 256]);
         assert!(dispatch.gemm_multi(&a, &[]).is_empty());
+    }
+
+    #[test]
+    fn prepacked_plan_decodes_bit_identical_to_flat() {
+        // layout: Prepacked is a traversal choice, not a math change —
+        // a greedy rollout under a prepacked fixed plan must reproduce
+        // the flat plan's logits bit for bit, and the packs must come
+        // out of the model's cache (one per projection after warm).
+        let cfg = HostKernelConfig::splitk(4).with_threads(2);
+        let mut flat =
+            HostModel::with_plan(&meta(), GemmPlan::fixed(cfg)).unwrap();
+        let mut packed = HostModel::with_plan(
+            &meta(),
+            GemmPlan::fixed(cfg.with_layout(
+                crate::kernels::KernelLayout::Prepacked))).unwrap();
+        packed.warm(&[1, 2]);
+        // Every projection of every planned shape got a pack at the
+        // plan's block_n (distinct (n,k) shapes: 3; projections: 7).
+        assert_eq!(packed.packed_layouts(), 7);
+        assert!(packed.packed_layout_bytes() > 0,
+                "layout cache memory must be accounted");
+        let mut s_flat = flat.begin(&[0, 0]);
+        let mut s_packed = packed.begin(&[0, 0]);
+        for (pos, toks) in [[3, 5], [10, 2], [400, 77]].iter().enumerate() {
+            let a = flat.decode_step(&mut s_flat, toks, pos, true).unwrap();
+            let b =
+                packed.decode_step(&mut s_packed, toks, pos, true).unwrap();
+            assert_eq!(a, b, "pos {pos}");
+        }
+        // The decode steps hit the cache — nothing new was packed.
+        assert_eq!(packed.packed_layouts(), 7);
+    }
+
+    #[test]
+    fn prepacked_plan_builds_packs_lazily_without_warm() {
+        // A prepacked plan must also work cold (pack built on first
+        // dispatch, then cached).
+        let cfg = HostKernelConfig::dp()
+            .with_threads(1)
+            .with_layout(crate::kernels::KernelLayout::Prepacked);
+        let mut m =
+            HostModel::with_plan(&meta(), GemmPlan::fixed(cfg)).unwrap();
+        assert_eq!(m.packed_layouts(), 0);
+        let mut st = m.begin(&[0]);
+        let logits = m.decode_step(&mut st, &[7], 0, true).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert_eq!(m.packed_layouts(), 7);
     }
 
     #[test]

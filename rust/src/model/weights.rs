@@ -30,9 +30,9 @@ pub trait ProjectionGemm {
     fn gemm(&mut self, a: &MatF32, q: &QuantizedLinear) -> MatF32;
 
     /// Same activation through several same-shaped layers (the fused
-    /// q/k/v projections). Default: one [`Self::gemm`] per layer; the
-    /// serving dispatcher overrides this with the scratch-reusing
-    /// batched entry point, which is bit-identical.
+    /// q/k/v projections). Default: one [`Self::gemm`] per layer —
+    /// total on empty lists; implementations that reuse scratch inside
+    /// `gemm` (the serving dispatcher does) get batched reuse for free.
     fn gemm_multi(&mut self, a: &MatF32, qs: &[&QuantizedLinear])
                   -> Vec<MatF32> {
         qs.iter().map(|q| self.gemm(a, q)).collect()

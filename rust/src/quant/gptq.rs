@@ -68,6 +68,28 @@ pub fn quantize_weight(w: &MatF32, group_size: usize) -> QuantizedLinear {
 }
 
 impl QuantizedLinear {
+    /// Packed weight word holding k rows `8·kp .. 8·kp+7` of column `c`.
+    #[inline]
+    pub fn qword(&self, kp: usize, c: usize) -> i32 {
+        self.qweight.data[kp * self.n + c]
+    }
+
+    /// Scale of quantization group `grp`, column `c`.
+    #[inline]
+    pub fn scale_at(&self, grp: usize, c: usize) -> f32 {
+        self.scales.data[grp * self.n + c]
+    }
+
+    /// Zero point of quantization group `grp`, column `c`, unpacked from
+    /// the n-packed `qzeros` word — the exact expression the fused
+    /// kernels dequantize with (`w = (nibble - zero) * scale`).
+    #[inline]
+    pub fn zero_at(&self, grp: usize, c: usize) -> u32 {
+        let np = self.n / super::PACK_FACTOR;
+        let word = self.qzeros.data[grp * np + c / super::PACK_FACTOR] as u32;
+        (word >> (4 * (c % super::PACK_FACTOR))) & 0xF
+    }
+
     /// Byte sizes of the packed tensors — used by the simulator's traffic
     /// model and by the memory-savings accounting (W4 vs FP16).
     pub fn packed_bytes(&self) -> usize {
@@ -148,5 +170,28 @@ mod tests {
     #[should_panic(expected = "multiple of group_size")]
     fn rejects_bad_group() {
         quantize_weight(&MatF32::zeros(100, 8), 64);
+    }
+
+    #[test]
+    fn accessors_match_unpacked_tensors() {
+        let w = rand_mat(64, 24, 4);
+        let q = quantize_weight(&w, 16);
+        let nibbles = unpack_along_rows(&q.qweight);
+        let zeros = crate::quant::unpack_along_cols(&q.qzeros);
+        for kp in 0..q.k / 8 {
+            for c in 0..q.n {
+                let word = q.qword(kp, c) as u32;
+                for i in 0..8 {
+                    assert_eq!(((word >> (4 * i)) & 0xF) as u8,
+                               nibbles[(kp * 8 + i) * q.n + c]);
+                }
+            }
+        }
+        for grp in 0..q.k / q.group_size {
+            for c in 0..q.n {
+                assert_eq!(q.scale_at(grp, c), q.scales.at(grp, c));
+                assert_eq!(q.zero_at(grp, c), zeros[grp * q.n + c] as u32);
+            }
+        }
     }
 }

@@ -9,9 +9,12 @@ use std::time::{Duration, Instant};
 
 use splitk_w4a16::coordinator::{DynamicBatcher, GenerateRequest};
 use splitk_w4a16::gpusim::{simulate, DeviceConfig, Decomposition, Occupancy};
-use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_splitk,
-                            fused_gemm_streamk, splitk_launch, GemmShape,
-                            HostKernelConfig, TileConfig};
+use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_legacy,
+                            fused_gemm_splitk, fused_gemm_streamk,
+                            fused_tile, host_gemm_into,
+                            host_gemm_packed_into, splitk_launch, GemmShape,
+                            HostKernelConfig, KernelLayout, PackedLinear,
+                            SplitKScratch, TileConfig};
 use splitk_w4a16::quant::{
     dequantize, pack_along_cols, pack_along_rows, quantize_weight,
     unpack_along_cols, unpack_along_rows, MatF32, QuantizedLinear,
@@ -109,6 +112,7 @@ fn prop_fused_dp_matches_naive_oracle() {
             tiles: random_tiles(&mut rng),
             decomposition: Decomposition::DataParallel,
             threads: [0usize, 1, 2, 3][rng.index(4)],
+            layout: KernelLayout::Flat,
         };
         let got = fused_gemm_dp(&a, &q, &cfg);
         let want = w4a16_gemm_ref(&a, &q);
@@ -132,6 +136,7 @@ fn prop_fused_splitk_matches_naive_oracle() {
                 split_k: rng.gen_range(1, 12) as u32,
             },
             threads: [0usize, 1, 2, 3][rng.index(4)],
+            layout: KernelLayout::Flat,
         };
         let got = fused_gemm_splitk(&a, &q, &cfg);
         let want = w4a16_gemm_ref(&a, &q);
@@ -156,6 +161,7 @@ fn prop_fused_streamk_matches_naive_oracle() {
                 workers: rng.gen_range(1, 14) as u32,
             },
             threads: [0usize, 1, 2, 3][rng.index(4)],
+            layout: KernelLayout::Flat,
         };
         let got = fused_gemm_streamk(&a, &q, &cfg);
         let want = w4a16_gemm_ref(&a, &q);
@@ -164,6 +170,188 @@ fn prop_fused_streamk_matches_naive_oracle() {
                 "err {err} (m={} k={} n={} group={} workers={} tiles={:?})",
                 a.rows, q.k, q.n, q.group_size, cfg.streamk_workers(),
                 cfg.tiles);
+    }
+}
+
+// ---- bit-identity vs the pre-LUT reference micro-kernel --------------
+//
+// The executors' decomposition logic (tile grids, slice bounds, span
+// partitions, merge orders) is unchanged; only the micro-kernel under
+// them was rewritten (register-blocked LUT path). These references
+// recompose the *old* executor semantics from the preserved reference
+// kernel `fused_tile`, so comparing whole GEMMs pins the new kernel
+// bit-identical to the old path through every decomposition, ragged
+// shape, and zero-activation pattern — exact inputs, exact bits.
+
+/// Pre-LUT DP semantics: the preserved legacy executor itself (its
+/// worker count is bit-invariant, so threads = 1 pins the exact bits
+/// any pre-PR run produced).
+fn legacy_dp(a: &MatF32, q: &QuantizedLinear, tiles: &TileConfig) -> MatF32 {
+    fused_gemm_legacy(
+        a, q, &HostKernelConfig::dp().with_tiles(*tiles).with_threads(1))
+}
+
+/// Pre-LUT SplitK semantics: packed-row slice bounds, per-slice column
+/// sweep (full width when m <= 2, block_n otherwise), pairwise tree
+/// merge — copied from the old executor verbatim.
+fn legacy_splitk(a: &MatF32, q: &QuantizedLinear, tiles: &TileConfig,
+                 split_k: u32) -> MatF32 {
+    let (m, n) = (a.rows, q.n);
+    let kp_total = q.k / 8;
+    let split = (split_k.max(1) as usize).min(kp_total.max(1));
+    let bn = (tiles.block_n as usize).max(1);
+    let kp_chunk = ((tiles.block_k as usize) / 8).max(1);
+    let colw = if m <= 2 { n } else { bn.min(n) };
+    let mut partials: Vec<MatF32> =
+        (0..split).map(|_| MatF32::zeros(m, n)).collect();
+    for (s, partial) in partials.iter_mut().enumerate() {
+        let (kp0, kp1) = (s * kp_total / split, (s + 1) * kp_total / split);
+        if kp0 >= kp1 {
+            continue;
+        }
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + colw).min(n);
+            fused_tile(a, q, 0, m, c0, c1, kp0, kp1, kp_chunk,
+                       &mut partial.data[c0..], n);
+            c0 = c1;
+        }
+    }
+    let mut gap = 1;
+    while gap < split {
+        let mut i = 0;
+        while i + gap < split {
+            let (head, tail) = partials.split_at_mut(i + gap);
+            for (d, &s) in head[i].data.iter_mut().zip(tail[0].data.iter()) {
+                *d += s;
+            }
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    partials.swap_remove(0)
+}
+
+/// Pre-LUT StreamK semantics: tile-major flattened span partition,
+/// per-contribution buffers, sequential ascending-span merge — copied
+/// from the old executor verbatim.
+fn legacy_streamk(a: &MatF32, q: &QuantizedLinear, tiles: &TileConfig,
+                  workers: u32) -> MatF32 {
+    let (m, n) = (a.rows, q.n);
+    let kp_total = q.k / 8;
+    let bn = (tiles.block_n as usize).max(1);
+    let kp_chunk = ((tiles.block_k as usize) / 8).max(1);
+    let mut out = MatF32::zeros(m, n);
+    if m == 0 || n == 0 || kp_total == 0 {
+        return out;
+    }
+    let n_tiles = n.div_ceil(bn);
+    let k_units = kp_total.div_ceil(kp_chunk);
+    let total_units = n_tiles * k_units;
+    let spans = (workers as usize).max(1).min(total_units);
+    let mut descs: Vec<(usize, usize, usize)> = Vec::new();
+    for s in 0..spans {
+        let u0 = s * total_units / spans;
+        let u1 = (s + 1) * total_units / spans;
+        let mut u = u0;
+        while u < u1 {
+            let tile = u / k_units;
+            let s0 = u % k_units;
+            let s1 = (s0 + (u1 - u)).min(k_units);
+            descs.push((tile, s0 * kp_chunk, (s1 * kp_chunk).min(kp_total)));
+            u += s1 - s0;
+        }
+    }
+    for &(tile, kp0, kp1) in &descs {
+        let c0 = tile * bn;
+        let c1 = (c0 + bn).min(n);
+        let w = c1 - c0;
+        let mut buf = MatF32::zeros(m, w);
+        fused_tile(a, q, 0, m, c0, c1, kp0, kp1, kp_chunk, &mut buf.data, w);
+        for r in 0..m {
+            let dst = &mut out.data[r * n + c0..r * n + c0 + w];
+            for (d, &s) in dst.iter_mut().zip(&buf.data[r * w..(r + 1) * w]) {
+                *d += s;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_lut_microkernel_bit_identical_to_legacy_all_decompositions() {
+    // The PR's acceptance bar: the register-blocked LUT micro-kernel
+    // (flat layout) reproduces the pre-LUT path bit for bit — on
+    // arbitrary float inputs, since the per-element operation chain is
+    // unchanged — across the random shape/tile grid: k % block_k != 0,
+    // n % block_n != 0, zero activations, all three decompositions,
+    // multiple worker-thread budgets.
+    let mut rng = Rng::seed_from(27);
+    for _ in 0..30 {
+        let (a, q) = random_gemm_case(&mut rng);
+        let tiles = random_tiles(&mut rng);
+        let threads = [0usize, 1, 3][rng.index(3)];
+        let split = rng.gen_range(1, 12) as u32;
+        let workers = rng.gen_range(1, 14) as u32;
+
+        let dp_cfg =
+            HostKernelConfig::dp().with_tiles(tiles).with_threads(threads);
+        assert_eq!(fused_gemm_dp(&a, &q, &dp_cfg).data,
+                   legacy_dp(&a, &q, &tiles).data,
+                   "DP m={} k={} n={} tiles={tiles:?}", a.rows, q.k, q.n);
+
+        let sk_cfg = HostKernelConfig::splitk(split)
+            .with_tiles(tiles)
+            .with_threads(threads);
+        assert_eq!(fused_gemm_splitk(&a, &q, &sk_cfg).data,
+                   legacy_splitk(&a, &q, &tiles, split).data,
+                   "SplitK split={split} m={} k={} n={}", a.rows, q.k, q.n);
+
+        let st_cfg = HostKernelConfig::streamk(workers)
+            .with_tiles(tiles)
+            .with_threads(threads);
+        assert_eq!(fused_gemm_streamk(&a, &q, &st_cfg).data,
+                   legacy_streamk(&a, &q, &tiles, workers).data,
+                   "StreamK workers={workers} m={} k={} n={}",
+                   a.rows, q.k, q.n);
+    }
+}
+
+#[test]
+fn prop_prepacked_layout_bit_identical_to_flat() {
+    // The tile-major prepack is pure data movement: for random shapes,
+    // tiles, decompositions, and panel widths (matching the executing
+    // block_n or deliberately not), host_gemm_packed_into must equal
+    // host_gemm_into bit for bit — one shared scratch carried across
+    // the whole sequence, like the decode loop.
+    let mut rng = Rng::seed_from(28);
+    let mut scratch = SplitKScratch::new();
+    for _ in 0..30 {
+        let (a, q) = random_gemm_case(&mut rng);
+        let tiles = random_tiles(&mut rng);
+        let decomposition = match rng.index(3) {
+            0 => Decomposition::DataParallel,
+            1 => Decomposition::SplitK { split_k: rng.gen_range(1, 9) as u32 },
+            _ => Decomposition::StreamK {
+                workers: rng.gen_range(1, 9) as u32,
+            },
+        };
+        let cfg = HostKernelConfig {
+            tiles,
+            decomposition,
+            threads: [0usize, 2][rng.index(2)],
+            layout: splitk_w4a16::kernels::KernelLayout::Prepacked,
+        };
+        let bn = [1usize, 5, 8, 64, (tiles.block_n as usize).max(1)]
+            [rng.index(5)];
+        let pack = PackedLinear::new(&q, bn);
+        let mut want = MatF32::zeros(0, 0);
+        host_gemm_into(&a, &q, &cfg, &mut scratch, &mut want);
+        let mut got = MatF32::zeros(0, 0);
+        host_gemm_packed_into(&a, &q, &pack, &cfg, &mut scratch, &mut got);
+        assert_eq!(want.data, got.data,
+                   "m={} k={} n={} bn={bn} {:?}",
+                   a.rows, q.k, q.n, cfg.decomposition);
     }
 }
 
