@@ -1,0 +1,222 @@
+"""Python mirror of `rust/src/coordinator/sampler.rs`.
+
+Re-implements the committed sampling algorithm — PCG32 stream, candidate
+ordering, f32 softmax weights, top-k / top-p truncation, inverse-CDF
+walk — and pins the *same* known-answer vectors the Rust unit tests
+assert, so the two implementations are cross-validated without either
+executing the other:
+
+* the PCG32 reference vectors (``srandom(42, 54)`` -> ``0xa15c02b7 ...``
+  from the canonical pcg32-demo output) pin the RNG integer-exactly;
+* the token-stream vectors pin the full sampling pipeline; every pinned
+  case was chosen with an inverse-CDF decision margin >= 1.7e-3
+  relative, orders of magnitude above any libm ``exp`` last-ulp
+  divergence, so the streams are machine-portable;
+* the invariants (same seed => same stream under interleaving, top-k
+  support, top-p mass, temperature -> 0 => greedy) hold structurally.
+
+Run: ``python -m pytest python/tests/test_sampler_mirror.py`` (plain
+``python python/tests/test_sampler_mirror.py`` also works).
+"""
+
+import math
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+PCG_MULT = 6364136223846793005
+
+
+class Pcg32:
+    """Mirror of ``sampler::Pcg32`` (PCG32 XSH RR, reference seeding)."""
+
+    def __init__(self, initstate, initseq=0):
+        self.state = 0
+        self.inc = ((initseq << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + initstate) & MASK64
+        self.next_u32()
+
+    def next_u32(self):
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((-rot) & 31))) \
+            & 0xFFFFFFFF
+
+    def next_f32(self):
+        # Top 24 bits / 2^24: exactly representable in f32.
+        return np.float32(self.next_u32() >> 8) / np.float32(1 << 24)
+
+
+def argmax(row):
+    """Mirror of ``engine::argmax``: strict ``>`` from -inf, so ties
+    break to the lowest index and NaN never wins; no winner -> 0."""
+    best, best_v = 0, np.float32(-np.inf)
+    for i, v in enumerate(row):
+        if v > best_v:
+            best_v, best = v, i
+    return best
+
+
+class Sampler:
+    """Mirror of ``sampler::Sampler::next_token`` (committed f32 order)."""
+
+    def __init__(self, temperature, top_k, top_p, seed):
+        self.temperature = np.float32(temperature)
+        self.top_k = top_k
+        self.top_p = np.float32(top_p)
+        self.rng = Pcg32(seed)
+
+    def next_token(self, logits):
+        logits = [np.float32(x) for x in logits]
+        if self.temperature == np.float32(0.0):
+            return argmax(logits)
+        u = self.rng.next_f32()
+        cand = [(l, i) for i, l in enumerate(logits) if math.isfinite(l)]
+        if not cand:
+            return argmax(logits)
+        cand.sort(key=lambda p: (-p[0], p[1]))
+        if self.top_k > 0:
+            cand = cand[:self.top_k]
+        mx = cand[0][0]
+        w = [np.float32(np.exp(np.float32(
+            np.float32(l - mx) / self.temperature))) for l, _ in cand]
+        total = np.float32(0.0)
+        for x in w:
+            total = np.float32(total + x)
+        kept = len(w)
+        if self.top_p < np.float32(1.0):
+            thresh = np.float32(self.top_p * total)
+            acc = np.float32(0.0)
+            kept = 0
+            for x in w:
+                acc = np.float32(acc + x)
+                kept += 1
+                if acc >= thresh:
+                    break
+            total = acc
+        target = np.float32(u * total)
+        acc = np.float32(0.0)
+        for i in range(kept):
+            acc = np.float32(acc + w[i])
+            if target < acc:
+                return cand[i][1]
+        return cand[kept - 1][1]
+
+
+def stream(logits, t, k, p, seed, n):
+    s = Sampler(t, k, p, seed)
+    return [s.next_token(logits) for _ in range(n)]
+
+
+R8 = [0.5, 2.5, -1.0, 2.4, 0.0, 1.5, -3.0, 1.0]
+TIE = [1.0, 3.0, 3.0, 0.5]
+NAN_ROW = [float("nan"), 2.0, 1.0, float("-inf"), 1.9]
+
+
+# ---- PCG32 known answers (same constants as the Rust tests) -----------
+
+def test_pcg32_matches_reference_vectors():
+    r = Pcg32(42, 54)
+    want = [0xA15C02B7, 0x7B47F409, 0xBA1D3330, 0x83D2F293, 0xBFA4784B,
+            0xCBED606E]
+    assert [r.next_u32() for _ in range(6)] == want
+
+
+def test_pcg32_seed_from_vectors():
+    r0 = Pcg32(0)
+    assert [r0.next_u32() for _ in range(4)] == \
+        [3837872008, 932996374, 1548399547, 1612522464]
+    r7 = Pcg32(7)
+    assert [r7.next_u32() for _ in range(4)] == \
+        [4063834449, 2143014202, 2740157135, 3385478207]
+
+
+# ---- argmax contract ---------------------------------------------------
+
+def test_argmax_contract():
+    assert argmax([0.1, 0.9, 0.5]) == 1
+    assert argmax([2.0, 2.0]) == 0
+    assert argmax([float("nan"), 1.0, 2.0]) == 2
+    assert argmax([float("nan"), float("nan")]) == 0
+    assert argmax([float("-inf")] * 4) == 0
+
+
+# ---- cross-language known-answer streams -------------------------------
+
+def test_known_answer_streams_match_rust():
+    assert stream(R8, 1.0, 0, 1.0, 1, 8) == [7, 1, 5, 1, 3, 3, 3, 5]
+    assert stream(R8, 1.0, 0, 1.0, 9, 8) == [3, 3, 3, 3, 3, 3, 1, 1]
+    assert stream(R8, 0.7, 0, 1.0, 1, 8) == [5, 1, 5, 1, 3, 3, 3, 3]
+    assert stream(R8, 1.0, 3, 1.0, 1, 8) == [5, 1, 3, 1, 3, 3, 3, 3]
+    assert stream(R8, 1.0, 0, 0.8, 1, 8) == [5, 1, 3, 1, 3, 3, 3, 3]
+    assert stream(R8, 1.5, 4, 0.9, 1, 8) == [7, 1, 5, 1, 3, 3, 3, 5]
+    assert stream(TIE, 1.0, 2, 1.0, 1, 8) == [2, 1, 2, 1, 2, 2, 2, 2]
+    assert stream(NAN_ROW, 1.0, 0, 1.0, 1, 8) == [2, 1, 4, 1, 4, 4, 4, 4]
+    assert stream(NAN_ROW, 0.5, 2, 0.9, 9, 8) == [1, 1, 4, 4, 4, 1, 1, 1]
+
+
+# ---- invariants --------------------------------------------------------
+
+def test_same_seed_same_stream_regardless_of_interleaving():
+    rng = np.random.default_rng(100)
+    rows = [list(rng.normal(size=16).astype(np.float32)) for _ in range(12)]
+    solo = Sampler(0.9, 6, 0.95, 42)
+    want = [solo.next_token(r) for r in rows]
+    a = Sampler(0.9, 6, 0.95, 42)
+    other = Sampler(0.9, 6, 0.95, 7)
+    got = []
+    for i, row in enumerate(rows):
+        if i % 2 == 0:
+            other.next_token(row)
+        got.append(a.next_token(row))
+        if i % 3 == 0:
+            other.next_token(row)
+    assert got == want
+
+
+def test_top_k_restricts_support():
+    s = Sampler(1.2, 3, 1.0, 5)
+    for _ in range(300):
+        assert s.next_token(R8) in (1, 3, 5)
+
+
+def test_top_p_mass_invariant():
+    # probs [0.5, 0.3, 0.2]; top_p = 0.7 keeps exactly {0, 1}: the
+    # smallest prefix with mass >= 0.7, so kept mass 0.8 >= top_p.
+    logits = [math.log(0.5), math.log(0.3), math.log(0.2)]
+    s = Sampler(1.0, 0, 0.7, 3)
+    seen = [0, 0, 0]
+    for _ in range(500):
+        seen[s.next_token(logits)] += 1
+    assert seen[2] == 0
+    assert seen[0] > 0 and seen[1] > 0
+
+
+def test_tiny_temperature_converges_to_greedy():
+    s = Sampler(1e-4, 0, 1.0, 11)
+    for _ in range(200):
+        assert s.next_token(R8) == argmax(R8)
+
+
+def test_greedy_draws_nothing():
+    s = Sampler(0.0, 0, 1.0, 0)
+    for _ in range(5):
+        assert s.next_token(R8) == argmax(R8)
+    raw = Pcg32(0)
+    assert s.rng.next_u32() == raw.next_u32()
+
+
+def test_all_nonfinite_row_is_defined():
+    s = Sampler(1.0, 0, 1.0, 1)
+    assert s.next_token([float("nan"), float("-inf"), float("nan")]) == 0
+
+
+if __name__ == "__main__":
+    for name, fn in sorted(globals().items()):
+        if name.startswith("test_") and callable(fn):
+            fn()
+            print(f"{name}: ok")
+    print("all sampler mirror tests passed")

@@ -1,0 +1,188 @@
+//! Bench: static batch-to-completion vs continuous slot-refill serving
+//! on the host model, under a seeded Poisson-ish arrival trace — the
+//! serving-side acceptance measurement for ISSUE 5 (`BENCH_serving.json`).
+//!
+//! The trace assigns each request an arrival *step* (exponential gaps)
+//! and an exponential-ish generation budget, so request lifetimes are
+//! staggered the way real traffic staggers them. Both schedulers serve
+//! the identical trace and generate the identical token count:
+//!
+//! * **static**: FIFO groups of up to `slots` requests, each batch run
+//!   to completion ([`Engine::run_batch`]) — the batch drains at its
+//!   slowest member, so finished slots ride along as dead rows;
+//! * **continuous**: a [`SlotEngine`] pool of `slots` lanes — finished
+//!   requests free their lane for immediate refill and prompts enter
+//!   via chunked prefill.
+//!
+//! Equal tokens ⇒ the wall-clock ratio *is* the tokens/sec ratio; the
+//! per-series tok/s derived from the measured mean is printed and both
+//! series land in the JSON. Both engines run the same fixed kernel plan
+//! (SplitK-4, auto threads) so the comparison isolates scheduling — not
+//! autotune luck — and the smoke mode needs no warm sweeps.
+//!
+//! ```sh
+//! cargo bench --bench continuous_batching [-- --smoke]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::coordinator::{
+    Batch, Engine, GenerateRequest, HostModelBackend, SamplingParams,
+    SlotEngine,
+};
+use splitk_w4a16::kernels::HostKernelConfig;
+use splitk_w4a16::metrics::ServingMetrics;
+use splitk_w4a16::model::{GemmPlan, HostModel};
+use splitk_w4a16::runtime::ModelMeta;
+use splitk_w4a16::util::{Bench, Rng};
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(128, "splitk", vec![1, 2, 4, 8, 16], 0)
+}
+
+fn fixed_model() -> HostModel {
+    HostModel::with_plan(
+        &meta(),
+        GemmPlan::fixed(HostKernelConfig::splitk(4).with_threads(0)))
+        .expect("host model")
+}
+
+/// One trace entry: the virtual step the request arrives at, plus the
+/// request itself.
+type Trace = Vec<(usize, GenerateRequest)>;
+
+/// Seeded Poisson-ish trace: exponential inter-arrival gaps (mean ~2
+/// steps) and exponential-ish generation budgets (mean ~6, max 24), so
+/// lanes free up at staggered times — the regime slot refill exists for.
+fn build_trace(n: usize, seed: u64) -> Trace {
+    let mut rng = Rng::seed_from(seed);
+    let mut arrival = 0usize;
+    (0..n)
+        .map(|i| {
+            arrival += (-rng.next_f64().max(1e-9).ln() * 2.0) as usize;
+            let plen = rng.gen_range(2, 10) as usize;
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.gen_range(0, 512) as i32).collect();
+            let max_new =
+                1 + ((-rng.next_f64().max(1e-9).ln() * 6.0) as usize).min(23);
+            let req = GenerateRequest {
+                id: i as u64 + 1,
+                prompt,
+                max_new_tokens: max_new,
+                stop_token: None,
+                sampling: SamplingParams::greedy(),
+                accepted_at: Instant::now(),
+            };
+            (arrival, req)
+        })
+        .collect()
+}
+
+/// Smallest serving bucket covering `n` (the batcher's policy).
+fn bucket_for(n: usize) -> usize {
+    [1usize, 2, 4, 8, 16]
+        .into_iter()
+        .find(|&b| n <= b)
+        .unwrap_or(16)
+}
+
+/// Continuous run: admit arrived requests into free lanes each step,
+/// jump the virtual clock over idle gaps. Returns tokens generated.
+fn run_continuous(engine: &mut SlotEngine, trace: &Trace) -> usize {
+    engine.reset();
+    let mut idx = 0;
+    let mut clock = 0usize;
+    let mut tokens = 0;
+    while idx < trace.len() || !engine.is_idle() {
+        while idx < trace.len() && trace[idx].0 <= clock
+            && engine.free_slots() > 0
+        {
+            engine.admit(trace[idx].1.clone()).expect("admit");
+            idx += 1;
+        }
+        if engine.is_idle() {
+            // Nothing in flight: fast-forward to the next arrival.
+            clock = clock.max(trace[idx].0);
+            continue;
+        }
+        for r in engine.step().expect("step") {
+            tokens += r.tokens.len();
+        }
+        clock += 1;
+    }
+    tokens
+}
+
+/// Static run: FIFO groups of up to `slots`, each batch run to
+/// completion. Arrival times don't gate anything here — a static
+/// engine has nothing to do until a full group is queued anyway, and
+/// the measurement is pure compute time — so only the arrival *order*
+/// (shared with the continuous run) shapes the batches. Returns tokens
+/// generated.
+fn run_static(engine: &mut Engine, trace: &Trace, slots: usize) -> usize {
+    let mut idx = 0;
+    let mut tokens = 0;
+    while idx < trace.len() {
+        let take = slots.min(trace.len() - idx);
+        let requests: Vec<GenerateRequest> =
+            trace[idx..idx + take].iter().map(|(_, r)| r.clone()).collect();
+        idx += take;
+        let out = engine
+            .run_batch(Batch { requests, bucket: bucket_for(take) })
+            .expect("run_batch");
+        tokens += out.iter().map(|r| r.tokens.len()).sum::<usize>();
+    }
+    tokens
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let slot_counts: &[usize] = if smoke { &[4] } else { &[4, 8, 16] };
+    let n_requests = if smoke { 10 } else { 32 };
+    let prefill_chunk = 8;
+    let trace = build_trace(n_requests, 7);
+    let total_budget: usize =
+        trace.iter().map(|(_, r)| r.max_new_tokens).sum();
+    println!("trace: {n_requests} requests, {total_budget} token budget, \
+              Poisson-ish arrivals (seed 7)");
+
+    let mut bench = if smoke {
+        Bench::new(Duration::from_millis(400), 3, 0)
+    } else {
+        Bench::new(Duration::from_millis(2500), 6, 1)
+    };
+
+    for &slots in slot_counts {
+        let mut stat = Engine::new(
+            Box::new(HostModelBackend::new(fixed_model())),
+            Arc::new(ServingMetrics::new()));
+        let mut want = 0;
+        let r = bench.run(&format!("static_s{slots}"), || {
+            want = run_static(&mut stat, &trace, slots);
+        });
+        assert_eq!(want, total_budget, "static must serve the full trace");
+        let static_tps = total_budget as f64 / (r.mean_ns / 1e9);
+
+        let mut cont = SlotEngine::new(fixed_model(), slots, prefill_chunk,
+                                       Arc::new(ServingMetrics::new()))
+            .expect("slot engine");
+        let mut got = 0;
+        let r = bench.run(&format!("continuous_s{slots}"), || {
+            got = run_continuous(&mut cont, &trace);
+        });
+        assert_eq!(got, total_budget,
+                   "continuous must serve the full trace");
+        let cont_tps = total_budget as f64 / (r.mean_ns / 1e9);
+        println!("  m={slots:>2}: static {static_tps:>8.1} tok/s   \
+                  continuous {cont_tps:>8.1} tok/s   ({:.2}x)",
+                 cont_tps / static_tps);
+    }
+
+    let out = if smoke { "BENCH_serving_smoke.json" }
+              else { "BENCH_serving.json" };
+    match bench.write_repo_root_json(out) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

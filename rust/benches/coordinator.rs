@@ -7,7 +7,8 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use splitk_w4a16::config::ServeConfig;
-use splitk_w4a16::coordinator::{Coordinator, DynamicBatcher, GenerateRequest};
+use splitk_w4a16::coordinator::{Coordinator, DynamicBatcher,
+                                GenerateRequest, SamplingParams};
 use splitk_w4a16::metrics::ServingMetrics;
 use splitk_w4a16::runtime::Manifest;
 use splitk_w4a16::util::{Bench, Json};
@@ -18,6 +19,7 @@ fn req(id: u64, at: Instant) -> GenerateRequest {
         prompt: vec![1, 2, 3],
         max_new_tokens: 4,
         stop_token: None,
+        sampling: SamplingParams::greedy(),
         accepted_at: at,
     }
 }

@@ -38,6 +38,16 @@ pub struct ServeConfig {
     /// `artifacts_dir/manifest.json` is missing, so a bare checkout
     /// serves end to end (see [`Self::resolve_backend`]).
     pub backend: String,
+    /// Decode-slot pool size for the continuous-batching scheduler
+    /// (host backend only; the artifact executables bake in a uniform
+    /// batch position and always serve static batches). `0` selects
+    /// the legacy static batch-to-completion loop on the host backend
+    /// too.
+    pub slots: usize,
+    /// Max prompt positions one slot may prefill per engine step
+    /// (chunked prefill: long prompts are fed in chunks interleaved
+    /// with in-flight decode steps instead of stalling them).
+    pub prefill_chunk: usize,
 }
 
 /// Which decode implementation the engine will build.
@@ -63,6 +73,8 @@ impl Default for ServeConfig {
             warm_start: true,
             self_check: true,
             backend: "artifacts".into(),
+            slots: 16,
+            prefill_chunk: 8,
         }
     }
 }
@@ -125,6 +137,14 @@ impl ServeConfig {
                 Some(s) => s.as_str()?.to_string(),
                 None => d.backend,
             },
+            slots: match v.opt("slots") {
+                Some(n) => n.as_usize()?,
+                None => d.slots,
+            },
+            prefill_chunk: match v.opt("prefill_chunk") {
+                Some(n) => n.as_usize()?,
+                None => d.prefill_chunk,
+            },
         })
     }
 
@@ -145,6 +165,8 @@ impl ServeConfig {
             ("warm_start", Json::Bool(self.warm_start)),
             ("self_check", Json::Bool(self.self_check)),
             ("backend", Json::str(self.backend.clone())),
+            ("slots", Json::num(self.slots as f64)),
+            ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
         ])
     }
 
@@ -170,7 +192,21 @@ impl ServeConfig {
             self.backend == "artifacts" || self.backend == "host",
             "backend must be 'artifacts' or 'host'"
         );
+        ensure!(self.prefill_chunk >= 1, "prefill_chunk must be >= 1");
+        // Each slot is a full KV-cache lane (layers*2*heads*max_seq*hd
+        // f32s) and the warm sweep autotunes every GEMM m in 1..=budget,
+        // so an absurd pool must fail here with a clean config error,
+        // not OOM/hang in startup.
+        ensure!(self.slots <= 256, "slots must be <= 256 (0 = static)");
+        ensure!(self.prefill_chunk <= 256, "prefill_chunk must be <= 256");
         Ok(())
+    }
+
+    /// True when the resolved serving mode is the continuous-batching
+    /// slot scheduler (host backend with a non-empty slot pool); the
+    /// artifact backend and `slots = 0` keep static batching.
+    pub fn continuous(&self) -> bool {
+        self.slots > 0 && self.resolve_backend() == DecodeBackendKind::Host
     }
 
     /// Resolve the configured backend against the filesystem:
@@ -260,6 +296,58 @@ mod tests {
         let cfg = ServeConfig::from_json(
             &Json::parse(r#"{"self_check": false}"#).unwrap()).unwrap();
         assert!(!cfg.self_check);
+    }
+
+    #[test]
+    fn slots_and_prefill_chunk_roundtrip_and_validate() {
+        let d = ServeConfig::default();
+        assert_eq!(d.slots, 16);
+        assert_eq!(d.prefill_chunk, 8);
+        let cfg = ServeConfig::from_json(&Json::parse(
+            r#"{"slots": 4, "prefill_chunk": 2}"#).unwrap()).unwrap();
+        assert_eq!(cfg.slots, 4);
+        assert_eq!(cfg.prefill_chunk, 2);
+        let bad = ServeConfig { prefill_chunk: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let legacy = ServeConfig { slots: 0, ..Default::default() };
+        assert!(legacy.validate().is_ok(), "slots = 0 is static batching");
+        // A pool-size typo must die in validate(), not OOM allocating
+        // KV lanes or hang autotuning 10^8 m-values at warm-up.
+        let huge = ServeConfig { slots: 100_000_000, ..Default::default() };
+        assert!(huge.validate().is_err());
+        let huge_chunk =
+            ServeConfig { prefill_chunk: 100_000_000, ..Default::default() };
+        assert!(huge_chunk.validate().is_err());
+        let max_ok = ServeConfig { slots: 256, prefill_chunk: 256,
+                                   ..Default::default() };
+        assert!(max_ok.validate().is_ok());
+    }
+
+    #[test]
+    fn continuous_mode_requires_host_and_slots() {
+        // Host backend + slots -> continuous.
+        let host = ServeConfig { backend: "host".into(), ..Default::default() };
+        assert!(host.continuous());
+        // slots = 0 -> static even on host.
+        let stat = ServeConfig { backend: "host".into(), slots: 0,
+                                 ..Default::default() };
+        assert!(!stat.continuous());
+        // Artifacts present -> static regardless of slots.
+        let dir = std::env::temp_dir().join(format!(
+            "splitk-cont-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        let art = ServeConfig { artifacts_dir: dir.clone(),
+                                ..Default::default() };
+        assert!(!art.continuous());
+        std::fs::remove_dir_all(&dir).ok();
+        // Artifacts configured but missing falls back to host ->
+        // continuous applies.
+        let fallback = ServeConfig {
+            artifacts_dir: PathBuf::from("/definitely/not/a/path"),
+            ..Default::default()
+        };
+        assert!(fallback.continuous());
     }
 
     #[test]

@@ -121,6 +121,17 @@ impl DynamicBatcher {
         None
     }
 
+    /// Immediate admission for continuous-batching slot refill: take up
+    /// to `n` oldest requests, FIFO, ignoring the batching window — a
+    /// free decode slot is capacity going to waste *now*, so holding a
+    /// request back to fill a bucket (the static-batching trade) can
+    /// only hurt. Does not count as a `poll` (the window policy never
+    /// ran).
+    pub fn take_upto(&mut self, n: usize) -> Vec<GenerateRequest> {
+        let take = n.min(self.queue.len());
+        self.queue.drain(..take).collect()
+    }
+
     /// Time until the oldest request's window expires (for sleep timing).
     pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
         self.queue.front().map(|r| {
@@ -146,6 +157,7 @@ mod tests {
             prompt: vec![1, 2],
             max_new_tokens: 4,
             stop_token: None,
+            sampling: crate::coordinator::SamplingParams::greedy(),
             accepted_at: at,
         }
     }
@@ -308,6 +320,29 @@ mod tests {
         let batch = b.poll(wake).expect("deadline poll flushes");
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(b.nonempty_polls(), 2);
+    }
+
+    #[test]
+    fn take_upto_is_fifo_immediate_and_bounded() {
+        // Slot refill ignores the window entirely: requests inside a
+        // long batching window are handed out the moment a slot asks.
+        let mut b = batcher(10_000);
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let first = b.take_upto(3);
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 1, 2]);
+        assert_eq!(b.len(), 2);
+        // Asking for more than queued drains what's there.
+        let rest = b.take_upto(10);
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![3, 4]);
+        assert!(b.is_empty());
+        assert!(b.take_upto(4).is_empty(), "empty queue yields nothing");
+        assert_eq!(b.nonempty_polls(), 0,
+                   "slot refill is not a window poll");
     }
 
     #[test]

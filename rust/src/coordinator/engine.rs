@@ -17,12 +17,13 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::metrics::ServingMetrics;
-use crate::model::{DecodeState, HostModel};
+use crate::model::{DecodeState, HostModel, SlotStep};
 use crate::runtime::{Executable, ExecutableCache, HostTensor, ModelMeta};
 
 use super::batcher::Batch;
-use super::kvcache::KvCacheSpec;
+use super::kvcache::{HostKvCache, KvCacheSpec};
 use super::request::{FinishReason, GenerateRequest, GenerateResponse};
+use super::sampler::{Sampler, SamplingParams};
 
 /// One decode implementation: per-batch state setup plus a step
 /// function. The engine drives prefill and decode through this trait
@@ -150,7 +151,7 @@ impl DecodeBackend for HostModelBackend {
     }
 }
 
-/// Per-slot generation state inside a running batch.
+/// Per-slot generation state inside a running static batch.
 #[derive(Debug)]
 struct Slot {
     /// Index into the batch's request list; None = padding slot.
@@ -161,6 +162,8 @@ struct Slot {
     done: Option<FinishReason>,
     /// Token to feed at the next step.
     next_token: i32,
+    /// The request's seeded sampler (greedy for padding slots).
+    sampler: Sampler,
 }
 
 /// The engine: a decode backend + the batched generation loop.
@@ -222,11 +225,13 @@ impl Engine {
                         generated: Vec::new(),
                         done: None,
                         next_token: 0,
+                        sampler: Sampler::new(requests[i].sampling),
                     }
                 } else {
                     Slot { req_idx: None, start: (prompt_max - 1) as i32,
                            generated: Vec::new(), done: Some(FinishReason::Length),
-                           next_token: 0 }
+                           next_token: 0,
+                           sampler: Sampler::new(SamplingParams::greedy()) }
                 }
             })
             .collect();
@@ -317,7 +322,8 @@ impl Engine {
         Ok(logits)
     }
 
-    /// Greedy-sample next tokens from `logits`, update slot state.
+    /// Sample next tokens from `logits` (each slot's own seeded
+    /// sampler; greedy params reduce to argmax), update slot state.
     fn harvest(&self, requests: &[GenerateRequest], slots: &mut [Slot],
                logits: &[f32], vocab: usize, next_pos: usize)
                -> Result<()> {
@@ -327,7 +333,7 @@ impl Engine {
             }
             let ri = slot.req_idx.unwrap();
             let row = &logits[i * vocab..(i + 1) * vocab];
-            let tok = argmax(row) as i32;
+            let tok = slot.sampler.next_token(row) as i32;
             slot.generated.push(tok);
             slot.next_token = tok;
             let req = &requests[ri];
@@ -343,7 +349,346 @@ impl Engine {
     }
 }
 
-/// Index of the maximum element (first on ties).
+// ====================================================================
+// Continuous batching: the slot scheduler + slot engine
+// ====================================================================
+
+/// One occupied lane of the continuous-batching pool.
+#[derive(Debug)]
+struct DecodeSlot {
+    req: GenerateRequest,
+    sampler: Sampler,
+    /// Prompt tokens already fed; the lane is prefilling while this is
+    /// short of `req.prompt.len()`.
+    consumed: usize,
+    /// Next absolute lane position to feed.
+    pos: usize,
+    generated: Vec<i32>,
+    /// Token to feed at the next decode step (valid once the first
+    /// token has been sampled off the final prefill logits).
+    next_token: i32,
+    /// When the request entered its lane (queue-wait metrics).
+    admitted_at: Instant,
+}
+
+impl DecodeSlot {
+    fn prefilling(&self) -> bool {
+        self.consumed < self.req.prompt.len()
+    }
+}
+
+/// The slot scheduler: a fixed pool of decode lanes, refilled mid-batch
+/// as requests finish, with prefill chunked so one long prompt cannot
+/// stall in-flight decodes (DESIGN.md §7). Internal to [`SlotEngine`],
+/// which owns the model/cache halves of every operation.
+///
+/// Per engine step it plans one [`SlotStep`] row per *decoding* lane
+/// (decode rows are latency-critical and always ride) plus up to
+/// `prefill_chunk` prompt rows per *prefilling* lane, the whole step
+/// capped at `max(pool, prefill_chunk)` rows so the GEMM `m` stays in a
+/// bounded, pre-warmable range. Planning walks lanes in index order and
+/// same-lane prompt rows are consecutive ascending positions — the
+/// layout `forward_slots` turns into bit-exact chunked prefill.
+#[derive(Debug)]
+struct SlotScheduler {
+    lanes: Vec<Option<DecodeSlot>>,
+    prefill_chunk: usize,
+}
+
+impl SlotScheduler {
+    /// An empty pool of `slots` lanes.
+    fn new(slots: usize, prefill_chunk: usize) -> Self {
+        SlotScheduler {
+            lanes: (0..slots).map(|_| None).collect(),
+            prefill_chunk,
+        }
+    }
+
+    /// Lanes currently serving a request.
+    fn active(&self) -> usize {
+        self.lanes.iter().flatten().count()
+    }
+
+    /// Lanes ready for a new request.
+    fn free(&self) -> usize {
+        self.lanes.len() - self.active()
+    }
+
+    /// Largest per-step row count the planner can emit — the GEMM `m`
+    /// range a host model should pre-plan ([`HostModel::warm_slots`]).
+    fn row_budget(&self) -> usize {
+        self.lanes.len().max(self.prefill_chunk)
+    }
+
+    /// Seat a request in the lowest free lane; returns the lane index.
+    fn seat(&mut self, req: GenerateRequest, now: Instant)
+            -> Option<usize> {
+        let lane = self.lanes.iter().position(|l| l.is_none())?;
+        let sampler = Sampler::new(req.sampling);
+        self.lanes[lane] = Some(DecodeSlot {
+            req,
+            sampler,
+            consumed: 0,
+            pos: 0,
+            generated: Vec::new(),
+            next_token: 0,
+            admitted_at: now,
+        });
+        Some(lane)
+    }
+
+    /// Plan the next step: one row per decoding lane, chunked prompt
+    /// rows for prefilling lanes within the remaining row budget.
+    /// `need_logits` marks decode rows and final-prompt-position rows —
+    /// the rows a token is sampled from.
+    fn plan_step(&self) -> (Vec<SlotStep>, Vec<bool>) {
+        let decode_rows = self
+            .lanes
+            .iter()
+            .flatten()
+            .filter(|s| !s.prefilling())
+            .count();
+        let mut prefill_budget = self.row_budget() - decode_rows;
+        let mut steps = Vec::new();
+        let mut need = Vec::new();
+        for (lane, slot) in self.lanes.iter().enumerate() {
+            let Some(s) = slot else { continue };
+            if s.prefilling() {
+                let remaining = s.req.prompt.len() - s.consumed;
+                let take =
+                    self.prefill_chunk.min(remaining).min(prefill_budget);
+                prefill_budget -= take;
+                for j in 0..take {
+                    steps.push(SlotStep {
+                        slot: lane,
+                        token: s.req.prompt[s.consumed + j],
+                        pos: s.pos + j,
+                        start: 0,
+                    });
+                    need.push(s.consumed + j + 1 == s.req.prompt.len());
+                }
+            } else {
+                steps.push(SlotStep {
+                    slot: lane,
+                    token: s.next_token,
+                    pos: s.pos,
+                    start: 0,
+                });
+                need.push(true);
+            }
+        }
+        (steps, need)
+    }
+
+    /// Record that the planned rows were fed to the model: advance each
+    /// lane's position and prompt cursor.
+    fn note_fed(&mut self, steps: &[SlotStep]) {
+        for s in steps {
+            let slot = self.lanes[s.slot].as_mut().expect("planned lane");
+            if slot.consumed < slot.req.prompt.len() {
+                slot.consumed += 1;
+            }
+            slot.pos = s.pos + 1;
+        }
+    }
+
+    /// Feed one sampled-logits row to its lane: sample, extend the
+    /// stream, finish the request if done (freeing the lane) and return
+    /// its response.
+    fn harvest_row(&mut self, lane: usize, row: &[f32], max_seq: usize,
+                   metrics: &ServingMetrics) -> Option<GenerateResponse> {
+        let pool = self.lanes.len();
+        let slot = self.lanes[lane].as_mut().expect("harvested lane");
+        let tok = slot.sampler.next_token(row) as i32;
+        slot.generated.push(tok);
+        slot.next_token = tok;
+        let done = if slot.req.stop_token == Some(tok) {
+            Some(FinishReason::Stop)
+        } else if slot.generated.len() >= slot.req.max_new_tokens {
+            Some(FinishReason::Length)
+        } else if slot.pos >= max_seq {
+            Some(FinishReason::ContextLimit)
+        } else {
+            None
+        };
+        let reason = done?;
+        let slot = self.lanes[lane].take().expect("finished lane");
+        let now = Instant::now();
+        let latency_ms =
+            now.duration_since(slot.req.accepted_at).as_secs_f64() * 1e3;
+        let queue_wait_ms = slot
+            .admitted_at
+            .duration_since(slot.req.accepted_at)
+            .as_secs_f64() * 1e3;
+        metrics.record_request(latency_ms, slot.generated.len() as u64,
+                               queue_wait_ms);
+        Some(GenerateResponse {
+            id: slot.req.id,
+            tokens: slot.generated,
+            finish_reason: reason,
+            latency_ms,
+            queue_wait_ms,
+            // In the slot loop there is no per-batch bucket; the pool
+            // size is the m-ceiling the request was served under.
+            bucket: pool,
+        })
+    }
+}
+
+/// The continuous-batching engine: a [`HostModel`] pool driver. Host
+/// only, by construction — the artifact backend's compiled decode
+/// executables bake in a uniform batch position, which slot refill and
+/// chunked prefill both violate; artifacts keep the static
+/// [`Engine::run_batch`] loop.
+pub struct SlotEngine {
+    model: HostModel,
+    cache: HostKvCache,
+    sched: SlotScheduler,
+    max_seq: usize,
+    vocab: usize,
+    metrics: Arc<ServingMetrics>,
+}
+
+impl SlotEngine {
+    /// Build a pool of `slots` lanes over a host model.
+    pub fn new(model: HostModel, slots: usize, prefill_chunk: usize,
+               metrics: Arc<ServingMetrics>) -> Result<Self> {
+        ensure!(slots >= 1, "slot pool needs at least one lane");
+        ensure!(prefill_chunk >= 1, "prefill chunk must be >= 1");
+        let max_seq = model.meta().max_seq;
+        let vocab = model.meta().vocab;
+        let cache = model.alloc_cache(slots);
+        Ok(SlotEngine {
+            model,
+            cache,
+            sched: SlotScheduler::new(slots, prefill_chunk),
+            max_seq,
+            vocab,
+            metrics,
+        })
+    }
+
+    /// Lanes ready for a new request.
+    pub fn free_slots(&self) -> usize {
+        self.sched.free()
+    }
+
+    /// Lanes currently serving a request.
+    pub fn active_slots(&self) -> usize {
+        self.sched.active()
+    }
+
+    /// Largest per-step GEMM `m` the scheduler can plan (what
+    /// [`HostModel::warm_slots`] should be warmed to).
+    pub fn row_budget(&self) -> usize {
+        self.sched.row_budget()
+    }
+
+    /// Pre-plan (autotune) every GEMM `m` this pool's planner can emit
+    /// (`1..=row_budget`) — the continuous-serving warm-up. Lives here
+    /// so the warmed range and the planner's budget share one
+    /// definition. Returns the (m, shape) combinations visited.
+    pub fn warm(&mut self) -> usize {
+        self.model.warm_slots(self.sched.row_budget())
+    }
+
+    /// True when no lane holds a request (nothing to step).
+    pub fn is_idle(&self) -> bool {
+        self.sched.active() == 0
+    }
+
+    /// Seat a request in a free lane (scrubbing its KV lane). Errors if
+    /// the pool is full or the prompt cannot fit the context — callers
+    /// check [`Self::free_slots`] and route through `RequestLimits`, so
+    /// an error here is a programming bug surfaced loudly.
+    pub fn admit(&mut self, req: GenerateRequest) -> Result<()> {
+        ensure!(!req.prompt.is_empty(), "empty prompt");
+        ensure!(req.prompt.len() <= self.max_seq,
+                "prompt length {} exceeds context {}", req.prompt.len(),
+                self.max_seq);
+        ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
+        let now = Instant::now();
+        let lane = self
+            .sched
+            .seat(req, now)
+            .ok_or_else(|| anyhow!("no free decode slot"))?;
+        self.cache.reset_slot(lane);
+        Ok(())
+    }
+
+    /// Run one engine step: plan rows across every occupied lane, run
+    /// one slot-batched forward pass, sample where logits came back,
+    /// and return the requests that finished (their lanes are already
+    /// free for refill). A no-op on an idle pool.
+    pub fn step(&mut self) -> Result<Vec<GenerateResponse>> {
+        let (steps, need) = self.sched.plan_step();
+        if steps.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let logits = self.model.decode_slots(&mut self.cache, &steps, &need)?;
+        self.metrics
+            .record_step(t0.elapsed().as_secs_f64() * 1e6,
+                         steps.len() as u64);
+        let sampled = need.iter().filter(|&&n| n).count();
+        ensure!(logits.len() == sampled * self.vocab,
+                "backend returned {} logits, expected {}",
+                logits.len(), sampled * self.vocab);
+        self.sched.note_fed(&steps);
+        let mut finished = Vec::new();
+        let mut li = 0;
+        for (r, s) in steps.iter().enumerate() {
+            if !need[r] {
+                continue;
+            }
+            let row = &logits[li * self.vocab..(li + 1) * self.vocab];
+            li += 1;
+            if let Some(resp) = self.sched.harvest_row(s.slot, row,
+                                                       self.max_seq,
+                                                       &self.metrics) {
+                finished.push(resp);
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Drive a whole FIFO trace to completion (tests and benches):
+    /// admit while lanes are free, step, repeat. Responses come back in
+    /// completion order.
+    pub fn run_trace(&mut self, requests: Vec<GenerateRequest>)
+                     -> Result<Vec<GenerateResponse>> {
+        let mut queue: std::collections::VecDeque<GenerateRequest> =
+            requests.into();
+        let mut out = Vec::new();
+        while !queue.is_empty() || !self.is_idle() {
+            while self.free_slots() > 0 && !queue.is_empty() {
+                self.admit(queue.pop_front().unwrap())?;
+            }
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Abandon all in-flight requests and return the pool to empty
+    /// (bench reuse; the serving loop never abandons work).
+    pub fn reset(&mut self) {
+        for lane in self.sched.lanes.iter_mut() {
+            *lane = None;
+        }
+    }
+}
+
+/// Index of the maximum element, with a pinned contract (the greedy
+/// sampling primitive — the golden-decode drift guard and the
+/// scheduler-equivalence suite both assume token choice is a pure
+/// function of the logits row, so "unspecified on ties/NaN" would make
+/// them flaky by construction):
+///
+/// * exact ties break to the **lowest index** (`v > best` strictly);
+/// * **NaN never wins** (`NaN > x` is false for every `x`), so NaN
+///   logits are skipped wherever they appear;
+/// * a row with no finite winner (all NaN and/or `-inf`, or an empty
+///   row) returns **0** — a defined, in-vocab result instead of UB.
 pub fn argmax(row: &[f32]) -> usize {
     let mut best = 0;
     let mut best_v = f32::NEG_INFINITY;
@@ -366,6 +711,32 @@ mod tests {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
         assert_eq!(argmax(&[2.0, 2.0]), 0); // first on ties
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_to_lowest_index() {
+        // Regression (ISSUE 5): tie-breaking is part of the greedy
+        // determinism contract, not an accident of iteration order.
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 3.0]), 1);
+        assert_eq!(argmax(&[0.0, -0.0]), 0, "-0.0 == 0.0: first wins");
+        assert_eq!(argmax(&[f32::INFINITY, f32::INFINITY]), 0);
+    }
+
+    #[test]
+    fn argmax_nan_never_wins() {
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2, "leading NaN skipped");
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0, "inner NaN skipped");
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0, "all-NaN pins 0");
+        assert_eq!(argmax(&[f32::NAN, f32::NEG_INFINITY]), 0,
+                   "no finite winner pins 0");
+    }
+
+    #[test]
+    fn argmax_degenerate_rows_are_defined() {
+        assert_eq!(argmax(&[]), 0, "empty row pins 0");
+        assert_eq!(argmax(&[f32::NEG_INFINITY; 4]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1e30]), 1,
+                   "a finite value beats -inf");
     }
 
     #[test]
@@ -401,6 +772,7 @@ mod tests {
             prompt,
             max_new_tokens: max_new,
             stop_token: None,
+            sampling: SamplingParams::greedy(),
             accepted_at: Instant::now(),
         }
     }
@@ -464,5 +836,145 @@ mod tests {
             GemmPlan::fixed(crate::kernels::HostKernelConfig::splitk(2))).unwrap();
         let mut b = HostModelBackend::new(model);
         assert!(b.step(&[1], 0, true).is_err());
+    }
+
+    // ---- continuous batching: SlotEngine ----------------------------
+
+    fn slot_engine(slots: usize, chunk: usize) -> SlotEngine {
+        let meta = ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0);
+        let plan = GemmPlan::fixed(
+            crate::kernels::HostKernelConfig::splitk(4).with_threads(2));
+        let model = HostModel::with_plan(&meta, plan).unwrap();
+        SlotEngine::new(model, slots, chunk,
+                        Arc::new(ServingMetrics::new())).unwrap()
+    }
+
+    #[test]
+    fn slot_engine_serves_staggered_requests() {
+        let mut e = slot_engine(2, 2);
+        let out = e
+            .run_trace(vec![
+                req(1, vec![3, 5, 7], 4),
+                req(2, vec![9], 2),
+                req(3, vec![100, 200], 6),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        for want in [(1u64, 4usize), (2, 2), (3, 6)] {
+            let r = out.iter().find(|r| r.id == want.0).unwrap();
+            assert_eq!(r.tokens.len(), want.1, "request {}", want.0);
+            assert_eq!(r.finish_reason, FinishReason::Length);
+            assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+            assert_eq!(r.bucket, 2, "pool size is reported as the bucket");
+        }
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn slot_engine_refills_freed_lane_mid_batch() {
+        // Three requests, two lanes: the short request's lane must be
+        // handed to the queued third request while the long request is
+        // still decoding — the batch never drains to let it in.
+        let mut e = slot_engine(2, 4);
+        e.admit(req(1, vec![3, 5], 12)).unwrap();
+        e.admit(req(2, vec![9], 2)).unwrap();
+        assert_eq!(e.free_slots(), 0);
+        let mut finished = Vec::new();
+        while finished.is_empty() {
+            finished.extend(e.step().unwrap());
+        }
+        assert_eq!(finished[0].id, 2, "short request finishes first");
+        assert_eq!(e.free_slots(), 1, "its lane is free immediately");
+        assert_eq!(e.active_slots(), 1, "the long request is still going");
+        e.admit(req(3, vec![7, 7, 7], 3)).unwrap();
+        let mut rest = Vec::new();
+        while e.active_slots() > 0 {
+            rest.extend(e.step().unwrap());
+        }
+        assert_eq!(rest.len(), 2);
+        assert_eq!(rest.iter().find(|r| r.id == 1).unwrap().tokens.len(), 12);
+        assert_eq!(rest.iter().find(|r| r.id == 3).unwrap().tokens.len(), 3);
+    }
+
+    #[test]
+    fn slot_engine_stop_token_finishes_early() {
+        let mut e = slot_engine(1, 4);
+        let probe = e.run_trace(vec![req(1, vec![8, 8], 3)]).unwrap();
+        let stop = probe[0].tokens[0];
+        let mut r = req(2, vec![8, 8], 3);
+        r.stop_token = Some(stop);
+        let out = e.run_trace(vec![r]).unwrap();
+        assert_eq!(out[0].finish_reason, FinishReason::Stop);
+        assert_eq!(out[0].tokens, vec![stop]);
+    }
+
+    #[test]
+    fn slot_engine_context_limit() {
+        // max_seq = 64; a 60-token prompt with a huge token budget can
+        // generate exactly 64 - 60 + 1 = 5 tokens (one off the final
+        // prefill logits, four more before the lane runs out of room).
+        let mut e = slot_engine(1, 16);
+        let prompt: Vec<i32> = (0..60).map(|i| (i * 7) % 512).collect();
+        let out = e.run_trace(vec![req(1, prompt, 1000)]).unwrap();
+        assert_eq!(out[0].finish_reason, FinishReason::ContextLimit);
+        assert_eq!(out[0].tokens.len(), 5);
+    }
+
+    #[test]
+    fn slot_engine_admission_guards() {
+        let mut e = slot_engine(1, 4);
+        assert!(e.admit(req(1, vec![], 4)).is_err(), "empty prompt");
+        assert!(e.admit(req(2, vec![1; 65], 4)).is_err(),
+                "prompt beyond max_seq");
+        assert!(e.admit(req(3, vec![1], 0)).is_err(), "zero max_new");
+        e.admit(req(4, vec![1], 4)).unwrap();
+        assert!(e.admit(req(5, vec![1], 4)).is_err(), "pool full");
+    }
+
+    #[test]
+    fn slot_engine_matches_static_engine_greedy() {
+        // Same fixed plan, same seeded model: the slot loop must emit
+        // the static loop's exact greedy tokens for every request.
+        let mut stat = host_engine();
+        let mut want = Vec::new();
+        for (id, prompt) in
+            [(1u64, vec![3, 5, 7]), (2, vec![9]), (3, vec![100, 200, 300])]
+        {
+            let out = stat
+                .run_batch(Batch {
+                    requests: vec![req(id, prompt, 5)],
+                    bucket: 1,
+                })
+                .unwrap();
+            want.push(out[0].tokens.clone());
+        }
+        // Note the static host_engine uses synthetic(64) metadata too.
+        let mut cont = slot_engine(2, 2);
+        let out = cont
+            .run_trace(vec![
+                req(1, vec![3, 5, 7], 5),
+                req(2, vec![9], 5),
+                req(3, vec![100, 200, 300], 5),
+            ])
+            .unwrap();
+        for (i, want_toks) in want.iter().enumerate() {
+            let r = out.iter().find(|r| r.id == i as u64 + 1).unwrap();
+            assert_eq!(&r.tokens, want_toks,
+                       "request {} continuous == solo static", r.id);
+        }
+    }
+
+    #[test]
+    fn slot_engine_reset_clears_the_pool() {
+        let mut e = slot_engine(2, 2);
+        e.admit(req(1, vec![1, 2, 3], 8)).unwrap();
+        e.step().unwrap();
+        assert_eq!(e.active_slots(), 1);
+        e.reset();
+        assert!(e.is_idle());
+        assert_eq!(e.free_slots(), 2);
+        // The pool serves fresh work after a reset.
+        let out = e.run_trace(vec![req(2, vec![4], 2)]).unwrap();
+        assert_eq!(out[0].tokens.len(), 2);
     }
 }

@@ -114,6 +114,24 @@ impl HostKvCache {
         &self.data[o..o + self.spec.head_dim]
     }
 
+    /// Zero one slot's lane — every layer, K and V, every position —
+    /// without touching its neighbors. The continuous-batching engine
+    /// calls this when a freed slot is refilled with a new request:
+    /// correctness only needs positions `[start, pos]`, which the new
+    /// occupant's prefill rewrites before reading, but a scrubbed lane
+    /// keeps stale cross-request state out of the pool by construction
+    /// (and makes cache-inspection tests meaningful).
+    pub fn reset_slot(&mut self, slot: usize) {
+        assert!(slot < self.b, "reset_slot: slot {slot} >= batch {}", self.b);
+        let lane = self.spec.n_heads * self.spec.max_seq * self.spec.head_dim;
+        for layer in 0..self.spec.n_layers {
+            for kv in 0..2 {
+                let o = self.offset(layer, kv, slot, 0, 0);
+                self.data[o..o + lane].fill(0.0);
+            }
+        }
+    }
+
     /// Snapshot as a [`HostTensor`] in the artifact shape.
     pub fn to_tensor(&self) -> HostTensor {
         HostTensor::f32(self.spec.shape(self.b), self.data.clone())
@@ -170,6 +188,24 @@ mod tests {
         assert!(c.v_row(3, 0, 2, 7).iter().all(|&x| x == 0.0));
         assert!(c.k_row(2, 1, 2, 7).iter().all(|&x| x == 0.0));
         assert_eq!(c.batch(), 2);
+    }
+
+    #[test]
+    fn reset_slot_scrubs_one_lane_only() {
+        let spec = KvCacheSpec::from_model(&meta());
+        let hd = spec.head_dim;
+        let mut c = HostKvCache::new(spec, 3);
+        let row = vec![1.5f32; hd];
+        for slot in 0..3 {
+            c.write_k(0, slot, 1, 4, &row);
+            c.write_v(3, slot, 0, 7, &row);
+        }
+        c.reset_slot(1);
+        assert!(c.k_row(0, 1, 1, 4).iter().all(|&x| x == 0.0));
+        assert!(c.v_row(3, 1, 0, 7).iter().all(|&x| x == 0.0));
+        // Neighbor lanes keep their rows.
+        assert_eq!(c.k_row(0, 0, 1, 4), row.as_slice());
+        assert_eq!(c.v_row(3, 2, 0, 7), row.as_slice());
     }
 
     #[test]

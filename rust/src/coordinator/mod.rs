@@ -1,28 +1,40 @@
 //! S11 — the serving coordinator (L3).
 //!
-//! vLLM-router-shaped serving for the W4A16 quantized model: requests are
-//! validated ([`request`]), queued and grouped into the paper's m = 1..16
-//! batch buckets ([`batcher`]), and executed as batched prefill + decode
-//! steps through a pluggable [`DecodeBackend`] ([`engine`]) — the AOT
-//! artifacts when present, else the pure-Rust fused host model
-//! (`crate::model`) — orchestrated across a scheduler thread and a
-//! backend-owning engine thread ([`router`]).
+//! vLLM-router-shaped serving for the W4A16 quantized model: requests
+//! are validated ([`request`]), queued ([`batcher`]), and decoded with
+//! per-request seeded sampling ([`sampler`]) under one of two
+//! schedulers ([`engine`], selected by `ServeConfig.slots`):
 //!
-//! The batch bucket chosen by the batcher *is* the `m` of every fused
-//! W4A16 GEMM in the decode step — the coordinator is the direct consumer
-//! of the paper's skinny-GEMM regime.
+//! * **continuous batching** (the host-backend default): a
+//!   [`SlotEngine`] owns a fixed pool of decode lanes; finished
+//!   requests free their lane mid-batch for immediate refill from the
+//!   queue, and new prompts enter via chunked prefill interleaved with
+//!   in-flight decodes;
+//! * **static batching** (`slots = 0`, and always for the artifact
+//!   backend whose compiled executables bake in a uniform position):
+//!   the batcher groups requests into the paper's m = 1..16 buckets and
+//!   an [`Engine`] runs each batch to completion through a pluggable
+//!   [`DecodeBackend`].
+//!
+//! Either way the scheduler's row count *is* the `m` of every fused
+//! W4A16 GEMM in the decode step — the coordinator is the direct
+//! consumer of the paper's skinny-GEMM regime, and continuous refill
+//! exists precisely to keep that `m` from collapsing as requests
+//! finish ([`router`] wires the threads).
 
 mod batcher;
 mod engine;
 mod kvcache;
 mod request;
 mod router;
+mod sampler;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use engine::{argmax, ArtifactBackend, DecodeBackend, Engine,
-                 HostModelBackend};
+                 HostModelBackend, SlotEngine};
 pub use kvcache::{HostKvCache, KvCacheSpec};
 pub use request::{
     FinishReason, GenerateRequest, GenerateResponse, RequestId, RequestLimits,
 };
 pub use router::{Coordinator, Pending};
+pub use sampler::{Pcg32, Sampler, SamplingParams};

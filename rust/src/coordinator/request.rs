@@ -2,6 +2,7 @@
 
 use std::time::Instant;
 
+use super::sampler::SamplingParams;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
@@ -17,6 +18,9 @@ pub struct GenerateRequest {
     pub max_new_tokens: usize,
     /// Optional early-stop token id.
     pub stop_token: Option<i32>,
+    /// How to turn logits into tokens (greedy | temperature | top-k |
+    /// top-p, with a per-request seed — see `coordinator::sampler`).
+    pub sampling: SamplingParams,
     /// When the router accepted the request (for queue-wait metrics).
     pub accepted_at: Instant,
 }

@@ -2,7 +2,20 @@
 //!
 //! Thread topology (the xla handles are not `Send`, so all PJRT state
 //! stays on the engine thread; the host backend keeps its weights there
-//! too for symmetry):
+//! too for symmetry). Two serving modes share the queue:
+//!
+//! **Continuous batching** (host backend, `slots > 0` — the default):
+//!
+//! ```text
+//! callers ──submit()──> DynamicBatcher (mutex'd queue + condvar)
+//!                          │   engine thread: SlotEngine pool loop —
+//!                          │   refills freed lanes from the queue
+//!                          │   mid-batch, chunked prefill interleaved
+//!                          ▼   with decodes
+//!                      per-request response channels
+//! ```
+//!
+//! **Static batching** (artifact backend always, or `slots = 0`):
 //!
 //! ```text
 //! callers ──submit()──> DynamicBatcher (mutex'd queue + condvar)
@@ -34,8 +47,10 @@ use crate::model::HostModel;
 use crate::runtime::{ExecutableCache, Manifest, ModelMeta, Runtime};
 
 use super::batcher::{Batch, DynamicBatcher};
-use super::engine::{ArtifactBackend, DecodeBackend, Engine, HostModelBackend};
+use super::engine::{ArtifactBackend, DecodeBackend, Engine,
+                    HostModelBackend, SlotEngine};
 use super::request::{GenerateRequest, GenerateResponse, RequestId, RequestLimits};
+use super::sampler::SamplingParams;
 
 /// Upper bound on one scheduler sleep: the thread wakes at the earliest
 /// batching deadline or after this cap, whichever comes first (and
@@ -131,6 +146,11 @@ impl Coordinator {
 
         // Engine thread: all backend state is created *on* this thread
         // (PJRT handles are not Send; the host model just rides along).
+        // The thread runs one of two loops: the continuous slot loop
+        // (host backend, slots > 0) pulls admissions straight from the
+        // shared queue between steps; the static loop consumes whole
+        // batches formed by the scheduler thread.
+        let continuous = kind == DecodeBackendKind::Host && cfg.slots > 0;
         let (batch_tx, batch_rx) = sync_channel::<Batch>(4);
         let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(1);
         let engine_shared = shared.clone();
@@ -139,11 +159,12 @@ impl Coordinator {
         let variant = cfg.variant.clone();
         let warm_start = cfg.warm_start;
         let self_check = cfg.self_check;
+        let (slots, prefill_chunk) = (cfg.slots, cfg.prefill_chunk);
         let host_meta = model.clone();
         let engine = std::thread::Builder::new()
             .name("engine".into())
             .spawn(move || -> Result<()> {
-                let init = (|| -> Result<Engine> {
+                let run = (|| -> Result<()> {
                     if self_check {
                         // Verify the fused host GEMM backend against the
                         // naive oracle before taking traffic.
@@ -152,7 +173,7 @@ impl Coordinator {
                             "fused host GEMM self-check ok \
                              (max |err| {max_err:.2e} vs naive oracle)");
                     }
-                    let backend: Box<dyn DecodeBackend> = match kind {
+                    match kind {
                         DecodeBackendKind::Artifacts => {
                             let runtime = Runtime::cpu()?;
                             let manifest = Manifest::load(&artifacts_dir)?;
@@ -167,7 +188,33 @@ impl Coordinator {
                                 "artifact engine ready \
                                  ({warmed} buckets compiled)");
                             let _ = ready_tx.send(Ok(warmed));
-                            Box::new(ArtifactBackend::new(cache, variant))
+                            let mut engine = Engine::new(
+                                Box::new(ArtifactBackend::new(cache,
+                                                              variant)),
+                                engine_metrics);
+                            run_static_loop(&engine_shared, &mut engine,
+                                            &batch_rx)
+                        }
+                        DecodeBackendKind::Host if continuous => {
+                            let model = HostModel::new(&host_meta)?;
+                            let mut engine = SlotEngine::new(
+                                model, slots, prefill_chunk,
+                                engine_metrics)?;
+                            // The slot planner's GEMM m is any value up
+                            // to its row budget — warm them all so no
+                            // shape autotunes mid-request (the engine
+                            // owns the budget definition).
+                            let warmed = if warm_start {
+                                engine.warm()
+                            } else {
+                                0
+                            };
+                            log::info!(
+                                "continuous host engine ready ({slots} \
+                                 slots, prefill chunk {prefill_chunk}, \
+                                 {warmed} m-shapes planned)");
+                            let _ = ready_tx.send(Ok(warmed));
+                            run_continuous_loop(&engine_shared, &mut engine)
                         }
                         DecodeBackendKind::Host => {
                             let mut model = HostModel::new(&host_meta)?;
@@ -180,37 +227,21 @@ impl Coordinator {
                                 "host engine ready ({warmed} bucket-shapes \
                                  planned, no artifacts needed)");
                             let _ = ready_tx.send(Ok(warmed));
-                            Box::new(HostModelBackend::new(model))
-                        }
-                    };
-                    Ok(Engine::new(backend, engine_metrics))
-                })();
-                let mut engine = match init {
-                    Ok(e) => e,
-                    Err(e) => {
-                        // ready_tx may still be open if init failed early.
-                        return Err(e);
-                    }
-                };
-                let run = (|| -> Result<()> {
-                    while let Ok(batch) = batch_rx.recv() {
-                        let responses = engine.run_batch(batch)?;
-                        let mut waiters =
-                            engine_shared.waiters.lock().unwrap();
-                        for resp in responses {
-                            if let Some(tx) = waiters.remove(&resp.id) {
-                                let _ = tx.send(resp);
-                            }
+                            let mut engine = Engine::new(
+                                Box::new(HostModelBackend::new(model)),
+                                engine_metrics);
+                            run_static_loop(&engine_shared, &mut engine,
+                                            &batch_rx)
                         }
                     }
-                    Ok(())
                 })();
-                // The engine loop is over (graceful drain or error): no
-                // response will ever be produced again. Mark the engine
-                // dead *before* sweeping the waiters map, flip the
-                // shutdown flag so the scheduler exits, and drop every
-                // stranded response sender — recv() then errors instead
-                // of blocking forever (the serving-hang fix).
+                // The engine loop is over (startup failure, graceful
+                // drain, or error): no response will ever be produced
+                // again. Mark the engine dead *before* sweeping the
+                // waiters map, flip the shutdown flag so the scheduler
+                // exits, and drop every stranded response sender —
+                // recv() then errors instead of blocking forever (the
+                // serving-hang fix).
                 engine_shared.engine_dead.store(true, Ordering::SeqCst);
                 engine_shared.shutdown.store(true, Ordering::SeqCst);
                 engine_shared.waiters.lock().unwrap().clear();
@@ -230,60 +261,80 @@ impl Coordinator {
             }
         }
 
-        // Scheduler thread: forms batches per the window policy,
+        // Scheduler thread (static mode only — the continuous loop does
+        // its own admission): forms batches per the window policy,
         // sleeping until the earliest deadline instead of busy-polling.
-        let sched_shared = shared.clone();
-        let scheduler = std::thread::Builder::new()
-            .name("scheduler".into())
-            .spawn(move || loop {
-                if sched_shared.shutdown.load(Ordering::Relaxed) {
-                    // Drain what's left (treat everything as expired).
+        let scheduler = if continuous {
+            None
+        } else {
+            let sched_shared = shared.clone();
+            Some(std::thread::Builder::new()
+                .name("scheduler".into())
+                .spawn(move || loop {
+                    if sched_shared.shutdown.load(Ordering::Relaxed) {
+                        // Drain what's left (treat everything as expired).
+                        let mut b = sched_shared.batcher.lock().unwrap();
+                        let far_future =
+                            Instant::now() + Duration::from_secs(3600);
+                        while let Some(batch) = b.poll(far_future) {
+                            if batch_tx.send(batch).is_err() {
+                                return;
+                            }
+                        }
+                        drop(b);
+                        drop(batch_tx);
+                        return;
+                    }
+                    let now = Instant::now();
                     let mut b = sched_shared.batcher.lock().unwrap();
-                    let far_future = Instant::now() + Duration::from_secs(3600);
-                    while let Some(batch) = b.poll(far_future) {
+                    if let Some(batch) = b.poll(now) {
+                        drop(b);
                         if batch_tx.send(batch).is_err() {
                             return;
                         }
+                        continue;
                     }
-                    drop(b);
-                    drop(batch_tx);
-                    return;
-                }
-                let now = Instant::now();
-                let mut b = sched_shared.batcher.lock().unwrap();
-                if let Some(batch) = b.poll(now) {
-                    drop(b);
-                    if batch_tx.send(batch).is_err() {
-                        return;
-                    }
-                    continue;
-                }
-                // Nothing dispatchable: sleep until the earliest batch
-                // deadline (capped), woken early by submit()/shutdown.
-                let wait = b
-                    .next_deadline(now)
-                    .map_or(SCHED_IDLE_POLL, |d| d.min(SCHED_IDLE_POLL));
-                let _unused = sched_shared.batcher_cv.wait_timeout(b, wait);
-            })?;
+                    // Nothing dispatchable: sleep until the earliest
+                    // batch deadline (capped), woken early by
+                    // submit()/shutdown.
+                    let wait = b
+                        .next_deadline(now)
+                        .map_or(SCHED_IDLE_POLL, |d| d.min(SCHED_IDLE_POLL));
+                    let _unused =
+                        sched_shared.batcher_cv.wait_timeout(b, wait);
+                })?)
+        };
 
         Ok(Coordinator {
             shared,
             limits,
             metrics,
-            scheduler: Some(scheduler),
+            scheduler,
             engine: Some(engine),
         })
     }
 
-    /// Validate and enqueue a request; returns a waitable handle.
+    /// Validate and enqueue a greedy request; returns a waitable handle.
     /// Errors immediately once the engine thread has exited.
     pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
                   stop_token: Option<i32>) -> Result<Pending> {
+        self.submit_sampled(prompt, max_new_tokens, stop_token,
+                            SamplingParams::greedy())
+    }
+
+    /// Validate and enqueue a request with explicit sampling params
+    /// (greedy | temperature | top-k | top-p, per-request seed).
+    pub fn submit_sampled(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                          stop_token: Option<i32>,
+                          sampling: SamplingParams) -> Result<Pending> {
         ensure!(!self.shared.engine_dead.load(Ordering::SeqCst),
                 "engine is down; coordinator no longer accepts requests");
         self.limits
             .validate(&prompt, max_new_tokens)
             .map_err(|e| anyhow!("invalid request: {e}"))?;
+        sampling
+            .validate()
+            .map_err(|e| anyhow!("invalid sampling params: {e}"))?;
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = sync_channel(1);
         self.shared.waiters.lock().unwrap().insert(id, tx);
@@ -300,6 +351,7 @@ impl Coordinator {
             prompt,
             max_new_tokens,
             stop_token,
+            sampling,
             accepted_at: Instant::now(),
         };
         let pushed = self.shared.batcher.lock().unwrap().push(req);
@@ -348,6 +400,68 @@ impl Coordinator {
             }
         }
         Ok(())
+    }
+}
+
+/// Deliver finished responses to their waiting callers.
+fn deliver(shared: &Shared, responses: Vec<GenerateResponse>) {
+    if responses.is_empty() {
+        return;
+    }
+    let mut waiters = shared.waiters.lock().unwrap();
+    for resp in responses {
+        if let Some(tx) = waiters.remove(&resp.id) {
+            let _ = tx.send(resp);
+        }
+    }
+}
+
+/// Static serving loop: consume scheduler-formed batches until every
+/// sender is gone (shutdown drain).
+fn run_static_loop(shared: &Shared, engine: &mut Engine,
+                   batch_rx: &Receiver<Batch>) -> Result<()> {
+    while let Ok(batch) = batch_rx.recv() {
+        let responses = engine.run_batch(batch)?;
+        deliver(shared, responses);
+    }
+    Ok(())
+}
+
+/// Continuous serving loop: between steps, freed lanes are refilled
+/// straight from the shared queue (no batch formation, no window — a
+/// free lane admits the oldest waiting request immediately), and
+/// finished requests are delivered as they complete rather than when
+/// their batch drains. Exits once shutdown is flagged *and* all work —
+/// queued and in-flight — has finished (same drain semantics as the
+/// static path).
+fn run_continuous_loop(shared: &Shared, engine: &mut SlotEngine)
+                       -> Result<()> {
+    loop {
+        let free = engine.free_slots();
+        if free > 0 {
+            let admitted = shared.batcher.lock().unwrap().take_upto(free);
+            for req in admitted {
+                // Router validation already bounds these; an admit
+                // failure is a bug worth dying loudly over (the dead-
+                // engine sweep fails the waiters).
+                engine.admit(req)?;
+            }
+        }
+        if engine.is_idle() {
+            let guard = shared.batcher.lock().unwrap();
+            if guard.is_empty() {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                // Sleep until submit()/shutdown() wakes us (capped, so
+                // a lost wakeup can only cost one poll interval).
+                let _unused =
+                    shared.batcher_cv.wait_timeout(guard, SCHED_IDLE_POLL);
+            }
+            continue;
+        }
+        let finished = engine.step()?;
+        deliver(shared, finished);
     }
 }
 

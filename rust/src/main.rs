@@ -3,7 +3,10 @@
 //! ```text
 //! splitk-w4a16 serve    [--artifacts DIR] [--config FILE.json]
 //!                       [--backend artifacts|host]
+//!                       [--slots N] [--prefill-chunk C]
 //!                       [--requests N] [--max-new N]
+//!                       [--temperature T] [--top-k K] [--top-p P]
+//!                       [--sample-seed S]
 //! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
 //!                       [--m M] [--nk NK] [--iters N]
 //! splitk-w4a16 hostgemm [--m M] [--nk NK] [--split-k S] [--workers W]
@@ -19,7 +22,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use splitk_w4a16::config::ServeConfig;
-use splitk_w4a16::coordinator::Coordinator;
+use splitk_w4a16::coordinator::{Coordinator, SamplingParams};
 use splitk_w4a16::gpusim::{simulate, DeviceConfig};
 use splitk_w4a16::kernels::{autotune_split_k_host, dp_launch, fused_gemm_dp,
                             fused_gemm_splitk, fused_gemm_streamk, host_gemm,
@@ -68,6 +71,14 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(backend) = args.options.get("backend") {
         cfg.backend = backend.clone();
     }
+    // Continuous-batching knobs (host backend): CLI overrides only when
+    // actually given; --slots 0 selects the legacy static loop.
+    if args.options.contains_key("slots") {
+        cfg.slots = args.opt_num("slots", cfg.slots)?;
+    }
+    if args.options.contains_key("prefill-chunk") {
+        cfg.prefill_chunk = args.opt_num("prefill-chunk", cfg.prefill_chunk)?;
+    }
     let requests: usize = args.opt_num("requests", 32)?;
     let cli_max_new: Option<usize> = match args.options.get("max-new") {
         Some(_) => Some(args.opt_num("max-new", 0)?),
@@ -77,19 +88,45 @@ fn serve(args: &Args) -> Result<()> {
     // Per-request budget: the explicit flag, else a small default capped
     // by the serving limit.
     let max_new = cli_max_new.unwrap_or_else(|| cfg.max_new_tokens.min(8));
+    // Per-request sampling: greedy unless a temperature is given; each
+    // request gets its own seed (base + index) so streams are distinct
+    // yet the whole run replays bit-for-bit.
+    let temperature: f32 = args.opt_num("temperature", 0.0)?;
+    let top_k: usize = args.opt_num("top-k", 0)?;
+    let top_p: f32 = args.opt_num("top-p", 1.0)?;
+    let seed_base: u64 = args.opt_num("sample-seed", 0)?;
+    if temperature == 0.0
+        && (top_k != 0 || top_p != 1.0 || args.options.contains_key("sample-seed"))
+    {
+        eprintln!("warning: --top-k/--top-p/--sample-seed have no effect \
+                   at temperature 0 (greedy); pass --temperature T > 0 \
+                   to sample");
+    }
 
     let backend = cfg.resolve_backend();
+    let mode = if cfg.continuous() {
+        format!("continuous: {} slots, prefill chunk {}", cfg.slots,
+                cfg.prefill_chunk)
+    } else {
+        "static batching".into()
+    };
     let coord = Coordinator::start(&cfg)?;
-    println!("coordinator up ({backend:?} backend); issuing {requests} \
-              synthetic requests");
+    println!("coordinator up ({backend:?} backend, {mode}); issuing \
+              {requests} synthetic requests");
 
     let mut rng = Rng::seed_from(0);
     let mut pending = Vec::new();
-    for _ in 0..requests {
+    for i in 0..requests {
         let len = rng.gen_range(2, 13);
         let prompt: Vec<i32> =
             (0..len).map(|_| rng.gen_range(0, 512) as i32).collect();
-        pending.push(coord.submit(prompt, max_new, None)?);
+        let sampling = SamplingParams {
+            temperature,
+            top_k,
+            top_p,
+            seed: seed_base.wrapping_add(i as u64),
+        };
+        pending.push(coord.submit_sampled(prompt, max_new, None, sampling)?);
     }
     for p in pending {
         let r = p.wait()?;

@@ -23,7 +23,7 @@ mod weights;
 
 pub use ops::{add_in_place, rms_norm, rope_in_place, silu_in_place,
               softmax_in_place};
-pub use weights::{HostModelWeights, LayerWeights, ProjectionGemm};
+pub use weights::{HostModelWeights, LayerWeights, ProjectionGemm, SlotStep};
 
 use std::collections::HashMap;
 
@@ -272,6 +272,43 @@ impl HostModel {
                                 &state.starts, need_logits, &mut dispatch))
     }
 
+    /// A zeroed KV cache with `slots` lanes in this model's layout —
+    /// the slot pool backing the continuous-batching engine (each lane
+    /// is one [`SlotStep::slot`] target; the engine scrubs and reuses
+    /// lanes as requests come and go, no per-batch reallocation).
+    pub fn alloc_cache(&self, slots: usize) -> HostKvCache {
+        HostKvCache::new(KvCacheSpec::from_model(&self.weights.meta), slots)
+    }
+
+    /// Run one slot-batched decode step: an arbitrary mix of decode rows
+    /// and chunked-prefill rows, each with its own lane/position
+    /// ([`HostModelWeights::forward_slots`]). Returns the logits of the
+    /// rows with `need_logits[r]` set, concatenated in row order.
+    pub fn decode_slots(&mut self, cache: &mut HostKvCache,
+                        steps: &[SlotStep], need_logits: &[bool])
+                        -> Result<Vec<f32>> {
+        ensure!(!steps.is_empty(), "decode_slots: empty step");
+        ensure!(steps.len() == need_logits.len(),
+                "decode_slots: {} rows but {} need_logits entries",
+                steps.len(), need_logits.len());
+        let meta = &self.weights.meta;
+        let vocab = meta.vocab as i32;
+        for s in steps {
+            ensure!(s.slot < cache.batch(),
+                    "decode_slots: slot {} outside the {}-lane cache",
+                    s.slot, cache.batch());
+            ensure!(s.pos < meta.max_seq,
+                    "decode_slots: pos {} beyond max_seq {}", s.pos,
+                    meta.max_seq);
+            ensure!(s.token >= 0 && s.token < vocab,
+                    "decode_slots: token {} out of vocab range 0..{vocab}",
+                    s.token);
+        }
+        let HostModel { weights, plan, scratch, packs } = self;
+        let mut dispatch = FusedDispatch { plan, scratch, packs };
+        Ok(weights.forward_slots(cache, steps, need_logits, &mut dispatch))
+    }
+
     /// Pre-plan (autotune) the kernel config of every projection shape
     /// for the given batch buckets — the host analog of warming the
     /// decode-artifact cache. Returns the number of (bucket, shape)
@@ -313,6 +350,17 @@ impl HostModel {
             }
         }
         visited
+    }
+
+    /// Warm for the continuous-batching engine: the slot scheduler's
+    /// per-step GEMM `m` is any value in `1..=row_budget` (decode rows
+    /// plus chunked-prefill rows), not just the static batcher's bucket
+    /// set, so every one of those `m` values is pre-planned — a GEMM
+    /// shape that autotunes mid-request is the regression `warm`
+    /// exists to prevent. Returns the (m, shape) combinations visited.
+    pub fn warm_slots(&mut self, row_budget: usize) -> usize {
+        let ms: Vec<usize> = (1..=row_budget.max(1)).collect();
+        self.warm(&ms)
     }
 
     /// Prepacked weight copies cached so far (diagnostics/tests).
@@ -437,6 +485,161 @@ mod tests {
                 assert!(got.is_empty(), "skipped logits are empty");
             }
         }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_stepwise() {
+        // The same 6-token sequence fed (a) one position per call,
+        // (b) in chunks of 3, (c) all at once must leave identical
+        // final-position logits: within a call, row p+1 attends over the
+        // K/V row p just wrote, exactly as if the positions had arrived
+        // in separate calls.
+        let toks = [11i32, 42, 99, 7, 3, 250];
+        let run = |chunks: &[usize]| -> Vec<f32> {
+            let mut m = fixed_model(2);
+            let mut cache = m.alloc_cache(1);
+            let mut fed = 0;
+            let mut last = Vec::new();
+            for &c in chunks {
+                let steps: Vec<SlotStep> = (0..c)
+                    .map(|j| SlotStep { slot: 0, token: toks[fed + j],
+                                        pos: fed + j, start: 0 })
+                    .collect();
+                let mut need = vec![false; c];
+                let is_last = fed + c == toks.len();
+                if is_last {
+                    need[c - 1] = true;
+                }
+                let out = m.decode_slots(&mut cache, &steps, &need).unwrap();
+                fed += c;
+                if is_last {
+                    last = out;
+                } else {
+                    assert!(out.is_empty());
+                }
+            }
+            last
+        };
+        let stepwise = run(&[1, 1, 1, 1, 1, 1]);
+        let chunked = run(&[3, 3]);
+        let oneshot = run(&[6]);
+        let ragged = run(&[1, 4, 1]);
+        assert_eq!(stepwise.len(), 512);
+        assert_eq!(stepwise, chunked, "chunked == stepwise bitwise");
+        assert_eq!(stepwise, oneshot, "one-shot == stepwise bitwise");
+        assert_eq!(stepwise, ragged, "ragged chunks == stepwise bitwise");
+    }
+
+    #[test]
+    fn mixed_slot_step_matches_independent_lanes() {
+        // Two lanes at *different* absolute positions stepped together
+        // must reproduce each lane's solo logits bit for bit — the core
+        // continuous-batching invariant (no uniform `pos` anymore).
+        let a = [5i32, 17, 80];
+        let b = [200i32, 9];
+        // Solo reference runs.
+        let solo = |toks: &[i32]| -> Vec<Vec<f32>> {
+            let mut m = fixed_model(2);
+            let mut cache = m.alloc_cache(1);
+            toks.iter()
+                .enumerate()
+                .map(|(p, &t)| {
+                    m.decode_slots(
+                        &mut cache,
+                        &[SlotStep { slot: 0, token: t, pos: p, start: 0 }],
+                        &[true]).unwrap()
+                })
+                .collect()
+        };
+        let want_a = solo(&a);
+        let want_b = solo(&b);
+        // Mixed run: lane 0 carries `a`; lane 1 joins two steps later
+        // with `b` (staggered admission), so positions differ per row.
+        let mut m = fixed_model(2);
+        let mut cache = m.alloc_cache(2);
+        let vocab = m.meta().vocab;
+        for p in 0..2 {
+            let out = m.decode_slots(
+                &mut cache,
+                &[SlotStep { slot: 0, token: a[p], pos: p, start: 0 }],
+                &[true]).unwrap();
+            assert_eq!(out, want_a[p], "lane 0 solo prefix, pos {p}");
+        }
+        for j in 0..2 {
+            let steps = [
+                SlotStep { slot: 0, token: a[2], pos: 2, start: 0 },
+                SlotStep { slot: 1, token: b[j], pos: j, start: 0 },
+            ];
+            // Only exercise lane 0's row on its real schedule once.
+            if j == 0 {
+                let out = m.decode_slots(&mut cache, &steps, &[true, true])
+                           .unwrap();
+                assert_eq!(&out[..vocab], want_a[2].as_slice(),
+                           "lane 0 at pos 2, batched with a fresh lane");
+                assert_eq!(&out[vocab..], want_b[0].as_slice(),
+                           "lane 1 at pos 0, batched with a deep lane");
+            } else {
+                let out = m.decode_slots(
+                    &mut cache,
+                    &[SlotStep { slot: 1, token: b[1], pos: 1, start: 0 }],
+                    &[true]).unwrap();
+                assert_eq!(out, want_b[1], "lane 1 continues solo");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_slots_logit_gathering_matches_full_rows() {
+        // need_logits=[false, true] must return exactly the second row
+        // of a [true, true] run: the LM head runs on gathered rows, and
+        // per-row GEMM math is m-invariant under a fixed plan.
+        let steps = [
+            SlotStep { slot: 0, token: 8, pos: 0, start: 0 },
+            SlotStep { slot: 1, token: 96, pos: 0, start: 0 },
+        ];
+        let mut m_full = fixed_model(1);
+        let mut c_full = m_full.alloc_cache(2);
+        let full =
+            m_full.decode_slots(&mut c_full, &steps, &[true, true]).unwrap();
+        let mut m_part = fixed_model(1);
+        let mut c_part = m_part.alloc_cache(2);
+        let part =
+            m_part.decode_slots(&mut c_part, &steps, &[false, true]).unwrap();
+        let vocab = m_full.meta().vocab;
+        assert_eq!(part.len(), vocab);
+        assert_eq!(part.as_slice(), &full[vocab..]);
+    }
+
+    #[test]
+    fn decode_slots_rejects_bad_steps() {
+        let mut m = fixed_model(1);
+        let mut cache = m.alloc_cache(1);
+        let ok = SlotStep { slot: 0, token: 1, pos: 0, start: 0 };
+        assert!(m.decode_slots(&mut cache, &[], &[]).is_err(), "empty");
+        assert!(m.decode_slots(&mut cache, &[ok], &[]).is_err(),
+                "need_logits length mismatch");
+        let bad_slot = SlotStep { slot: 1, ..ok };
+        assert!(m.decode_slots(&mut cache, &[bad_slot], &[true]).is_err(),
+                "slot outside the pool");
+        let bad_pos = SlotStep { pos: 32, ..ok };
+        assert!(m.decode_slots(&mut cache, &[bad_pos], &[true]).is_err(),
+                "pos beyond max_seq");
+        let bad_tok = SlotStep { token: 512, ..ok };
+        assert!(m.decode_slots(&mut cache, &[bad_tok], &[true]).is_err(),
+                "token out of vocab");
+        let neg_tok = SlotStep { token: -1, ..ok };
+        assert!(m.decode_slots(&mut cache, &[neg_tok], &[true]).is_err(),
+                "negative token");
+    }
+
+    #[test]
+    fn warm_slots_covers_every_m_up_to_the_budget() {
+        let mut m =
+            HostModel::with_plan(&meta(), GemmPlan::autotuned(1)).unwrap();
+        let visited = m.warm_slots(3);
+        // 3 distinct (n, k) shapes x m in {1, 2, 3}.
+        assert_eq!(visited, 9);
+        assert_eq!(m.plan.len(), 9);
     }
 
     #[test]

@@ -39,6 +39,31 @@ pub trait ProjectionGemm {
     }
 }
 
+/// One row of a slot-batched decode step: which KV lane it belongs to,
+/// the token to feed, and where.
+///
+/// The continuous-batching engine builds a step as an arbitrary mix of
+/// rows — decode rows from in-flight slots plus chunks of prompt rows
+/// from slots still prefilling — so, unlike the static path, each row
+/// carries its own lane, absolute position, and left-padding start.
+/// Rows that share a slot must be adjacent with consecutive ascending
+/// positions (chunked prefill): within one forward call, row `p + 1`'s
+/// attention reads the K/V that row `p` wrote earlier in the same layer
+/// loop, which is exactly what makes chunked prefill bit-identical to
+/// feeding the positions one call at a time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotStep {
+    /// KV-cache lane (the pool slot index).
+    pub slot: usize,
+    /// Token id to feed.
+    pub token: i32,
+    /// Absolute position in the lane.
+    pub pos: usize,
+    /// First valid lane position (left-padding offset; 0 for slots that
+    /// own their lane from position 0, as in the continuous scheduler).
+    pub start: i32,
+}
+
 /// One decoder layer's parameters (all projections W4-packed).
 #[derive(Debug, Clone)]
 pub struct LayerWeights {
@@ -149,19 +174,69 @@ impl HostModelWeights {
     pub fn forward_with(&self, cache: &mut HostKvCache, tokens: &[i32],
                         pos: usize, starts: &[i32], need_logits: bool,
                         gemm: &mut dyn ProjectionGemm) -> Vec<f32> {
-        let b = tokens.len();
+        assert_eq!(cache.batch(), tokens.len(), "cache batch != token count");
+        assert_eq!(starts.len(), tokens.len(), "starts length != token count");
+        let steps: Vec<SlotStep> = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| SlotStep { slot: i, token: t, pos,
+                                      start: starts[i] })
+            .collect();
+        let need = vec![need_logits; steps.len()];
+        self.forward_slots(cache, &steps, &need, gemm)
+    }
+
+    /// The general slot-batched decode step (what [`Self::forward_with`]
+    /// is a uniform-position wrapper over): each row of the step is a
+    /// [`SlotStep`] carrying its own KV lane, absolute position, and
+    /// start offset, and `need_logits[r]` says whether row `r`'s logits
+    /// are wanted. Returns the wanted rows' logits concatenated in row
+    /// order (`[wanted * vocab]`; empty when no row wants them).
+    ///
+    /// The LM head — the widest GEMM of the step — runs only over the
+    /// gathered wanted rows, so a continuous batch of `d` decode rows
+    /// plus `c` mid-prompt prefill rows pays for a `(d + 1)`-row output
+    /// projection at most, not `d + c`.
+    ///
+    /// Determinism: every per-row computation (embedding row, RMSNorm,
+    /// each GEMM output row, RoPE, the attention loop over the row's own
+    /// lane) is independent of which other rows share the step, and the
+    /// fused backend's per-row math is bit-invariant in `m` under a
+    /// fixed kernel config — so a request's logits stream is
+    /// bit-identical whichever batch, slot, or prefill chunking it rides
+    /// (pinned by `tests/serving_integration.rs`).
+    pub fn forward_slots(&self, cache: &mut HostKvCache, steps: &[SlotStep],
+                         need_logits: &[bool],
+                         gemm: &mut dyn ProjectionGemm) -> Vec<f32> {
+        let b = steps.len();
         let d = self.meta.d_model;
         let heads = self.meta.n_heads;
         let hd = d / heads;
-        assert_eq!(cache.batch(), b, "cache batch != token count");
-        assert_eq!(starts.len(), b, "starts length != token count");
-        assert!(pos < self.meta.max_seq, "position beyond max_seq");
+        assert!(b > 0, "forward_slots: empty step");
+        assert_eq!(need_logits.len(), b, "need_logits length != rows");
+        let mut seen_slots: Vec<usize> = Vec::new();
+        for (r, s) in steps.iter().enumerate() {
+            assert!(s.slot < cache.batch(),
+                    "slot {} outside the {}-lane cache", s.slot, cache.batch());
+            assert!(s.pos < self.meta.max_seq, "position beyond max_seq");
+            if r > 0 && steps[r - 1].slot == s.slot {
+                // Chunked prefill: consecutive positions, so each row's
+                // attention sees the K/V its predecessor just wrote.
+                assert_eq!(s.pos, steps[r - 1].pos + 1,
+                           "same-slot rows must advance by one position");
+            } else {
+                assert!(!seen_slots.contains(&s.slot),
+                        "slot {} appears in two separate runs", s.slot);
+                seen_slots.push(s.slot);
+            }
+        }
 
         // Embedding lookup.
         let mut x = MatF32::zeros(b, d);
-        for (i, &t) in tokens.iter().enumerate() {
-            let t = t as usize;
-            assert!(t < self.meta.vocab, "token {t} out of vocab");
+        for (i, s) in steps.iter().enumerate() {
+            let t = s.token as usize;
+            assert!(s.token >= 0 && t < self.meta.vocab,
+                    "token {} out of vocab", s.token);
             x.data[i * d..(i + 1) * d]
                 .copy_from_slice(&self.embedding.data[t * d..(t + 1) * d]);
         }
@@ -176,21 +251,22 @@ impl HostModelWeights {
             let mut qmat = qkv.pop().expect("q");
 
             let mut attn = MatF32::zeros(b, d);
-            for i in 0..b {
-                let t0 = (starts[i].max(0) as usize).min(pos);
+            for (i, s) in steps.iter().enumerate() {
+                let (lane, pos) = (s.slot, s.pos);
+                let t0 = (s.start.max(0) as usize).min(pos);
                 let rel = pos - t0;
                 let row = i * d;
                 rope_in_place(&mut qmat.data[row..row + d], heads, rel);
                 rope_in_place(&mut kmat.data[row..row + d], heads, rel);
                 for hh in 0..heads {
                     let span = row + hh * hd..row + (hh + 1) * hd;
-                    cache.write_k(l, i, hh, pos, &kmat.data[span.clone()]);
-                    cache.write_v(l, i, hh, pos, &vmat.data[span.clone()]);
+                    cache.write_k(l, lane, hh, pos, &kmat.data[span.clone()]);
+                    cache.write_v(l, lane, hh, pos, &vmat.data[span.clone()]);
                     let qrow = &qmat.data[span.clone()];
                     // Scores over the visible window [t0, pos].
                     let mut scores: Vec<f32> = (t0..=pos)
                         .map(|t| {
-                            let krow = cache.k_row(l, i, hh, t);
+                            let krow = cache.k_row(l, lane, hh, t);
                             qrow.iter()
                                 .zip(krow.iter())
                                 .map(|(&a, &b)| a * b)
@@ -200,7 +276,7 @@ impl HostModelWeights {
                     softmax_in_place(&mut scores);
                     let orow = &mut attn.data[span];
                     for (w, t) in scores.iter().zip(t0..=pos) {
-                        let vrow = cache.v_row(l, i, hh, t);
+                        let vrow = cache.v_row(l, lane, hh, t);
                         for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
                             *o += w * vv;
                         }
@@ -218,10 +294,19 @@ impl HostModelWeights {
             add_in_place(&mut x, &dn);
         }
 
-        if !need_logits {
+        // Gather only the rows whose logits the caller will read before
+        // the final norm + LM head.
+        let wanted: Vec<usize> =
+            (0..b).filter(|&r| need_logits[r]).collect();
+        if wanted.is_empty() {
             return Vec::new();
         }
-        let hfin = rms_norm(&x, &self.final_norm);
+        let mut xg = MatF32::zeros(wanted.len(), d);
+        for (j, &r) in wanted.iter().enumerate() {
+            xg.data[j * d..(j + 1) * d]
+                .copy_from_slice(&x.data[r * d..(r + 1) * d]);
+        }
+        let hfin = rms_norm(&xg, &self.final_norm);
         gemm.gemm(&hfin, &self.lm_head).data
     }
 }

@@ -1,0 +1,134 @@
+//! Golden-decode drift guard (tier-1): a pinned prompt decoded greedily
+//! on the seeded host model under a *fixed* `GemmPlan` must reproduce a
+//! committed token transcript exactly, so kernel or scheduler refactors
+//! that change numerics fail loudly here instead of silently shifting
+//! generation quality.
+//!
+//! The golden transcript lives in `tests/golden/decode_seed0.json`. The
+//! guard is expect-test style: while the committed file holds an empty
+//! `tokens` array (the bootstrap state — this repo's growth environment
+//! has no Rust toolchain to record with), the test decodes, *records*
+//! the transcript into the file, and still enforces every
+//! toolchain-independent invariant (replay determinism and
+//! static-vs-slot-scheduler agreement). Once a toolchain environment
+//! commits the recorded file, any later numerics drift is a hard test
+//! failure. Ties and NaNs cannot make this guard flaky: `argmax`'s
+//! contract (lowest index wins, NaN never wins) is itself pinned in
+//! `coordinator::engine`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use splitk_w4a16::coordinator::{
+    Batch, Engine, GenerateRequest, HostModelBackend, SamplingParams,
+    SlotEngine,
+};
+use splitk_w4a16::kernels::HostKernelConfig;
+use splitk_w4a16::metrics::ServingMetrics;
+use splitk_w4a16::model::{GemmPlan, HostModel};
+use splitk_w4a16::runtime::ModelMeta;
+use splitk_w4a16::util::Json;
+
+/// The pinned decode: seed-0 synthetic model, fixed SplitK-4 plan,
+/// prompt [3, 5, 7, 11], 12 greedy tokens.
+const PROMPT: [i32; 4] = [3, 5, 7, 11];
+const MAX_NEW: usize = 12;
+
+fn fixed_model() -> HostModel {
+    let meta = ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0);
+    HostModel::with_plan(
+        &meta,
+        GemmPlan::fixed(HostKernelConfig::splitk(4).with_threads(2)))
+        .unwrap()
+}
+
+fn decode_static() -> Vec<i32> {
+    let mut engine = Engine::new(
+        Box::new(HostModelBackend::new(fixed_model())),
+        Arc::new(ServingMetrics::new()));
+    let req = GenerateRequest {
+        id: 1,
+        prompt: PROMPT.to_vec(),
+        max_new_tokens: MAX_NEW,
+        stop_token: None,
+        sampling: SamplingParams::greedy(),
+        accepted_at: Instant::now(),
+    };
+    engine
+        .run_batch(Batch { requests: vec![req], bucket: 1 })
+        .unwrap()
+        .remove(0)
+        .tokens
+}
+
+fn decode_slots(slots: usize, chunk: usize) -> Vec<i32> {
+    let mut engine = SlotEngine::new(fixed_model(), slots, chunk,
+                                     Arc::new(ServingMetrics::new()))
+        .unwrap();
+    let req = GenerateRequest {
+        id: 1,
+        prompt: PROMPT.to_vec(),
+        max_new_tokens: MAX_NEW,
+        stop_token: None,
+        sampling: SamplingParams::greedy(),
+        accepted_at: Instant::now(),
+    };
+    engine.run_trace(vec![req]).unwrap().remove(0).tokens
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/decode_seed0.json")
+}
+
+#[test]
+fn golden_decode_transcript_is_stable() {
+    // Toolchain-independent invariants first: the transcript replays
+    // across fresh models and across schedulers (static batch-of-1 vs
+    // the slot engine, chunked and unchunked).
+    let got = decode_static();
+    assert_eq!(got.len(), MAX_NEW, "greedy run must fill its budget");
+    assert!(got.iter().all(|&t| (0..512).contains(&t)));
+    assert_eq!(got, decode_static(), "replay must be bit-identical");
+    assert_eq!(got, decode_slots(1, 1), "slot scheduler (chunk 1) agrees");
+    assert_eq!(got, decode_slots(2, 4), "slot scheduler (chunk 4) agrees");
+
+    // Drift guard against the committed transcript.
+    let path = golden_path();
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let golden = Json::parse(&text).expect("golden file parses");
+    let want: Vec<i32> = golden
+        .get("tokens")
+        .expect("golden file has a tokens array")
+        .as_usize_vec()
+        .expect("golden tokens are non-negative ints")
+        .into_iter()
+        .map(|t| t as i32)
+        .collect();
+    if want.is_empty() {
+        // Bootstrap: record the transcript so a toolchain environment
+        // can commit it and arm the guard.
+        let arr = Json::Arr(got.iter().map(|&t| Json::num(t as f64)).collect());
+        let out = Json::obj(vec![
+            ("model", Json::str("synthetic seed-0, max_seq 64".to_string())),
+            ("plan", Json::str("fixed splitk4 threads2".to_string())),
+            ("prompt",
+             Json::Arr(PROMPT.iter().map(|&t| Json::num(t as f64)).collect())),
+            ("max_new", Json::num(MAX_NEW as f64)),
+            ("tokens", arr),
+        ]);
+        std::fs::write(&path, out.to_string()).expect("record golden");
+        eprintln!(
+            "golden_decode: recorded transcript {:?} into {} — commit the \
+             file to arm the drift guard",
+            got, path.display());
+    } else {
+        assert_eq!(got, want,
+                   "greedy decode drifted from the committed golden \
+                    transcript — a kernel/scheduler refactor changed \
+                    numerics; if intentional, re-record {}",
+                   path.display());
+    }
+}

@@ -7,7 +7,8 @@
 
 use std::time::{Duration, Instant};
 
-use splitk_w4a16::coordinator::{DynamicBatcher, GenerateRequest};
+use splitk_w4a16::coordinator::{DynamicBatcher, GenerateRequest,
+                                SamplingParams};
 use splitk_w4a16::gpusim::{simulate, DeviceConfig, Decomposition, Occupancy};
 use splitk_w4a16::kernels::{fused_gemm_dp, fused_gemm_legacy,
                             fused_gemm_splitk, fused_gemm_streamk,
@@ -459,6 +460,7 @@ fn prop_batcher_conserves_requests() {
                 prompt: vec![1],
                 max_new_tokens: 1,
                 stop_token: None,
+                sampling: SamplingParams::greedy(),
                 accepted_at: t0,
             })
             .unwrap();
@@ -490,6 +492,7 @@ fn prop_batcher_backpressure_capacity() {
                     prompt: vec![1],
                     max_new_tokens: 1,
                     stop_token: None,
+                    sampling: SamplingParams::greedy(),
                     accepted_at: t0,
                 })
                 .is_ok()
