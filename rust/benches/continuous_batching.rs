@@ -73,6 +73,7 @@ fn build_trace(n: usize, seed: u64) -> Trace {
                 stop_token: None,
                 sampling: SamplingParams::greedy(),
                 accepted_at: Instant::now(),
+                deadline: None,
             };
             (arrival, req)
         })

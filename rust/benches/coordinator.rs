@@ -21,6 +21,7 @@ fn req(id: u64, at: Instant) -> GenerateRequest {
         stop_token: None,
         sampling: SamplingParams::greedy(),
         accepted_at: at,
+        deadline: None,
     }
 }
 

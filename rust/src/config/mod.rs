@@ -48,6 +48,12 @@ pub struct ServeConfig {
     /// (chunked prefill: long prompts are fed in chunks interleaved
     /// with in-flight decode steps instead of stalling them).
     pub prefill_chunk: usize,
+    /// Default per-request deadline, milliseconds from acceptance
+    /// (`0` = no deadline). Enforced at admission, between engine
+    /// steps, and between prefill chunks; an expired request is failed
+    /// with `FinishReason::DeadlineExceeded` rather than awaited —
+    /// including during shutdown drain.
+    pub request_timeout_ms: u64,
 }
 
 /// Which decode implementation the engine will build.
@@ -75,6 +81,7 @@ impl Default for ServeConfig {
             backend: "artifacts".into(),
             slots: 16,
             prefill_chunk: 8,
+            request_timeout_ms: 0,
         }
     }
 }
@@ -145,6 +152,10 @@ impl ServeConfig {
                 Some(n) => n.as_usize()?,
                 None => d.prefill_chunk,
             },
+            request_timeout_ms: match v.opt("request_timeout_ms") {
+                Some(n) => n.as_u64()?,
+                None => d.request_timeout_ms,
+            },
         })
     }
 
@@ -167,6 +178,8 @@ impl ServeConfig {
             ("backend", Json::str(self.backend.clone())),
             ("slots", Json::num(self.slots as f64)),
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
+            ("request_timeout_ms",
+             Json::num(self.request_timeout_ms as f64)),
         ])
     }
 
@@ -236,7 +249,8 @@ impl ServeConfig {
                 return b;
             }
         }
-        *self.batch_buckets.last().unwrap()
+        // Infallible: `validate()` rejects empty batch_buckets.
+        *self.batch_buckets.last().expect("batch_buckets non-empty")
     }
 }
 
@@ -321,6 +335,19 @@ mod tests {
         let max_ok = ServeConfig { slots: 256, prefill_chunk: 256,
                                    ..Default::default() };
         assert!(max_ok.validate().is_ok());
+    }
+
+    #[test]
+    fn request_timeout_roundtrip_and_default() {
+        let d = ServeConfig::default();
+        assert_eq!(d.request_timeout_ms, 0, "no deadline by default");
+        let cfg = ServeConfig::from_json(&Json::parse(
+            r#"{"request_timeout_ms": 250}"#).unwrap()).unwrap();
+        assert_eq!(cfg.request_timeout_ms, 250);
+        assert!(cfg.validate().is_ok());
+        let back = ServeConfig::from_json(&Json::parse(
+            &cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
     }
 
     #[test]

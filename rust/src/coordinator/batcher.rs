@@ -11,7 +11,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::request::GenerateRequest;
+use super::request::{GenerateRequest, RequestId};
 
 /// Decision produced by [`DynamicBatcher::poll`].
 #[derive(Debug)]
@@ -73,6 +73,13 @@ impl DynamicBatcher {
         Ok(())
     }
 
+    /// Remove a still-queued request by id (cancellation before it ever
+    /// reached a lane). Returns the request if it was found.
+    pub fn remove(&mut self, id: RequestId) -> Option<GenerateRequest> {
+        let idx = self.queue.iter().position(|r| r.id == id)?;
+        self.queue.remove(idx)
+    }
+
     /// Smallest bucket >= n (or the largest bucket).
     fn bucket_covering(&self, n: usize) -> usize {
         for &b in &self.buckets {
@@ -80,7 +87,8 @@ impl DynamicBatcher {
                 return b;
             }
         }
-        *self.buckets.last().unwrap()
+        // Infallible: the constructor asserts `buckets` is non-empty.
+        *self.buckets.last().expect("buckets non-empty by construction")
     }
 
     /// Form a batch if policy allows at time `now`.
@@ -94,7 +102,8 @@ impl DynamicBatcher {
             return None;
         }
         self.polls_nonempty += 1;
-        let max_bucket = *self.buckets.last().unwrap();
+        // Infallible: the constructor asserts `buckets` is non-empty.
+        let max_bucket = *self.buckets.last().expect("buckets non-empty by construction");
         if self.queue.len() >= max_bucket {
             return Some(self.take(max_bucket, max_bucket));
         }
@@ -159,6 +168,7 @@ mod tests {
             stop_token: None,
             sampling: crate::coordinator::SamplingParams::greedy(),
             accepted_at: at,
+            deadline: None,
         }
     }
 
@@ -343,6 +353,22 @@ mod tests {
         assert!(b.take_upto(4).is_empty(), "empty queue yields nothing");
         assert_eq!(b.nonempty_polls(), 0,
                    "slot refill is not a window poll");
+    }
+
+    #[test]
+    fn remove_cancels_queued_request_preserving_order() {
+        let mut b = batcher(10_000);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let removed = b.remove(2).expect("queued request is removable");
+        assert_eq!(removed.id, 2);
+        assert_eq!(b.len(), 3);
+        assert!(b.remove(2).is_none(), "second remove finds nothing");
+        assert!(b.remove(99).is_none(), "unknown id finds nothing");
+        let ids: Vec<u64> = b.take_upto(4).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 3], "FIFO order survives removal");
     }
 
     #[test]

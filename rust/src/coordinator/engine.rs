@@ -10,6 +10,7 @@
 //!   every projection running the fused W4A16 `kernels::exec` backend.
 //!   Works on a bare machine.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -21,9 +22,22 @@ use crate::model::{DecodeState, HostModel, SlotStep};
 use crate::runtime::{Executable, ExecutableCache, HostTensor, ModelMeta};
 
 use super::batcher::Batch;
+#[cfg(feature = "failpoints")]
+use super::failpoints::{FaultPlan, FaultState, ForwardStage};
 use super::kvcache::{HostKvCache, KvCacheSpec};
-use super::request::{FinishReason, GenerateRequest, GenerateResponse};
+use super::request::{FinishReason, GenerateRequest, GenerateResponse, RequestId};
 use super::sampler::{Sampler, SamplingParams};
+
+/// Render a caught panic payload as an error message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic: <non-string payload>".into()
+    }
+}
 
 /// One decode implementation: per-batch state setup plus a step
 /// function. The engine drives prefill and decode through this trait
@@ -109,8 +123,9 @@ impl DecodeBackend for ArtifactBackend {
         ];
         let mut out = exe.run_literals(&inputs)?;
         ensure!(out.len() == 2, "decode artifact must return (logits, kv)");
-        self.kv = Some(out.pop().unwrap());
-        let logits = HostTensor::from_literal(&out.pop().unwrap())?;
+        // Infallible: length checked by the ensure above.
+        self.kv = Some(out.pop().expect("two outputs checked"));
+        let logits = HostTensor::from_literal(&out.pop().expect("two outputs checked"))?;
         Ok(logits.as_f32()?.to_vec())
     }
 }
@@ -203,16 +218,59 @@ impl Engine {
     }
 
     /// Serve one batch to completion (static batching), returning one
-    /// response per real request, in request order.
+    /// response per real request, in request order (requests whose
+    /// deadline already expired are failed up front and come first).
     pub fn run_batch(&mut self, batch: Batch) -> Result<Vec<GenerateResponse>> {
         let Batch { requests, bucket } = batch;
-        ensure!(!requests.is_empty(), "empty batch");
+        // A drained queue racing the scheduler can hand over an empty
+        // batch; serving nothing is a no-op, not an error (regression:
+        // this used to reject — and the prompt-max fold below would
+        // have panicked on the empty iterator).
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
         ensure!(requests.len() <= bucket, "batch exceeds bucket");
         let b = bucket;
-
-        let prompt_max = requests.iter().map(|r| r.prompt.len()).max().unwrap();
-        ensure!(prompt_max < self.max_seq, "prompt exceeds context");
         let batch_started = Instant::now();
+
+        // Deadline check at batch start (the static path's admission
+        // point): expired requests are failed without spending a
+        // forward pass on them.
+        let (requests, mut early): (Vec<_>, Vec<_>) = {
+            let (live, dead): (Vec<_>, Vec<_>) = requests
+                .into_iter()
+                .partition(|r| !r.deadline_expired(batch_started));
+            let early = dead
+                .into_iter()
+                .map(|r| {
+                    self.metrics.record_deadline_expired();
+                    let waited = batch_started
+                        .duration_since(r.accepted_at)
+                        .as_secs_f64() * 1e3;
+                    GenerateResponse {
+                        id: r.id,
+                        tokens: Vec::new(),
+                        finish_reason: FinishReason::DeadlineExceeded,
+                        latency_ms: waited,
+                        queue_wait_ms: waited,
+                        bucket: 0,
+                        error: Some("deadline exceeded before batch start".into()),
+                    }
+                })
+                .collect();
+            (live, early)
+        };
+        if requests.is_empty() {
+            return Ok(early);
+        }
+
+        let prompt_max = requests
+            .iter()
+            .map(|r| r.prompt.len())
+            .max()
+            .expect("non-empty batch");
+        ensure!(prompt_max >= 1, "batch contains only empty prompts");
+        ensure!(prompt_max < self.max_seq, "prompt exceeds context");
 
         // Left-pad prompts to a common length; padding positions are
         // masked out of attention by the backend's `start` input.
@@ -264,7 +322,10 @@ impl Engine {
 
         // First generated token comes from the last prefill logits.
         let vocab = self.vocab;
-        let mut cur_logits = logits.expect("prompt_max >= 1");
+        // Infallible: the `prompt_max >= 1` ensure above guarantees the
+        // prefill loop ran at least once with need_logits on its final
+        // position.
+        let mut cur_logits = logits.expect("prefill ran (prompt_max >= 1)");
         self.harvest(&requests, &mut slots, &cur_logits, vocab, prompt_max)?;
 
         // ---- decode loop ----
@@ -284,9 +345,13 @@ impl Engine {
 
         // ---- responses ----
         let now = Instant::now();
-        let mut responses = Vec::with_capacity(requests.len());
         for (i, req) in requests.iter().enumerate() {
-            let slot = slots.iter().find(|s| s.req_idx == Some(i)).unwrap();
+            // Infallible: the slot loop above created one slot with
+            // `req_idx == Some(i)` for every request index.
+            let slot = slots
+                .iter()
+                .find(|s| s.req_idx == Some(i))
+                .expect("every request has a slot by construction");
             let latency_ms =
                 now.duration_since(req.accepted_at).as_secs_f64() * 1e3;
             let queue_wait_ms = batch_started
@@ -295,16 +360,20 @@ impl Engine {
             self.metrics.record_request(latency_ms,
                                         slot.generated.len() as u64,
                                         queue_wait_ms);
-            responses.push(GenerateResponse {
+            early.push(GenerateResponse {
                 id: req.id,
                 tokens: slot.generated.clone(),
-                finish_reason: slot.done.unwrap(),
+                // Infallible: the straggler sweep above finished every
+                // slot before this loop.
+                finish_reason: slot.done
+                    .expect("all slots finished after the decode loop"),
                 latency_ms,
                 queue_wait_ms,
                 bucket: b,
+                error: None,
             });
         }
-        Ok(responses)
+        Ok(early)
     }
 
     /// One backend step + metrics.
@@ -331,7 +400,9 @@ impl Engine {
             if slot.done.is_some() {
                 continue;
             }
-            let ri = slot.req_idx.unwrap();
+            // Infallible: padding slots are born with `done` set, so an
+            // unfinished slot always maps to a request.
+            let ri = slot.req_idx.expect("unfinished slots hold a request");
             let row = &logits[i * vocab..(i + 1) * vocab];
             let tok = slot.sampler.next_token(row) as i32;
             slot.generated.push(tok);
@@ -393,6 +464,13 @@ impl DecodeSlot {
 struct SlotScheduler {
     lanes: Vec<Option<DecodeSlot>>,
     prefill_chunk: usize,
+    /// Lifetime count of lane seatings (KV lane allocations). Together
+    /// with `releases` this is the chaos suite's leak/double-free
+    /// oracle: on an idle pool the two must be equal.
+    seats: u64,
+    /// Lifetime count of lane releases, through every exit path —
+    /// natural finish, fault, deadline expiry, cancel.
+    releases: u64,
 }
 
 impl SlotScheduler {
@@ -401,7 +479,28 @@ impl SlotScheduler {
         SlotScheduler {
             lanes: (0..slots).map(|_| None).collect(),
             prefill_chunk,
+            seats: 0,
+            releases: 0,
         }
+    }
+
+    /// Free lane `lane`, returning its slot. Every lane release — any
+    /// finish reason — funnels through here so the seat/release
+    /// accounting cannot drift; releasing an empty lane is a
+    /// double-free and panics loudly.
+    fn release(&mut self, lane: usize) -> DecodeSlot {
+        let slot = self.lanes[lane]
+            .take()
+            .expect("release of an empty lane (double free)");
+        self.releases += 1;
+        slot
+    }
+
+    /// Lane currently serving request `id`, if any.
+    fn lane_of(&self, id: RequestId) -> Option<usize> {
+        self.lanes.iter().position(|l| {
+            l.as_ref().is_some_and(|s| s.req.id == id)
+        })
     }
 
     /// Lanes currently serving a request.
@@ -434,6 +533,7 @@ impl SlotScheduler {
             next_token: 0,
             admitted_at: now,
         });
+        self.seats += 1;
         Some(lane)
     }
 
@@ -512,7 +612,7 @@ impl SlotScheduler {
             None
         };
         let reason = done?;
-        let slot = self.lanes[lane].take().expect("finished lane");
+        let slot = self.release(lane);
         let now = Instant::now();
         let latency_ms =
             now.duration_since(slot.req.accepted_at).as_secs_f64() * 1e3;
@@ -531,6 +631,7 @@ impl SlotScheduler {
             // In the slot loop there is no per-batch bucket; the pool
             // size is the m-ceiling the request was served under.
             bucket: pool,
+            error: None,
         })
     }
 }
@@ -547,6 +648,12 @@ pub struct SlotEngine {
     max_seq: usize,
     vocab: usize,
     metrics: Arc<ServingMetrics>,
+    /// Monotonic engine step counter — the deterministic clock fault
+    /// plans are addressed against. Solo isolation re-runs share the
+    /// faulted step's id (the victim's re-run must re-fire its fault).
+    step_id: u64,
+    #[cfg(feature = "failpoints")]
+    fail: Option<FaultState>,
 }
 
 impl SlotEngine {
@@ -565,7 +672,35 @@ impl SlotEngine {
             max_seq,
             vocab,
             metrics,
+            step_id: 0,
+            #[cfg(feature = "failpoints")]
+            fail: None,
         })
+    }
+
+    /// Install a deterministic fault plan (chaos testing). Engine-local
+    /// state: parallel tests each chaos their own engine.
+    #[cfg(feature = "failpoints")]
+    pub fn install_fault_plan(&mut self, plan: FaultPlan) {
+        self.fail = Some(FaultState::new(plan));
+    }
+
+    /// True once every installed fault has fired (or none was
+    /// installed) — chaos tests assert plans don't go stale.
+    #[cfg(feature = "failpoints")]
+    pub fn fault_plan_exhausted(&self) -> bool {
+        self.fail.as_ref().map_or(true, |f| f.exhausted())
+    }
+
+    /// Lifetime lane seatings (chaos suite leak oracle).
+    pub fn lanes_seated(&self) -> u64 {
+        self.sched.seats
+    }
+
+    /// Lifetime lane releases across every exit path (chaos suite leak
+    /// oracle: equals [`Self::lanes_seated`] on an idle pool).
+    pub fn lanes_released(&self) -> u64 {
+        self.sched.releases
     }
 
     /// Lanes ready for a new request.
@@ -597,44 +732,236 @@ impl SlotEngine {
         self.sched.active() == 0
     }
 
-    /// Seat a request in a free lane (scrubbing its KV lane). Errors if
-    /// the pool is full or the prompt cannot fit the context — callers
-    /// check [`Self::free_slots`] and route through `RequestLimits`, so
-    /// an error here is a programming bug surfaced loudly.
-    pub fn admit(&mut self, req: GenerateRequest) -> Result<()> {
+    /// Seat a request in a free lane (scrubbing its KV lane).
+    ///
+    /// `Ok(None)` means seated. `Ok(Some(response))` means the request
+    /// was *not* seated but already has its terminal response — its
+    /// deadline expired at admission, or (under failpoints) its lane
+    /// allocation was made to fail; the caller delivers the response
+    /// and the engine keeps serving. `Err` remains what it was: the
+    /// pool is full or the request violates limits — callers check
+    /// [`Self::free_slots`] and route through `RequestLimits`, so an
+    /// error here is a programming bug surfaced loudly.
+    pub fn admit(&mut self, req: GenerateRequest)
+                 -> Result<Option<GenerateResponse>> {
         ensure!(!req.prompt.is_empty(), "empty prompt");
         ensure!(req.prompt.len() <= self.max_seq,
                 "prompt length {} exceeds context {}", req.prompt.len(),
                 self.max_seq);
         ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
         let now = Instant::now();
+        if req.deadline_expired(now) {
+            self.metrics.record_deadline_expired();
+            return Ok(Some(Self::unseated_response(
+                &req, now, FinishReason::DeadlineExceeded,
+                Some("deadline exceeded at admission".into()))));
+        }
+        #[cfg(feature = "failpoints")]
+        if let Some(f) = self.fail.as_mut() {
+            if let Err(msg) = f.admit(req.id) {
+                self.metrics.record_fault_isolated();
+                return Ok(Some(Self::unseated_response(
+                    &req, now, FinishReason::Fault, Some(msg))));
+            }
+        }
         let lane = self
             .sched
             .seat(req, now)
             .ok_or_else(|| anyhow!("no free decode slot"))?;
         self.cache.reset_slot(lane);
-        Ok(())
+        Ok(None)
     }
 
-    /// Run one engine step: plan rows across every occupied lane, run
-    /// one slot-batched forward pass, sample where logits came back,
-    /// and return the requests that finished (their lanes are already
-    /// free for refill). A no-op on an idle pool.
+    /// Terminal response for a request that never reached a lane.
+    fn unseated_response(req: &GenerateRequest, now: Instant,
+                         reason: FinishReason, error: Option<String>)
+                         -> GenerateResponse {
+        let waited =
+            now.duration_since(req.accepted_at).as_secs_f64() * 1e3;
+        GenerateResponse {
+            id: req.id,
+            tokens: Vec::new(),
+            finish_reason: reason,
+            latency_ms: waited,
+            queue_wait_ms: waited,
+            bucket: 0,
+            error,
+        }
+    }
+
+    /// Cancel an in-flight request: frees its lane exactly like a
+    /// natural finish (scrub + release) and returns its terminal
+    /// response with the tokens generated so far. `None` if no lane
+    /// holds `id` (already finished, or never admitted).
+    pub fn cancel(&mut self, id: RequestId) -> Option<GenerateResponse> {
+        let lane = self.sched.lane_of(id)?;
+        Some(self.fail_lane(lane, FinishReason::Cancelled, None))
+    }
+
+    /// Fail every lane whose deadline has passed. Runs at the top of
+    /// each [`Self::step`], which also bounds how long a deadline can
+    /// overshoot mid-prefill: chunked prefill makes every chunk its own
+    /// step, so a long prompt re-checks between chunks.
+    fn expire_deadlines(&mut self, now: Instant) -> Vec<GenerateResponse> {
+        let expired: Vec<usize> = self
+            .sched
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| {
+                l.as_ref().is_some_and(|s| s.req.deadline_expired(now))
+            })
+            .map(|(lane, _)| lane)
+            .collect();
+        expired
+            .into_iter()
+            .map(|lane| {
+                self.fail_lane(lane, FinishReason::DeadlineExceeded,
+                               Some("deadline exceeded".into()))
+            })
+            .collect()
+    }
+
+    /// Terminate lane `lane` on a non-natural finish: release the lane,
+    /// scrub its KV (so a faulted pass's partial writes cannot bleed
+    /// into the lane's next tenant), bump the matching failure counter,
+    /// and build the terminal response carrying the tokens generated so
+    /// far.
+    fn fail_lane(&mut self, lane: usize, reason: FinishReason,
+                 error: Option<String>) -> GenerateResponse {
+        let pool = self.sched.lanes.len();
+        let slot = self.sched.release(lane);
+        self.cache.reset_slot(lane);
+        match reason {
+            FinishReason::Fault => self.metrics.record_fault_isolated(),
+            FinishReason::DeadlineExceeded => {
+                self.metrics.record_deadline_expired()
+            }
+            FinishReason::Cancelled => self.metrics.record_cancelled(),
+            // Natural finishes go through `harvest_row`, not here.
+            _ => {}
+        }
+        let now = Instant::now();
+        let latency_ms =
+            now.duration_since(slot.req.accepted_at).as_secs_f64() * 1e3;
+        let queue_wait_ms = slot
+            .admitted_at
+            .duration_since(slot.req.accepted_at)
+            .as_secs_f64() * 1e3;
+        GenerateResponse {
+            id: slot.req.id,
+            tokens: slot.generated,
+            finish_reason: reason,
+            latency_ms,
+            queue_wait_ms,
+            bucket: pool,
+            error,
+        }
+    }
+
+    /// Run one engine step: expire dead lanes, plan rows across every
+    /// occupied lane, run one slot-batched forward pass, sample where
+    /// logits came back, and return the requests that finished (their
+    /// lanes are already free for refill). A no-op on an idle pool.
+    ///
+    /// Fault isolation: a panic or `Err` out of the batched forward
+    /// does NOT fail the step. The engine re-runs each lane's rows
+    /// solo; the lane(s) that still fail are terminated with
+    /// [`FinishReason::Fault`] (KV scrubbed, lane freed) and every
+    /// other lane completes its step normally. Because per-request
+    /// token streams are invariant to slot-batching under a fixed GEMM
+    /// plan (the scheduler-equivalence property), and re-running a row
+    /// rewrites bit-identical KV (same inputs, same prior cache),
+    /// surviving requests' outputs are bit-identical to a fault-free
+    /// run. `Err` from `step` itself therefore means an engine-level
+    /// invariant broke, not a request-level problem.
     pub fn step(&mut self) -> Result<Vec<GenerateResponse>> {
+        let mut finished = self.expire_deadlines(Instant::now());
         let (steps, need) = self.sched.plan_step();
         if steps.is_empty() {
-            return Ok(Vec::new());
+            return Ok(finished);
+        }
+        self.step_id += 1;
+        #[cfg(feature = "failpoints")]
+        if let Some(f) = self.fail.as_mut() {
+            f.before_step(self.step_id);
+        }
+        // Request ids riding this pass, lane order (failpoint victim
+        // matching; rows of one lane share one id).
+        let mut row_ids: Vec<RequestId> = Vec::new();
+        for s in &steps {
+            let id = self.sched.lanes[s.slot]
+                .as_ref()
+                .expect("planned lane")
+                .req.id;
+            if row_ids.last() != Some(&id) {
+                row_ids.push(id);
+            }
         }
         let t0 = Instant::now();
-        let logits = self.model.decode_slots(&mut self.cache, &steps, &need)?;
-        self.metrics
-            .record_step(t0.elapsed().as_secs_f64() * 1e6,
-                         steps.len() as u64);
-        let sampled = need.iter().filter(|&&n| n).count();
-        ensure!(logits.len() == sampled * self.vocab,
-                "backend returned {} logits, expected {}",
-                logits.len(), sampled * self.vocab);
-        self.sched.note_fed(&steps);
+        match self.forward(&steps, &need, &row_ids) {
+            Ok(logits) => {
+                self.metrics
+                    .record_step(t0.elapsed().as_secs_f64() * 1e6,
+                                 steps.len() as u64);
+                let sampled = need.iter().filter(|&&n| n).count();
+                ensure!(logits.len() == sampled * self.vocab,
+                        "backend returned {} logits, expected {}",
+                        logits.len(), sampled * self.vocab);
+                self.sched.note_fed(&steps);
+                finished.extend(self.harvest_pass(&steps, &need, &logits));
+            }
+            Err(msg) => {
+                log::warn!("batched pass faulted ({msg}); isolating per lane");
+                finished.extend(self.isolate_step(&steps, &need, &msg)?);
+            }
+        }
+        Ok(finished)
+    }
+
+    /// One guarded forward pass: failpoint hooks plus the model call,
+    /// all inside `catch_unwind` so a panic surfaces as `Err(message)`.
+    ///
+    /// Unwind safety: the closure mutates the model (lazy autotune
+    /// state), the KV cache, and the failpoint state. All three are
+    /// safe to keep using after an unwind — autotune caches are
+    /// append-only and validated, partial KV writes are rewritten by
+    /// the solo re-runs (or scrubbed by `fail_lane`), and failpoint
+    /// state marks a fault fired *before* panicking.
+    fn forward(&mut self, steps: &[SlotStep], need: &[bool],
+               row_ids: &[RequestId]) -> std::result::Result<Vec<f32>, String> {
+        #[cfg(not(feature = "failpoints"))]
+        let _ = row_ids;
+        let step_id = self.step_id;
+        let model = &mut self.model;
+        let cache = &mut self.cache;
+        #[cfg(feature = "failpoints")]
+        let fail = &mut self.fail;
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            #[cfg(feature = "failpoints")]
+            if let Some(f) = fail.as_mut() {
+                f.forward(step_id, row_ids, ForwardStage::Before)?;
+            }
+            let logits = model
+                .decode_slots(cache, steps, need)
+                .map_err(|e| format!("model error: {e}"))?;
+            #[cfg(feature = "failpoints")]
+            if let Some(f) = fail.as_mut() {
+                f.forward(step_id, row_ids, ForwardStage::After)?;
+            }
+            Ok(logits)
+        }));
+        let _ = step_id;
+        match out {
+            Ok(res) => res,
+            Err(payload) => Err(panic_message(payload.as_ref())),
+        }
+    }
+
+    /// Sample every `need` row of a completed pass, collecting finished
+    /// requests.
+    fn harvest_pass(&mut self, steps: &[SlotStep], need: &[bool],
+                    logits: &[f32]) -> Vec<GenerateResponse> {
         let mut finished = Vec::new();
         let mut li = 0;
         for (r, s) in steps.iter().enumerate() {
@@ -649,12 +976,69 @@ impl SlotEngine {
                 finished.push(resp);
             }
         }
+        finished
+    }
+
+    /// Fault fallback: re-run the faulted step lane by lane. The
+    /// planner emits same-lane rows consecutively, so the original row
+    /// list splits into per-lane groups; each group re-runs solo under
+    /// the same `step_id` (a deterministic failpoint re-fires on its
+    /// victim and only its victim). Lanes whose solo pass succeeds are
+    /// advanced and harvested exactly as the batched pass would have —
+    /// attention is per-lane, so solo logits are bit-identical to
+    /// batched logits under the fixed plan — and the re-run rewrites
+    /// the same KV values the faulted pass may have partially written.
+    /// Lanes that fail solo are terminated with `FinishReason::Fault`.
+    fn isolate_step(&mut self, steps: &[SlotStep], need: &[bool],
+                    batch_err: &str) -> Result<Vec<GenerateResponse>> {
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < steps.len() {
+            let lane = steps[i].slot;
+            let mut j = i;
+            while j < steps.len() && steps[j].slot == lane {
+                j += 1;
+            }
+            let sub_steps = &steps[i..j];
+            let sub_need = &need[i..j];
+            let id = self.sched.lanes[lane]
+                .as_ref()
+                .expect("planned lane")
+                .req.id;
+            let t0 = Instant::now();
+            match self.forward(sub_steps, sub_need, &[id]) {
+                Ok(logits) => {
+                    self.metrics
+                        .record_step(t0.elapsed().as_secs_f64() * 1e6,
+                                     sub_steps.len() as u64);
+                    let sampled =
+                        sub_need.iter().filter(|&&n| n).count();
+                    ensure!(logits.len() == sampled * self.vocab,
+                            "backend returned {} logits, expected {} \
+                             (isolation re-run, lane {lane})",
+                            logits.len(), sampled * self.vocab);
+                    self.sched.note_fed(sub_steps);
+                    finished.extend(
+                        self.harvest_pass(sub_steps, sub_need, &logits));
+                }
+                Err(msg) => {
+                    log::error!(
+                        "request {id} faulted in isolation (lane {lane}): \
+                         {msg} (batched pass: {batch_err})");
+                    finished.push(self.fail_lane(
+                        lane, FinishReason::Fault, Some(msg)));
+                }
+            }
+            i = j;
+        }
         Ok(finished)
     }
 
     /// Drive a whole FIFO trace to completion (tests and benches):
     /// admit while lanes are free, step, repeat. Responses come back in
-    /// completion order.
+    /// completion order. Mirrors the serving loop's admission handling:
+    /// requests terminal at admission contribute their response and the
+    /// trace keeps going.
     pub fn run_trace(&mut self, requests: Vec<GenerateRequest>)
                      -> Result<Vec<GenerateResponse>> {
         let mut queue: std::collections::VecDeque<GenerateRequest> =
@@ -662,7 +1046,10 @@ impl SlotEngine {
         let mut out = Vec::new();
         while !queue.is_empty() || !self.is_idle() {
             while self.free_slots() > 0 && !queue.is_empty() {
-                self.admit(queue.pop_front().unwrap())?;
+                let req = queue.pop_front().expect("non-empty queue");
+                if let Some(resp) = self.admit(req)? {
+                    out.push(resp);
+                }
             }
             out.extend(self.step()?);
         }
@@ -670,10 +1057,15 @@ impl SlotEngine {
     }
 
     /// Abandon all in-flight requests and return the pool to empty
-    /// (bench reuse; the serving loop never abandons work).
+    /// (bench reuse; the serving loop never abandons work). Routed
+    /// through `release` + KV scrub so the lane accounting the chaos
+    /// suite checks stays balanced.
     pub fn reset(&mut self) {
-        for lane in self.sched.lanes.iter_mut() {
-            *lane = None;
+        for lane in 0..self.sched.lanes.len() {
+            if self.sched.lanes[lane].is_some() {
+                self.sched.release(lane);
+                self.cache.reset_slot(lane);
+            }
         }
     }
 }
@@ -774,7 +1166,43 @@ mod tests {
             stop_token: None,
             sampling: SamplingParams::greedy(),
             accepted_at: Instant::now(),
+            deadline: None,
         }
+    }
+
+    #[test]
+    fn run_batch_empty_is_a_noop() {
+        // Regression: an empty batch used to be rejected (and the
+        // prompt-max fold would have panicked without the guard); a
+        // drained queue must be servable as "nothing to do".
+        let mut e = host_engine();
+        let out = e
+            .run_batch(Batch { requests: vec![], bucket: 4 })
+            .expect("empty batch is Ok");
+        assert!(out.is_empty());
+        // The engine still serves real work afterwards.
+        let out = e
+            .run_batch(Batch { requests: vec![req(1, vec![5], 2)], bucket: 1 })
+            .unwrap();
+        assert_eq!(out[0].tokens.len(), 2);
+    }
+
+    #[test]
+    fn run_batch_fails_expired_requests_up_front() {
+        let mut e = host_engine();
+        let mut dead = req(1, vec![3, 5], 8);
+        dead.deadline = Some(Instant::now() - std::time::Duration::from_millis(1));
+        let live = req(2, vec![3, 5], 3);
+        let out = e
+            .run_batch(Batch { requests: vec![dead, live], bucket: 2 })
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let d = out.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(d.finish_reason, FinishReason::DeadlineExceeded);
+        assert!(d.tokens.is_empty());
+        let l = out.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(l.finish_reason, FinishReason::Length);
+        assert_eq!(l.tokens.len(), 3);
     }
 
     #[test]
@@ -973,8 +1401,85 @@ mod tests {
         e.reset();
         assert!(e.is_idle());
         assert_eq!(e.free_slots(), 2);
+        assert_eq!(e.lanes_seated(), e.lanes_released(),
+                   "reset releases what it abandons");
         // The pool serves fresh work after a reset.
         let out = e.run_trace(vec![req(2, vec![4], 2)]).unwrap();
         assert_eq!(out[0].tokens.len(), 2);
+    }
+
+    #[test]
+    fn slot_engine_cancel_frees_lane_mid_decode() {
+        let mut e = slot_engine(2, 4);
+        e.admit(req(1, vec![3, 5], 12)).unwrap();
+        e.admit(req(2, vec![9], 12)).unwrap();
+        e.step().unwrap();
+        e.step().unwrap();
+        let resp = e.cancel(1).expect("in-flight request is cancellable");
+        assert_eq!(resp.finish_reason, FinishReason::Cancelled);
+        assert!(!resp.tokens.is_empty(), "partial tokens come back");
+        assert_eq!(e.free_slots(), 1, "lane freed like a natural finish");
+        assert!(e.cancel(1).is_none(), "second cancel finds nothing");
+        assert!(e.cancel(42).is_none(), "unknown id finds nothing");
+        // The survivor decodes to completion, bit-identical to solo.
+        let mut solo = slot_engine(1, 4);
+        let want = solo.run_trace(vec![req(2, vec![9], 12)]).unwrap();
+        let mut rest = Vec::new();
+        while e.active_slots() > 0 {
+            rest.extend(e.step().unwrap());
+        }
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].tokens, want[0].tokens,
+                   "cancel must not perturb the survivor's stream");
+        assert_eq!(e.lanes_seated(), e.lanes_released());
+    }
+
+    #[test]
+    fn slot_engine_expired_deadline_rejected_at_admission() {
+        let mut e = slot_engine(1, 4);
+        let mut r = req(1, vec![3], 4);
+        r.deadline =
+            Some(Instant::now() - std::time::Duration::from_millis(1));
+        let resp = e.admit(r).unwrap().expect("terminal at admission");
+        assert_eq!(resp.finish_reason, FinishReason::DeadlineExceeded);
+        assert_eq!(e.free_slots(), 1, "no lane spent on a dead request");
+        assert_eq!(e.lanes_seated(), 0);
+    }
+
+    #[test]
+    fn slot_engine_expires_in_flight_deadline_between_steps() {
+        let mut e = slot_engine(2, 4);
+        let mut doomed = req(1, vec![3, 5], 1000);
+        // Generous enough to survive admission; step() re-checks.
+        doomed.deadline =
+            Some(Instant::now() + std::time::Duration::from_millis(5));
+        e.admit(doomed).unwrap();
+        e.admit(req(2, vec![9], 4)).unwrap();
+        let mut done = Vec::new();
+        // Wait out the deadline, then keep stepping; the doomed lane
+        // must be reaped without the survivor being disturbed.
+        std::thread::sleep(std::time::Duration::from_millis(6));
+        while e.active_slots() > 0 {
+            done.extend(e.step().unwrap());
+        }
+        let d = done.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(d.finish_reason, FinishReason::DeadlineExceeded);
+        let s = done.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(s.finish_reason, FinishReason::Length);
+        assert_eq!(s.tokens.len(), 4);
+        assert_eq!(e.lanes_seated(), e.lanes_released());
+        assert!(e.is_idle());
+    }
+
+    #[test]
+    fn slot_engine_lane_accounting_balances_over_trace() {
+        let mut e = slot_engine(2, 2);
+        e.run_trace(vec![
+            req(1, vec![3, 5, 7], 4),
+            req(2, vec![9], 2),
+            req(3, vec![100, 200], 6),
+        ]).unwrap();
+        assert_eq!(e.lanes_seated(), 3);
+        assert_eq!(e.lanes_released(), 3);
     }
 }

@@ -1,0 +1,96 @@
+//! Typed error taxonomy for the serving path.
+//!
+//! The coordinator's hot path used to surface every failure as an
+//! `anyhow::Error` (or a panic). `ServeError` gives each failure class
+//! a stable identity the front door can map onto wire semantics:
+//! `Overloaded` is a 429, `ShuttingDown`/`EngineDown` are 503s,
+//! `InvalidRequest` is a 400, and `DeadlineExceeded`/`Cancelled`/
+//! `Fault` describe per-request outcomes.
+//!
+//! `ServeError` implements `std::error::Error`, so it converts into the
+//! vendored `anyhow::Error` via the blanket `From` impl — existing
+//! `?`-based call sites keep compiling unchanged.
+
+use std::fmt;
+
+/// Everything that can go wrong on the serving path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission queue is full; the request was shed (429-shaped).
+    /// Carries the configured queue depth so callers can log/report it.
+    Overloaded { queue_depth: usize },
+    /// The coordinator is draining: in-flight lanes finish, new
+    /// admissions are refused (503-shaped).
+    ShuttingDown,
+    /// The engine thread has exited (fatal internal error); no further
+    /// requests can be served by this coordinator.
+    EngineDown,
+    /// The request failed validation (400-shaped).
+    InvalidRequest(String),
+    /// The request's deadline expired before completion.
+    DeadlineExceeded,
+    /// The request was cancelled before completion.
+    Cancelled,
+    /// The request's own execution panicked or errored; the fault was
+    /// isolated to it.
+    Fault(String),
+    /// Engine-internal invariant failure (bug surface, not a request
+    /// problem).
+    Internal(String),
+}
+
+/// Errors `Coordinator::submit*` can return. Alias of [`ServeError`]
+/// (enum variants are reachable through the alias), named for the
+/// admission-side call sites: `SubmitError::Overloaded` is the
+/// load-shedding rejection.
+pub type SubmitError = ServeError;
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "overloaded: admission queue full (depth {queue_depth}), retry later")
+            }
+            ServeError::ShuttingDown => write!(f, "shutting down: draining, not accepting new requests"),
+            ServeError::EngineDown => write!(f, "engine down: serving thread has exited"),
+            ServeError::InvalidRequest(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServeError::Cancelled => write!(f, "cancelled"),
+            ServeError::Fault(msg) => write!(f, "request fault (isolated): {msg}"),
+            ServeError::Internal(msg) => write!(f, "internal engine error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_stable_and_greppable() {
+        let e = ServeError::Overloaded { queue_depth: 64 };
+        let s = e.to_string();
+        assert!(s.contains("overloaded"), "{s}");
+        assert!(s.contains("64"), "{s}");
+        assert!(ServeError::ShuttingDown.to_string().contains("shutting down"));
+        assert!(ServeError::EngineDown.to_string().contains("engine down"));
+        assert!(ServeError::InvalidRequest("x".into()).to_string().contains("x"));
+        assert!(ServeError::Fault("boom".into()).to_string().contains("boom"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn takes_anyhow(e: impl Into<anyhow::Error>) -> String {
+            format!("{}", e.into())
+        }
+        assert!(takes_anyhow(ServeError::DeadlineExceeded).contains("deadline"));
+    }
+
+    #[test]
+    fn submit_error_alias_exposes_variants() {
+        let e: SubmitError = SubmitError::Overloaded { queue_depth: 8 };
+        assert_eq!(e, ServeError::Overloaded { queue_depth: 8 });
+    }
+}

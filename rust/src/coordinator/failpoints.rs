@@ -1,0 +1,317 @@
+//! Deterministic fault injection ("failpoints") for chaos testing.
+//!
+//! Compiled only under `--features failpoints`; without the feature the
+//! engine's hook sites vanish and the serving hot path pays nothing.
+//!
+//! Design constraints:
+//!
+//! * **Deterministic.** A [`FaultPlan`] is a finite list of faults,
+//!   each addressed by `(victim request id, engine step counter)` — not
+//!   by wall clock or thread timing. The engine's step counter is
+//!   deterministic for a fixed trace, so a plan replays exactly.
+//! * **Engine-local.** State lives in a [`FaultState`] owned by one
+//!   `SlotEngine`, installed via `SlotEngine::install_fault_plan`.
+//!   Nothing global, so `cargo test` can run chaos cases in parallel.
+//!   The only global is a one-shot "startup plan" used by the CLI
+//!   (`serve --fail-plan …`) to hand a plan across the coordinator's
+//!   engine-thread spawn.
+//! * **Fires on the victim, survives isolation.** A batched-pass fault
+//!   fires whenever the victim's rows are in the pass, but is only
+//!   *consumed* when the pass contains the victim alone — i.e. during
+//!   the isolation re-run. That way the batched pass faults, the
+//!   engine re-runs each lane solo, the victim's solo pass re-faults
+//!   (and consumes the fault), and every other lane completes clean.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::request::RequestId;
+use super::sampler::Pcg32;
+
+/// One injected fault.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside the model forward once `step >= at_step` and the
+    /// victim's rows are in the pass. `after_kv: true` panics *after*
+    /// the forward returned (post-KV-write), modeling a fault that
+    /// leaves partial state behind; `false` panics before the model
+    /// runs.
+    PanicForward { victim: RequestId, at_step: u64, after_kv: bool },
+    /// Return `Err` from the model forward (clean failure, no panic).
+    ErrForward { victim: RequestId, at_step: u64 },
+    /// Fail the victim's admission (models KV-lane alloc failure).
+    AdmitFail { victim: RequestId },
+    /// Sleep `millis` before executing step `at_step` (pairs with
+    /// per-request deadlines to force `DeadlineExceeded`).
+    SlowStep { at_step: u64, millis: u64 },
+}
+
+/// A deterministic schedule of faults.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> Self {
+        FaultPlan { faults }
+    }
+
+    /// Derive a plan from a seed over a known request-id population:
+    /// picks 1–3 faults with PCG32, spread over early decode steps.
+    /// Same seed + same ids → same plan.
+    pub fn seeded(seed: u64, ids: &[RequestId]) -> Self {
+        let mut rng = Pcg32::seed_from(seed ^ 0xfa17_90b7);
+        let mut faults = Vec::new();
+        if ids.is_empty() {
+            return FaultPlan { faults };
+        }
+        let n = 1 + (rng.next_u32() % 3) as usize;
+        for _ in 0..n {
+            let victim = ids[(rng.next_u32() as usize) % ids.len()];
+            let at_step = 1 + (rng.next_u32() % 6) as u64;
+            let fault = match rng.next_u32() % 4 {
+                0 => Fault::PanicForward { victim, at_step, after_kv: false },
+                1 => Fault::PanicForward { victim, at_step, after_kv: true },
+                2 => Fault::ErrForward { victim, at_step },
+                _ => Fault::AdmitFail { victim },
+            };
+            faults.push(fault);
+        }
+        FaultPlan { faults }
+    }
+
+    /// Parse a CLI spec: comma-separated entries of
+    /// `panic-forward:<req>:<step>` | `panic-after-kv:<req>:<step>` |
+    /// `err-forward:<req>:<step>` | `admit-fail:<req>` |
+    /// `slow-step:<step>:<millis>`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut faults = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let parts: Vec<&str> = entry.split(':').collect();
+            let num = |s: &str| -> Result<u64, String> {
+                s.parse::<u64>().map_err(|_| format!("bad number {s:?} in failpoint {entry:?}"))
+            };
+            let fault = match (parts.first().copied(), parts.len()) {
+                (Some("panic-forward"), 3) => Fault::PanicForward {
+                    victim: num(parts[1])?, at_step: num(parts[2])?, after_kv: false,
+                },
+                (Some("panic-after-kv"), 3) => Fault::PanicForward {
+                    victim: num(parts[1])?, at_step: num(parts[2])?, after_kv: true,
+                },
+                (Some("err-forward"), 3) => Fault::ErrForward {
+                    victim: num(parts[1])?, at_step: num(parts[2])?,
+                },
+                (Some("admit-fail"), 2) => Fault::AdmitFail { victim: num(parts[1])? },
+                (Some("slow-step"), 3) => Fault::SlowStep {
+                    at_step: num(parts[1])?, millis: num(parts[2])?,
+                },
+                _ => return Err(format!(
+                    "unrecognized failpoint {entry:?} (expected \
+                     panic-forward:<req>:<step>, panic-after-kv:<req>:<step>, \
+                     err-forward:<req>:<step>, admit-fail:<req>, or \
+                     slow-step:<step>:<millis>)"
+                )),
+            };
+            faults.push(fault);
+        }
+        Ok(FaultPlan { faults })
+    }
+}
+
+/// Where (relative to the model forward) a `PanicForward` fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForwardStage {
+    /// Before the model runs (no KV written for this pass).
+    Before,
+    /// After the model returned (KV for this pass already written).
+    After,
+}
+
+/// Per-engine fault state: the plan plus consumed flags.
+#[derive(Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    fired: Vec<bool>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Self {
+        let n = plan.faults.len();
+        FaultState { plan, fired: vec![false; n] }
+    }
+
+    /// True once every fault in the plan has been consumed.
+    pub fn exhausted(&self) -> bool {
+        self.fired.iter().all(|&f| f)
+    }
+
+    /// Hook: start of an engine step. Applies `SlowStep` (consumed on
+    /// first firing).
+    pub fn before_step(&mut self, step: u64) {
+        for (i, fault) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            if let Fault::SlowStep { at_step, millis } = *fault {
+                if step >= at_step {
+                    self.fired[i] = true;
+                    std::thread::sleep(Duration::from_millis(millis));
+                }
+            }
+        }
+    }
+
+    /// Hook: admission of request `id`. Returns `Err` if an
+    /// `AdmitFail` targets it (consumed on firing).
+    pub fn admit(&mut self, id: RequestId) -> Result<(), String> {
+        for (i, fault) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            if let Fault::AdmitFail { victim } = *fault {
+                if victim == id {
+                    self.fired[i] = true;
+                    return Err(format!("failpoint: admit-fail for request {id}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Hook: model forward pass over `ids` at engine step `step`,
+    /// `stage` telling whether the forward has already run. Panics or
+    /// returns `Err` per the plan. A fault is *consumed* only when the
+    /// pass is solo (`ids.len() == 1`), so the batched firing recurs on
+    /// the victim's isolation re-run; other lanes' solo re-runs don't
+    /// match the victim and pass clean.
+    pub fn forward(&mut self, step: u64, ids: &[RequestId], stage: ForwardStage)
+        -> Result<(), String>
+    {
+        let solo = ids.len() == 1;
+        for (i, fault) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] {
+                continue;
+            }
+            match *fault {
+                Fault::PanicForward { victim, at_step, after_kv } => {
+                    let want = if after_kv { ForwardStage::After } else { ForwardStage::Before };
+                    if stage == want && step >= at_step && ids.contains(&victim) {
+                        if solo {
+                            self.fired[i] = true;
+                        }
+                        panic!("failpoint: panic-forward (victim {victim}, step {step}, {stage:?})");
+                    }
+                }
+                Fault::ErrForward { victim, at_step } => {
+                    if stage == ForwardStage::Before && step >= at_step && ids.contains(&victim) {
+                        if solo {
+                            self.fired[i] = true;
+                        }
+                        return Err(format!(
+                            "failpoint: err-forward (victim {victim}, step {step})"
+                        ));
+                    }
+                }
+                Fault::AdmitFail { .. } | Fault::SlowStep { .. } => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One-shot global plan for the CLI path (`serve --fail-plan`): the
+/// main thread installs it, the coordinator's engine thread takes it
+/// when constructing the `SlotEngine`. Tests should prefer
+/// `SlotEngine::install_fault_plan` (engine-local, parallel-safe).
+static STARTUP_PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+pub fn install_startup_plan(plan: FaultPlan) {
+    *STARTUP_PLAN.lock().unwrap_or_else(|p| p.into_inner()) = Some(plan);
+}
+
+pub fn take_startup_plan() -> Option<FaultPlan> {
+    STARTUP_PLAN.lock().unwrap_or_else(|p| p.into_inner()).take()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let plan = FaultPlan::parse(
+            "panic-forward:3:2, err-forward:1:4, admit-fail:7, slow-step:5:20, panic-after-kv:2:1",
+        ).unwrap();
+        assert_eq!(plan.faults.len(), 5);
+        assert_eq!(plan.faults[0], Fault::PanicForward { victim: 3, at_step: 2, after_kv: false });
+        assert_eq!(plan.faults[1], Fault::ErrForward { victim: 1, at_step: 4 });
+        assert_eq!(plan.faults[2], Fault::AdmitFail { victim: 7 });
+        assert_eq!(plan.faults[3], Fault::SlowStep { at_step: 5, millis: 20 });
+        assert_eq!(plan.faults[4], Fault::PanicForward { victim: 2, at_step: 1, after_kv: true });
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("panic-forward:1").is_err());
+        assert!(FaultPlan::parse("what:1:2").is_err());
+        assert!(FaultPlan::parse("slow-step:x:2").is_err());
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_nonempty() {
+        let ids = [1, 2, 3, 4];
+        let a = FaultPlan::seeded(9, &ids);
+        let b = FaultPlan::seeded(9, &ids);
+        assert_eq!(a, b);
+        assert!(!a.faults.is_empty() && a.faults.len() <= 3);
+        assert!(FaultPlan::seeded(9, &[]).faults.is_empty());
+    }
+
+    #[test]
+    fn err_forward_consumed_only_when_solo() {
+        let mut st = FaultState::new(FaultPlan::new(vec![
+            Fault::ErrForward { victim: 2, at_step: 1 },
+        ]));
+        // Batched pass containing the victim: fires but not consumed.
+        assert!(st.forward(1, &[1, 2, 3], ForwardStage::Before).is_err());
+        assert!(!st.exhausted());
+        // Solo pass on a non-victim: clean.
+        assert!(st.forward(1, &[1], ForwardStage::Before).is_ok());
+        // Solo pass on the victim: fires and consumes.
+        assert!(st.forward(1, &[2], ForwardStage::Before).is_err());
+        assert!(st.exhausted());
+        // Later passes clean.
+        assert!(st.forward(2, &[1, 2, 3], ForwardStage::Before).is_ok());
+    }
+
+    #[test]
+    fn panic_forward_respects_stage() {
+        let mut st = FaultState::new(FaultPlan::new(vec![
+            Fault::PanicForward { victim: 1, at_step: 1, after_kv: true },
+        ]));
+        // Before-stage pass does not fire an after_kv fault.
+        assert!(st.forward(1, &[1], ForwardStage::Before).is_ok());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = st.forward(1, &[1], ForwardStage::After);
+        }));
+        assert!(caught.is_err());
+        assert!(st.exhausted());
+    }
+
+    #[test]
+    fn admit_fail_fires_once() {
+        let mut st = FaultState::new(FaultPlan::new(vec![Fault::AdmitFail { victim: 5 }]));
+        assert!(st.admit(4).is_ok());
+        assert!(st.admit(5).is_err());
+        assert!(st.admit(5).is_ok());
+        assert!(st.exhausted());
+    }
+
+    #[test]
+    fn startup_plan_is_one_shot() {
+        install_startup_plan(FaultPlan::new(vec![Fault::AdmitFail { victim: 1 }]));
+        assert!(take_startup_plan().is_some());
+        assert!(take_startup_plan().is_none());
+    }
+}

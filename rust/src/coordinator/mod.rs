@@ -22,8 +22,20 @@
 //! exists precisely to keep that `m` from collapsing as requests
 //! finish ([`router`] wires the threads).
 
+//!
+//! The serving path is fault-isolated (DESIGN.md §7 "Failure model"):
+//! per-request panics/errors are contained by the engines
+//! ([`FinishReason::Fault`]), deadlines and [`Coordinator::cancel`]
+//! free lanes mid-batch, admission sheds load with a typed
+//! [`ServeError::Overloaded`], and the deterministic [`failpoints`]
+//! harness (cargo feature `failpoints`) drives the chaos suite that
+//! pins those invariants.
+
 mod batcher;
 mod engine;
+mod error;
+#[cfg(feature = "failpoints")]
+pub mod failpoints;
 mod kvcache;
 mod request;
 mod router;
@@ -32,6 +44,7 @@ mod sampler;
 pub use batcher::{Batch, DynamicBatcher};
 pub use engine::{argmax, ArtifactBackend, DecodeBackend, Engine,
                  HostModelBackend, SlotEngine};
+pub use error::{ServeError, SubmitError};
 pub use kvcache::{HostKvCache, KvCacheSpec};
 pub use request::{
     FinishReason, GenerateRequest, GenerateResponse, RequestId, RequestLimits,

@@ -23,6 +23,21 @@ pub struct GenerateRequest {
     pub sampling: SamplingParams,
     /// When the router accepted the request (for queue-wait metrics).
     pub accepted_at: Instant,
+    /// Absolute completion deadline. The continuous scheduler enforces
+    /// it at admission, between engine steps, and between prefill
+    /// chunks (every chunk is one engine step): an expired request is
+    /// failed with [`FinishReason::DeadlineExceeded`] and its lane is
+    /// freed — never awaited past the deadline, even during shutdown
+    /// drain. `None` disables the deadline (the default; the router
+    /// fills it from `ServeConfig.request_timeout_ms` when set).
+    pub deadline: Option<Instant>,
+}
+
+impl GenerateRequest {
+    /// True once `now` has reached the request's deadline.
+    pub fn deadline_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Why a generation finished.
@@ -34,21 +49,44 @@ pub enum FinishReason {
     Stop,
     /// Ran into the model's max_seq context limit.
     ContextLimit,
+    /// The request's own execution panicked or errored; the fault was
+    /// isolated to this request (its lane scrubbed and freed) and every
+    /// other in-flight request kept decoding.
+    Fault,
+    /// The per-request deadline expired before completion.
+    DeadlineExceeded,
+    /// Cancelled via [`super::Coordinator::cancel`] (or the engine's
+    /// cancel entry point) before completion.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// True for the natural completions (the request ran to its own
+    /// stopping condition rather than being failed by the engine).
+    pub fn is_natural(self) -> bool {
+        matches!(self, FinishReason::Length | FinishReason::Stop
+                       | FinishReason::ContextLimit)
+    }
 }
 
 /// Completed generation.
 #[derive(Debug, Clone)]
 pub struct GenerateResponse {
     pub id: RequestId,
-    /// Generated token ids (prompt not included).
+    /// Generated token ids (prompt not included). Partial for faulted /
+    /// expired / cancelled requests.
     pub tokens: Vec<i32>,
     pub finish_reason: FinishReason,
     /// End-to-end latency (accept -> complete), milliseconds.
     pub latency_ms: f64,
     /// Time spent queued before entering a batch, milliseconds.
     pub queue_wait_ms: f64,
-    /// Batch bucket this request was served in (the GEMM's `m`).
+    /// Batch bucket this request was served in (the GEMM's `m`); 0 when
+    /// the request never reached a lane (failed while queued).
     pub bucket: usize,
+    /// Failure detail for non-natural finishes (fault message), `None`
+    /// on natural completions.
+    pub error: Option<String>,
 }
 
 /// Validation limits applied by the router.

@@ -32,14 +32,15 @@
 //! `serve` works end to end on a bare machine (DESIGN.md §7).
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, ensure, Result};
+use anyhow::{anyhow, Result};
 
 use crate::config::{DecodeBackendKind, ServeConfig};
 use crate::metrics::ServingMetrics;
@@ -47,10 +48,30 @@ use crate::model::HostModel;
 use crate::runtime::{ExecutableCache, Manifest, ModelMeta, Runtime};
 
 use super::batcher::{Batch, DynamicBatcher};
-use super::engine::{ArtifactBackend, DecodeBackend, Engine,
+use super::engine::{panic_message, ArtifactBackend, DecodeBackend, Engine,
                     HostModelBackend, SlotEngine};
-use super::request::{GenerateRequest, GenerateResponse, RequestId, RequestLimits};
+use super::error::ServeError;
+use super::request::{FinishReason, GenerateRequest, GenerateResponse,
+                     RequestId, RequestLimits};
 use super::sampler::SamplingParams;
+
+/// Lock a mutex, recovering from poisoning. A panic on another thread
+/// while it held the lock must not cascade into killing this one: every
+/// structure guarded here (queue, waiters map, cancel list) is left
+/// valid by any partial operation — worst case a request is failed by
+/// the fault-isolation path, never a corrupted map.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Condvar wait that recovers a poisoned guard the same way.
+fn wait_timeout_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>,
+                               dur: Duration) -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((guard, _timeout)) => guard,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
 
 /// Upper bound on one scheduler sleep: the thread wakes at the earliest
 /// batching deadline or after this cap, whichever comes first (and
@@ -83,9 +104,14 @@ type Waiters = Mutex<HashMap<RequestId, SyncSender<GenerateResponse>>>;
 
 struct Shared {
     batcher: Mutex<DynamicBatcher>,
-    /// Wakes the scheduler on submit/shutdown (deadline-driven sleeps).
+    /// Wakes the scheduler on submit/shutdown/cancel (deadline-driven
+    /// sleeps).
     batcher_cv: Condvar,
     waiters: Waiters,
+    /// In-flight cancellation requests, drained by the continuous loop
+    /// between steps (queued requests are cancelled synchronously by
+    /// [`Coordinator::cancel`] without touching this list).
+    cancels: Mutex<Vec<RequestId>>,
     shutdown: AtomicBool,
     /// Set (before the waiters map is swept) when the engine loop exits
     /// for any reason; `submit` refuses new work once it is up.
@@ -98,6 +124,13 @@ pub struct Coordinator {
     shared: Arc<Shared>,
     limits: RequestLimits,
     metrics: Arc<ServingMetrics>,
+    /// Default per-request deadline (0 = none), applied at submit.
+    request_timeout_ms: u64,
+    /// Queue capacity, echoed in `Overloaded` rejections.
+    queue_depth: usize,
+    /// Whether the continuous slot loop is serving (in-flight cancel
+    /// support lives there; the static path cancels queued work only).
+    continuous: bool,
     scheduler: Option<JoinHandle<()>>,
     engine: Option<JoinHandle<Result<()>>>,
 }
@@ -139,6 +172,7 @@ impl Coordinator {
             )),
             batcher_cv: Condvar::new(),
             waiters: Mutex::new(HashMap::new()),
+            cancels: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             engine_dead: AtomicBool::new(false),
             next_id: AtomicU64::new(1),
@@ -188,18 +222,31 @@ impl Coordinator {
                                 "artifact engine ready \
                                  ({warmed} buckets compiled)");
                             let _ = ready_tx.send(Ok(warmed));
+                            let loop_metrics = engine_metrics.clone();
                             let mut engine = Engine::new(
                                 Box::new(ArtifactBackend::new(cache,
                                                               variant)),
                                 engine_metrics);
                             run_static_loop(&engine_shared, &mut engine,
-                                            &batch_rx)
+                                            &batch_rx, &loop_metrics)
                         }
                         DecodeBackendKind::Host if continuous => {
                             let model = HostModel::new(&host_meta)?;
+                            let loop_metrics = engine_metrics.clone();
                             let mut engine = SlotEngine::new(
                                 model, slots, prefill_chunk,
                                 engine_metrics)?;
+                            // CLI-installed fault plan (`serve
+                            // --fail-plan`): one-shot handoff across
+                            // the thread spawn.
+                            #[cfg(feature = "failpoints")]
+                            if let Some(plan) =
+                                super::failpoints::take_startup_plan()
+                            {
+                                log::warn!("failpoints: fault plan \
+                                            installed: {plan:?}");
+                                engine.install_fault_plan(plan);
+                            }
                             // The slot planner's GEMM m is any value up
                             // to its row budget — warm them all so no
                             // shape autotunes mid-request (the engine
@@ -214,7 +261,8 @@ impl Coordinator {
                                  slots, prefill chunk {prefill_chunk}, \
                                  {warmed} m-shapes planned)");
                             let _ = ready_tx.send(Ok(warmed));
-                            run_continuous_loop(&engine_shared, &mut engine)
+                            run_continuous_loop(&engine_shared, &mut engine,
+                                                &loop_metrics)
                         }
                         DecodeBackendKind::Host => {
                             let mut model = HostModel::new(&host_meta)?;
@@ -227,11 +275,12 @@ impl Coordinator {
                                 "host engine ready ({warmed} bucket-shapes \
                                  planned, no artifacts needed)");
                             let _ = ready_tx.send(Ok(warmed));
+                            let loop_metrics = engine_metrics.clone();
                             let mut engine = Engine::new(
                                 Box::new(HostModelBackend::new(model)),
                                 engine_metrics);
                             run_static_loop(&engine_shared, &mut engine,
-                                            &batch_rx)
+                                            &batch_rx, &loop_metrics)
                         }
                     }
                 })();
@@ -244,7 +293,7 @@ impl Coordinator {
                 // serving-hang fix).
                 engine_shared.engine_dead.store(true, Ordering::SeqCst);
                 engine_shared.shutdown.store(true, Ordering::SeqCst);
-                engine_shared.waiters.lock().unwrap().clear();
+                lock_recover(&engine_shared.waiters).clear();
                 engine_shared.batcher_cv.notify_all();
                 run
             })?;
@@ -273,7 +322,7 @@ impl Coordinator {
                 .spawn(move || loop {
                     if sched_shared.shutdown.load(Ordering::Relaxed) {
                         // Drain what's left (treat everything as expired).
-                        let mut b = sched_shared.batcher.lock().unwrap();
+                        let mut b = lock_recover(&sched_shared.batcher);
                         let far_future =
                             Instant::now() + Duration::from_secs(3600);
                         while let Some(batch) = b.poll(far_future) {
@@ -286,7 +335,7 @@ impl Coordinator {
                         return;
                     }
                     let now = Instant::now();
-                    let mut b = sched_shared.batcher.lock().unwrap();
+                    let mut b = lock_recover(&sched_shared.batcher);
                     if let Some(batch) = b.poll(now) {
                         drop(b);
                         if batch_tx.send(batch).is_err() {
@@ -296,12 +345,13 @@ impl Coordinator {
                     }
                     // Nothing dispatchable: sleep until the earliest
                     // batch deadline (capped), woken early by
-                    // submit()/shutdown.
+                    // submit()/shutdown. Poison-recovering: a panic on
+                    // a submitting thread must not abort the scheduler.
                     let wait = b
                         .next_deadline(now)
                         .map_or(SCHED_IDLE_POLL, |d| d.min(SCHED_IDLE_POLL));
-                    let _unused =
-                        sched_shared.batcher_cv.wait_timeout(b, wait);
+                    let _guard = wait_timeout_recover(
+                        &sched_shared.batcher_cv, b, wait);
                 })?)
         };
 
@@ -309,58 +359,136 @@ impl Coordinator {
             shared,
             limits,
             metrics,
+            request_timeout_ms: cfg.request_timeout_ms,
+            queue_depth: cfg.queue_depth,
+            continuous,
             scheduler,
             engine: Some(engine),
         })
     }
 
     /// Validate and enqueue a greedy request; returns a waitable handle.
-    /// Errors immediately once the engine thread has exited.
+    /// Refuses with a typed [`ServeError`] once the engine is down
+    /// ([`ServeError::EngineDown`]), the coordinator is draining
+    /// ([`ServeError::ShuttingDown`]), or the queue is at capacity
+    /// ([`ServeError::Overloaded`] — the 429-shaped load shed).
     pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize,
-                  stop_token: Option<i32>) -> Result<Pending> {
+                  stop_token: Option<i32>)
+                  -> std::result::Result<Pending, ServeError> {
         self.submit_sampled(prompt, max_new_tokens, stop_token,
                             SamplingParams::greedy())
     }
 
     /// Validate and enqueue a request with explicit sampling params
-    /// (greedy | temperature | top-k | top-p, per-request seed).
+    /// (greedy | temperature | top-k | top-p, per-request seed). Same
+    /// refusal semantics as [`Self::submit`].
     pub fn submit_sampled(&self, prompt: Vec<i32>, max_new_tokens: usize,
                           stop_token: Option<i32>,
-                          sampling: SamplingParams) -> Result<Pending> {
-        ensure!(!self.shared.engine_dead.load(Ordering::SeqCst),
-                "engine is down; coordinator no longer accepts requests");
+                          sampling: SamplingParams)
+                          -> std::result::Result<Pending, ServeError> {
+        if self.shared.engine_dead.load(Ordering::SeqCst) {
+            return Err(ServeError::EngineDown);
+        }
+        // Graceful drain: in-flight and queued work finishes, new
+        // admissions are refused.
+        if self.shared.shutdown.load(Ordering::SeqCst) {
+            return Err(ServeError::ShuttingDown);
+        }
         self.limits
             .validate(&prompt, max_new_tokens)
-            .map_err(|e| anyhow!("invalid request: {e}"))?;
+            .map_err(ServeError::InvalidRequest)?;
         sampling
             .validate()
-            .map_err(|e| anyhow!("invalid sampling params: {e}"))?;
+            .map_err(|e| ServeError::InvalidRequest(
+                format!("sampling params: {e}")))?;
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = sync_channel(1);
-        self.shared.waiters.lock().unwrap().insert(id, tx);
+        lock_recover(&self.shared.waiters).insert(id, tx);
         // Re-check after publishing the waiter: the engine marks itself
         // dead *before* its final waiter sweep, so either that sweep
         // drops our sender (recv errors) or we observe the flag here and
         // withdraw — a waiter can no longer be stranded forever.
         if self.shared.engine_dead.load(Ordering::SeqCst) {
-            self.shared.waiters.lock().unwrap().remove(&id);
-            bail!("engine is down; coordinator no longer accepts requests");
+            lock_recover(&self.shared.waiters).remove(&id);
+            return Err(ServeError::EngineDown);
         }
+        let accepted_at = Instant::now();
+        let deadline = if self.request_timeout_ms > 0 {
+            Some(accepted_at
+                 + Duration::from_millis(self.request_timeout_ms))
+        } else {
+            None
+        };
         let req = GenerateRequest {
             id,
             prompt,
             max_new_tokens,
             stop_token,
             sampling,
-            accepted_at: Instant::now(),
+            accepted_at,
+            deadline,
         };
-        let pushed = self.shared.batcher.lock().unwrap().push(req);
+        let pushed = lock_recover(&self.shared.batcher).push(req);
         if pushed.is_err() {
-            self.shared.waiters.lock().unwrap().remove(&id);
-            return Err(anyhow!("queue full (back-pressure), retry later"));
+            lock_recover(&self.shared.waiters).remove(&id);
+            self.metrics.record_shed_overload();
+            return Err(ServeError::Overloaded {
+                queue_depth: self.queue_depth,
+            });
         }
         self.shared.batcher_cv.notify_one();
         Ok(Pending { id, rx })
+    }
+
+    /// Cancel a request by id. Queued requests are removed and answered
+    /// synchronously ([`FinishReason::Cancelled`], no tokens). In-flight
+    /// requests (continuous mode) are handed to the engine loop, which
+    /// frees the lane exactly like a natural finish and delivers the
+    /// tokens generated so far. Returns `true` if a cancellation was
+    /// initiated, `false` if the request is unknown, already finished,
+    /// or mid-batch on the static path (static batches run to
+    /// completion).
+    pub fn cancel(&self, id: RequestId) -> bool {
+        if let Some(req) = lock_recover(&self.shared.batcher).remove(id) {
+            self.metrics.record_cancelled();
+            let waited = Instant::now()
+                .duration_since(req.accepted_at)
+                .as_secs_f64() * 1e3;
+            deliver(&self.shared, vec![GenerateResponse {
+                id,
+                tokens: Vec::new(),
+                finish_reason: FinishReason::Cancelled,
+                latency_ms: waited,
+                queue_wait_ms: waited,
+                bucket: 0,
+                error: None,
+            }]);
+            return true;
+        }
+        if !self.continuous {
+            return false;
+        }
+        // A live waiter means the request is in a lane (or about to
+        // finish — the engine-side cancel is a no-op if it loses that
+        // race, and the waiter hand-off guarantees only one response is
+        // ever delivered).
+        let in_flight =
+            lock_recover(&self.shared.waiters).contains_key(&id);
+        if in_flight {
+            lock_recover(&self.shared.cancels).push(id);
+            self.shared.batcher_cv.notify_all();
+            return true;
+        }
+        false
+    }
+
+    /// Begin a graceful drain without consuming the coordinator: new
+    /// submissions are refused with [`ServeError::ShuttingDown`] while
+    /// queued and in-flight work runs to completion (or its deadline).
+    /// [`Self::shutdown`] performs this and then joins the threads.
+    pub fn begin_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.batcher_cv.notify_all();
     }
 
     /// Serving metrics (shared with the engine).
@@ -370,7 +498,7 @@ impl Coordinator {
 
     /// Current queue depth.
     pub fn queue_len(&self) -> usize {
-        self.shared.batcher.lock().unwrap().len()
+        lock_recover(&self.shared.batcher).len()
     }
 
     /// Scheduler wakeups that found requests queued but nothing
@@ -378,7 +506,7 @@ impl Coordinator {
     /// regression test pins (deadline-driven sleeps keep this near the
     /// number of batching windows, not `window / 200 µs`).
     pub fn scheduler_nonempty_polls(&self) -> u64 {
-        self.shared.batcher.lock().unwrap().nonempty_polls()
+        lock_recover(&self.shared.batcher).nonempty_polls()
     }
 
     /// Request validation limits in force.
@@ -388,8 +516,7 @@ impl Coordinator {
 
     /// Drain outstanding work and stop all threads.
     pub fn shutdown(mut self) -> Result<()> {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.batcher_cv.notify_all();
+        self.begin_shutdown();
         if let Some(h) = self.scheduler.take() {
             let _ = h.join();
         }
@@ -408,7 +535,7 @@ fn deliver(shared: &Shared, responses: Vec<GenerateResponse>) {
     if responses.is_empty() {
         return;
     }
-    let mut waiters = shared.waiters.lock().unwrap();
+    let mut waiters = lock_recover(&shared.waiters);
     for resp in responses {
         if let Some(tx) = waiters.remove(&resp.id) {
             let _ = tx.send(resp);
@@ -416,13 +543,59 @@ fn deliver(shared: &Shared, responses: Vec<GenerateResponse>) {
     }
 }
 
+/// Terminal `Fault` response for a request that never produced tokens
+/// (admission failure, batch-wide panic on the static path).
+fn fault_response(id: RequestId, accepted_at: Instant, msg: String)
+                  -> GenerateResponse {
+    let waited =
+        Instant::now().duration_since(accepted_at).as_secs_f64() * 1e3;
+    GenerateResponse {
+        id,
+        tokens: Vec::new(),
+        finish_reason: FinishReason::Fault,
+        latency_ms: waited,
+        queue_wait_ms: waited,
+        bucket: 0,
+        error: Some(msg),
+    }
+}
+
 /// Static serving loop: consume scheduler-formed batches until every
 /// sender is gone (shutdown drain).
+///
+/// Fault isolation at batch granularity: a *panic* inside `run_batch`
+/// fails that batch's requests with [`FinishReason::Fault`] and the
+/// loop keeps serving (the backend re-`begin`s per batch, so no state
+/// leaks across). An `Err` return stays fatal — the static engine's
+/// errors are invariant violations, and dying loudly (sweeping the
+/// waiters) beats serving wrong results.
 fn run_static_loop(shared: &Shared, engine: &mut Engine,
-                   batch_rx: &Receiver<Batch>) -> Result<()> {
+                   batch_rx: &Receiver<Batch>,
+                   metrics: &ServingMetrics) -> Result<()> {
     while let Ok(batch) = batch_rx.recv() {
-        let responses = engine.run_batch(batch)?;
-        deliver(shared, responses);
+        let stubs: Vec<(RequestId, Instant)> = batch
+            .requests
+            .iter()
+            .map(|r| (r.id, r.accepted_at))
+            .collect();
+        match catch_unwind(AssertUnwindSafe(|| engine.run_batch(batch))) {
+            Ok(Ok(responses)) => deliver(shared, responses),
+            Ok(Err(e)) => return Err(e),
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                log::error!(
+                    "static batch panicked ({msg}); failing its {} \
+                     request(s), engine continues", stubs.len());
+                let responses = stubs
+                    .into_iter()
+                    .map(|(id, accepted_at)| {
+                        metrics.record_fault_isolated();
+                        fault_response(id, accepted_at, msg.clone())
+                    })
+                    .collect();
+                deliver(shared, responses);
+            }
+        }
     }
     Ok(())
 }
@@ -431,32 +604,62 @@ fn run_static_loop(shared: &Shared, engine: &mut Engine,
 /// straight from the shared queue (no batch formation, no window — a
 /// free lane admits the oldest waiting request immediately), and
 /// finished requests are delivered as they complete rather than when
-/// their batch drains. Exits once shutdown is flagged *and* all work —
-/// queued and in-flight — has finished (same drain semantics as the
-/// static path).
-fn run_continuous_loop(shared: &Shared, engine: &mut SlotEngine)
-                       -> Result<()> {
+/// their batch drains. Pending cancellations are applied before refill
+/// (a cancelled lane is capacity). Exits once shutdown is flagged *and*
+/// all work — queued and in-flight — has finished or hit its deadline
+/// (same drain semantics as the static path; deadlines keep the drain
+/// bounded).
+fn run_continuous_loop(shared: &Shared, engine: &mut SlotEngine,
+                       metrics: &ServingMetrics) -> Result<()> {
     loop {
-        let free = engine.free_slots();
-        if free > 0 {
-            let admitted = shared.batcher.lock().unwrap().take_upto(free);
-            for req in admitted {
-                // Router validation already bounds these; an admit
-                // failure is a bug worth dying loudly over (the dead-
-                // engine sweep fails the waiters).
-                engine.admit(req)?;
+        let mut done = Vec::new();
+        let cancels = std::mem::take(&mut *lock_recover(&shared.cancels));
+        for id in cancels {
+            // None = already finished (cancel lost the race): the
+            // response was (or is being) delivered; nothing to do.
+            if let Some(resp) = engine.cancel(id) {
+                done.push(resp);
             }
         }
+        let free = engine.free_slots();
+        if free > 0 {
+            let admitted = lock_recover(&shared.batcher).take_upto(free);
+            for req in admitted {
+                let (rid, accepted_at) = (req.id, req.accepted_at);
+                match engine.admit(req) {
+                    // Seated.
+                    Ok(None) => {}
+                    // Terminal at admission (expired deadline,
+                    // injected alloc failure): deliver and move on.
+                    Ok(Some(resp)) => done.push(resp),
+                    // Router validation bounds what reaches here, so
+                    // an admit error is a bug — but a *per-request*
+                    // bug: fail the request, keep the engine serving.
+                    Err(e) => {
+                        log::error!(
+                            "admit failed for request {rid}: {e}; \
+                             failing it and continuing");
+                        metrics.record_fault_isolated();
+                        done.push(fault_response(
+                            rid, accepted_at,
+                            format!("admission failed: {e}")));
+                    }
+                }
+            }
+        }
+        deliver(shared, done);
         if engine.is_idle() {
-            let guard = shared.batcher.lock().unwrap();
+            let guard = lock_recover(&shared.batcher);
             if guard.is_empty() {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return Ok(());
                 }
-                // Sleep until submit()/shutdown() wakes us (capped, so
-                // a lost wakeup can only cost one poll interval).
-                let _unused =
-                    shared.batcher_cv.wait_timeout(guard, SCHED_IDLE_POLL);
+                // Sleep until submit()/cancel()/shutdown() wakes us
+                // (capped, so a lost wakeup can only cost one poll
+                // interval). Poison-recovering: a panicked submitter
+                // must not kill the serving loop.
+                let _guard = wait_timeout_recover(
+                    &shared.batcher_cv, guard, SCHED_IDLE_POLL);
             }
             continue;
         }

@@ -7,6 +7,8 @@
 //!                       [--requests N] [--max-new N]
 //!                       [--temperature T] [--top-k K] [--top-p P]
 //!                       [--sample-seed S]
+//!                       [--queue-cap N] [--request-timeout-ms T]
+//!                       [--fail-plan SPEC]   (feature `failpoints`)
 //! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
 //!                       [--m M] [--nk NK] [--iters N]
 //! splitk-w4a16 hostgemm [--m M] [--nk NK] [--split-k S] [--workers W]
@@ -78,6 +80,30 @@ fn serve(args: &Args) -> Result<()> {
     }
     if args.options.contains_key("prefill-chunk") {
         cfg.prefill_chunk = args.opt_num("prefill-chunk", cfg.prefill_chunk)?;
+    }
+    // Fault-tolerance knobs: bounded admission queue (load shedding)
+    // and a per-request wall-clock deadline (0 = no deadline).
+    if args.options.contains_key("queue-cap") {
+        cfg.queue_depth = args.opt_num("queue-cap", cfg.queue_depth)?;
+    }
+    if args.options.contains_key("request-timeout-ms") {
+        cfg.request_timeout_ms =
+            args.opt_num("request-timeout-ms", cfg.request_timeout_ms)?;
+    }
+    if let Some(spec) = args.options.get("fail-plan") {
+        #[cfg(feature = "failpoints")]
+        {
+            let plan = splitk_w4a16::coordinator::failpoints::FaultPlan::parse(
+                spec,
+            )
+            .map_err(|e| anyhow!("--fail-plan: {e}"))?;
+            splitk_w4a16::coordinator::failpoints::install_startup_plan(plan);
+        }
+        #[cfg(not(feature = "failpoints"))]
+        bail!(
+            "--fail-plan {spec} requires the `failpoints` cargo feature \
+             (rebuild with `--features failpoints`)"
+        );
     }
     let requests: usize = args.opt_num("requests", 32)?;
     let cli_max_new: Option<usize> = match args.options.get("max-new") {

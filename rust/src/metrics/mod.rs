@@ -23,6 +23,15 @@ pub struct ServingMetrics {
     /// (active sequences per step) — divides by `decode_steps` for the
     /// average batch occupancy.
     pub active_seq_steps: AtomicU64,
+    /// Requests that panicked/errored and were isolated (lane scrubbed,
+    /// rest of the batch kept decoding).
+    pub faults_isolated: AtomicU64,
+    /// Requests failed because their deadline expired.
+    pub deadline_expired: AtomicU64,
+    /// Requests cancelled before completion.
+    pub cancelled: AtomicU64,
+    /// Requests shed at admission (queue full → `Overloaded`).
+    pub shed_overload: AtomicU64,
     /// End-to-end request latency, milliseconds.
     pub request_latency_ms: Mutex<Histogram>,
     /// Per-decode-step latency, microseconds.
@@ -37,6 +46,13 @@ impl Default for ServingMetrics {
     }
 }
 
+/// Lock a histogram, recovering from poison: `Histogram::record` never
+/// leaves partial state worth discarding, and metrics must stay
+/// readable even after a panic was caught elsewhere in the engine.
+fn lock_recover(m: &Mutex<Histogram>) -> std::sync::MutexGuard<'_, Histogram> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 impl ServingMetrics {
     pub fn new() -> Self {
         ServingMetrics {
@@ -45,6 +61,10 @@ impl ServingMetrics {
             tokens_generated: AtomicU64::new(0),
             decode_steps: AtomicU64::new(0),
             active_seq_steps: AtomicU64::new(0),
+            faults_isolated: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            shed_overload: AtomicU64::new(0),
             request_latency_ms: Mutex::new(Histogram::new()),
             step_latency_us: Mutex::new(Histogram::new()),
             queue_wait_ms: Mutex::new(Histogram::new()),
@@ -55,15 +75,35 @@ impl ServingMetrics {
     pub fn record_request(&self, latency_ms: f64, tokens: u64, queue_wait_ms: f64) {
         self.requests_completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens, Ordering::Relaxed);
-        self.request_latency_ms.lock().unwrap().record(latency_ms);
-        self.queue_wait_ms.lock().unwrap().record(queue_wait_ms);
+        lock_recover(&self.request_latency_ms).record(latency_ms);
+        lock_recover(&self.queue_wait_ms).record(queue_wait_ms);
     }
 
     /// Record one executed decode step.
     pub fn record_step(&self, latency_us: f64, active_seqs: u64) {
         self.decode_steps.fetch_add(1, Ordering::Relaxed);
         self.active_seq_steps.fetch_add(active_seqs, Ordering::Relaxed);
-        self.step_latency_us.lock().unwrap().record(latency_us);
+        lock_recover(&self.step_latency_us).record(latency_us);
+    }
+
+    /// Record one isolated per-request fault.
+    pub fn record_fault_isolated(&self) {
+        self.faults_isolated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request failed on deadline expiry.
+    pub fn record_deadline_expired(&self) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one cancelled request.
+    pub fn record_cancelled(&self) {
+        self.cancelled.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request shed at admission (overload).
+    pub fn record_shed_overload(&self) {
+        self.shed_overload.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Tokens per second since startup.
@@ -83,11 +123,12 @@ impl ServingMetrics {
 
     /// One-line summary for logs / example output.
     pub fn summary(&self) -> String {
-        let req = self.request_latency_ms.lock().unwrap();
-        let step = self.step_latency_us.lock().unwrap();
+        let req = lock_recover(&self.request_latency_ms);
+        let step = lock_recover(&self.step_latency_us);
         format!(
             "requests={} tokens={} steps={} tput={:.1} tok/s batch_occ={:.2} \
-             req_lat p50={:.1}ms p99={:.1}ms step p50={:.0}us p99={:.0}us",
+             req_lat p50={:.1}ms p99={:.1}ms step p50={:.0}us p99={:.0}us \
+             faults={} deadline_expired={} cancelled={} shed={}",
             self.requests_completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
@@ -97,6 +138,10 @@ impl ServingMetrics {
             req.percentile(99.0),
             step.percentile(50.0),
             step.percentile(99.0),
+            self.faults_isolated.load(Ordering::Relaxed),
+            self.deadline_expired.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
+            self.shed_overload.load(Ordering::Relaxed),
         )
     }
 }
@@ -124,5 +169,32 @@ mod tests {
         let m = ServingMetrics::new();
         m.record_request(1.0, 100, 0.0);
         assert!(m.throughput_tps() > 0.0);
+    }
+
+    #[test]
+    fn failure_counters_record_and_surface_in_summary() {
+        let m = ServingMetrics::new();
+        m.record_fault_isolated();
+        m.record_fault_isolated();
+        m.record_deadline_expired();
+        m.record_cancelled();
+        m.record_shed_overload();
+        m.record_shed_overload();
+        m.record_shed_overload();
+        assert_eq!(m.faults_isolated.load(Ordering::Relaxed), 2);
+        assert_eq!(m.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(m.shed_overload.load(Ordering::Relaxed), 3);
+        let s = m.summary();
+        assert!(s.contains("faults=2"), "{s}");
+        assert!(s.contains("deadline_expired=1"), "{s}");
+        assert!(s.contains("cancelled=1"), "{s}");
+        assert!(s.contains("shed=3"), "{s}");
+    }
+
+    #[test]
+    fn failure_counters_start_at_zero() {
+        let s = ServingMetrics::new().summary();
+        assert!(s.contains("faults=0 deadline_expired=0 cancelled=0 shed=0"), "{s}");
     }
 }

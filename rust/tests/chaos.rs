@@ -1,0 +1,322 @@
+//! Chaos suite: deterministic fault injection against the continuous
+//! slot engine (`--features failpoints`).
+//!
+//! Every test pins the same four invariants the failure model promises
+//! (DESIGN.md §7):
+//!
+//! 1. **No hang** — the trace runs to completion (the test returning
+//!    *is* the assertion).
+//! 2. **No leaked or double-freed KV lane** — after the trace the pool
+//!    is fully free and lifetime `lanes_seated == lanes_released`
+//!    (`release` itself panics on a double free).
+//! 3. **Metrics consistency** — natural completions + isolated faults
+//!    + expired deadlines + cancellations account for every submitted
+//!    request, and the counters match the per-response finish reasons.
+//! 4. **Survivor bit-identity** — every request that finishes
+//!    naturally produces the exact token stream of a fault-free solo
+//!    decode (the PR-5 scheduler-equivalence property is the oracle,
+//!    under a fixed `GemmPlan`); a faulted request's partial tokens
+//!    are a prefix of its fault-free stream.
+
+#![cfg(feature = "failpoints")]
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::coordinator::failpoints::{Fault, FaultPlan};
+use splitk_w4a16::coordinator::{
+    Batch, Engine, FinishReason, GenerateRequest, GenerateResponse,
+    HostModelBackend, SamplingParams, SlotEngine,
+};
+use splitk_w4a16::kernels::HostKernelConfig;
+use splitk_w4a16::metrics::ServingMetrics;
+use splitk_w4a16::model::{GemmPlan, HostModel};
+use splitk_w4a16::runtime::ModelMeta;
+
+// ---- fixtures (mirror the scheduler-equivalence suite) ---------------
+
+fn fixed_meta() -> ModelMeta {
+    ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0)
+}
+
+/// Fixed GEMM plan, not autotuned: the bit-identity oracle requires one
+/// reduction order across every run.
+fn fixed_model() -> HostModel {
+    HostModel::with_plan(
+        &fixed_meta(),
+        GemmPlan::fixed(HostKernelConfig::splitk(4).with_threads(2)))
+        .unwrap()
+}
+
+fn chaos_engine(slots: usize, chunk: usize, plan: FaultPlan)
+                -> (SlotEngine, Arc<ServingMetrics>) {
+    let metrics = Arc::new(ServingMetrics::new());
+    let mut engine =
+        SlotEngine::new(fixed_model(), slots, chunk, metrics.clone())
+            .unwrap();
+    engine.install_fault_plan(plan);
+    (engine, metrics)
+}
+
+fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
+    GenerateRequest {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        stop_token: None,
+        sampling: SamplingParams::greedy(),
+        accepted_at: Instant::now(),
+        deadline: None,
+    }
+}
+
+/// Same shape as the equivalence workload: a long prompt that must
+/// chunk, staggered budgets forcing mid-batch refill.
+fn workload() -> Vec<GenerateRequest> {
+    let long: Vec<i32> = (0..24).map(|i| (i * 13 + 5) % 512).collect();
+    vec![
+        greq(1, vec![3, 5, 7], 7),
+        greq(2, vec![9], 2),
+        greq(3, long, 5),
+        greq(4, vec![100, 200], 1),
+        greq(5, vec![42, 17, 300, 8], 8),
+        greq(6, vec![256], 3),
+    ]
+}
+
+/// Fault-free reference streams: each request solo through the static
+/// engine at bucket 1.
+fn solo_reference(requests: &[GenerateRequest]) -> Vec<GenerateResponse> {
+    let mut engine = Engine::new(
+        Box::new(HostModelBackend::new(fixed_model())),
+        Arc::new(ServingMetrics::new()));
+    requests
+        .iter()
+        .map(|r| {
+            engine
+                .run_batch(Batch { requests: vec![r.clone()], bucket: 1 })
+                .unwrap()
+                .remove(0)
+        })
+        .collect()
+}
+
+fn is_prefix(p: &[i32], full: &[i32]) -> bool {
+    p.len() <= full.len() && full[..p.len()] == *p
+}
+
+/// The shared post-trace audit: one response per request, pool fully
+/// free, lane accounting balanced, counters matching finish reasons,
+/// survivors bit-identical and victims prefix-consistent.
+fn audit(label: &str, engine: &SlotEngine, metrics: &ServingMetrics,
+         slots: usize, submitted: &[GenerateRequest],
+         out: &[GenerateResponse]) {
+    let want = solo_reference(submitted);
+    assert_eq!(out.len(), submitted.len(),
+               "{label}: one response per request");
+    assert_eq!(engine.free_slots(), slots, "{label}: pool fully free");
+    assert_eq!(engine.lanes_seated(), engine.lanes_released(),
+               "{label}: lane seat/release accounting balanced");
+
+    let count = |r: FinishReason| {
+        out.iter().filter(|o| o.finish_reason == r).count() as u64
+    };
+    let natural =
+        out.iter().filter(|o| o.finish_reason.is_natural()).count() as u64;
+    assert_eq!(metrics.requests_completed.load(Ordering::Relaxed), natural,
+               "{label}: requests_completed counts natural finishes");
+    assert_eq!(metrics.faults_isolated.load(Ordering::Relaxed),
+               count(FinishReason::Fault), "{label}: faults_isolated");
+    assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed),
+               count(FinishReason::DeadlineExceeded),
+               "{label}: deadline_expired");
+    assert_eq!(metrics.cancelled.load(Ordering::Relaxed),
+               count(FinishReason::Cancelled), "{label}: cancelled");
+    assert_eq!(natural + count(FinishReason::Fault)
+                   + count(FinishReason::DeadlineExceeded)
+                   + count(FinishReason::Cancelled),
+               submitted.len() as u64,
+               "{label}: every request accounted for");
+
+    for w in &want {
+        let g = out
+            .iter()
+            .find(|g| g.id == w.id)
+            .unwrap_or_else(|| panic!("{label}: no response for {}", w.id));
+        if g.finish_reason.is_natural() {
+            assert_eq!(g.tokens, w.tokens,
+                       "{label}: survivor {} diverged from fault-free run",
+                       w.id);
+            assert_eq!(g.finish_reason, w.finish_reason,
+                       "{label}: survivor {} finish reason", w.id);
+            assert!(g.error.is_none(),
+                    "{label}: natural finish {} carries an error", w.id);
+        } else {
+            assert!(is_prefix(&g.tokens, &w.tokens),
+                    "{label}: victim {}'s partial tokens are not a prefix \
+                     of its fault-free stream", w.id);
+            assert!(g.error.is_some(),
+                    "{label}: non-natural finish {} missing error detail",
+                    w.id);
+        }
+    }
+}
+
+// ---- targeted faults -------------------------------------------------
+
+#[test]
+fn panic_before_forward_isolates_only_the_victim() {
+    let plan = FaultPlan::new(vec![Fault::PanicForward {
+        victim: 3, at_step: 2, after_kv: false,
+    }]);
+    let (mut engine, metrics) = chaos_engine(3, 4, plan);
+    let reqs = workload();
+    let out = engine.run_trace(reqs.clone()).unwrap();
+    audit("panic-before", &engine, &metrics, 3, &reqs, &out);
+    let victim = out.iter().find(|o| o.id == 3).unwrap();
+    assert_eq!(victim.finish_reason, FinishReason::Fault);
+    assert!(victim.error.as_deref().unwrap().contains("panic-forward"));
+    assert!(engine.fault_plan_exhausted(), "the fault must have fired");
+}
+
+#[test]
+fn panic_after_kv_write_still_yields_bit_identical_survivors() {
+    // The nasty case: the batched pass ran the model (KV rows written
+    // for every lane) and *then* died. Isolation re-runs each lane solo
+    // under the same step id — the rewrite produces bit-identical KV,
+    // so survivors stay on the fault-free stream.
+    let plan = FaultPlan::new(vec![Fault::PanicForward {
+        victim: 1, at_step: 3, after_kv: true,
+    }]);
+    let (mut engine, metrics) = chaos_engine(3, 4, plan);
+    let reqs = workload();
+    let out = engine.run_trace(reqs.clone()).unwrap();
+    audit("panic-after-kv", &engine, &metrics, 3, &reqs, &out);
+    let victim = out.iter().find(|o| o.id == 1).unwrap();
+    assert_eq!(victim.finish_reason, FinishReason::Fault);
+    assert!(engine.fault_plan_exhausted());
+}
+
+#[test]
+fn err_from_forward_is_contained_like_a_panic() {
+    let plan = FaultPlan::new(vec![Fault::ErrForward {
+        victim: 5, at_step: 4,
+    }]);
+    let (mut engine, metrics) = chaos_engine(2, 4, plan);
+    let reqs = workload();
+    let out = engine.run_trace(reqs.clone()).unwrap();
+    audit("err-forward", &engine, &metrics, 2, &reqs, &out);
+    let victim = out.iter().find(|o| o.id == 5).unwrap();
+    assert_eq!(victim.finish_reason, FinishReason::Fault);
+    assert!(victim.error.as_deref().unwrap().contains("err-forward"));
+    assert!(engine.fault_plan_exhausted());
+}
+
+#[test]
+fn admit_failure_rejects_victim_without_touching_a_lane() {
+    let plan = FaultPlan::new(vec![Fault::AdmitFail { victim: 2 }]);
+    let (mut engine, metrics) = chaos_engine(3, 4, plan);
+    let reqs = workload();
+    let out = engine.run_trace(reqs.clone()).unwrap();
+    audit("admit-fail", &engine, &metrics, 3, &reqs, &out);
+    let victim = out.iter().find(|o| o.id == 2).unwrap();
+    assert_eq!(victim.finish_reason, FinishReason::Fault);
+    assert!(victim.tokens.is_empty());
+    assert_eq!(victim.bucket, 0, "never reached a lane");
+    assert!(engine.fault_plan_exhausted());
+}
+
+// ---- deadlines under injected latency --------------------------------
+
+#[test]
+fn slow_step_blows_only_the_deadline_carrying_request() {
+    // Step 1 stalls 100 ms; request 4 carries a 10 ms deadline. The
+    // next step's expiry sweep fails exactly request 4 — everyone else
+    // rides out the stall and stays bit-identical.
+    let plan = FaultPlan::new(vec![Fault::SlowStep {
+        at_step: 1, millis: 100,
+    }]);
+    let (mut engine, metrics) = chaos_engine(3, 4, plan);
+    let mut reqs = workload();
+    reqs[3].deadline = Some(Instant::now() + Duration::from_millis(10));
+    let out = engine.run_trace(reqs.clone()).unwrap();
+    audit("slow-step", &engine, &metrics, 3, &reqs, &out);
+    let victim = out.iter().find(|o| o.id == 4).unwrap();
+    assert_eq!(victim.finish_reason, FinishReason::DeadlineExceeded);
+    assert!(engine.fault_plan_exhausted());
+}
+
+#[test]
+fn deadline_storm_rejects_everything_then_serves_clean() {
+    // Every request arrives already expired: all are refused at
+    // admission (bucket 0, no lane ever seated). The engine must then
+    // serve a fresh request exactly as a never-faulted engine would.
+    let (mut engine, metrics) = chaos_engine(2, 4, FaultPlan::new(vec![]));
+    let mut reqs = workload();
+    for r in &mut reqs {
+        r.deadline = Some(r.accepted_at); // expired on arrival
+    }
+    let out = engine.run_trace(reqs.clone()).unwrap();
+    assert_eq!(out.len(), reqs.len());
+    assert!(out.iter().all(|o| {
+        o.finish_reason == FinishReason::DeadlineExceeded
+            && o.tokens.is_empty()
+            && o.bucket == 0
+    }));
+    assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed),
+               reqs.len() as u64);
+    assert_eq!(engine.lanes_seated(), 0, "no lane was ever seated");
+
+    let clean = vec![greq(100, vec![3, 5, 7], 6)];
+    let want = solo_reference(&clean);
+    let got = engine.run_trace(clean).unwrap();
+    assert_eq!(got[0].tokens, want[0].tokens,
+               "post-storm decode must match a fresh engine");
+    assert_eq!(got[0].finish_reason, FinishReason::Length);
+}
+
+// ---- seeded plans: randomized-but-replayable chaos -------------------
+
+#[test]
+fn seeded_fault_plans_hold_every_invariant() {
+    // Eight deterministic plans (1–3 faults each, derived from the
+    // seed) over the refill workload, across two pool shapes. The
+    // audit checks completion, lane accounting, metric consistency,
+    // survivor bit-identity, and victim prefix-consistency; a plan
+    // whose fault never becomes reachable (e.g. targeting a request
+    // that already finished) simply leaves everyone natural — equally
+    // valid, equally audited.
+    let ids: Vec<u64> = workload().iter().map(|r| r.id).collect();
+    for seed in 0..8u64 {
+        for (slots, chunk) in [(2usize, 4usize), (3, 1)] {
+            let plan = FaultPlan::seeded(seed, &ids);
+            let label = format!("seed={seed} slots={slots} chunk={chunk} \
+                                 plan={plan:?}");
+            let (mut engine, metrics) = chaos_engine(slots, chunk, plan);
+            let reqs = workload();
+            let out = engine.run_trace(reqs.clone()).unwrap();
+            audit(&label, &engine, &metrics, slots, &reqs, &out);
+        }
+    }
+}
+
+#[test]
+fn seeded_chaos_replays_bit_identically() {
+    // The same seed twice: not just the same survivors — the same
+    // responses, token for token, finish reason for finish reason.
+    let ids: Vec<u64> = workload().iter().map(|r| r.id).collect();
+    let run = || {
+        let plan = FaultPlan::seeded(5, &ids);
+        let (mut engine, _metrics) = chaos_engine(2, 4, plan);
+        engine.run_trace(workload()).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.tokens, y.tokens, "request {} replay diverged", x.id);
+        assert_eq!(x.finish_reason, y.finish_reason);
+    }
+}

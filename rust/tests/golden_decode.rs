@@ -54,6 +54,7 @@ fn decode_static() -> Vec<i32> {
         stop_token: None,
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
+        deadline: None,
     };
     engine
         .run_batch(Batch { requests: vec![req], bucket: 1 })
@@ -73,6 +74,7 @@ fn decode_slots(slots: usize, chunk: usize) -> Vec<i32> {
         stop_token: None,
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
+        deadline: None,
     };
     engine.run_trace(vec![req]).unwrap().remove(0).tokens
 }

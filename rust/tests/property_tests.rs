@@ -462,6 +462,7 @@ fn prop_batcher_conserves_requests() {
                 stop_token: None,
                 sampling: SamplingParams::greedy(),
                 accepted_at: t0,
+                deadline: None,
             })
             .unwrap();
         }
@@ -494,6 +495,7 @@ fn prop_batcher_backpressure_capacity() {
                     stop_token: None,
                     sampling: SamplingParams::greedy(),
                     accepted_at: t0,
+                    deadline: None,
                 })
                 .is_ok()
             {

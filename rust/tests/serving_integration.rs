@@ -21,7 +21,8 @@ use std::time::Instant;
 use splitk_w4a16::config::ServeConfig;
 use splitk_w4a16::coordinator::{
     Batch, Coordinator, Engine, FinishReason, GenerateRequest,
-    GenerateResponse, HostModelBackend, SamplingParams, SlotEngine,
+    GenerateResponse, HostModelBackend, SamplingParams, ServeError,
+    SlotEngine,
 };
 use splitk_w4a16::kernels::HostKernelConfig;
 use splitk_w4a16::metrics::ServingMetrics;
@@ -315,6 +316,7 @@ fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
         stop_token: None,
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
+        deadline: None,
     }
 }
 
@@ -695,4 +697,133 @@ fn concurrent_submitters() {
     for j in joins {
         j.join().unwrap();
     }
+}
+
+// ---- fault tolerance: deadlines, cancellation, shedding, drain -------
+
+#[test]
+fn drain_with_deadline_resolves_every_waiter() {
+    // A 1 ms request timeout over a 2-lane pool, shutdown begun right
+    // after submitting: the drain must resolve every waiter — served,
+    // or failed with DeadlineExceeded — and the join must come back
+    // clean. Deadlines are what keep the drain bounded.
+    let mut cfg = continuous_config(2, 4);
+    cfg.request_timeout_ms = 1;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let pending: Vec<_> = (0..16)
+        .map(|i| coord.submit(vec![i as i32 + 1, 2], 8, None).unwrap())
+        .collect();
+    coord.begin_shutdown();
+    assert!(
+        matches!(coord.submit(vec![1], 2, None),
+                 Err(ServeError::ShuttingDown)),
+        "drain must refuse new admissions");
+    let mut expired = 0;
+    for p in pending {
+        let r = p.wait().expect("drain must resolve every waiter");
+        match r.finish_reason {
+            FinishReason::DeadlineExceeded => {
+                assert!(r.error.is_some());
+                assert!(r.tokens.len() < 8);
+                expired += 1;
+            }
+            reason => assert!(reason.is_natural(), "unexpected {reason:?}"),
+        }
+    }
+    assert!(expired > 0,
+            "a 1 ms deadline across 16 queued requests must expire some");
+    use std::sync::atomic::Ordering;
+    assert_eq!(coord.metrics().deadline_expired.load(Ordering::Relaxed),
+               expired);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_during_chunked_prefill_frees_the_lane_cleanly() {
+    // Chunk 2 over a 24-token prompt: three steps in, prefill is still
+    // mid-flight when the cancel lands. The lane must come back scrubbed
+    // — the next tenant decodes bit-identically to a fresh engine.
+    let mut engine = slot_engine(2, 2);
+    let long: Vec<i32> = (0..24).map(|i| (i * 7 + 3) % 512).collect();
+    assert!(engine.admit(greq(1, long, 4)).unwrap().is_none());
+    for _ in 0..3 {
+        assert!(engine.step().unwrap().is_empty(), "still prefilling");
+    }
+    let r = engine.cancel(1).expect("request 1 holds a lane");
+    assert_eq!(r.finish_reason, FinishReason::Cancelled);
+    assert!(r.tokens.is_empty(), "cancelled mid-prefill: no tokens yet");
+    assert_eq!(engine.free_slots(), 2);
+    assert!(engine.cancel(1).is_none(), "second cancel is a no-op");
+    let want = slot_engine(1, 4)
+        .run_trace(vec![greq(2, vec![5, 6, 7], 5)])
+        .unwrap();
+    let got = engine.run_trace(vec![greq(2, vec![5, 6, 7], 5)]).unwrap();
+    assert_eq!(got[0].tokens, want[0].tokens,
+               "lane reuse after mid-prefill cancel must not leak KV");
+    assert_eq!(engine.lanes_seated(), engine.lanes_released());
+}
+
+#[test]
+fn coordinator_cancels_a_queued_request() {
+    // One lane: request B sits queued behind A. Cancelling B removes it
+    // from the queue and answers its waiter synchronously; A is
+    // untouched.
+    let coord = Coordinator::start(&continuous_config(1, 4)).unwrap();
+    let a = coord.submit(vec![1, 2, 3], 8, None).unwrap();
+    let b = coord.submit(vec![4, 5], 8, None).unwrap();
+    assert!(coord.cancel(b.id), "cancel must find request B");
+    let rb = b.wait().unwrap();
+    assert_eq!(rb.finish_reason, FinishReason::Cancelled);
+    let ra = a.wait().unwrap();
+    assert_eq!(ra.finish_reason, FinishReason::Length);
+    assert_eq!(ra.tokens.len(), 8);
+    assert!(!coord.cancel(9999), "unknown id is not cancellable");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn coordinator_cancels_an_in_flight_request() {
+    // Wait until the engine has taken the request into a lane, then
+    // cancel mid-decode: the engine loop frees the lane and delivers
+    // the tokens generated so far.
+    let mut cfg = continuous_config(2, 4);
+    cfg.max_new_tokens = 32;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let a = coord.submit(vec![7, 7, 7], 32, None).unwrap();
+    while coord.queue_len() > 0 {
+        std::thread::yield_now();
+    }
+    assert!(coord.cancel(a.id), "in-flight request must be cancellable");
+    let r = a.wait().unwrap();
+    assert_eq!(r.finish_reason, FinishReason::Cancelled);
+    assert!(r.tokens.len() < 32, "cancelled well before the budget");
+    use std::sync::atomic::Ordering;
+    assert_eq!(coord.metrics().cancelled.load(Ordering::Relaxed), 1);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn admission_sheds_load_with_typed_overload_error() {
+    // One busy lane and a 2-deep queue: the third waiting submission is
+    // refused with the 429-shaped Overloaded error and counted as shed;
+    // everything admitted still completes.
+    let mut cfg = continuous_config(1, 4);
+    cfg.max_new_tokens = 32;
+    cfg.queue_depth = 2;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let a = coord.submit(vec![1, 2, 3], 32, None).unwrap();
+    while coord.queue_len() > 0 {
+        std::thread::yield_now(); // A is in the lane; queue is empty
+    }
+    let b = coord.submit(vec![4], 8, None).unwrap();
+    let c = coord.submit(vec![5], 8, None).unwrap();
+    let shed = coord.submit(vec![6], 8, None);
+    assert!(matches!(shed, Err(ServeError::Overloaded { queue_depth: 2 })),
+            "third queued submit must shed, got {:?}", shed.as_ref().err());
+    use std::sync::atomic::Ordering;
+    assert_eq!(coord.metrics().shed_overload.load(Ordering::Relaxed), 1);
+    for p in [a, b, c] {
+        assert!(p.wait().unwrap().finish_reason.is_natural());
+    }
+    coord.shutdown().unwrap();
 }
