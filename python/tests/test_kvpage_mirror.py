@@ -1,0 +1,478 @@
+"""Python mirror of the Rust paged KV memory manager
+(`rust/src/coordinator/kvpage.rs`): block pool allocation/refcount
+semantics, the FNV-1a prompt chain hash, copy-on-write prefix sharing,
+and LRU eviction of cached blocks.
+
+The Rust growth environment has no cargo toolchain, so — as with the
+StreamK and micro-kernel mirrors — the allocator and trie logic is
+cross-validated here against the same invariants the Rust unit tests
+and the chaos suite's block ledger pin:
+
+* the pool hands out ascending block ids from a fresh pool and recycles
+  LIFO; `allocated == freed + outstanding` at every step; releasing a
+  free block (double free) and retaining a free block both fail loudly;
+* the chain hash reproduces pinned known-answer vectors shared with
+  `kvpage.rs::tests::chain_hash_pins_shared_vectors` (cross-language
+  agreement without cross-execution), and depends on ancestry — two
+  blocks with identical tokens but different parents never collide;
+* prefix attach serves `min(full_blocks * block_len, plen - 1)`
+  positions from the cache (the final prompt position is always
+  recomputed), shares blocks by refcount, and a write into a shared
+  block forks it first — the original owner's rows survive bit-exact;
+* eviction under pressure frees exactly the least-recently-used cached
+  blocks nobody else references;
+* a seeded random attach/extend/register/free trace keeps every
+  refcount equal to (table references + trie references) per block and
+  drains to a fully-free pool.
+
+Run standalone for the full randomized sweep:
+`python tests/test_kvpage_mirror.py`
+"""
+
+import random
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+
+def chain_hash(parent, tokens):
+    """Mirror of `kvpage::chain_hash`: FNV-1a 64 over the parent hash
+    (8 LE bytes) then each token (4 LE bytes, two's-complement u32)."""
+    h = 0xCBF29CE484222325
+    prime = 0x100000001B3
+    for byte in int(parent).to_bytes(8, "little"):
+        h = ((h ^ byte) * prime) & MASK64
+    for t in tokens:
+        for byte in (int(t) & 0xFFFFFFFF).to_bytes(4, "little"):
+            h = ((h ^ byte) * prime) & MASK64
+    return h
+
+
+class BlockPool:
+    """Mirror of `kvpage::BlockPool`."""
+
+    def __init__(self, total, block_len):
+        assert block_len >= 1 and total >= 1
+        self.block_len = block_len
+        self.free = list(range(total - 1, -1, -1))
+        self.refcount = [0] * total
+        self.allocated = 0
+        self.freed = 0
+
+    def total(self):
+        return len(self.refcount)
+
+    def outstanding(self):
+        return self.total() - len(self.free)
+
+    def is_shared(self, b):
+        return self.refcount[b] > 1
+
+    def alloc(self):
+        if not self.free:
+            return None
+        b = self.free.pop()
+        assert self.refcount[b] == 0
+        self.refcount[b] = 1
+        self.allocated += 1
+        return b
+
+    def retain(self, b):
+        assert self.refcount[b] > 0, f"retain of a free KV block {b}"
+        self.refcount[b] += 1
+
+    def release(self, b):
+        assert self.refcount[b] > 0, f"double free of KV block {b}"
+        self.refcount[b] -= 1
+        if self.refcount[b] == 0:
+            self.free.append(b)
+            self.freed += 1
+            return True
+        return False
+
+
+class PagedKv:
+    """Mirror of `kvpage::PagedKv` (same stride math; one f32 row per
+    (layer, k|v, head, pos))."""
+
+    def __init__(self, n_layers, n_heads, head_dim, slots, blocks,
+                 block_len, prefix_cache):
+        self.pool = BlockPool(blocks, block_len)
+        self.n_heads = n_heads
+        self.head_dim = head_dim
+        self.block_stride = n_layers * 2 * n_heads * block_len * head_dim
+        self.data = np.zeros(blocks * self.block_stride, dtype=np.float32)
+        self.tables = [[] for _ in range(slots)]
+        self.used = [0] * slots
+        self.registered = [0] * slots
+        self.reg_hash = [0] * slots
+        # hash -> [block, last_used]; None when the trie is disabled.
+        self.prefix = {} if prefix_cache else None
+        self.clock = 0
+        self.forks = 0
+        self.evictions = 0
+
+    def _row_start(self, slot, layer, kv, head, pos):
+        l = self.pool.block_len
+        block = self.tables[slot][pos // l]
+        in_block = ((layer * 2 + kv) * self.n_heads + head) * l + pos % l
+        return block * self.block_stride + in_block * self.head_dim
+
+    def row(self, slot, layer, kv, head, pos):
+        o = self._row_start(slot, layer, kv, head, pos)
+        return self.data[o:o + self.head_dim]
+
+    def write_row(self, slot, layer, kv, head, pos, row):
+        l = self.pool.block_len
+        block = self.tables[slot][pos // l]
+        assert not self.pool.is_shared(block), \
+            f"write to shared KV block {block} (missing COW fork)"
+        o = self._row_start(slot, layer, kv, head, pos)
+        self.data[o:o + self.head_dim] = row
+        self.used[slot] = max(self.used[slot], pos + 1)
+
+    def writable(self, slot, pos):
+        l = self.pool.block_len
+        bi = pos // l
+        return bi < len(self.tables[slot]) and \
+            not self.pool.is_shared(self.tables[slot][bi])
+
+    def _evict_lru(self):
+        if not self.prefix:
+            return False
+        victims = [(e[1], h) for h, e in self.prefix.items()
+                   if self.pool.refcount[e[0]] == 1]
+        if not victims:
+            return False
+        _, h = min(victims)
+        block = self.prefix.pop(h)[0]
+        assert self.pool.release(block)
+        self.evictions += 1
+        return True
+
+    def _alloc_or_evict(self):
+        while True:
+            b = self.pool.alloc()
+            if b is not None:
+                return b
+            if not self._evict_lru():
+                return None
+
+    def attach_prefix(self, slot, prompt):
+        assert not self.tables[slot], "attach on a non-empty table"
+        self.used[slot] = self.registered[slot] = self.reg_hash[slot] = 0
+        if self.prefix is None:
+            return 0
+        l = self.pool.block_len
+        h, matched = 0, []
+        for bi in range(len(prompt) // l):
+            nh = chain_hash(h, prompt[bi * l:(bi + 1) * l])
+            if nh not in self.prefix:
+                break
+            matched.append(self.prefix[nh][0])
+            self.prefix[nh][1] = self.clock
+            self.clock += 1
+            h = nh
+        if not matched:
+            return 0
+        cached = min(len(matched) * l, len(prompt) - 1)
+        for b in matched:
+            self.pool.retain(b)
+            self.tables[slot].append(b)
+        self.used[slot] = cached
+        self.registered[slot] = len(matched)
+        self.reg_hash[slot] = h
+        return cached
+
+    def register_prompt(self, slot, prompt, consumed):
+        if self.prefix is None:
+            return
+        l = self.pool.block_len
+        limit = min(consumed, len(prompt))
+        while (self.registered[slot] + 1) * l <= limit:
+            bi = self.registered[slot]
+            h = chain_hash(self.reg_hash[slot],
+                           prompt[bi * l:(bi + 1) * l])
+            block = self.tables[slot][bi]
+            if h in self.prefix:
+                self.prefix[h][1] = self.clock
+                self.clock += 1
+            else:
+                self.pool.retain(block)
+                self.prefix[h] = [block, self.clock]
+                self.clock += 1
+            self.reg_hash[slot] = h
+            self.registered[slot] += 1
+
+    def reserve(self, slot, lo, hi):
+        """Returns False on KvPressure (pool truly exhausted)."""
+        l = self.pool.block_len
+        for bi in range(lo // l, hi // l + 1):
+            if bi < len(self.tables[slot]):
+                if self.pool.is_shared(self.tables[slot][bi]):
+                    if not self._fork(slot, bi):
+                        return False
+            else:
+                assert bi == len(self.tables[slot])
+                b = self._alloc_or_evict()
+                if b is None:
+                    return False
+                self.tables[slot].append(b)
+        return True
+
+    def _fork(self, slot, bi):
+        old = self.tables[slot][bi]
+        new = self._alloc_or_evict()
+        if new is None:
+            return False
+        s, d = old * self.block_stride, new * self.block_stride
+        self.data[d:d + self.block_stride] = \
+            self.data[s:s + self.block_stride]
+        self.pool.release(old)
+        self.tables[slot][bi] = new
+        self.forks += 1
+        return True
+
+    def free_slot(self, slot):
+        for b in self.tables[slot]:
+            self.pool.release(b)
+        self.tables[slot] = []
+        self.used[slot] = self.registered[slot] = self.reg_hash[slot] = 0
+
+    def cached_blocks(self):
+        return len(self.prefix) if self.prefix else 0
+
+
+# ---- chain hash ------------------------------------------------------
+
+
+def test_chain_hash_pins_shared_vectors():
+    # Known-answer vectors shared with kvpage.rs — both sides must
+    # agree on these exact integers.
+    assert chain_hash(0, [3, 5, 7, 11]) == 0xEFC5F622C224F58F
+    assert chain_hash(0xEFC5F622C224F58F, [1, 2, 3, 4]) \
+        == 0x1C9F65A4DF74FFEB
+    assert chain_hash(0, []) == 0xA8C7F832281A39C5
+
+
+def test_chain_hash_depends_on_ancestry():
+    a = chain_hash(chain_hash(0, [1, 2]), [9, 9])
+    b = chain_hash(chain_hash(0, [3, 4]), [9, 9])
+    assert a != b
+    # Negative tokens hash via two's complement, not an error.
+    assert chain_hash(0, [-1]) != chain_hash(0, [1])
+
+
+# ---- block pool ------------------------------------------------------
+
+
+def test_pool_allocates_ascending_and_recycles_lifo():
+    p = BlockPool(3, 16)
+    assert [p.alloc() for _ in range(3)] == [0, 1, 2]
+    assert p.alloc() is None
+    assert p.release(1)
+    assert p.alloc() == 1, "LIFO recycle"
+    assert p.outstanding() == 3
+    assert (p.allocated, p.freed) == (4, 1)
+
+
+def test_pool_refcounts_and_ledger():
+    p = BlockPool(2, 4)
+    b = p.alloc()
+    p.retain(b)
+    assert p.is_shared(b)
+    assert not p.release(b), "shared release keeps the block"
+    assert p.release(b), "last release frees"
+    assert p.allocated == p.freed + p.outstanding() == 1
+
+
+def test_pool_double_free_and_retain_free_raise():
+    p = BlockPool(2, 4)
+    b = p.alloc()
+    p.release(b)
+    for bad in (lambda: p.release(b), lambda: p.retain(b)):
+        try:
+            bad()
+        except AssertionError:
+            pass
+        else:
+            raise AssertionError("expected a loud failure")
+
+
+# ---- prefix sharing + COW -------------------------------------------
+
+
+def _paged(slots, blocks, prefix=True):
+    # 2 layers, 2 heads, head_dim 4, block_len 4 — the same tiny shape
+    # the Rust unit tests use.
+    return PagedKv(2, 2, 4, slots, blocks, 4, prefix)
+
+
+def test_prefix_attach_skips_cached_positions():
+    kv = _paged(2, 8)
+    prompt = list(range(10))
+    assert kv.attach_prefix(0, prompt) == 0, "cold cache"
+    assert kv.reserve(0, 0, 9)
+    for pos in range(10):
+        kv.write_row(0, 0, 0, 0, pos, np.full(4, pos, dtype=np.float32))
+    kv.register_prompt(0, prompt, 10)
+    assert kv.cached_blocks() == 2, "blocks 0,1 full; block 2 partial"
+
+    cached = kv.attach_prefix(1, prompt)
+    assert cached == 8 and kv.used[1] == 8
+    for pos in range(8):
+        assert np.array_equal(kv.row(1, 0, 0, 0, pos),
+                              np.full(4, pos, dtype=np.float32))
+    assert kv.reserve(1, 8, 9)
+    kv.write_row(1, 0, 0, 0, 8, np.full(4, 99.0, dtype=np.float32))
+    assert np.array_equal(kv.row(0, 0, 0, 0, 8),
+                          np.full(4, 8.0, dtype=np.float32)), \
+        "slot 0's row untouched"
+    assert kv.forks == 0, "partial tail block was never shared"
+
+
+def test_cow_fork_on_write_into_shared_block():
+    kv = _paged(2, 8)
+    prompt = list(range(8))  # block-aligned: the tail block is shared
+    kv.attach_prefix(0, prompt)
+    assert kv.reserve(0, 0, 7)
+    for pos in range(8):
+        kv.write_row(0, 0, 0, 0, pos, np.full(4, pos, dtype=np.float32))
+    kv.register_prompt(0, prompt, 8)
+
+    cached = kv.attach_prefix(1, prompt)
+    assert cached == 7, "final prompt position always recomputed"
+    assert not kv.writable(1, 7), "tail attached shared"
+    assert kv.reserve(1, 7, 7)
+    assert kv.forks == 1 and kv.writable(1, 7)
+    kv.write_row(1, 0, 0, 0, 7, np.full(4, -1.0, dtype=np.float32))
+    assert np.array_equal(kv.row(0, 0, 0, 0, 7),
+                          np.full(4, 7.0, dtype=np.float32)), \
+        "original owner's row survives the fork"
+    assert np.array_equal(kv.row(1, 0, 0, 0, 6),
+                          np.full(4, 6.0, dtype=np.float32)), \
+        "fork carried the cached rows over"
+
+
+def test_write_into_shared_block_without_fork_raises():
+    kv = _paged(2, 8)
+    prompt = list(range(8))
+    kv.attach_prefix(0, prompt)
+    kv.reserve(0, 0, 7)
+    for pos in range(8):
+        kv.write_row(0, 0, 0, 0, pos, np.zeros(4, dtype=np.float32))
+    kv.register_prompt(0, prompt, 8)
+    kv.attach_prefix(1, prompt)
+    try:
+        kv.write_row(1, 0, 0, 0, 7, np.ones(4, dtype=np.float32))
+    except AssertionError as e:
+        assert "COW" in str(e)
+    else:
+        raise AssertionError("shared write must fail loudly")
+
+
+def test_lru_eviction_frees_least_recently_used_first():
+    kv = _paged(1, 3)
+    for lo in (0, 4):
+        prompt = list(range(lo, lo + 4))
+        kv.attach_prefix(0, prompt)
+        assert kv.reserve(0, 0, 3)
+        for pos in range(4):
+            kv.write_row(0, 0, 0, 0, pos, np.zeros(4, dtype=np.float32))
+        kv.register_prompt(0, prompt, 4)
+        kv.free_slot(0)
+    assert kv.cached_blocks() == 2
+    # Touch the first prompt so the second becomes LRU; then demand all
+    # three blocks — both cached entries must evict, LRU first.
+    assert kv.attach_prefix(0, list(range(4))) == 3
+    kv.free_slot(0)
+    assert kv.reserve(0, 0, 11)
+    assert kv.evictions == 2 and kv.cached_blocks() == 0
+
+
+# ---- randomized trace: refcount + ledger invariants ------------------
+
+
+def _check_invariants(kv):
+    # Every block's refcount equals its table references plus its trie
+    # references; the lifetime ledger balances.
+    refs = [0] * kv.pool.total()
+    for table in kv.tables:
+        for b in table:
+            refs[b] += 1
+    if kv.prefix:
+        for b, _ in kv.prefix.values():
+            refs[b] += 1
+    assert refs == kv.pool.refcount, \
+        f"refcount drift: held {refs} vs pool {kv.pool.refcount}"
+    assert kv.pool.allocated == kv.pool.freed + kv.pool.outstanding()
+
+
+def test_random_trace_holds_refcount_invariants(iters=200):
+    rng = random.Random(1234)
+    for _ in range(iters):
+        slots, blocks = rng.randint(1, 3), rng.randint(4, 10)
+        kv = _paged(slots, blocks, prefix=rng.random() < 0.8)
+        prompts = [None] * slots
+        # A small pool of shared prompts so attaches actually hit.
+        corpus = [[rng.randrange(512) for _ in range(rng.randint(1, 12))]
+                  for _ in range(3)]
+        for _ in range(rng.randint(5, 40)):
+            s = rng.randrange(slots)
+            if prompts[s] is None:
+                prompt = list(rng.choice(corpus))
+                cached = kv.attach_prefix(s, prompt)
+                assert cached <= max(0, len(prompt) - 1)
+                # Reserve only the positions prefill will write — the
+                # engine never reserves (and so never forks) fully
+                # cached leading blocks.
+                if not kv.reserve(s, cached, len(prompt) - 1):
+                    kv.free_slot(s)
+                    continue
+                for pos in range(cached, len(prompt)):
+                    kv.write_row(s, 0, 0, 0, pos,
+                                 np.zeros(4, dtype=np.float32))
+                kv.register_prompt(s, prompt, len(prompt))
+                prompts[s] = prompt
+            elif rng.random() < 0.5:
+                # Extend the sequence by one decoded position.
+                pos = kv.used[s]
+                if kv.reserve(s, pos, pos):
+                    kv.write_row(s, 0, 0, 0, pos,
+                                 np.zeros(4, dtype=np.float32))
+                else:
+                    kv.free_slot(s)
+                    prompts[s] = None
+            else:
+                kv.free_slot(s)
+                prompts[s] = None
+            _check_invariants(kv)
+        for s in range(slots):
+            if prompts[s] is not None:
+                kv.free_slot(s)
+        # Flush the trie: the pool must drain to fully free.
+        if kv.prefix:
+            for h in list(kv.prefix):
+                kv.pool.release(kv.prefix.pop(h)[0])
+        assert kv.pool.outstanding() == 0
+        assert kv.pool.allocated == kv.pool.freed
+        _check_invariants(kv)
+
+
+def main():
+    test_chain_hash_pins_shared_vectors()
+    test_chain_hash_depends_on_ancestry()
+    test_pool_allocates_ascending_and_recycles_lifo()
+    test_pool_refcounts_and_ledger()
+    test_pool_double_free_and_retain_free_raise()
+    test_prefix_attach_skips_cached_positions()
+    test_cow_fork_on_write_into_shared_block()
+    test_write_into_shared_block_without_fork_raises()
+    test_lru_eviction_frees_least_recently_used_first()
+    test_random_trace_holds_refcount_invariants(iters=1000)
+    print("kvpage mirror: all invariants hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -74,6 +74,7 @@ fn build_trace(n: usize, seed: u64) -> Trace {
                 sampling: SamplingParams::greedy(),
                 accepted_at: Instant::now(),
                 deadline: None,
+                priority: 0,
             };
             (arrival, req)
         })

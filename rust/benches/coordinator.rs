@@ -22,6 +22,7 @@ fn req(id: u64, at: Instant) -> GenerateRequest {
         sampling: SamplingParams::greedy(),
         accepted_at: at,
         deadline: None,
+        priority: 0,
     }
 }
 

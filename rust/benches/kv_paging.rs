@@ -1,0 +1,200 @@
+//! Bench: contiguous vs paged vs paged+prefix-cache KV serving on a
+//! shared-system-prompt trace (`BENCH_kv.json`) — the measurement for
+//! the paged KV memory manager (DESIGN.md §7 "KV memory manager").
+//!
+//! The trace models the dominant production shape for prefix caching:
+//! every request opens with the same 48-token system prompt (three
+//! 16-position KV blocks) followed by a short unique suffix. Three
+//! engine configurations serve the identical trace and generate the
+//! identical token count:
+//!
+//! * **contig**: the contiguous-lane fallback (`--kv-block-len 0`) —
+//!   the pre-paging layout, the bit-identity baseline;
+//! * **paged**: 16-position blocks, prefix cache off — isolates the
+//!   cost of block-table indirection;
+//! * **paged+prefix**: blocks + the prompt-hash trie — requests after
+//!   the first attach the cached system-prompt blocks and skip that
+//!   prefill work entirely.
+//!
+//! Equal tokens ⇒ the wall-clock ratio *is* the tokens/sec ratio. The
+//! `ttft` series measure admission-to-first-token for a single
+//! shared-prefix request against a cold trie vs a warm one (max_new 1,
+//! so the request's whole life *is* its TTFT). Fixed kernel plan
+//! (SplitK-4) throughout, so the comparison isolates KV layout.
+//!
+//! ```sh
+//! cargo bench --bench kv_paging [-- --smoke]
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::coordinator::{
+    GenerateRequest, KvLayout, SamplingParams, SlotEngine,
+};
+use splitk_w4a16::kernels::HostKernelConfig;
+use splitk_w4a16::metrics::ServingMetrics;
+use splitk_w4a16::model::{GemmPlan, HostModel};
+use splitk_w4a16::runtime::ModelMeta;
+use splitk_w4a16::util::{Bench, Rng};
+
+/// System-prompt length: exactly three 16-position blocks, so the trie
+/// caches the whole shared head.
+const SYSTEM_LEN: usize = 48;
+const SLOTS: usize = 4;
+const PREFILL_CHUNK: usize = 8;
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(128, "splitk", vec![1, 2, 4, 8, 16], 0)
+}
+
+fn fixed_model() -> HostModel {
+    HostModel::with_plan(
+        &meta(),
+        GemmPlan::fixed(HostKernelConfig::splitk(4).with_threads(0)))
+        .expect("host model")
+}
+
+fn engine(layout: KvLayout) -> (SlotEngine, Arc<ServingMetrics>) {
+    let metrics = Arc::new(ServingMetrics::new());
+    let engine = SlotEngine::with_layout(
+        fixed_model(), SLOTS, PREFILL_CHUNK, metrics.clone(), layout)
+        .expect("slot engine");
+    (engine, metrics)
+}
+
+fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
+    GenerateRequest {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        stop_token: None,
+        sampling: SamplingParams::greedy(),
+        accepted_at: Instant::now(),
+        deadline: None,
+        priority: 0,
+    }
+}
+
+/// The shared 48-token system prompt (seeded once, identical across
+/// every request and every series).
+fn system_prompt() -> Vec<i32> {
+    let mut rng = Rng::seed_from(42);
+    (0..SYSTEM_LEN).map(|_| rng.gen_range(0, 512) as i32).collect()
+}
+
+/// `n` requests: shared system prompt + a unique 4..12-token suffix,
+/// 6 generated tokens each.
+fn build_trace(n: usize) -> Vec<GenerateRequest> {
+    let system = system_prompt();
+    let mut rng = Rng::seed_from(9);
+    (0..n)
+        .map(|i| {
+            let mut prompt = system.clone();
+            let extra = rng.gen_range(4, 12) as usize;
+            prompt.extend((0..extra)
+                .map(|_| rng.gen_range(0, 512) as i32));
+            greq(i as u64 + 1, prompt, 6)
+        })
+        .collect()
+}
+
+/// Serve the whole trace: admit into free lanes, step to drain.
+/// Returns tokens generated.
+fn run_trace_saturated(engine: &mut SlotEngine,
+                       trace: &[GenerateRequest]) -> usize {
+    engine.reset();
+    let mut idx = 0;
+    let mut tokens = 0;
+    while idx < trace.len() || !engine.is_idle() {
+        while idx < trace.len() && engine.free_slots() > 0 {
+            engine.admit(trace[idx].clone()).expect("admit");
+            idx += 1;
+        }
+        for r in engine.step().expect("step") {
+            tokens += r.tokens.len();
+        }
+    }
+    tokens
+}
+
+/// One admission-to-first-token probe: a single shared-prefix request
+/// with max_new 1 — its completion time is its TTFT.
+fn run_ttft(engine: &mut SlotEngine, id: u64) {
+    let mut prompt = system_prompt();
+    prompt.extend([7, 13, 19]);
+    engine.admit(greq(id, prompt, 1)).expect("admit");
+    loop {
+        if !engine.step().expect("step").is_empty() {
+            return;
+        }
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_requests = if smoke { 6 } else { 16 };
+    let trace = build_trace(n_requests);
+    let total_budget: usize =
+        trace.iter().map(|r| r.max_new_tokens).sum();
+    println!("trace: {n_requests} requests, shared {SYSTEM_LEN}-token \
+              system prompt, {total_budget} token budget");
+
+    let mut bench = if smoke {
+        Bench::new(Duration::from_millis(400), 3, 0)
+    } else {
+        Bench::new(Duration::from_millis(2500), 6, 1)
+    };
+
+    let series = [
+        ("kv_contig_trace_s4", KvLayout::contiguous()),
+        ("kv_paged_trace_s4", KvLayout::paged(16, 0, false)),
+        ("kv_paged_prefix_trace_s4", KvLayout::paged(16, 0, true)),
+    ];
+    for (name, layout) in series {
+        let (mut eng, metrics) = engine(layout);
+        let mut got = 0;
+        let r = bench.run(name, || {
+            got = run_trace_saturated(&mut eng, &trace);
+        });
+        assert_eq!(got, total_budget, "{name} must serve the full trace");
+        let tps = total_budget as f64 / (r.mean_ns / 1e9);
+        let hits = metrics.prefix_hits();
+        let saved = metrics.prefix_tokens_saved();
+        println!("  {name:<26} {tps:>9.1} tok/s   prefix_hits={hits} \
+                  saved={saved}");
+        if name == "kv_paged_prefix_trace_s4" {
+            assert!(hits > 0,
+                    "the shared-prefix trace must hit the prefix cache");
+        }
+    }
+
+    // TTFT: cold trie (flushed before every probe) vs warm trie
+    // (populated once, hit by every probe).
+    let (mut cold, _) = engine(KvLayout::paged(16, 0, true));
+    let mut id = 1_000u64;
+    let r = bench.run("kv_ttft_cold_s4", || {
+        cold.flush_prefix_cache();
+        id += 1;
+        run_ttft(&mut cold, id);
+    });
+    let cold_us = r.mean_ns / 1e3;
+
+    let (mut warm, warm_metrics) = engine(KvLayout::paged(16, 0, true));
+    run_ttft(&mut warm, 999); // populate the trie outside the timer
+    let r = bench.run("kv_ttft_prefix_s4", || {
+        id += 1;
+        run_ttft(&mut warm, id);
+    });
+    let warm_us = r.mean_ns / 1e3;
+    assert!(warm_metrics.prefix_hits() > 0,
+            "warm TTFT probes must hit the prefix cache");
+    println!("  ttft: cold {cold_us:>8.1} us   prefix-hit \
+              {warm_us:>8.1} us   ({:.2}x)", cold_us / warm_us);
+
+    let out = if smoke { "BENCH_kv_smoke.json" } else { "BENCH_kv.json" };
+    match bench.write_repo_root_json(out) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

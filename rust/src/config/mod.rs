@@ -54,6 +54,19 @@ pub struct ServeConfig {
     /// with `FinishReason::DeadlineExceeded` rather than awaited —
     /// including during shutdown drain.
     pub request_timeout_ms: u64,
+    /// KV cache block length in positions for the continuous
+    /// scheduler's block-paged cache. `0` selects the contiguous
+    /// (non-paged) fallback layout.
+    pub kv_block_len: usize,
+    /// KV block pool size. `0` (the default) auto-sizes the pool so
+    /// every slot can reach `max_seq`
+    /// (`slots * ceil(max_seq / kv_block_len) + 1`); an explicit value
+    /// under-provisions it, engaging LRU eviction and preemption.
+    pub kv_blocks: usize,
+    /// Copy-on-write prefix sharing: finished prompts leave their full
+    /// KV blocks in a hash trie, and a new request with a shared
+    /// prompt head attaches those blocks instead of re-prefilling.
+    pub prefix_cache: bool,
 }
 
 /// Which decode implementation the engine will build.
@@ -82,6 +95,9 @@ impl Default for ServeConfig {
             slots: 16,
             prefill_chunk: 8,
             request_timeout_ms: 0,
+            kv_block_len: crate::coordinator::DEFAULT_KV_BLOCK_LEN,
+            kv_blocks: 0,
+            prefix_cache: true,
         }
     }
 }
@@ -156,6 +172,18 @@ impl ServeConfig {
                 Some(n) => n.as_u64()?,
                 None => d.request_timeout_ms,
             },
+            kv_block_len: match v.opt("kv_block_len") {
+                Some(n) => n.as_usize()?,
+                None => d.kv_block_len,
+            },
+            kv_blocks: match v.opt("kv_blocks") {
+                Some(n) => n.as_usize()?,
+                None => d.kv_blocks,
+            },
+            prefix_cache: match v.opt("prefix_cache") {
+                Some(b) => b.as_bool()?,
+                None => d.prefix_cache,
+            },
         })
     }
 
@@ -180,6 +208,9 @@ impl ServeConfig {
             ("prefill_chunk", Json::num(self.prefill_chunk as f64)),
             ("request_timeout_ms",
              Json::num(self.request_timeout_ms as f64)),
+            ("kv_block_len", Json::num(self.kv_block_len as f64)),
+            ("kv_blocks", Json::num(self.kv_blocks as f64)),
+            ("prefix_cache", Json::Bool(self.prefix_cache)),
         ])
     }
 
@@ -212,7 +243,32 @@ impl ServeConfig {
         // not OOM/hang in startup.
         ensure!(self.slots <= 256, "slots must be <= 256 (0 = static)");
         ensure!(self.prefill_chunk <= 256, "prefill_chunk must be <= 256");
+        if self.kv_block_len > 0 {
+            ensure!(self.kv_block_len <= self.max_seq,
+                    "kv_block_len {} exceeds max_seq {}", self.kv_block_len,
+                    self.max_seq);
+            let min = self.max_seq.div_ceil(self.kv_block_len) + 1;
+            ensure!(self.kv_blocks == 0 || self.kv_blocks >= min,
+                    "kv_blocks {} below the minimum {} (one lane must fit \
+                     a full max_seq context plus a transient fork block; \
+                     0 = auto-size)", self.kv_blocks, min);
+        }
+        // kv_block_len = 0 (contiguous fallback): prefix_cache and
+        // kv_blocks are simply ignored, not rejected — `--kv-block-len
+        // 0` alone must select the fallback.
         Ok(())
+    }
+
+    /// The continuous engine's KV layout, resolved from the config:
+    /// `kv_block_len = 0` selects the contiguous fallback, otherwise a
+    /// block-paged cache (`kv_blocks = 0` auto-sizes the pool).
+    pub fn kv_layout(&self) -> crate::coordinator::KvLayout {
+        if self.kv_block_len == 0 {
+            crate::coordinator::KvLayout::contiguous()
+        } else {
+            crate::coordinator::KvLayout::paged(
+                self.kv_block_len, self.kv_blocks, self.prefix_cache)
+        }
     }
 
     /// True when the resolved serving mode is the continuous-batching
@@ -335,6 +391,39 @@ mod tests {
         let max_ok = ServeConfig { slots: 256, prefill_chunk: 256,
                                    ..Default::default() };
         assert!(max_ok.validate().is_ok());
+    }
+
+    #[test]
+    fn kv_paging_knobs_roundtrip_and_validate() {
+        let d = ServeConfig::default();
+        assert_eq!(d.kv_block_len, 16, "paged by default");
+        assert_eq!(d.kv_blocks, 0, "auto-sized pool by default");
+        assert!(d.prefix_cache, "prefix sharing on by default");
+        assert!(d.kv_layout().is_paged());
+        let cfg = ServeConfig::from_json(&Json::parse(
+            r#"{"kv_block_len": 32, "kv_blocks": 64,
+                "prefix_cache": false}"#).unwrap()).unwrap();
+        assert_eq!(cfg.kv_block_len, 32);
+        assert_eq!(cfg.kv_blocks, 64);
+        assert!(!cfg.prefix_cache);
+        assert!(cfg.validate().is_ok());
+        let back = ServeConfig::from_json(&Json::parse(
+            &cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+        // kv_block_len 0 = contiguous fallback; the other knobs are
+        // ignored, not rejected.
+        let contig = ServeConfig { kv_block_len: 0, ..Default::default() };
+        assert!(contig.validate().is_ok());
+        assert!(!contig.kv_layout().is_paged());
+        // Block longer than the context is a config error.
+        let long = ServeConfig { kv_block_len: 1024, ..Default::default() };
+        assert!(long.validate().is_err());
+        // An explicit pool below one full lane + a fork block is too.
+        let tiny = ServeConfig { kv_blocks: 3, ..Default::default() };
+        assert!(tiny.validate().is_err(),
+                "max_seq 128 / block 16 needs >= 9 blocks");
+        let just = ServeConfig { kv_blocks: 9, ..Default::default() };
+        assert!(just.validate().is_ok());
     }
 
     #[test]

@@ -131,14 +131,30 @@ impl DynamicBatcher {
     }
 
     /// Immediate admission for continuous-batching slot refill: take up
-    /// to `n` oldest requests, FIFO, ignoring the batching window — a
-    /// free decode slot is capacity going to waste *now*, so holding a
-    /// request back to fill a bucket (the static-batching trade) can
-    /// only hurt. Does not count as a `poll` (the window policy never
-    /// ran).
+    /// to `n` requests, highest priority first (FIFO within a
+    /// priority), ignoring the batching window — a free decode slot is
+    /// capacity going to waste *now*, so holding a request back to
+    /// fill a bucket (the static-batching trade) can only hurt. Does
+    /// not count as a `poll` (the window policy never ran).
     pub fn take_upto(&mut self, n: usize) -> Vec<GenerateRequest> {
         let take = n.min(self.queue.len());
-        self.queue.drain(..take).collect()
+        (0..take).filter_map(|_| self.pop_best()).collect()
+    }
+
+    /// Dequeue the highest-priority queued request; arrival order
+    /// breaks ties (the first occurrence of the maximum priority), so
+    /// priority-0 traffic degrades to plain FIFO.
+    fn pop_best(&mut self) -> Option<GenerateRequest> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        for i in 1..self.queue.len() {
+            if self.queue[i].priority > self.queue[best].priority {
+                best = i;
+            }
+        }
+        self.queue.remove(best)
     }
 
     /// Time until the oldest request's window expires (for sleep timing).
@@ -150,7 +166,10 @@ impl DynamicBatcher {
     }
 
     fn take(&mut self, n: usize, bucket: usize) -> Batch {
-        let requests: Vec<GenerateRequest> = self.queue.drain(..n).collect();
+        // Static batches ride the same admission policy as slot refill:
+        // highest priority first, FIFO within a priority.
+        let requests: Vec<GenerateRequest> =
+            (0..n).filter_map(|_| self.pop_best()).collect();
         Batch { requests, bucket }
     }
 }
@@ -169,7 +188,12 @@ mod tests {
             sampling: crate::coordinator::SamplingParams::greedy(),
             accepted_at: at,
             deadline: None,
+            priority: 0,
         }
+    }
+
+    fn preq(id: u64, priority: u8, at: Instant) -> GenerateRequest {
+        GenerateRequest { priority, ..req(id, at) }
     }
 
     fn batcher(window_ms: u64) -> DynamicBatcher {
@@ -369,6 +393,41 @@ mod tests {
         assert!(b.remove(99).is_none(), "unknown id finds nothing");
         let ids: Vec<u64> = b.take_upto(4).iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 3], "FIFO order survives removal");
+    }
+
+    #[test]
+    fn priority_admits_highest_first_fifo_within() {
+        let mut b = batcher(10_000);
+        let t0 = Instant::now();
+        for (id, prio) in [(0u64, 0u8), (1, 2), (2, 1), (3, 2)] {
+            b.push(preq(id, prio, t0)).unwrap();
+        }
+        let ids: Vec<u64> = b.take_upto(4).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 3, 2, 0],
+                   "priority desc, arrival order within a priority");
+    }
+
+    #[test]
+    fn priority_zero_take_upto_degrades_to_fifo() {
+        let mut b = batcher(10_000);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let ids: Vec<u64> = b.take_upto(2).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn priority_orders_static_flush_batches_too() {
+        let mut b = batcher(0);
+        let t0 = Instant::now();
+        b.push(preq(0, 0, t0)).unwrap();
+        b.push(preq(1, 3, t0)).unwrap();
+        b.push(preq(2, 0, t0)).unwrap();
+        let batch = b.poll(t0).expect("window 0 flushes");
+        let ids: Vec<u64> = batch.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 0, 2], "high priority heads the batch");
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   every projection running the fused W4A16 `kernels::exec` backend.
 //!   Works on a bare machine.
 
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::Arc;
@@ -25,6 +26,7 @@ use super::batcher::Batch;
 #[cfg(feature = "failpoints")]
 use super::failpoints::{FaultPlan, FaultState, ForwardStage};
 use super::kvcache::{HostKvCache, KvCacheSpec};
+use super::kvpage::KvLayout;
 use super::request::{FinishReason, GenerateRequest, GenerateResponse, RequestId};
 use super::sampler::{Sampler, SamplingParams};
 
@@ -440,6 +442,15 @@ struct DecodeSlot {
     next_token: i32,
     /// When the request entered its lane (queue-wait metrics).
     admitted_at: Instant,
+    /// Seating sequence number (monotonic across the engine's life) —
+    /// the preemption victim tie-breaker: among equal priorities the
+    /// *youngest* seat is evicted, so the request with the most work
+    /// invested keeps its lane.
+    seated_seq: u64,
+    /// For a request resumed after preemption: how many of its
+    /// `generated` tokens were re-fed as prompt suffix (they must not
+    /// be re-appended to the stream if it is preempted again).
+    resumed_prefix: usize,
 }
 
 impl DecodeSlot {
@@ -532,6 +543,8 @@ impl SlotScheduler {
             generated: Vec::new(),
             next_token: 0,
             admitted_at: now,
+            seated_seq: self.seats,
+            resumed_prefix: 0,
         });
         self.seats += 1;
         Some(lane)
@@ -636,6 +649,16 @@ impl SlotScheduler {
     }
 }
 
+/// Sampler + stream state saved across a KV-pressure preemption, keyed
+/// by request id. Restoring the *sampler* (not just the tokens) is what
+/// makes resume bit-identical for seeded non-greedy sampling too: the
+/// resumed request continues the same random stream it left.
+#[derive(Debug)]
+struct PreemptState {
+    sampler: Sampler,
+    generated: Vec<i32>,
+}
+
 /// The continuous-batching engine: a [`HostModel`] pool driver. Host
 /// only, by construction — the artifact backend's compiled decode
 /// executables bake in a uniform batch position, which slot refill and
@@ -648,6 +671,14 @@ pub struct SlotEngine {
     max_seq: usize,
     vocab: usize,
     metrics: Arc<ServingMetrics>,
+    /// Streams of requests preempted under KV block pressure, waiting
+    /// to resume (recompute-on-resume: their generated tokens were
+    /// re-appended to the prompt; the saved state restores the sampler
+    /// and the already-delivered stream on re-admission).
+    preempted: HashMap<RequestId, PreemptState>,
+    /// Re-admission queue for preempted requests, FIFO, drained before
+    /// planning each step while lanes are free.
+    preempt_queue: VecDeque<GenerateRequest>,
     /// Monotonic engine step counter — the deterministic clock fault
     /// plans are addressed against. Solo isolation re-runs share the
     /// faulted step's id (the victim's re-run must re-fire its fault).
@@ -657,14 +688,40 @@ pub struct SlotEngine {
 }
 
 impl SlotEngine {
-    /// Build a pool of `slots` lanes over a host model.
+    /// Build a pool of `slots` lanes over a host model, with the KV
+    /// layout taken from the environment (`SPLITK_KV_LAYOUT=contiguous`
+    /// selects the fallback; the default is the paged cache).
     pub fn new(model: HostModel, slots: usize, prefill_chunk: usize,
                metrics: Arc<ServingMetrics>) -> Result<Self> {
+        Self::with_layout(model, slots, prefill_chunk, metrics,
+                          KvLayout::from_env())
+    }
+
+    /// Build a pool of `slots` lanes over a host model with an explicit
+    /// KV layout. A paged layout is validated so that one lane can
+    /// always reach `max_seq`: `block_len <= max_seq` and the resolved
+    /// pool holds at least `ceil(max_seq / block_len) + 1` blocks (the
+    /// `+ 1` covers a transient copy-on-write fork) — without that
+    /// floor a sole in-flight request could hit unrelievable pressure.
+    pub fn with_layout(model: HostModel, slots: usize, prefill_chunk: usize,
+                       metrics: Arc<ServingMetrics>, layout: KvLayout)
+                       -> Result<Self> {
         ensure!(slots >= 1, "slot pool needs at least one lane");
         ensure!(prefill_chunk >= 1, "prefill chunk must be >= 1");
         let max_seq = model.meta().max_seq;
         let vocab = model.meta().vocab;
-        let cache = model.alloc_cache(slots);
+        if layout.is_paged() {
+            ensure!(layout.block_len <= max_seq,
+                    "kv_block_len {} exceeds max_seq {}", layout.block_len,
+                    max_seq);
+            let blocks = layout.resolve_blocks(slots, max_seq);
+            ensure!(blocks >= layout.min_blocks(max_seq),
+                    "kv_blocks {} below the minimum {} for max_seq {} \
+                     (one lane must fit a full context plus a transient \
+                     fork block)",
+                    blocks, layout.min_blocks(max_seq), max_seq);
+        }
+        let cache = model.alloc_paged_cache(slots, &layout);
         Ok(SlotEngine {
             model,
             cache,
@@ -672,6 +729,8 @@ impl SlotEngine {
             max_seq,
             vocab,
             metrics,
+            preempted: HashMap::new(),
+            preempt_queue: VecDeque::new(),
             step_id: 0,
             #[cfg(feature = "failpoints")]
             fail: None,
@@ -727,12 +786,18 @@ impl SlotEngine {
         self.model.warm_slots(self.sched.row_budget())
     }
 
-    /// True when no lane holds a request (nothing to step).
+    /// True when no lane holds a request and no preempted request is
+    /// waiting to resume (nothing to step).
     pub fn is_idle(&self) -> bool {
-        self.sched.active() == 0
+        self.sched.active() == 0 && self.preempt_queue.is_empty()
     }
 
-    /// Seat a request in a free lane (scrubbing its KV lane).
+    /// Seat a request in a free lane. The lane's KV was already freed
+    /// when its previous tenant left (every exit path scrubs at
+    /// release), so admission only *attaches*: a resumed request gets
+    /// its saved sampler and stream back, and a fresh request may pick
+    /// up shared prefix blocks from the prefix cache, skipping prefill
+    /// for the cached positions.
     ///
     /// `Ok(None)` means seated. `Ok(Some(response))` means the request
     /// was *not* seated but already has its terminal response — its
@@ -752,23 +817,59 @@ impl SlotEngine {
         let now = Instant::now();
         if req.deadline_expired(now) {
             self.metrics.record_deadline_expired();
-            return Ok(Some(Self::unseated_response(
+            let mut resp = Self::unseated_response(
                 &req, now, FinishReason::DeadlineExceeded,
-                Some("deadline exceeded at admission".into()))));
+                Some("deadline exceeded at admission".into()));
+            // A preempted request dying at re-admission still delivers
+            // the tokens it generated before preemption.
+            if let Some(st) = self.preempted.remove(&req.id) {
+                resp.tokens = st.generated;
+            }
+            return Ok(Some(resp));
         }
         #[cfg(feature = "failpoints")]
         if let Some(f) = self.fail.as_mut() {
             if let Err(msg) = f.admit(req.id) {
                 self.metrics.record_fault_isolated();
-                return Ok(Some(Self::unseated_response(
-                    &req, now, FinishReason::Fault, Some(msg))));
+                let mut resp = Self::unseated_response(
+                    &req, now, FinishReason::Fault, Some(msg));
+                if let Some(st) = self.preempted.remove(&req.id) {
+                    resp.tokens = st.generated;
+                }
+                return Ok(Some(resp));
             }
         }
+        let id = req.id;
         let lane = self
             .sched
             .seat(req, now)
             .ok_or_else(|| anyhow!("no free decode slot"))?;
-        self.cache.reset_slot(lane);
+        if let Some(st) = self.preempted.remove(&id) {
+            // Resume: restore the sampler and the delivered stream; the
+            // re-fed prompt suffix (= those generated tokens) must not
+            // be appended again, and decode continues the same seeded
+            // random stream it left — bit-identical to an unpreempted
+            // run.
+            let s = self.sched.lanes[lane].as_mut().expect("just seated");
+            s.resumed_prefix = st.generated.len();
+            s.generated = st.generated;
+            s.sampler = st.sampler;
+        }
+        // Shared-prefix attach (paged + prefix cache only; a no-op
+        // returning 0 otherwise): cached full prompt blocks serve their
+        // positions without prefill. Resumed requests benefit too —
+        // their original prompt head usually still sits in the trie, so
+        // recompute-on-resume only recomputes the unregistered tail.
+        let cached = {
+            let s = self.sched.lanes[lane].as_ref().expect("just seated");
+            self.cache.attach_prefix(lane, &s.req.prompt)
+        };
+        if cached > 0 {
+            let s = self.sched.lanes[lane].as_mut().expect("just seated");
+            s.consumed = cached;
+            s.pos = cached;
+            self.metrics.record_prefix_hit(cached as u64);
+        }
         Ok(None)
     }
 
@@ -822,16 +923,29 @@ impl SlotEngine {
             .collect()
     }
 
-    /// Terminate lane `lane` on a non-natural finish: release the lane,
-    /// scrub its KV (so a faulted pass's partial writes cannot bleed
-    /// into the lane's next tenant), bump the matching failure counter,
-    /// and build the terminal response carrying the tokens generated so
+    /// Single owner of lane teardown: release the seat and free the
+    /// lane's KV in one motion (contiguous: scrub the written prefix;
+    /// paged: return the block table to the pool, dropping refcounts).
+    /// Every exit path — natural finish, fault, deadline, cancel,
+    /// preemption, reset — frees KV at release time through this
+    /// helper or the harvest path, so a lane is always clean when
+    /// seated (the old admit-time scrub is gone) and the chaos suite's
+    /// seat/release and block alloc/free oracles stay balanced.
+    fn free_lane(&mut self, lane: usize) -> DecodeSlot {
+        let slot = self.sched.release(lane);
+        self.cache.reset_slot(lane);
+        slot
+    }
+
+    /// Terminate lane `lane` on a non-natural finish: free the lane
+    /// (so a faulted pass's partial writes cannot bleed into the
+    /// lane's next tenant), bump the matching failure counter, and
+    /// build the terminal response carrying the tokens generated so
     /// far.
     fn fail_lane(&mut self, lane: usize, reason: FinishReason,
                  error: Option<String>) -> GenerateResponse {
         let pool = self.sched.lanes.len();
-        let slot = self.sched.release(lane);
-        self.cache.reset_slot(lane);
+        let slot = self.free_lane(lane);
         match reason {
             FinishReason::Fault => self.metrics.record_fault_isolated(),
             FinishReason::DeadlineExceeded => {
@@ -877,10 +991,26 @@ impl SlotEngine {
     /// invariant broke, not a request-level problem.
     pub fn step(&mut self) -> Result<Vec<GenerateResponse>> {
         let mut finished = self.expire_deadlines(Instant::now());
-        let (steps, need) = self.sched.plan_step();
-        if steps.is_empty() {
-            return Ok(finished);
-        }
+        self.readmit_preempted(&mut finished)?;
+        // Plan-and-reserve loop: every planned row must have a writable
+        // KV block before the forward pass runs (the write path itself
+        // is infallible). Unsatisfiable pressure preempts the
+        // lowest-priority lane and replans; each round shrinks the
+        // active set, so the loop terminates.
+        let (steps, need) = loop {
+            let (steps, need) = self.sched.plan_step();
+            if steps.is_empty() {
+                return Ok(finished);
+            }
+            match self.reserve_steps(&steps) {
+                Ok(()) => break (steps, need),
+                Err(needy) => {
+                    if let Some(resp) = self.relieve_pressure(needy) {
+                        finished.push(resp);
+                    }
+                }
+            }
+        };
         self.step_id += 1;
         #[cfg(feature = "failpoints")]
         if let Some(f) = self.fail.as_mut() {
@@ -909,6 +1039,7 @@ impl SlotEngine {
                         "backend returned {} logits, expected {}",
                         logits.len(), sampled * self.vocab);
                 self.sched.note_fed(&steps);
+                self.register_prompts(&steps);
                 finished.extend(self.harvest_pass(&steps, &need, &logits));
             }
             Err(msg) => {
@@ -973,10 +1104,118 @@ impl SlotEngine {
             if let Some(resp) = self.sched.harvest_row(s.slot, row,
                                                        self.max_seq,
                                                        &self.metrics) {
+                // Natural finish released the seat inside harvest_row;
+                // free the KV half here (registered prefix blocks
+                // survive in the trie — registration ran before this).
+                self.cache.reset_slot(s.slot);
                 finished.push(resp);
             }
         }
         finished
+    }
+
+    /// Re-admit preempted requests while lanes are free, FIFO. Runs at
+    /// the top of every step; terminal-at-admission responses (expired
+    /// deadline, chaos admit fault) are delivered through `finished`.
+    fn readmit_preempted(&mut self, finished: &mut Vec<GenerateResponse>)
+                         -> Result<()> {
+        while self.sched.free() > 0 {
+            let Some(req) = self.preempt_queue.pop_front() else { break };
+            if let Some(resp) = self.admit(req)? {
+                finished.push(resp);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reserve KV blocks for every planned row, grouped per lane run
+    /// (the planner emits same-lane rows consecutively ascending).
+    /// Contiguous caches always succeed. Returns the first lane whose
+    /// reservation the pool could not satisfy.
+    fn reserve_steps(&mut self, steps: &[SlotStep])
+                     -> std::result::Result<(), usize> {
+        let mut i = 0;
+        while i < steps.len() {
+            let lane = steps[i].slot;
+            let mut j = i;
+            while j < steps.len() && steps[j].slot == lane {
+                j += 1;
+            }
+            if self.cache.reserve(lane, steps[i].pos, steps[j - 1].pos)
+                   .is_err() {
+                return Err(lane);
+            }
+            i = j;
+        }
+        Ok(())
+    }
+
+    /// KV pressure relief: preempt the lowest-priority lane (youngest
+    /// seat breaks ties) so the pool can be replanned. With a sole
+    /// active lane there is nothing to preempt — the layout validation
+    /// guarantees one lane always fits a full context, so this is a
+    /// configuration-hole backstop: fail the needy lane rather than
+    /// livelock.
+    fn relieve_pressure(&mut self, needy: usize)
+                        -> Option<GenerateResponse> {
+        if self.sched.active() > 1 {
+            let victim = self
+                .sched
+                .lanes
+                .iter()
+                .enumerate()
+                .filter_map(|(lane, l)| l.as_ref().map(|s| {
+                    (s.req.priority, std::cmp::Reverse(s.seated_seq), lane)
+                }))
+                .min()
+                .map(|(_, _, lane)| lane)
+                .expect("active() > 1 implies an occupied lane");
+            self.preempt(victim);
+            None
+        } else {
+            Some(self.fail_lane(needy, FinishReason::Fault,
+                                Some("kv block pool exhausted".into())))
+        }
+    }
+
+    /// Preempt lane `lane` (recompute-on-resume): free the lane, append
+    /// its generated tokens to the prompt so resume re-feeds them as
+    /// prefill — any of that KV still cached in the prefix trie is
+    /// reattached instead of recomputed — and park the sampler + stream
+    /// for restoration at re-admission.
+    fn preempt(&mut self, lane: usize) {
+        let slot = self.free_lane(lane);
+        let DecodeSlot { mut req, sampler, generated, resumed_prefix, .. } =
+            slot;
+        req.prompt.extend_from_slice(&generated[resumed_prefix..]);
+        log::debug!(
+            "preempting request {} under KV pressure (priority {}, {} \
+             tokens generated)", req.id, req.priority, generated.len());
+        self.preempted.insert(req.id, PreemptState { sampler, generated });
+        self.preempt_queue.push_back(req);
+        self.metrics.record_preemption();
+    }
+
+    /// After rows were fed: register freshly-completed full prompt
+    /// blocks of each planned lane in the prefix trie (paged + prefix
+    /// cache only). Runs after `note_fed`, so `consumed` counts only
+    /// rows whose KV writes completed — a faulted pass never registers
+    /// its partial writes.
+    fn register_prompts(&mut self, steps: &[SlotStep]) {
+        if !self.cache.is_paged() {
+            return;
+        }
+        let mut last = usize::MAX;
+        for s in steps {
+            if s.slot == last {
+                continue;
+            }
+            last = s.slot;
+            if let Some(slot) = self.sched.lanes[s.slot].as_ref() {
+                self.cache.register_prompt(s.slot, &slot.req.prompt,
+                                           slot.consumed);
+            }
+        }
     }
 
     /// Fault fallback: re-run the faulted step lane by lane. The
@@ -1018,6 +1257,7 @@ impl SlotEngine {
                              (isolation re-run, lane {lane})",
                             logits.len(), sampled * self.vocab);
                     self.sched.note_fed(sub_steps);
+                    self.register_prompts(sub_steps);
                     finished.extend(
                         self.harvest_pass(sub_steps, sub_need, &logits));
                 }
@@ -1058,15 +1298,68 @@ impl SlotEngine {
 
     /// Abandon all in-flight requests and return the pool to empty
     /// (bench reuse; the serving loop never abandons work). Routed
-    /// through `release` + KV scrub so the lane accounting the chaos
-    /// suite checks stays balanced.
+    /// through [`Self::free_lane`] so the lane accounting the chaos
+    /// suite checks stays balanced; preempted state is dropped and the
+    /// prefix cache flushed so successive bench runs start cold.
     pub fn reset(&mut self) {
         for lane in 0..self.sched.lanes.len() {
             if self.sched.lanes[lane].is_some() {
-                self.sched.release(lane);
-                self.cache.reset_slot(lane);
+                self.free_lane(lane);
             }
         }
+        self.preempt_queue.clear();
+        self.preempted.clear();
+        self.cache.flush_prefix_cache();
+    }
+
+    /// True when the engine serves from the block-paged KV cache.
+    pub fn is_paged(&self) -> bool {
+        self.cache.is_paged()
+    }
+
+    /// Preempted requests waiting to resume.
+    pub fn preempted_pending(&self) -> usize {
+        self.preempt_queue.len()
+    }
+
+    /// KV blocks currently allocated to lanes or the prefix cache
+    /// (0 for a contiguous cache). With no lane active this must equal
+    /// [`Self::kv_cached_blocks`] — the chaos suite's block-leak
+    /// oracle.
+    pub fn kv_outstanding_blocks(&self) -> usize {
+        self.cache.paged().map_or(0, |p| p.pool().outstanding())
+    }
+
+    /// KV blocks held (possibly shared) by the prefix cache.
+    pub fn kv_cached_blocks(&self) -> usize {
+        self.cache.paged().map_or(0, |p| p.cached_blocks())
+    }
+
+    /// Lifetime KV block allocations (paged; the chaos suite's
+    /// double-free oracle together with [`Self::kv_blocks_freed`]).
+    pub fn kv_blocks_allocated(&self) -> u64 {
+        self.cache.paged().map_or(0, |p| p.pool().allocated())
+    }
+
+    /// Lifetime KV block frees.
+    pub fn kv_blocks_freed(&self) -> u64 {
+        self.cache.paged().map_or(0, |p| p.pool().freed())
+    }
+
+    /// Copy-on-write block forks performed so far.
+    pub fn kv_forks(&self) -> u64 {
+        self.cache.paged().map_or(0, |p| p.forks())
+    }
+
+    /// Prefix-cache LRU evictions performed so far.
+    pub fn kv_evictions(&self) -> u64 {
+        self.cache.paged().map_or(0, |p| p.evictions())
+    }
+
+    /// Drop every unreferenced prefix-cache block back to the pool;
+    /// returns how many blocks were released.
+    pub fn flush_prefix_cache(&mut self) -> usize {
+        self.cache.flush_prefix_cache()
     }
 }
 
@@ -1167,6 +1460,7 @@ mod tests {
             sampling: SamplingParams::greedy(),
             accepted_at: Instant::now(),
             deadline: None,
+            priority: 0,
         }
     }
 
@@ -1268,13 +1562,21 @@ mod tests {
 
     // ---- continuous batching: SlotEngine ----------------------------
 
-    fn slot_engine(slots: usize, chunk: usize) -> SlotEngine {
+    fn slot_engine_layout(slots: usize, chunk: usize, layout: KvLayout)
+                          -> SlotEngine {
         let meta = ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0);
         let plan = GemmPlan::fixed(
             crate::kernels::HostKernelConfig::splitk(4).with_threads(2));
         let model = HostModel::with_plan(&meta, plan).unwrap();
-        SlotEngine::new(model, slots, chunk,
-                        Arc::new(ServingMetrics::new())).unwrap()
+        SlotEngine::with_layout(model, slots, chunk,
+                                Arc::new(ServingMetrics::new()),
+                                layout).unwrap()
+    }
+
+    // The default test engine pins the *paged* layout explicitly so
+    // tests don't depend on the SPLITK_KV_LAYOUT environment.
+    fn slot_engine(slots: usize, chunk: usize) -> SlotEngine {
+        slot_engine_layout(slots, chunk, KvLayout::default_paged())
     }
 
     #[test]
@@ -1481,5 +1783,202 @@ mod tests {
         ]).unwrap();
         assert_eq!(e.lanes_seated(), 3);
         assert_eq!(e.lanes_released(), 3);
+    }
+
+    // ---- paged KV: equivalence, prefix cache, preemption ------------
+
+    fn trace_requests() -> Vec<GenerateRequest> {
+        vec![
+            req(1, (0..20).map(|i| (i * 7) % 512).collect(), 6),
+            req(2, vec![9, 9, 9], 4),
+            req(3, (0..33).map(|i| (i * 11) % 512).collect(), 5),
+            req(4, vec![100, 200], 8),
+        ]
+    }
+
+    fn stream_of(out: &[GenerateResponse], id: u64) -> &Vec<i32> {
+        &out.iter().find(|r| r.id == id).unwrap().tokens
+    }
+
+    #[test]
+    fn paged_trace_matches_contiguous_bitwise() {
+        // The tentpole safety net: the block-paged cache (any block
+        // size, prefix sharing on or off) must reproduce the
+        // contiguous cache's exact token streams under the fixed plan.
+        let mut base = slot_engine_layout(2, 4, KvLayout::contiguous());
+        assert!(!base.is_paged());
+        let want = base.run_trace(trace_requests()).unwrap();
+        for layout in [
+            KvLayout::paged(4, 0, true),
+            KvLayout::paged(16, 0, false),
+            KvLayout::default_paged(),
+        ] {
+            let mut e = slot_engine_layout(2, 4, layout.clone());
+            assert!(e.is_paged());
+            let got = e.run_trace(trace_requests()).unwrap();
+            for id in 1..=4u64 {
+                assert_eq!(stream_of(&got, id), stream_of(&want, id),
+                           "request {id} paged {layout:?} == contiguous");
+            }
+            assert_eq!(e.kv_blocks_allocated(), e.kv_blocks_freed()
+                       + e.kv_outstanding_blocks() as u64,
+                       "block alloc/free accounting balances");
+            assert_eq!(e.kv_outstanding_blocks(), e.kv_cached_blocks(),
+                       "idle pool holds only prefix-cache blocks");
+        }
+    }
+
+    #[test]
+    fn prefix_cache_skips_prefill_steps() {
+        // Acceptance: a shared-prefix request must *skip* prefill for
+        // cached positions, pinned by an exact step count. Prompt of
+        // 33 tokens, chunk 8: a cold run prefills in 5 steps + 3
+        // decode steps after the sampled-off-prefill first token = 8.
+        // A warm run attaches the two full 16-position prompt blocks
+        // (32 cached), leaving 1 prefill step + 3 decode = 4.
+        let prompt: Vec<i32> = (0..33).map(|i| (i * 13) % 512).collect();
+        let drive = |e: &mut SlotEngine, r: GenerateRequest|
+                     -> (usize, Vec<i32>) {
+            assert!(e.admit(r).unwrap().is_none());
+            let mut steps = 0;
+            loop {
+                steps += 1;
+                let done = e.step().unwrap();
+                if !done.is_empty() {
+                    return (steps, done.into_iter().next().unwrap().tokens);
+                }
+            }
+        };
+        let mut e = slot_engine_layout(1, 8, KvLayout::paged(16, 0, true));
+        let (cold_steps, cold) = drive(&mut e, req(1, prompt.clone(), 4));
+        let (warm_steps, warm) = drive(&mut e, req(2, prompt.clone(), 4));
+        assert_eq!(cold_steps, 8, "cold: 5 prefill chunks + 3 decodes");
+        assert_eq!(warm_steps, 4, "warm: 32 of 33 positions attached");
+        assert_eq!(warm, cold, "prefix reuse is bit-identical");
+        assert!(e.kv_cached_blocks() >= 2, "prompt blocks live in trie");
+        // Prefix off: no skip, same stream.
+        let mut off = slot_engine_layout(1, 8, KvLayout::paged(16, 0, false));
+        let (s1, t1) = drive(&mut off, req(3, prompt.clone(), 4));
+        let (s2, t2) = drive(&mut off, req(4, prompt, 4));
+        assert_eq!((s1, s2), (8, 8), "no prefix cache, no skipped steps");
+        assert_eq!(t1, cold);
+        assert_eq!(t2, cold);
+    }
+
+    fn tight_pool_engine(metrics: Arc<ServingMetrics>) -> SlotEngine {
+        let meta = ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0);
+        let plan = GemmPlan::fixed(
+            crate::kernels::HostKernelConfig::splitk(4).with_threads(2));
+        let model = HostModel::with_plan(&meta, plan).unwrap();
+        // 6 blocks of 16: each 20-prompt/30-token request below wants
+        // 4 blocks (positions 0..=49), so two in flight (8 > 6) force
+        // preemption mid-decode. 6 >= min_blocks(64) = 5, so the
+        // layout passes validation.
+        SlotEngine::with_layout(model, 2, 4, metrics,
+                                KvLayout::paged(16, 6, false)).unwrap()
+    }
+
+    #[test]
+    fn preempted_request_resumes_bit_identically() {
+        // Acceptance: a preempted-then-resumed request produces the
+        // same token stream as a run that was never preempted.
+        let a = req(1, (0..20).map(|i| (i * 3) % 512).collect(), 30);
+        let b = req(2, (0..20).map(|i| (i * 5) % 512).collect(), 30);
+        let mut solo = slot_engine(1, 4);
+        let want_a = solo.run_trace(vec![a.clone()]).unwrap();
+        solo.reset();
+        let want_b = solo.run_trace(vec![b.clone()]).unwrap();
+        let metrics = Arc::new(ServingMetrics::new());
+        let mut e = tight_pool_engine(metrics.clone());
+        let out = e.run_trace(vec![a, b]).unwrap();
+        assert!(metrics.preemptions() >= 1, "the tight pool must preempt");
+        assert_eq!(stream_of(&out, 1), &want_a[0].tokens);
+        assert_eq!(stream_of(&out, 2), &want_b[0].tokens);
+        assert_eq!(out.iter().map(|r| r.tokens.len()).sum::<usize>(), 60,
+                   "no token lost or duplicated across preemption");
+        assert!(e.is_idle());
+        assert_eq!(e.preempted_pending(), 0);
+        assert_eq!(e.lanes_seated(), e.lanes_released());
+        assert_eq!(e.kv_outstanding_blocks(), 0, "no leaked block");
+        assert_eq!(e.kv_blocks_allocated(), e.kv_blocks_freed());
+    }
+
+    #[test]
+    fn preempted_sampled_request_resumes_bit_identically() {
+        // The sampler is part of PreemptState: resume continues the
+        // same seeded random stream, so bit-identity holds for
+        // non-greedy sampling too.
+        let sampled = |id: u64, mult: i32, seed: u64| {
+            let mut r = req(id, (0..20).map(|i| (i * mult) % 512).collect(),
+                            30);
+            r.sampling = SamplingParams::temperature(0.8, seed);
+            r
+        };
+        let mut solo = slot_engine(1, 4);
+        let want_a = solo.run_trace(vec![sampled(1, 3, 7)]).unwrap();
+        solo.reset();
+        let want_b = solo.run_trace(vec![sampled(2, 5, 11)]).unwrap();
+        let metrics = Arc::new(ServingMetrics::new());
+        let mut e = tight_pool_engine(metrics.clone());
+        let out = e.run_trace(vec![sampled(1, 3, 7), sampled(2, 5, 11)])
+            .unwrap();
+        assert!(metrics.preemptions() >= 1);
+        assert_eq!(stream_of(&out, 1), &want_a[0].tokens);
+        assert_eq!(stream_of(&out, 2), &want_b[0].tokens);
+    }
+
+    #[test]
+    fn preemption_evicts_lowest_priority_first() {
+        // Under pressure the high-priority request keeps its lane even
+        // though it was seated *first* (equal priority would evict the
+        // youngest seat instead).
+        let mut low = req(1, (0..20).map(|i| (i * 3) % 512).collect(), 30);
+        low.priority = 0;
+        let mut high = req(2, (0..20).map(|i| (i * 5) % 512).collect(), 30);
+        high.priority = 5;
+        let metrics = Arc::new(ServingMetrics::new());
+        let mut e = tight_pool_engine(metrics.clone());
+        let out = e.run_trace(vec![low.clone(), high.clone()]).unwrap();
+        assert!(metrics.preemptions() >= 1);
+        assert_eq!(out[0].id, 2,
+                   "the high-priority request finishes first: the \
+                    low-priority one was the preemption victim");
+        // Both still complete with solo-identical streams.
+        let mut solo = slot_engine(1, 4);
+        let want_low = solo.run_trace(vec![low]).unwrap();
+        solo.reset();
+        let want_high = solo.run_trace(vec![high]).unwrap();
+        assert_eq!(stream_of(&out, 1), &want_low[0].tokens);
+        assert_eq!(stream_of(&out, 2), &want_high[0].tokens);
+    }
+
+    #[test]
+    fn paged_layout_validation_rejects_undersized_pools() {
+        let meta = ModelMeta::synthetic(64, "splitk", vec![1, 2, 4], 0);
+        let plan = GemmPlan::fixed(
+            crate::kernels::HostKernelConfig::splitk(4).with_threads(2));
+        let mk = || HostModel::with_plan(&meta, plan.clone()).unwrap();
+        let m = Arc::new(ServingMetrics::new());
+        // min_blocks(64) with 16-position blocks is 4 + 1 = 5.
+        assert!(SlotEngine::with_layout(mk(), 1, 4, m.clone(),
+                    KvLayout::paged(16, 4, false)).is_err());
+        assert!(SlotEngine::with_layout(mk(), 1, 4, m.clone(),
+                    KvLayout::paged(16, 5, false)).is_ok());
+        assert!(SlotEngine::with_layout(mk(), 1, 4, m.clone(),
+                    KvLayout::paged(128, 0, false)).is_err(),
+                "block longer than max_seq");
+    }
+
+    #[test]
+    fn flush_prefix_cache_returns_blocks_to_the_pool() {
+        let mut e = slot_engine_layout(1, 8, KvLayout::paged(16, 0, true));
+        let prompt: Vec<i32> = (0..33).map(|i| (i * 13) % 512).collect();
+        e.run_trace(vec![req(1, prompt, 2)]).unwrap();
+        let cached = e.kv_cached_blocks();
+        assert!(cached >= 2, "full prompt blocks are cached after finish");
+        assert_eq!(e.kv_outstanding_blocks(), cached);
+        assert_eq!(e.flush_prefix_cache(), cached);
+        assert_eq!(e.kv_outstanding_blocks(), 0);
+        assert_eq!(e.kv_blocks_allocated(), e.kv_blocks_freed());
     }
 }

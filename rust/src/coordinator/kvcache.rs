@@ -1,6 +1,26 @@
-//! KV-cache state management for the static-batching engine.
+//! KV-cache state management for both serving engines.
+//!
+//! One public type, two layouts behind it ([`KvStore`]):
+//!
+//! * **Contiguous** — the artifact layout `[layers, 2, b, heads,
+//!   max_seq, head_dim]`, one full-`max_seq` lane per slot. The static
+//!   engine and the compiled-artifact backend use this; it is also the
+//!   bit-identity reference the paged path is pinned against
+//!   (`SPLITK_KV_LAYOUT=contiguous` in CI).
+//! * **Paged** — block-paged via [`super::kvpage::PagedKv`]: per-slot
+//!   block tables over a fixed pool of `kv_block_len`-position blocks,
+//!   with copy-on-write prefix sharing and LRU eviction (DESIGN.md §7
+//!   "KV memory manager").
+//!
+//! `write_k`/`write_v`/`k_row`/`v_row` keep their pre-paging signatures
+//! — the model's attention loop addresses `(layer, slot, head, pos)`
+//! and never sees the indirection — so the paged path is bit-identical
+//! by construction: the same f32 rows land in the same per-position
+//! slots, only the backing storage moves.
 
 use crate::runtime::{HostTensor, ModelMeta};
+
+use super::kvpage::{KvLayout, KvPressure, PagedKv};
 
 /// Shape/creation helpers for the stacked KV cache tensor
 /// `[layers, 2, b, heads, max_seq, head_dim]` the decode artifacts use.
@@ -44,24 +64,55 @@ impl KvCacheSpec {
     }
 }
 
-/// Mutable host-side KV cache for the pure-Rust decode path, laid out
-/// exactly like the artifact tensor ([`KvCacheSpec::shape`]):
-/// `[layers, 2, b, heads, max_seq, head_dim]`, index 0 of the second
-/// axis holding keys and index 1 values. Keeping the artifact layout
-/// means the two backends stay interchangeable state-wise and the spec's
-/// sizing math is shared.
+/// Backing storage: full lanes or a paged block pool.
+#[derive(Debug, Clone)]
+enum KvStore {
+    Contiguous {
+        data: Vec<f32>,
+        /// Per-slot high-water mark: positions `[0, used)` have been
+        /// written since the last scrub, so `reset_slot` only has to
+        /// zero that prefix instead of the whole `max_seq` lane.
+        used: Vec<usize>,
+    },
+    Paged(PagedKv),
+}
+
+/// Mutable host-side KV cache for the pure-Rust decode path. The
+/// contiguous layout matches the artifact tensor exactly
+/// ([`KvCacheSpec::shape`]); the paged layout reproduces the same
+/// per-row semantics through block tables and gathers back into the
+/// artifact shape on [`HostKvCache::to_tensor`], so the two backends
+/// stay interchangeable state-wise either way.
 #[derive(Debug, Clone)]
 pub struct HostKvCache {
     spec: KvCacheSpec,
     b: usize,
-    data: Vec<f32>,
+    store: KvStore,
 }
 
 impl HostKvCache {
-    /// Zeroed cache for a batch of `b` sequences.
+    /// Zeroed contiguous cache for a batch of `b` sequences (the
+    /// static engine, the artifact backend, and the
+    /// `SPLITK_KV_LAYOUT=contiguous` fallback).
     pub fn new(spec: KvCacheSpec, b: usize) -> Self {
         let data = vec![0.0; spec.elements(b)];
-        HostKvCache { spec, b, data }
+        let used = vec![0; b];
+        HostKvCache { spec, b, store: KvStore::Contiguous { data, used } }
+    }
+
+    /// Block-paged cache for a batch of `b` slots under `layout`
+    /// (`layout.blocks == 0` auto-sizes the pool so every lane can
+    /// reach `max_seq`). Falls back to [`HostKvCache::new`] when the
+    /// layout is contiguous.
+    pub fn with_layout(spec: KvCacheSpec, b: usize, layout: &KvLayout) -> Self {
+        if !layout.is_paged() {
+            return HostKvCache::new(spec, b);
+        }
+        let blocks = layout.resolve_blocks(b, spec.max_seq);
+        let paged = PagedKv::new(spec.n_layers, spec.n_heads, spec.head_dim,
+                                 b, blocks, layout.block_len,
+                                 layout.prefix_cache);
+        HostKvCache { spec, b, store: KvStore::Paged(paged) }
     }
 
     /// Batch size this cache was allocated for.
@@ -74,6 +125,12 @@ impl HostKvCache {
         &self.spec
     }
 
+    /// True when backed by the block-paged store.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, KvStore::Paged(_))
+    }
+
+    /// Contiguous flat offset (artifact tensor layout).
     #[inline]
     fn offset(&self, layer: usize, kv: usize, slot: usize, head: usize,
               pos: usize) -> usize {
@@ -86,55 +143,184 @@ impl HostKvCache {
           * self.spec.max_seq) + pos) * self.spec.head_dim
     }
 
+    #[inline]
+    fn write(&mut self, layer: usize, kv: usize, slot: usize, head: usize,
+             pos: usize, row: &[f32]) {
+        let o = self.offset(layer, kv, slot, head, pos);
+        let hd = self.spec.head_dim;
+        match &mut self.store {
+            KvStore::Contiguous { data, used } => {
+                data[o..o + hd].copy_from_slice(row);
+                if pos + 1 > used[slot] {
+                    used[slot] = pos + 1;
+                }
+            }
+            KvStore::Paged(p) => p.write_row(slot, layer, kv, head, pos, row),
+        }
+    }
+
+    #[inline]
+    fn read(&self, layer: usize, kv: usize, slot: usize, head: usize,
+            pos: usize) -> &[f32] {
+        match &self.store {
+            KvStore::Contiguous { data, .. } => {
+                let o = self.offset(layer, kv, slot, head, pos);
+                &data[o..o + self.spec.head_dim]
+            }
+            KvStore::Paged(p) => p.row(slot, layer, kv, head, pos),
+        }
+    }
+
     /// Store a key row (`head_dim` floats) at a position.
     pub fn write_k(&mut self, layer: usize, slot: usize, head: usize,
                    pos: usize, row: &[f32]) {
-        let o = self.offset(layer, 0, slot, head, pos);
-        self.data[o..o + self.spec.head_dim].copy_from_slice(row);
+        self.write(layer, 0, slot, head, pos, row);
     }
 
     /// Store a value row (`head_dim` floats) at a position.
     pub fn write_v(&mut self, layer: usize, slot: usize, head: usize,
                    pos: usize, row: &[f32]) {
-        let o = self.offset(layer, 1, slot, head, pos);
-        self.data[o..o + self.spec.head_dim].copy_from_slice(row);
+        self.write(layer, 1, slot, head, pos, row);
     }
 
     /// Key row at a position.
     pub fn k_row(&self, layer: usize, slot: usize, head: usize,
                  pos: usize) -> &[f32] {
-        let o = self.offset(layer, 0, slot, head, pos);
-        &self.data[o..o + self.spec.head_dim]
+        self.read(layer, 0, slot, head, pos)
     }
 
     /// Value row at a position.
     pub fn v_row(&self, layer: usize, slot: usize, head: usize,
                  pos: usize) -> &[f32] {
-        let o = self.offset(layer, 1, slot, head, pos);
-        &self.data[o..o + self.spec.head_dim]
+        self.read(layer, 1, slot, head, pos)
     }
 
-    /// Zero one slot's lane — every layer, K and V, every position —
-    /// without touching its neighbors. The continuous-batching engine
-    /// calls this when a freed slot is refilled with a new request:
-    /// correctness only needs positions `[start, pos]`, which the new
-    /// occupant's prefill rewrites before reading, but a scrubbed lane
-    /// keeps stale cross-request state out of the pool by construction
-    /// (and makes cache-inspection tests meaningful).
+    /// Per-slot high-water mark: positions `[0, used)` hold live rows.
+    pub fn used(&self, slot: usize) -> usize {
+        match &self.store {
+            KvStore::Contiguous { used, .. } => used[slot],
+            KvStore::Paged(p) => p.used(slot),
+        }
+    }
+
+    /// Free one slot's KV state. Contiguous: zero the written prefix
+    /// `[0, used)` of every (layer, k|v, head) lane — not the whole
+    /// `max_seq` lane; positions past the high-water mark were never
+    /// written and are still zero, so a refilled lane is exactly as
+    /// clean as the old full scrub left it at a fraction of the work.
+    /// Paged: return the slot's blocks to the free list in O(1), no
+    /// zeroing (stale rows are unreachable: reads stop at the new
+    /// occupant's high-water mark, snapshots gather `[0, used)` only).
     pub fn reset_slot(&mut self, slot: usize) {
         assert!(slot < self.b, "reset_slot: slot {slot} >= batch {}", self.b);
-        let lane = self.spec.n_heads * self.spec.max_seq * self.spec.head_dim;
-        for layer in 0..self.spec.n_layers {
-            for kv in 0..2 {
-                let o = self.offset(layer, kv, slot, 0, 0);
-                self.data[o..o + lane].fill(0.0);
+        let hd = self.spec.head_dim;
+        match &mut self.store {
+            KvStore::Contiguous { data, used } => {
+                let high = used[slot];
+                if high == 0 {
+                    return;
+                }
+                for layer in 0..self.spec.n_layers {
+                    for kv in 0..2 {
+                        for head in 0..self.spec.n_heads {
+                            let o = (((((layer * 2 + kv) * self.b + slot)
+                                       * self.spec.n_heads + head)
+                                      * self.spec.max_seq)) * hd;
+                            data[o..o + high * hd].fill(0.0);
+                        }
+                    }
+                }
+                used[slot] = 0;
+            }
+            KvStore::Paged(p) => p.free_slot(slot),
+        }
+    }
+
+    /// Snapshot as a [`HostTensor`] in the artifact shape. The paged
+    /// store gathers live rows (`[0, used)` per slot) through the block
+    /// tables into a zeroed artifact-shaped buffer, so both layouts
+    /// produce interchangeable tensors.
+    pub fn to_tensor(&self) -> HostTensor {
+        match &self.store {
+            KvStore::Contiguous { data, .. } => {
+                HostTensor::f32(self.spec.shape(self.b), data.clone())
+            }
+            KvStore::Paged(p) => {
+                let hd = self.spec.head_dim;
+                let mut data = vec![0.0f32; self.spec.elements(self.b)];
+                for slot in 0..self.b {
+                    for pos in 0..p.used(slot) {
+                        for layer in 0..self.spec.n_layers {
+                            for kv in 0..2 {
+                                for head in 0..self.spec.n_heads {
+                                    let o = self.offset(layer, kv, slot,
+                                                        head, pos);
+                                    data[o..o + hd].copy_from_slice(
+                                        p.row(slot, layer, kv, head, pos));
+                                }
+                            }
+                        }
+                    }
+                }
+                HostTensor::f32(self.spec.shape(self.b), data)
             }
         }
     }
 
-    /// Snapshot as a [`HostTensor`] in the artifact shape.
-    pub fn to_tensor(&self) -> HostTensor {
-        HostTensor::f32(self.spec.shape(self.b), self.data.clone())
+    // ---- paged-path operations (no-ops on the contiguous layout) ----
+
+    /// Make positions `[from, to]` of `slot` writable (allocate /
+    /// COW-fork blocks). Contiguous lanes are always writable.
+    pub fn reserve(&mut self, slot: usize, from: usize, to: usize)
+                   -> Result<(), KvPressure> {
+        match &mut self.store {
+            KvStore::Contiguous { .. } => Ok(()),
+            KvStore::Paged(p) => p.reserve(slot, from, to),
+        }
+    }
+
+    /// True when `(slot, pos)` may be written without a fork — the
+    /// model layer asserts this before every KV write.
+    pub fn writable(&self, slot: usize, pos: usize) -> bool {
+        match &self.store {
+            KvStore::Contiguous { .. } => true,
+            KvStore::Paged(p) => p.writable(slot, pos),
+        }
+    }
+
+    /// Attach cached shared-prefix blocks for `prompt` to `slot`;
+    /// returns the number of prompt positions served from the cache
+    /// (0 on the contiguous layout or a cold cache).
+    pub fn attach_prefix(&mut self, slot: usize, prompt: &[i32]) -> usize {
+        match &mut self.store {
+            KvStore::Contiguous { .. } => 0,
+            KvStore::Paged(p) => p.attach_prefix(slot, prompt),
+        }
+    }
+
+    /// Register `slot`'s completed full prompt blocks in the prefix
+    /// trie (`consumed` = prompt positions already written).
+    pub fn register_prompt(&mut self, slot: usize, prompt: &[i32],
+                           consumed: usize) {
+        if let KvStore::Paged(p) = &mut self.store {
+            p.register_prompt(slot, prompt, consumed);
+        }
+    }
+
+    /// Drop every prefix-cache reference; returns entries flushed.
+    pub fn flush_prefix_cache(&mut self) -> usize {
+        match &mut self.store {
+            KvStore::Contiguous { .. } => 0,
+            KvStore::Paged(p) => p.flush_prefix(),
+        }
+    }
+
+    /// The paged store, when active (chaos-audit block accounting).
+    pub fn paged(&self) -> Option<&PagedKv> {
+        match &self.store {
+            KvStore::Contiguous { .. } => None,
+            KvStore::Paged(p) => Some(p),
+        }
     }
 }
 
@@ -148,6 +334,10 @@ mod tests {
             max_seq: 128, group_size: 64, variant: "splitk".into(),
             batch_buckets: vec![1, 2, 4, 8, 16], seed: 0,
         }
+    }
+
+    fn paged_layout(block_len: usize) -> KvLayout {
+        KvLayout::paged(block_len, 0, true)
     }
 
     #[test]
@@ -191,6 +381,22 @@ mod tests {
     }
 
     #[test]
+    fn paged_cache_roundtrips_rows() {
+        let spec = KvCacheSpec::from_model(&meta());
+        let hd = spec.head_dim;
+        let mut c = HostKvCache::with_layout(spec, 2, &paged_layout(16));
+        assert!(c.is_paged());
+        let krow: Vec<f32> = (0..hd).map(|i| i as f32).collect();
+        c.reserve(1, 0, 17).unwrap();
+        c.write_k(3, 1, 2, 17, &krow);
+        c.write_v(0, 1, 0, 3, &krow);
+        assert_eq!(c.k_row(3, 1, 2, 17), krow.as_slice());
+        assert_eq!(c.v_row(0, 1, 0, 3), krow.as_slice());
+        assert_eq!(c.used(1), 18);
+        assert_eq!(c.used(0), 0);
+    }
+
+    #[test]
     fn reset_slot_scrubs_one_lane_only() {
         let spec = KvCacheSpec::from_model(&meta());
         let hd = spec.head_dim;
@@ -206,6 +412,61 @@ mod tests {
         // Neighbor lanes keep their rows.
         assert_eq!(c.k_row(0, 0, 1, 4), row.as_slice());
         assert_eq!(c.v_row(3, 2, 0, 7), row.as_slice());
+    }
+
+    #[test]
+    fn reset_slot_high_water_scrub_leaves_lane_fully_clean() {
+        // Regression (ISSUE 7 satellite): the scrub is bounded by the
+        // high-water mark, and a refilled lane must still read clean at
+        // EVERY position — including past the old occupant's writes.
+        let spec = KvCacheSpec::from_model(&meta());
+        let max_seq = spec.max_seq;
+        let hd = spec.head_dim;
+        let mut c = HostKvCache::new(spec, 2);
+        let row = vec![2.5f32; hd];
+        // Sparse writes up to position 9 only.
+        for pos in [0usize, 3, 9] {
+            for layer in 0..4 {
+                for head in 0..4 {
+                    c.write_k(layer, 0, head, pos, &row);
+                    c.write_v(layer, 0, head, pos, &row);
+                }
+            }
+        }
+        assert_eq!(c.used(0), 10);
+        c.reset_slot(0);
+        assert_eq!(c.used(0), 0);
+        for pos in 0..max_seq {
+            for layer in 0..4 {
+                for head in 0..4 {
+                    assert!(c.k_row(layer, 0, head, pos).iter()
+                             .all(|&x| x == 0.0),
+                            "stale K at layer {layer} head {head} pos {pos}");
+                    assert!(c.v_row(layer, 0, head, pos).iter()
+                             .all(|&x| x == 0.0),
+                            "stale V at layer {layer} head {head} pos {pos}");
+                }
+            }
+        }
+        // And the scrub-then-rewrite cycle keeps working.
+        c.write_k(0, 0, 0, 5, &row);
+        assert_eq!(c.used(0), 6);
+    }
+
+    #[test]
+    fn paged_reset_slot_returns_blocks() {
+        let spec = KvCacheSpec::from_model(&meta());
+        let hd = spec.head_dim;
+        let mut c = HostKvCache::with_layout(spec, 2, &paged_layout(16));
+        c.reserve(0, 0, 40).unwrap();
+        c.write_k(0, 0, 0, 40, &vec![1.0; hd]);
+        let p = c.paged().unwrap();
+        assert_eq!(p.pool().outstanding(), 3);
+        c.reset_slot(0);
+        let p = c.paged().unwrap();
+        assert_eq!(p.pool().outstanding(), 0);
+        assert_eq!(p.pool().allocated(), p.pool().freed());
+        assert_eq!(c.used(0), 0);
     }
 
     #[test]
@@ -227,5 +488,30 @@ mod tests {
         let flat = layer * strides[0] + kv * strides[1] + slot * strides[2]
             + head * strides[3] + pos * strides[4];
         assert_eq!(t.as_f32().unwrap()[flat], 9.0);
+    }
+
+    #[test]
+    fn paged_to_tensor_matches_contiguous() {
+        // Same writes through both layouts → bit-identical artifact
+        // snapshots (the paged gather fills exactly the live rows).
+        let spec = KvCacheSpec::from_model(&meta());
+        let hd = spec.head_dim;
+        let mut contig = HostKvCache::new(spec.clone(), 2);
+        let mut paged = HostKvCache::with_layout(spec, 2, &paged_layout(16));
+        let writes = [(0usize, 0usize, 1usize, 0usize),
+                      (1, 0, 3, 17), (3, 1, 0, 2), (2, 1, 2, 33)];
+        for (i, &(layer, slot, head, pos)) in writes.iter().enumerate() {
+            let krow = vec![i as f32 + 1.0; hd];
+            let vrow = vec![-(i as f32) - 1.0; hd];
+            paged.reserve(slot, 0, pos).unwrap();
+            for c in [&mut contig, &mut paged] {
+                c.write_k(layer, slot, head, pos, &krow);
+                c.write_v(layer, slot, head, pos, &vrow);
+            }
+        }
+        let a = contig.to_tensor();
+        let b = paged.to_tensor();
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
     }
 }

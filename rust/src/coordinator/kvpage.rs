@@ -1,0 +1,870 @@
+//! Block-paged KV memory (DESIGN.md §7 "KV memory manager").
+//!
+//! Replaces lane-granularity KV (one full-`max_seq` lane per slot) with
+//! fixed-size **position blocks**:
+//!
+//! * [`BlockPool`] — a free list of `block_len`-position blocks with
+//!   per-block refcounts and lifetime alloc/free counters (the chaos
+//!   suite's block leak/double-free oracle, mirroring the slot
+//!   scheduler's seat/release counters; `release` of a free block
+//!   panics loudly).
+//! * [`PagedKv`] — per-slot block tables indirecting `(slot, pos)` to
+//!   `(block, pos % block_len)`; [`super::kvcache::HostKvCache`] hides
+//!   this behind the same `write_k`/`k_row` API the contiguous layout
+//!   uses, so the model's attention loop reads through the block table
+//!   without knowing it.
+//! * [`PrefixCache`] — a prompt token-hash trie mapping shared prompt
+//!   heads to refcounted read-only blocks (copy-on-write sharing): a
+//!   full prompt block is registered under the FNV-1a chain hash of
+//!   every token up to its end, an identical later prompt attaches the
+//!   cached blocks instead of recomputing them, and a block is forked
+//!   (copied) only when a sequence must write into a block someone else
+//!   still references. Under block pressure, cached blocks nobody
+//!   references are evicted in LRU order before any request is
+//!   preempted.
+//!
+//! Determinism: block ids come off a LIFO free list seeded in ascending
+//! order, trie eviction picks the unique minimum of a monotonic use
+//! clock, and the chain hash is integer-exact — so paged serving replays
+//! bit-for-bit, and the Python mirror
+//! (`python/tests/test_kvpage_mirror.py`) pins the same hash vectors and
+//! allocator invariants without cross-execution.
+
+use std::collections::HashMap;
+
+/// Default positions per KV block (`ServeConfig.kv_block_len`).
+pub const DEFAULT_KV_BLOCK_LEN: usize = 16;
+
+/// How the slot engine lays out its KV cache (`ServeConfig` →
+/// `SlotEngine::with_layout`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvLayout {
+    /// Positions per block; `0` selects the contiguous-lane fallback
+    /// (the pre-paging layout, kept behind the same cache API for
+    /// artifact/tensor interop and as a bit-identity reference).
+    pub block_len: usize,
+    /// Total blocks in the pool; `0` = auto-size so every lane can
+    /// reach `max_seq` without preemption (`slots * ceil(max_seq /
+    /// block_len) + 1`, the +1 covering a transient copy-on-write
+    /// fork).
+    pub blocks: usize,
+    /// Enable the shared-prefix trie (ignored on the contiguous
+    /// fallback).
+    pub prefix_cache: bool,
+}
+
+impl KvLayout {
+    /// The contiguous-lane fallback layout.
+    pub fn contiguous() -> Self {
+        KvLayout { block_len: 0, blocks: 0, prefix_cache: false }
+    }
+
+    /// Paged with explicit parameters.
+    pub fn paged(block_len: usize, blocks: usize, prefix_cache: bool) -> Self {
+        KvLayout { block_len, blocks, prefix_cache }
+    }
+
+    /// The serving default: paged, auto-sized pool, prefix cache on.
+    pub fn default_paged() -> Self {
+        KvLayout::paged(DEFAULT_KV_BLOCK_LEN, 0, true)
+    }
+
+    /// Default layout honoring the `SPLITK_KV_LAYOUT` env var
+    /// (`contiguous` selects the fallback; anything else, or unset, is
+    /// the paged default). CI uses this to run the equivalence, golden
+    /// and chaos suites against both layouts without code changes.
+    pub fn from_env() -> Self {
+        match std::env::var("SPLITK_KV_LAYOUT") {
+            Ok(v) if v.eq_ignore_ascii_case("contiguous")
+                || v.eq_ignore_ascii_case("contig") => KvLayout::contiguous(),
+            _ => KvLayout::default_paged(),
+        }
+    }
+
+    /// True when this layout pages (block_len > 0).
+    pub fn is_paged(&self) -> bool {
+        self.block_len > 0
+    }
+
+    /// Resolve the pool size for a given pool of `slots` lanes over a
+    /// `max_seq` context: explicit when set, else auto-sized so no
+    /// preemption is ever forced (worst case every lane at `max_seq`,
+    /// plus one transient fork block).
+    pub fn resolve_blocks(&self, slots: usize, max_seq: usize) -> usize {
+        if self.blocks > 0 {
+            self.blocks
+        } else {
+            slots * max_seq.div_ceil(self.block_len) + 1
+        }
+    }
+
+    /// Minimum legal pool size: one lane must always be able to reach
+    /// `max_seq` after every other lane is preempted and every cached
+    /// block evicted (`ceil(max_seq / block_len)` blocks plus one
+    /// transient fork block) — below this a solo request could wedge
+    /// the engine.
+    pub fn min_blocks(&self, max_seq: usize) -> usize {
+        max_seq.div_ceil(self.block_len) + 1
+    }
+}
+
+// ====================================================================
+// Block pool
+// ====================================================================
+
+/// Fixed pool of KV blocks: LIFO free list + per-block refcounts.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    block_len: usize,
+    /// Free block ids; seeded descending so `pop` hands out ascending
+    /// ids from an empty pool (deterministic, debuggable).
+    free: Vec<u32>,
+    /// Per-block reference count; 0 = on the free list.
+    refcount: Vec<u32>,
+    /// Lifetime count of physical allocations off the free list.
+    allocated: u64,
+    /// Lifetime count of physical returns to the free list.
+    freed: u64,
+}
+
+impl BlockPool {
+    /// A pool of `total` blocks of `block_len` positions each.
+    pub fn new(total: usize, block_len: usize) -> Self {
+        assert!(block_len >= 1, "block_len must be >= 1");
+        assert!(total >= 1, "block pool needs at least one block");
+        BlockPool {
+            block_len,
+            free: (0..total as u32).rev().collect(),
+            refcount: vec![0; total],
+            allocated: 0,
+            freed: 0,
+        }
+    }
+
+    /// Positions per block.
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    /// Total blocks in the pool.
+    pub fn total(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Blocks on the free list.
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently held (total - free).
+    pub fn outstanding(&self) -> usize {
+        self.total() - self.free.len()
+    }
+
+    /// Lifetime physical allocations (chaos leak oracle: equals
+    /// [`Self::freed`] plus [`Self::outstanding`] at all times).
+    pub fn allocated(&self) -> u64 {
+        self.allocated
+    }
+
+    /// Lifetime physical frees.
+    pub fn freed(&self) -> u64 {
+        self.freed
+    }
+
+    /// Current reference count of `block`.
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount[block as usize]
+    }
+
+    /// True when more than one holder references `block` (writes must
+    /// fork first).
+    pub fn is_shared(&self, block: u32) -> bool {
+        self.refcount[block as usize] > 1
+    }
+
+    /// Take a block off the free list (refcount 1). `None` when the
+    /// pool is exhausted — the caller evicts or preempts.
+    pub fn alloc(&mut self) -> Option<u32> {
+        let b = self.free.pop()?;
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        self.refcount[b as usize] = 1;
+        self.allocated += 1;
+        Some(b)
+    }
+
+    /// Add a reference to an allocated block (prefix-cache attach /
+    /// trie registration).
+    pub fn retain(&mut self, block: u32) {
+        let rc = &mut self.refcount[block as usize];
+        assert!(*rc > 0, "retain of a free KV block {block}");
+        *rc += 1;
+    }
+
+    /// Drop one reference; returns the block to the free list when the
+    /// count hits zero (returns `true` then). Releasing a free block is
+    /// a double free and panics loudly — the paged analog of the slot
+    /// scheduler's double-release panic.
+    pub fn release(&mut self, block: u32) -> bool {
+        let rc = &mut self.refcount[block as usize];
+        assert!(*rc > 0, "release of a free KV block {block} (double free)");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(block);
+            self.freed += 1;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ====================================================================
+// Prompt token-hash trie (prefix cache)
+// ====================================================================
+
+/// FNV-1a (64-bit) chain hash: folds the parent block's hash (8 LE
+/// bytes; 0 at the root) then each token (4 LE bytes). Chaining makes
+/// the key identify the *whole* prefix through this block, not just the
+/// block's own tokens — two blocks with identical tokens but different
+/// ancestors never collide into sharing. Integer-exact in any language;
+/// the Python mirror pins the same vectors.
+pub fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x1_0000_0000_01b3;
+    let mut h = OFFSET;
+    for byte in parent.to_le_bytes() {
+        h = (h ^ byte as u64).wrapping_mul(PRIME);
+    }
+    for t in tokens {
+        for byte in (*t as u32).to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+#[derive(Debug, Clone)]
+struct CachedBlock {
+    block: u32,
+    /// Monotonic use clock value at the last lookup hit or
+    /// registration — unique per entry, so LRU eviction has a
+    /// deterministic total order.
+    last_used: u64,
+}
+
+/// The prompt-prefix trie: chain hash of a full prompt block → cached
+/// block id. Holds one pool reference per entry.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixCache {
+    map: HashMap<u64, CachedBlock>,
+    clock: u64,
+}
+
+impl PrefixCache {
+    fn touch(&mut self, hash: u64) {
+        let c = self.clock;
+        self.clock += 1;
+        if let Some(e) = self.map.get_mut(&hash) {
+            e.last_used = c;
+        }
+    }
+
+    /// Number of cached blocks (= pool references held by the trie).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no block is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+// ====================================================================
+// Paged store
+// ====================================================================
+
+/// Raised when the pool cannot supply a block even after LRU eviction;
+/// the engine answers by preempting the lowest-priority request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPressure;
+
+impl std::fmt::Display for KvPressure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KV block pool exhausted")
+    }
+}
+
+/// The paged KV store: block pool + flat block storage + per-slot block
+/// tables + optional prefix trie. Row granularity and dtype match the
+/// contiguous cache exactly (one `head_dim` f32 row per
+/// `(layer, k|v, head, pos)`), so `HostKvCache` can route either layout
+/// behind one API.
+///
+/// In-block layout (stride math):
+/// `((layer * 2 + kv) * n_heads + head) * block_len + pos % block_len`,
+/// times `head_dim` — a block carries *all* layers and heads for its
+/// `block_len` positions, so a copy-on-write fork is one contiguous
+/// memcpy and a freed block returns to the pool in O(1) with no scrub
+/// (stale data is never read: reads stop at the per-slot high-water
+/// mark, and snapshots gather only `[0, used)`).
+#[derive(Debug, Clone)]
+pub struct PagedKv {
+    pool: BlockPool,
+    data: Vec<f32>,
+    /// f32 elements per block.
+    block_stride: usize,
+    n_heads: usize,
+    head_dim: usize,
+    /// Per-slot block table: table[pos / block_len] is the block
+    /// holding position `pos`.
+    tables: Vec<Vec<u32>>,
+    /// Per-slot high-water mark: positions `[0, used)` hold valid rows
+    /// (written by this slot or attached from the prefix cache).
+    used: Vec<usize>,
+    /// Per-slot count of leading prompt blocks already present in the
+    /// trie (attached at admission or registered after prefill).
+    registered: Vec<usize>,
+    /// Per-slot chain hash through the registered blocks.
+    reg_hash: Vec<u64>,
+    prefix: Option<PrefixCache>,
+    forks: u64,
+    evictions: u64,
+}
+
+impl PagedKv {
+    /// A pool of `blocks` blocks serving `slots` sequences.
+    pub fn new(n_layers: usize, n_heads: usize, head_dim: usize,
+               slots: usize, blocks: usize, block_len: usize,
+               prefix_cache: bool) -> Self {
+        let pool = BlockPool::new(blocks, block_len);
+        let block_stride = n_layers * 2 * n_heads * block_len * head_dim;
+        PagedKv {
+            pool,
+            data: vec![0.0; blocks * block_stride],
+            block_stride,
+            n_heads,
+            head_dim,
+            tables: vec![Vec::new(); slots],
+            used: vec![0; slots],
+            registered: vec![0; slots],
+            reg_hash: vec![0; slots],
+            prefix: prefix_cache.then(PrefixCache::default),
+            forks: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Positions per block.
+    pub fn block_len(&self) -> usize {
+        self.pool.block_len()
+    }
+
+    /// The block pool (counters for tests and the chaos audit).
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    /// Blocks held by the prefix trie.
+    pub fn cached_blocks(&self) -> usize {
+        self.prefix.as_ref().map_or(0, |p| p.len())
+    }
+
+    /// Copy-on-write forks performed.
+    pub fn forks(&self) -> u64 {
+        self.forks
+    }
+
+    /// Cached blocks evicted under pressure.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// High-water mark of `slot` (positions `[0, used)` are valid).
+    pub fn used(&self, slot: usize) -> usize {
+        self.used[slot]
+    }
+
+    /// Blocks currently mapped by `slot`'s table.
+    pub fn table_len(&self, slot: usize) -> usize {
+        self.tables[slot].len()
+    }
+
+    #[inline]
+    fn row_start(&self, slot: usize, layer: usize, kv: usize, head: usize,
+                 pos: usize) -> usize {
+        let l = self.pool.block_len();
+        let block = self.tables[slot][pos / l] as usize;
+        let in_block =
+            ((layer * 2 + kv) * self.n_heads + head) * l + pos % l;
+        block * self.block_stride + in_block * self.head_dim
+    }
+
+    /// Read one row through the block table.
+    pub fn row(&self, slot: usize, layer: usize, kv: usize, head: usize,
+               pos: usize) -> &[f32] {
+        let o = self.row_start(slot, layer, kv, head, pos);
+        &self.data[o..o + self.head_dim]
+    }
+
+    /// Write one row through the block table. The target block must be
+    /// exclusively owned — `reserve` forks shared blocks before any
+    /// write can reach them, so a write to a shared block is an engine
+    /// bug and panics.
+    pub fn write_row(&mut self, slot: usize, layer: usize, kv: usize,
+                     head: usize, pos: usize, row: &[f32]) {
+        let l = self.pool.block_len();
+        let block = self.tables[slot][pos / l];
+        assert!(!self.pool.is_shared(block),
+                "write to shared KV block {block} (missing COW fork)");
+        let o = self.row_start(slot, layer, kv, head, pos);
+        self.data[o..o + self.head_dim].copy_from_slice(row);
+        if pos + 1 > self.used[slot] {
+            self.used[slot] = pos + 1;
+        }
+    }
+
+    /// True when `(slot, pos)` is backed by an exclusively-owned block
+    /// (the model layer's pre-write validation hook).
+    pub fn writable(&self, slot: usize, pos: usize) -> bool {
+        let l = self.pool.block_len();
+        self.tables[slot]
+            .get(pos / l)
+            .is_some_and(|&b| !self.pool.is_shared(b))
+    }
+
+    /// Allocate, evicting least-recently-used unreferenced cached
+    /// blocks if the free list is empty.
+    fn alloc_or_evict(&mut self) -> Option<u32> {
+        loop {
+            if let Some(b) = self.pool.alloc() {
+                return Some(b);
+            }
+            if !self.evict_lru(1) {
+                return None;
+            }
+        }
+    }
+
+    /// Evict up to `want` LRU cached blocks nobody else references.
+    /// Returns true if at least one block was freed.
+    fn evict_lru(&mut self, want: usize) -> bool {
+        let Some(prefix) = self.prefix.as_mut() else { return false };
+        let mut freed = 0;
+        while freed < want {
+            // Deterministic victim: unique minimum of the use clock
+            // among entries only the trie still references.
+            let victim = prefix
+                .map
+                .iter()
+                .filter(|(_, e)| self.pool.refcount(e.block) == 1)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(h, e)| (*h, e.block));
+            let Some((hash, block)) = victim else { break };
+            prefix.map.remove(&hash);
+            let physically = self.pool.release(block);
+            debug_assert!(physically, "evicted block had hidden references");
+            self.evictions += 1;
+            freed += 1;
+        }
+        freed > 0
+    }
+
+    /// Drop every trie reference (cached blocks with no other holder
+    /// return to the free list). Tests use this to prove the pool
+    /// drains to fully-free; a server could use it as a cache flush.
+    pub fn flush_prefix(&mut self) -> usize {
+        let Some(prefix) = self.prefix.as_mut() else { return 0 };
+        let mut hashes: Vec<(u64, u64)> = prefix
+            .map
+            .iter()
+            .map(|(h, e)| (e.last_used, *h))
+            .collect();
+        hashes.sort_unstable();
+        let n = hashes.len();
+        for (_, h) in hashes {
+            let block = prefix.map.remove(&h).expect("listed entry").block;
+            self.pool.release(block);
+        }
+        n
+    }
+
+    /// Consult the trie for `prompt` and attach the longest chain of
+    /// cached full prompt blocks to `slot`. Returns the number of
+    /// positions whose K/V is served from the cache (prefill skips
+    /// them), capped at `prompt.len() - 1` — the final prompt position
+    /// is always recomputed so its logits exist to sample from. A
+    /// partially-used cached tail block is attached shared and forked
+    /// on first write (`reserve`).
+    pub fn attach_prefix(&mut self, slot: usize, prompt: &[i32]) -> usize {
+        assert!(self.tables[slot].is_empty(),
+                "attach_prefix on a non-empty table (lane not freed?)");
+        self.used[slot] = 0;
+        self.registered[slot] = 0;
+        self.reg_hash[slot] = 0;
+        let Some(prefix) = self.prefix.as_mut() else { return 0 };
+        let l = self.pool.block_len();
+        let full = prompt.len() / l;
+        let mut h = 0u64;
+        let mut matched: Vec<u32> = Vec::new();
+        for bi in 0..full {
+            let nh = chain_hash(h, &prompt[bi * l..(bi + 1) * l]);
+            match prefix.map.get(&nh) {
+                Some(e) => {
+                    matched.push(e.block);
+                    prefix.touch(nh);
+                    h = nh;
+                }
+                None => break,
+            }
+        }
+        if matched.is_empty() {
+            return 0;
+        }
+        let cached = (matched.len() * l).min(prompt.len() - 1);
+        debug_assert_eq!(cached.div_ceil(l), matched.len());
+        for &b in &matched {
+            self.pool.retain(b);
+            self.tables[slot].push(b);
+        }
+        self.used[slot] = cached;
+        self.registered[slot] = matched.len();
+        self.reg_hash[slot] = h;
+        cached
+    }
+
+    /// Register every newly-completed full prompt block of `slot` in
+    /// the trie (`consumed` = prompt positions whose K/V has been
+    /// written). Idempotent per block; a concurrent identical prompt
+    /// that registered first keeps its entry (ours stays private).
+    pub fn register_prompt(&mut self, slot: usize, prompt: &[i32],
+                           consumed: usize) {
+        if self.prefix.is_none() {
+            return;
+        }
+        let l = self.pool.block_len();
+        let limit = consumed.min(prompt.len());
+        while (self.registered[slot] + 1) * l <= limit {
+            let bi = self.registered[slot];
+            let h = chain_hash(self.reg_hash[slot],
+                               &prompt[bi * l..(bi + 1) * l]);
+            let block = self.tables[slot][bi];
+            let prefix = self.prefix.as_mut().expect("checked above");
+            if prefix.map.contains_key(&h) {
+                prefix.touch(h);
+            } else {
+                self.pool.retain(block);
+                let c = prefix.clock;
+                prefix.clock += 1;
+                prefix.map.insert(h, CachedBlock { block, last_used: c });
+            }
+            self.reg_hash[slot] = h;
+            self.registered[slot] += 1;
+        }
+    }
+
+    /// Make positions `[from, to]` of `slot` writable: extend the block
+    /// table (allocating, LRU-evicting cached blocks on exhaustion) and
+    /// fork any shared block in the write range (the copy-on-write
+    /// point). Fails with [`KvPressure`] only when the pool is truly
+    /// exhausted — the engine then preempts.
+    pub fn reserve(&mut self, slot: usize, from: usize, to: usize)
+                   -> Result<(), KvPressure> {
+        debug_assert!(from <= to);
+        let l = self.pool.block_len();
+        for bi in from / l..=to / l {
+            if bi < self.tables[slot].len() {
+                let block = self.tables[slot][bi];
+                if self.pool.is_shared(block) {
+                    self.fork(slot, bi)?;
+                }
+            } else {
+                debug_assert_eq!(bi, self.tables[slot].len(),
+                                 "non-sequential block reservation");
+                let b = self.alloc_or_evict().ok_or(KvPressure)?;
+                self.tables[slot].push(b);
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write fork: give `slot` a private copy of block index
+    /// `bi`, releasing its reference to the shared original.
+    fn fork(&mut self, slot: usize, bi: usize) -> Result<(), KvPressure> {
+        let old = self.tables[slot][bi];
+        let new = self.alloc_or_evict().ok_or(KvPressure)?;
+        let src = old as usize * self.block_stride;
+        let dst = new as usize * self.block_stride;
+        self.data.copy_within(src..src + self.block_stride, dst);
+        self.pool.release(old);
+        self.tables[slot][bi] = new;
+        self.forks += 1;
+        Ok(())
+    }
+
+    /// Free `slot`: drop every table reference (shared blocks just
+    /// decrement; exclusive blocks return to the free list in O(1), no
+    /// scrub — stale data is never read because reads stop at the
+    /// high-water mark and snapshots gather `[0, used)` only).
+    pub fn free_slot(&mut self, slot: usize) {
+        let table = std::mem::take(&mut self.tables[slot]);
+        for b in table {
+            self.pool.release(b);
+        }
+        self.used[slot] = 0;
+        self.registered[slot] = 0;
+        self.reg_hash[slot] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- block pool --------------------------------------------------
+
+    #[test]
+    fn pool_allocates_ascending_and_recycles_lifo() {
+        let mut p = BlockPool::new(3, 16);
+        assert_eq!(p.alloc(), Some(0));
+        assert_eq!(p.alloc(), Some(1));
+        assert_eq!(p.alloc(), Some(2));
+        assert_eq!(p.alloc(), None, "pool exhausted");
+        assert!(p.release(1), "single ref frees physically");
+        assert_eq!(p.alloc(), Some(1), "LIFO recycle");
+        assert_eq!(p.outstanding(), 3);
+        assert_eq!(p.allocated(), 4);
+        assert_eq!(p.freed(), 1);
+    }
+
+    #[test]
+    fn pool_refcounts_shared_blocks() {
+        let mut p = BlockPool::new(2, 4);
+        let b = p.alloc().unwrap();
+        p.retain(b);
+        assert!(p.is_shared(b));
+        assert!(!p.release(b), "shared release keeps the block");
+        assert!(!p.is_shared(b));
+        assert!(p.release(b), "last release frees");
+        assert_eq!(p.allocated(), 1);
+        assert_eq!(p.freed(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn pool_double_free_panics() {
+        let mut p = BlockPool::new(2, 4);
+        let b = p.alloc().unwrap();
+        p.release(b);
+        p.release(b);
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of a free")]
+    fn pool_retain_free_block_panics() {
+        let mut p = BlockPool::new(2, 4);
+        p.retain(0);
+    }
+
+    // ---- chain hash --------------------------------------------------
+
+    #[test]
+    fn chain_hash_pins_shared_vectors() {
+        // Known-answer vectors shared with the Python mirror
+        // (python/tests/test_kvpage_mirror.py) — cross-language
+        // agreement without cross-execution.
+        assert_eq!(chain_hash(0, &[3, 5, 7, 11]), 0xefc5_f622_c224_f58f);
+        assert_eq!(chain_hash(0xefc5_f622_c224_f58f, &[1, 2, 3, 4]),
+                   0x1c9f_65a4_df74_ffeb);
+        assert_eq!(chain_hash(0, &[]), 0xa8c7_f832_281a_39c5);
+    }
+
+    #[test]
+    fn chain_hash_depends_on_ancestry() {
+        // Same block tokens, different parents → different keys: a
+        // block's identity is its whole prefix.
+        let a = chain_hash(chain_hash(0, &[1, 2]), &[9, 9]);
+        let b = chain_hash(chain_hash(0, &[3, 4]), &[9, 9]);
+        assert_ne!(a, b);
+    }
+
+    // ---- paged store -------------------------------------------------
+
+    fn paged(slots: usize, blocks: usize, prefix: bool) -> PagedKv {
+        // 2 layers, 2 heads, head_dim 4, block_len 4.
+        PagedKv::new(2, 2, 4, slots, blocks, 4, prefix)
+    }
+
+    fn fill_row(v: f32) -> Vec<f32> {
+        vec![v; 4]
+    }
+
+    #[test]
+    fn rows_roundtrip_through_the_block_table() {
+        let mut kv = paged(2, 8, false);
+        kv.reserve(0, 0, 6).unwrap();
+        kv.reserve(1, 0, 2).unwrap();
+        kv.write_row(0, 1, 0, 1, 6, &fill_row(3.5));
+        kv.write_row(1, 0, 1, 0, 2, &fill_row(-2.0));
+        assert_eq!(kv.row(0, 1, 0, 1, 6), fill_row(3.5).as_slice());
+        assert_eq!(kv.row(1, 0, 1, 0, 2), fill_row(-2.0).as_slice());
+        assert_eq!(kv.used(0), 7);
+        assert_eq!(kv.used(1), 3);
+        assert_eq!(kv.table_len(0), 2, "positions 0..=6 span two blocks");
+    }
+
+    #[test]
+    fn free_slot_returns_blocks_and_balances_counters() {
+        let mut kv = paged(1, 4, false);
+        kv.reserve(0, 0, 11).unwrap();
+        assert_eq!(kv.pool().outstanding(), 3);
+        kv.free_slot(0);
+        assert_eq!(kv.pool().outstanding(), 0);
+        assert_eq!(kv.pool().allocated(), kv.pool().freed());
+        assert_eq!(kv.used(0), 0);
+    }
+
+    #[test]
+    fn reserve_fails_only_when_exhausted() {
+        let mut kv = paged(2, 2, false);
+        kv.reserve(0, 0, 7).unwrap();
+        assert_eq!(kv.reserve(1, 0, 0), Err(KvPressure));
+        kv.free_slot(0);
+        kv.reserve(1, 0, 0).unwrap();
+    }
+
+    #[test]
+    fn prefix_attach_skips_cached_positions_and_shares_blocks() {
+        let mut kv = paged(2, 8, true);
+        let prompt: Vec<i32> = (0..10).collect();
+        assert_eq!(kv.attach_prefix(0, &prompt), 0, "cold cache");
+        kv.reserve(0, 0, 9).unwrap();
+        for pos in 0..10 {
+            kv.write_row(0, 0, 0, 0, pos, &fill_row(pos as f32));
+        }
+        kv.register_prompt(0, &prompt, 10);
+        // 10 tokens / block_len 4 → blocks 0 and 1 are full prompt
+        // blocks; block 2 (positions 8..10) is partial and private.
+        assert_eq!(kv.cached_blocks(), 2);
+
+        let cached = kv.attach_prefix(1, &prompt);
+        assert_eq!(cached, 8, "two full blocks served from cache");
+        assert_eq!(kv.used(1), 8);
+        // The cached rows read back bit-identically through slot 1.
+        for pos in 0..8 {
+            assert_eq!(kv.row(1, 0, 0, 0, pos), fill_row(pos as f32).as_slice());
+        }
+        // Writing slot 1's position 8 allocates a fresh private block —
+        // no fork needed (block 2 was never shared with slot 1).
+        kv.reserve(1, 8, 9).unwrap();
+        kv.write_row(1, 0, 0, 0, 8, &fill_row(99.0));
+        assert_eq!(kv.row(0, 0, 0, 0, 8), fill_row(8.0).as_slice(),
+                   "slot 0's row untouched");
+        assert_eq!(kv.forks(), 0);
+    }
+
+    #[test]
+    fn cow_fork_on_write_into_a_shared_block() {
+        let mut kv = paged(2, 8, true);
+        // Block-aligned prompt: every block is a full prompt block, so
+        // a later identical prompt can cache all of it — and must fork
+        // the tail block to recompute the final position.
+        let prompt: Vec<i32> = (0..8).collect();
+        kv.attach_prefix(0, &prompt);
+        kv.reserve(0, 0, 7).unwrap();
+        for pos in 0..8 {
+            kv.write_row(0, 0, 0, 0, pos, &fill_row(pos as f32));
+        }
+        kv.register_prompt(0, &prompt, 8);
+        assert_eq!(kv.cached_blocks(), 2);
+
+        let cached = kv.attach_prefix(1, &prompt);
+        assert_eq!(cached, 7, "final prompt position always recomputed");
+        assert!(!kv.writable(1, 7), "tail block attached shared");
+        kv.reserve(1, 7, 7).unwrap();
+        assert_eq!(kv.forks(), 1, "reserve forked the shared tail");
+        assert!(kv.writable(1, 7));
+        kv.write_row(1, 0, 0, 0, 7, &fill_row(-1.0));
+        assert_eq!(kv.row(0, 0, 0, 0, 7), fill_row(7.0).as_slice(),
+                   "original owner's row survives the fork");
+        assert_eq!(kv.row(1, 0, 0, 0, 6), fill_row(6.0).as_slice(),
+                   "forked block carried the cached rows over");
+    }
+
+    #[test]
+    #[should_panic(expected = "missing COW fork")]
+    fn writing_a_shared_block_without_fork_panics() {
+        let mut kv = paged(2, 8, true);
+        let prompt: Vec<i32> = (0..8).collect();
+        kv.attach_prefix(0, &prompt);
+        kv.reserve(0, 0, 7).unwrap();
+        for pos in 0..8 {
+            kv.write_row(0, 0, 0, 0, pos, &fill_row(0.0));
+        }
+        kv.register_prompt(0, &prompt, 8);
+        kv.attach_prefix(1, &prompt);
+        // No reserve → no fork → the write must panic.
+        kv.write_row(1, 0, 0, 0, 7, &fill_row(1.0));
+    }
+
+    #[test]
+    fn lru_eviction_frees_the_least_recently_used_chain() {
+        let mut kv = paged(1, 3, true);
+        // Fill the trie with two single-block prompts, then release the
+        // lanes; both blocks survive only as cache entries.
+        for (slot_prompt, base) in [(0..4, 0), (4..8, 1)] {
+            let prompt: Vec<i32> = slot_prompt.collect();
+            kv.attach_prefix(0, &prompt);
+            kv.reserve(0, 0, 3).unwrap();
+            for pos in 0..4 {
+                kv.write_row(0, 0, 0, 0, pos, &fill_row(base as f32));
+            }
+            kv.register_prompt(0, &prompt, 4);
+            kv.free_slot(0);
+        }
+        assert_eq!(kv.cached_blocks(), 2);
+        assert_eq!(kv.pool().free_blocks(), 1);
+        // Touch the first prompt so the second becomes LRU.
+        let first: Vec<i32> = (0..4).collect();
+        let cached = kv.attach_prefix(0, &first);
+        assert_eq!(cached, 3);
+        kv.free_slot(0);
+        // Demand 3 blocks: eviction must free the LRU entry (second
+        // prompt) first, then — still short — the first.
+        kv.reserve(0, 0, 11).unwrap();
+        assert_eq!(kv.evictions(), 2);
+        assert_eq!(kv.cached_blocks(), 0);
+    }
+
+    #[test]
+    fn flush_prefix_drains_the_pool() {
+        let mut kv = paged(1, 4, true);
+        let prompt: Vec<i32> = (0..8).collect();
+        kv.attach_prefix(0, &prompt);
+        kv.reserve(0, 0, 7).unwrap();
+        for pos in 0..8 {
+            kv.write_row(0, 0, 0, 0, pos, &fill_row(1.0));
+        }
+        kv.register_prompt(0, &prompt, 8);
+        kv.free_slot(0);
+        assert_eq!(kv.cached_blocks(), 2);
+        assert_eq!(kv.pool().outstanding(), 2);
+        assert_eq!(kv.flush_prefix(), 2);
+        assert_eq!(kv.pool().outstanding(), 0);
+        assert_eq!(kv.pool().allocated(), kv.pool().freed(),
+                   "lifetime alloc/free balanced after flush");
+    }
+
+    #[test]
+    fn layout_resolution_and_minimums() {
+        let l = KvLayout::default_paged();
+        assert!(l.is_paged());
+        assert_eq!(l.block_len, DEFAULT_KV_BLOCK_LEN);
+        assert_eq!(l.resolve_blocks(4, 64), 4 * 4 + 1);
+        assert_eq!(l.min_blocks(64), 5);
+        let e = KvLayout::paged(16, 40, true);
+        assert_eq!(e.resolve_blocks(4, 64), 40, "explicit wins");
+        assert!(!KvLayout::contiguous().is_paged());
+    }
+}

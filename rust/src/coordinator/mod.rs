@@ -37,6 +37,7 @@ mod error;
 #[cfg(feature = "failpoints")]
 pub mod failpoints;
 mod kvcache;
+mod kvpage;
 mod request;
 mod router;
 mod sampler;
@@ -46,6 +47,8 @@ pub use engine::{argmax, ArtifactBackend, DecodeBackend, Engine,
                  HostModelBackend, SlotEngine};
 pub use error::{ServeError, SubmitError};
 pub use kvcache::{HostKvCache, KvCacheSpec};
+pub use kvpage::{chain_hash, BlockPool, KvLayout, KvPressure, PagedKv,
+                 PrefixCache, DEFAULT_KV_BLOCK_LEN};
 pub use request::{
     FinishReason, GenerateRequest, GenerateResponse, RequestId, RequestLimits,
 };

@@ -31,6 +31,11 @@ pub struct GenerateRequest {
     /// drain. `None` disables the deadline (the default; the router
     /// fills it from `ServeConfig.request_timeout_ms` when set).
     pub deadline: Option<Instant>,
+    /// Scheduling priority: higher admits first (FIFO within a
+    /// priority), and under KV block pressure the *lowest*-priority
+    /// in-flight request is the preemption victim. 0 (the default) is
+    /// ordinary traffic.
+    pub priority: u8,
 }
 
 impl GenerateRequest {

@@ -194,6 +194,7 @@ impl Coordinator {
         let warm_start = cfg.warm_start;
         let self_check = cfg.self_check;
         let (slots, prefill_chunk) = (cfg.slots, cfg.prefill_chunk);
+        let kv_layout = cfg.kv_layout();
         let host_meta = model.clone();
         let engine = std::thread::Builder::new()
             .name("engine".into())
@@ -233,9 +234,9 @@ impl Coordinator {
                         DecodeBackendKind::Host if continuous => {
                             let model = HostModel::new(&host_meta)?;
                             let loop_metrics = engine_metrics.clone();
-                            let mut engine = SlotEngine::new(
+                            let mut engine = SlotEngine::with_layout(
                                 model, slots, prefill_chunk,
-                                engine_metrics)?;
+                                engine_metrics, kv_layout.clone())?;
                             // CLI-installed fault plan (`serve
                             // --fail-plan`): one-shot handoff across
                             // the thread spawn.
@@ -259,7 +260,19 @@ impl Coordinator {
                             log::info!(
                                 "continuous host engine ready ({slots} \
                                  slots, prefill chunk {prefill_chunk}, \
-                                 {warmed} m-shapes planned)");
+                                 {warmed} m-shapes planned, kv {})",
+                                if kv_layout.is_paged() {
+                                    format!(
+                                        "paged: {} x {}-position blocks, \
+                                         prefix cache {}",
+                                        kv_layout.resolve_blocks(
+                                            slots, host_meta.max_seq),
+                                        kv_layout.block_len,
+                                        if kv_layout.prefix_cache
+                                            { "on" } else { "off" })
+                                } else {
+                                    "contiguous".into()
+                                });
                             let _ = ready_tx.send(Ok(warmed));
                             run_continuous_loop(&engine_shared, &mut engine,
                                                 &loop_metrics)
@@ -386,6 +399,21 @@ impl Coordinator {
                           stop_token: Option<i32>,
                           sampling: SamplingParams)
                           -> std::result::Result<Pending, ServeError> {
+        self.submit_with_priority(prompt, max_new_tokens, stop_token,
+                                  sampling, 0)
+    }
+
+    /// Validate and enqueue a request with explicit sampling params and
+    /// a scheduling priority: higher-priority requests are admitted
+    /// first from the queue, and under KV block pressure the
+    /// lowest-priority in-flight request is preempted (freed and
+    /// requeued) ahead of higher ones. Priority 0 is ordinary traffic.
+    /// Same refusal semantics as [`Self::submit`].
+    pub fn submit_with_priority(&self, prompt: Vec<i32>,
+                                max_new_tokens: usize,
+                                stop_token: Option<i32>,
+                                sampling: SamplingParams, priority: u8)
+                                -> std::result::Result<Pending, ServeError> {
         if self.shared.engine_dead.load(Ordering::SeqCst) {
             return Err(ServeError::EngineDown);
         }
@@ -427,6 +455,7 @@ impl Coordinator {
             sampling,
             accepted_at,
             deadline,
+            priority,
         };
         let pushed = lock_recover(&self.shared.batcher).push(req);
         if pushed.is_err() {

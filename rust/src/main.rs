@@ -4,6 +4,8 @@
 //! splitk-w4a16 serve    [--artifacts DIR] [--config FILE.json]
 //!                       [--backend artifacts|host]
 //!                       [--slots N] [--prefill-chunk C]
+//!                       [--kv-block-len L] [--kv-blocks B]
+//!                       [--no-prefix-cache]
 //!                       [--requests N] [--max-new N]
 //!                       [--temperature T] [--top-k K] [--top-p P]
 //!                       [--sample-seed S]
@@ -81,6 +83,18 @@ fn serve(args: &Args) -> Result<()> {
     if args.options.contains_key("prefill-chunk") {
         cfg.prefill_chunk = args.opt_num("prefill-chunk", cfg.prefill_chunk)?;
     }
+    // Paged-KV knobs (continuous engine): --kv-block-len 0 selects the
+    // contiguous fallback; --kv-blocks 0 (default) auto-sizes the pool
+    // (an explicit smaller pool engages LRU eviction + preemption).
+    if args.options.contains_key("kv-block-len") {
+        cfg.kv_block_len = args.opt_num("kv-block-len", cfg.kv_block_len)?;
+    }
+    if args.options.contains_key("kv-blocks") {
+        cfg.kv_blocks = args.opt_num("kv-blocks", cfg.kv_blocks)?;
+    }
+    if args.has_flag("no-prefix-cache") {
+        cfg.prefix_cache = false;
+    }
     // Fault-tolerance knobs: bounded admission queue (load shedding)
     // and a per-request wall-clock deadline (0 = no deadline).
     if args.options.contains_key("queue-cap") {
@@ -131,7 +145,14 @@ fn serve(args: &Args) -> Result<()> {
 
     let backend = cfg.resolve_backend();
     let mode = if cfg.continuous() {
-        format!("continuous: {} slots, prefill chunk {}", cfg.slots,
+        let kv = if cfg.kv_block_len > 0 {
+            format!("paged kv ({}-position blocks, prefix cache {})",
+                    cfg.kv_block_len,
+                    if cfg.prefix_cache { "on" } else { "off" })
+        } else {
+            "contiguous kv".into()
+        };
+        format!("continuous: {} slots, prefill chunk {}, {kv}", cfg.slots,
                 cfg.prefill_chunk)
     } else {
         "static batching".into()

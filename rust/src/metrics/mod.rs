@@ -32,6 +32,14 @@ pub struct ServingMetrics {
     pub cancelled: AtomicU64,
     /// Requests shed at admission (queue full → `Overloaded`).
     pub shed_overload: AtomicU64,
+    /// Requests preempted under KV block pressure (lane freed, request
+    /// requeued to resume by recompute).
+    pub preemptions: AtomicU64,
+    /// Admissions that attached shared prefix blocks from the KV prefix
+    /// cache (skipping prefill for the cached positions).
+    pub prefix_hits: AtomicU64,
+    /// Prompt positions whose prefill was skipped via the prefix cache.
+    pub prefix_tokens_saved: AtomicU64,
     /// End-to-end request latency, milliseconds.
     pub request_latency_ms: Mutex<Histogram>,
     /// Per-decode-step latency, microseconds.
@@ -65,6 +73,9 @@ impl ServingMetrics {
             deadline_expired: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             shed_overload: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_tokens_saved: AtomicU64::new(0),
             request_latency_ms: Mutex::new(Histogram::new()),
             step_latency_us: Mutex::new(Histogram::new()),
             queue_wait_ms: Mutex::new(Histogram::new()),
@@ -106,6 +117,33 @@ impl ServingMetrics {
         self.shed_overload.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one KV-pressure preemption.
+    pub fn record_preemption(&self) {
+        self.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one prefix-cache hit that skipped prefill for
+    /// `tokens_saved` prompt positions.
+    pub fn record_prefix_hit(&self, tokens_saved: u64) {
+        self.prefix_hits.fetch_add(1, Ordering::Relaxed);
+        self.prefix_tokens_saved.fetch_add(tokens_saved, Ordering::Relaxed);
+    }
+
+    /// KV-pressure preemptions so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions.load(Ordering::Relaxed)
+    }
+
+    /// Prefix-cache hits so far.
+    pub fn prefix_hits(&self) -> u64 {
+        self.prefix_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prompt positions spared prefill by the prefix cache so far.
+    pub fn prefix_tokens_saved(&self) -> u64 {
+        self.prefix_tokens_saved.load(Ordering::Relaxed)
+    }
+
     /// Tokens per second since startup.
     pub fn throughput_tps(&self) -> f64 {
         let secs = self.start.elapsed().as_secs_f64().max(1e-9);
@@ -128,7 +166,8 @@ impl ServingMetrics {
         format!(
             "requests={} tokens={} steps={} tput={:.1} tok/s batch_occ={:.2} \
              req_lat p50={:.1}ms p99={:.1}ms step p50={:.0}us p99={:.0}us \
-             faults={} deadline_expired={} cancelled={} shed={}",
+             faults={} deadline_expired={} cancelled={} shed={} \
+             preempt={} prefix_hits={} prefix_saved={}",
             self.requests_completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
@@ -142,6 +181,9 @@ impl ServingMetrics {
             self.deadline_expired.load(Ordering::Relaxed),
             self.cancelled.load(Ordering::Relaxed),
             self.shed_overload.load(Ordering::Relaxed),
+            self.preemptions.load(Ordering::Relaxed),
+            self.prefix_hits.load(Ordering::Relaxed),
+            self.prefix_tokens_saved.load(Ordering::Relaxed),
         )
     }
 }
@@ -181,20 +223,30 @@ mod tests {
         m.record_shed_overload();
         m.record_shed_overload();
         m.record_shed_overload();
+        m.record_preemption();
+        m.record_prefix_hit(32);
+        m.record_prefix_hit(16);
         assert_eq!(m.faults_isolated.load(Ordering::Relaxed), 2);
         assert_eq!(m.deadline_expired.load(Ordering::Relaxed), 1);
         assert_eq!(m.cancelled.load(Ordering::Relaxed), 1);
         assert_eq!(m.shed_overload.load(Ordering::Relaxed), 3);
+        assert_eq!(m.preemptions(), 1);
+        assert_eq!(m.prefix_hits(), 2);
+        assert_eq!(m.prefix_tokens_saved(), 48);
         let s = m.summary();
         assert!(s.contains("faults=2"), "{s}");
         assert!(s.contains("deadline_expired=1"), "{s}");
         assert!(s.contains("cancelled=1"), "{s}");
         assert!(s.contains("shed=3"), "{s}");
+        assert!(s.contains("preempt=1"), "{s}");
+        assert!(s.contains("prefix_hits=2"), "{s}");
+        assert!(s.contains("prefix_saved=48"), "{s}");
     }
 
     #[test]
     fn failure_counters_start_at_zero() {
         let s = ServingMetrics::new().summary();
         assert!(s.contains("faults=0 deadline_expired=0 cancelled=0 shed=0"), "{s}");
+        assert!(s.contains("preempt=0 prefix_hits=0 prefix_saved=0"), "{s}");
     }
 }

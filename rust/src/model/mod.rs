@@ -29,7 +29,7 @@ use std::collections::HashMap;
 
 use anyhow::{ensure, Result};
 
-use crate::coordinator::{HostKvCache, KvCacheSpec};
+use crate::coordinator::{HostKvCache, KvCacheSpec, KvLayout};
 use crate::kernels::{autotune_split_k_host, host_gemm_into,
                      host_gemm_packed_into, HostKernelConfig, PackedLinear,
                      SplitKScratch};
@@ -278,6 +278,18 @@ impl HostModel {
     /// lanes as requests come and go, no per-batch reallocation).
     pub fn alloc_cache(&self, slots: usize) -> HostKvCache {
         HostKvCache::new(KvCacheSpec::from_model(&self.weights.meta), slots)
+    }
+
+    /// A KV cache with `slots` lanes in the given layout: block-paged
+    /// (per-slot block tables + free list + optional prefix trie) or
+    /// the contiguous fallback. The forward pass is layout-agnostic —
+    /// it addresses `(layer, slot, head, pos)` through the same cache
+    /// API either way — so paged decode is bit-identical to contiguous
+    /// by construction (pinned by `paged_cache_decodes_bit_identical`).
+    pub fn alloc_paged_cache(&self, slots: usize, layout: &KvLayout)
+                             -> HostKvCache {
+        HostKvCache::with_layout(KvCacheSpec::from_model(&self.weights.meta),
+                                 slots, layout)
     }
 
     /// Run one slot-batched decode step: an arbitrary mix of decode rows

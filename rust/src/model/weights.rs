@@ -219,6 +219,13 @@ impl HostModelWeights {
             assert!(s.slot < cache.batch(),
                     "slot {} outside the {}-lane cache", s.slot, cache.batch());
             assert!(s.pos < self.meta.max_seq, "position beyond max_seq");
+            // Paged caches hand out write capacity up front (the engine
+            // reserves/forks blocks before planning a row); a row whose
+            // target is missing or still copy-on-write-shared would
+            // corrupt another sequence, so it fails loudly here instead.
+            assert!(cache.writable(s.slot, s.pos),
+                    "slot {} pos {} not writable (unreserved or shared KV \
+                     block)", s.slot, s.pos);
             if r > 0 && steps[r - 1].slot == s.slot {
                 // Chunked prefill: consecutive positions, so each row's
                 // attention sees the K/V its predecessor just wrote.

@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 use splitk_w4a16::coordinator::failpoints::{Fault, FaultPlan};
 use splitk_w4a16::coordinator::{
     Batch, Engine, FinishReason, GenerateRequest, GenerateResponse,
-    HostModelBackend, SamplingParams, SlotEngine,
+    HostModelBackend, KvLayout, SamplingParams, SlotEngine,
 };
 use splitk_w4a16::kernels::HostKernelConfig;
 use splitk_w4a16::metrics::ServingMetrics;
@@ -59,6 +59,20 @@ fn chaos_engine(slots: usize, chunk: usize, plan: FaultPlan)
     (engine, metrics)
 }
 
+/// Chaos engine with an explicit KV layout (the default path above
+/// follows `SPLITK_KV_LAYOUT`; the preemption-storm tests pin a
+/// deliberately tight paged pool instead).
+fn chaos_engine_layout(slots: usize, chunk: usize, layout: KvLayout,
+                       plan: FaultPlan)
+                       -> (SlotEngine, Arc<ServingMetrics>) {
+    let metrics = Arc::new(ServingMetrics::new());
+    let mut engine = SlotEngine::with_layout(
+        fixed_model(), slots, chunk, metrics.clone(), layout)
+        .unwrap();
+    engine.install_fault_plan(plan);
+    (engine, metrics)
+}
+
 fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
     GenerateRequest {
         id,
@@ -68,6 +82,7 @@ fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
         deadline: None,
+        priority: 0,
     }
 }
 
@@ -118,6 +133,20 @@ fn audit(label: &str, engine: &SlotEngine, metrics: &ServingMetrics,
     assert_eq!(engine.free_slots(), slots, "{label}: pool fully free");
     assert_eq!(engine.lanes_seated(), engine.lanes_released(),
                "{label}: lane seat/release accounting balanced");
+    if engine.is_paged() {
+        // Block ledger (invariant 2's paged analog): with every lane
+        // freed, the only legal block holders are prefix-trie entries —
+        // one pool reference each — and lifetime alloc/free must agree
+        // with what's still held. Any leak or double free breaks one of
+        // these (double frees also panic inside `BlockPool::release`).
+        assert_eq!(engine.kv_outstanding_blocks(), engine.kv_cached_blocks(),
+                   "{label}: blocks held outside the prefix trie after \
+                    every lane was freed (leaked KV block)");
+        assert_eq!(engine.kv_blocks_allocated(),
+                   engine.kv_blocks_freed()
+                       + engine.kv_outstanding_blocks() as u64,
+                   "{label}: block alloc/free ledger unbalanced");
+    }
 
     let count = |r: FinishReason| {
         out.iter().filter(|o| o.finish_reason == r).count() as u64
@@ -299,6 +328,52 @@ fn seeded_fault_plans_hold_every_invariant() {
             audit(&label, &engine, &metrics, slots, &reqs, &out);
         }
     }
+}
+
+// ---- preemption storms over a tight paged pool -----------------------
+
+#[test]
+fn preemption_storm_under_faults_holds_block_and_stream_invariants() {
+    // A pool deliberately too small for the workload: each request
+    // spans 4 blocks (20-token prompt + 30 generated over 16-position
+    // blocks), so two active lanes want 8 of the 6 blocks and the
+    // engine must preempt/resume continuously. Every seeded fault plan
+    // then runs on top of that churn, with the prefix trie both off
+    // and on (on adds LRU eviction to the mix). The audit's block
+    // ledger proves no block leaked or double-freed; survivors —
+    // including ones preempted and resumed mid-stream — still match
+    // fault-free solo decode bit for bit.
+    let storm = || -> Vec<GenerateRequest> {
+        (0..4usize)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..20usize)
+                    .map(|t| (((i * 31 + t) * 13 + 7) % 512) as i32)
+                    .collect();
+                greq(i as u64 + 1, prompt, 30)
+            })
+            .collect()
+    };
+    let ids: Vec<u64> = storm().iter().map(|r| r.id).collect();
+    let mut total_preemptions = 0u64;
+    for seed in 0..6u64 {
+        for prefix in [false, true] {
+            let plan = FaultPlan::seeded(seed, &ids);
+            let label =
+                format!("storm seed={seed} prefix={prefix} plan={plan:?}");
+            let (mut engine, metrics) = chaos_engine_layout(
+                2, 4, KvLayout::paged(16, 6, prefix), plan);
+            let reqs = storm();
+            let out = engine.run_trace(reqs.clone()).unwrap();
+            audit(&label, &engine, &metrics, 2, &reqs, &out);
+            assert_eq!(engine.preempted_pending(), 0,
+                       "{label}: preempt queue drained");
+            total_preemptions +=
+                metrics.preemptions.load(Ordering::Relaxed);
+        }
+    }
+    assert!(total_preemptions > 0,
+            "the tight pool never forced a preemption — the storm \
+             is not a storm");
 }
 
 #[test]

@@ -55,6 +55,7 @@ fn decode_static() -> Vec<i32> {
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
         deadline: None,
+        priority: 0,
     };
     engine
         .run_batch(Batch { requests: vec![req], bucket: 1 })
@@ -75,6 +76,7 @@ fn decode_slots(slots: usize, chunk: usize) -> Vec<i32> {
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
         deadline: None,
+        priority: 0,
     };
     engine.run_trace(vec![req]).unwrap().remove(0).tokens
 }

@@ -463,6 +463,7 @@ fn prop_batcher_conserves_requests() {
                 sampling: SamplingParams::greedy(),
                 accepted_at: t0,
                 deadline: None,
+                priority: 0,
             })
             .unwrap();
         }
@@ -496,6 +497,7 @@ fn prop_batcher_backpressure_capacity() {
                     sampling: SamplingParams::greedy(),
                     accepted_at: t0,
                     deadline: None,
+                    priority: 0,
                 })
                 .is_ok()
             {

@@ -21,8 +21,8 @@ use std::time::Instant;
 use splitk_w4a16::config::ServeConfig;
 use splitk_w4a16::coordinator::{
     Batch, Coordinator, Engine, FinishReason, GenerateRequest,
-    GenerateResponse, HostModelBackend, SamplingParams, ServeError,
-    SlotEngine,
+    GenerateResponse, HostModelBackend, KvLayout, SamplingParams,
+    ServeError, SlotEngine,
 };
 use splitk_w4a16::kernels::HostKernelConfig;
 use splitk_w4a16::metrics::ServingMetrics;
@@ -308,6 +308,13 @@ fn slot_engine(slots: usize, chunk: usize) -> SlotEngine {
                     Arc::new(ServingMetrics::new())).unwrap()
 }
 
+fn slot_engine_layout(slots: usize, chunk: usize, layout: KvLayout)
+                      -> SlotEngine {
+    SlotEngine::with_layout(fixed_model(), slots, chunk,
+                            Arc::new(ServingMetrics::new()), layout)
+        .unwrap()
+}
+
 fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
     GenerateRequest {
         id,
@@ -317,6 +324,7 @@ fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
         sampling: SamplingParams::greedy(),
         accepted_at: Instant::now(),
         deadline: None,
+        priority: 0,
     }
 }
 
@@ -467,6 +475,61 @@ fn equivalence_seeded_sampling_is_slot_invariant() {
         assert_eq!(s.tokens, want.tokens,
                    "static engine diverged on sampled request {}", r.id);
     }
+}
+
+// ---- KV layout equivalence: paged == contiguous, bit for bit ---------
+
+#[test]
+fn equivalence_paged_kv_matches_contiguous_across_layouts() {
+    // The paging acceptance anchor at integration level: the same
+    // workload through the contiguous cache and through paged caches
+    // (block lens straddling the prompt lengths, prefix cache on and
+    // off) yields bit-identical per-request streams — and the paged
+    // runs balance their block ledgers.
+    let want = solo_reference(&workload());
+    let contig = slot_engine_layout(3, 4, KvLayout::contiguous())
+        .run_trace(workload())
+        .unwrap();
+    assert_streams_match(&contig, &want, "contiguous layout");
+    for (layout, label) in [
+        (KvLayout::paged(4, 0, true), "paged block=4 prefix=on"),
+        (KvLayout::paged(16, 0, false), "paged block=16 prefix=off"),
+        (KvLayout::default_paged(), "paged default"),
+    ] {
+        let mut engine = slot_engine_layout(3, 4, layout);
+        let got = engine.run_trace(workload()).unwrap();
+        assert_streams_match(&got, &want, label);
+        engine.flush_prefix_cache();
+        assert_eq!(engine.kv_outstanding_blocks(), 0,
+                   "{label}: blocks leaked after drain");
+        assert_eq!(engine.kv_blocks_allocated(), engine.kv_blocks_freed(),
+                   "{label}: alloc/free ledger unbalanced");
+    }
+}
+
+#[test]
+fn equivalence_paged_seeded_sampling_matches_contiguous() {
+    // Seeded (non-greedy) sampling through the paged cache replays the
+    // contiguous streams too — paging changes memory placement only,
+    // never logits or sampler state.
+    let sampled = |id: u64, prompt: Vec<i32>, max_new: usize, seed: u64| {
+        let mut r = greq(id, prompt, max_new);
+        r.sampling = SamplingParams { temperature: 0.9, top_k: 8,
+                                      top_p: 0.95, seed };
+        r
+    };
+    let reqs = vec![
+        sampled(1, vec![3, 5, 7], 6, 11),
+        sampled(2, (0..24).map(|i| (i * 13 + 5) % 512).collect(), 5, 22),
+        sampled(3, vec![100, 200, 50], 7, 33),
+    ];
+    let want = slot_engine_layout(2, 4, KvLayout::contiguous())
+        .run_trace(reqs.clone())
+        .unwrap();
+    let got = slot_engine_layout(2, 4, KvLayout::paged(8, 0, true))
+        .run_trace(reqs)
+        .unwrap();
+    assert_streams_match(&got, &want, "sampled paged vs contiguous");
 }
 
 // ---- regression: engine death must not strand callers ----------------
