@@ -1,0 +1,450 @@
+//! Comment/string-aware source scanner for the lint pass (DESIGN.md §10).
+//!
+//! Rust is lexed just far enough to answer the questions the rule
+//! engine asks: "is this text code or comment?", "is this line inside a
+//! `#[cfg(test)]` item?", "which fn body encloses this line?". The
+//! scanner is a hand-rolled character state machine — no external
+//! parser, per the vendored-only policy — and is mirrored line-for-line
+//! by `python/tests/test_lint_mirror.py`, which executes the same
+//! algorithm in the toolchain-less growth container. Any change here
+//! must land in the mirror in the same commit.
+//!
+//! Output model: two same-shaped line arrays.
+//!
+//! * `code[i]` — line `i` with comments erased and string/char-literal
+//!   *interiors* blanked to spaces. The delimiting quote characters are
+//!   kept, so downstream rules can still see that a macro argument is a
+//!   string literal, while a pattern like `.lock()` inside a message
+//!   string can never produce a finding.
+//! * `comment[i]` — line `i` reduced to its comment text (markers
+//!   included), everything else blanked. This is where `lint: allow`
+//!   annotations and `§N` design citations are read from.
+//!
+//! Handled token forms: `//`-to-EOL, nested `/* */`, `"…"` with
+//! escapes, byte strings `b"…"`, raw strings `r"…"` / `r#"…"#` (any
+//! hash count, `br` too), char literals `'x'` / `'\n'` / `b'x'`, and
+//! lifetimes (a lone `'` that opens no literal).
+
+/// Per-file scan result: line-indexed views plus region metadata.
+pub struct Scan {
+    /// Comment-and-string-blanked code text, one entry per source line.
+    pub code: Vec<String>,
+    /// Comment text only, one entry per source line.
+    pub comment: Vec<String>,
+    /// True for lines inside a `#[cfg(test)]` item (attribute line
+    /// through the item's closing brace or semicolon).
+    pub in_test: Vec<bool>,
+    /// Innermost enclosing `fn` name per line (signature line through
+    /// closing brace), `None` at module scope.
+    fn_of: Vec<Option<String>>,
+}
+
+impl Scan {
+    /// Name of the innermost fn whose span covers `line` (0-based).
+    pub fn fn_name(&self, line: usize) -> Option<&str> {
+        self.fn_of.get(line).and_then(|n| n.as_deref())
+    }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split `src` into the blanked code stream and the comment stream.
+/// Both outputs have exactly the chars of `src` with non-members
+/// replaced by spaces; newlines are kept in both so line numbers align.
+fn split_streams(src: &[char]) -> (Vec<char>, Vec<char>) {
+    let n = src.len();
+    let mut code = vec![' '; n];
+    let mut com = vec![' '; n];
+    let mut i = 0;
+    while i < n {
+        let c = src[i];
+        if c == '\n' {
+            code[i] = '\n';
+            com[i] = '\n';
+            i += 1;
+        } else if c == '/' && i + 1 < n && src[i + 1] == '/' {
+            // Line comment (incl. doc comments): copy to EOL.
+            while i < n && src[i] != '\n' {
+                com[i] = src[i];
+                i += 1;
+            }
+        } else if c == '/' && i + 1 < n && src[i + 1] == '*' {
+            // Block comment; Rust block comments nest.
+            let mut depth = 1usize;
+            com[i] = '/';
+            com[i + 1] = '*';
+            i += 2;
+            while i < n && depth > 0 {
+                if src[i] == '\n' {
+                    com[i] = '\n';
+                    code[i] = '\n';
+                    i += 1;
+                } else if src[i] == '/' && i + 1 < n && src[i + 1] == '*' {
+                    depth += 1;
+                    com[i] = '/';
+                    com[i + 1] = '*';
+                    i += 2;
+                } else if src[i] == '*' && i + 1 < n && src[i + 1] == '/' {
+                    depth -= 1;
+                    com[i] = '*';
+                    com[i + 1] = '/';
+                    i += 2;
+                } else {
+                    com[i] = src[i];
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            code[i] = '"';
+            i = skip_string(src, &mut code, i + 1);
+        } else if (c == 'r' || c == 'b')
+            && !(i > 0 && is_ident(src[i - 1]))
+        {
+            // Possible raw/byte string or byte char prefix.
+            if let Some(next) = raw_or_byte(src, &mut code, i) {
+                i = next;
+            } else {
+                code[i] = c;
+                i += 1;
+            }
+        } else if c == '\'' {
+            i = char_or_lifetime(src, &mut code, i);
+        } else {
+            code[i] = c;
+            i += 1;
+        }
+    }
+    (code, com)
+}
+
+/// Consume a normal (escaped) string body starting at `i` (just past
+/// the opening quote). Returns the index after the closing quote.
+fn skip_string(src: &[char], code: &mut [char], mut i: usize) -> usize {
+    let n = src.len();
+    while i < n {
+        if src[i] == '\\' {
+            i += 2; // escape pair, both blanked
+        } else if src[i] == '"' {
+            code[i] = '"';
+            return i + 1;
+        } else {
+            if src[i] == '\n' {
+                code[i] = '\n';
+            }
+            i += 1;
+        }
+    }
+    n
+}
+
+/// Consume a raw string body: content runs to `"` followed by `hashes`
+/// `#`s. Returns the index after the closing delimiter.
+fn skip_raw(src: &[char], code: &mut [char], mut i: usize,
+            hashes: usize) -> usize {
+    let n = src.len();
+    while i < n {
+        if src[i] == '"' {
+            let mut h = 0;
+            while h < hashes && i + 1 + h < n && src[i + 1 + h] == '#' {
+                h += 1;
+            }
+            if h == hashes {
+                code[i] = '"';
+                for k in 0..hashes {
+                    code[i + 1 + k] = '#';
+                }
+                return i + 1 + hashes;
+            }
+        }
+        if src[i] == '\n' {
+            code[i] = '\n';
+        }
+        i += 1;
+    }
+    n
+}
+
+/// Try to consume an `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#` or `b'…'`
+/// token starting at the prefix letter `i`. Returns the index after the
+/// token, or `None` if no string/char starts here.
+fn raw_or_byte(src: &[char], code: &mut [char], i: usize)
+               -> Option<usize> {
+    let n = src.len();
+    let mut j = i + 1;
+    let mut raw = src[i] == 'r';
+    if src[i] == 'b' && j < n {
+        if src[j] == '\'' {
+            // Byte char literal: reuse the char-literal scanner.
+            code[i] = 'b';
+            return Some(char_or_lifetime(src, code, j));
+        }
+        if src[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    }
+    if raw {
+        let mut hashes = 0;
+        while j < n && src[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j < n && src[j] == '"' {
+            for (k, item) in code.iter_mut().enumerate().take(j).skip(i) {
+                *item = src[k];
+            }
+            code[j] = '"';
+            return Some(skip_raw(src, code, j + 1, hashes));
+        }
+        return None;
+    }
+    if j < n && src[j] == '"' {
+        code[i] = 'b';
+        code[j] = '"';
+        return Some(skip_string(src, code, j + 1));
+    }
+    None
+}
+
+/// Disambiguate `'` at `i`: a char literal (`'x'`, `'\n'`) is consumed
+/// with its interior blanked; a lifetime keeps just the quote and lets
+/// the following ident pass through as code.
+fn char_or_lifetime(src: &[char], code: &mut [char], i: usize) -> usize {
+    let n = src.len();
+    code[i] = '\'';
+    if i + 1 < n && src[i + 1] == '\\' {
+        // Escaped char literal: blank through the closing quote.
+        let mut j = i + 2;
+        while j < n && src[j] != '\'' {
+            if src[j] == '\n' {
+                code[j] = '\n';
+            }
+            j += 1;
+        }
+        if j < n {
+            code[j] = '\'';
+            j += 1;
+        }
+        return j;
+    }
+    if i + 2 < n && src[i + 2] == '\'' && src[i + 1] != '\'' {
+        // Plain one-char literal.
+        code[i + 2] = '\'';
+        return i + 3;
+    }
+    // Lifetime (or stray quote): the quote alone is consumed.
+    i + 1
+}
+
+/// Find `needle` as a plain substring of `hay` starting at or after
+/// `from`.
+fn find_from(hay: &[char], needle: &str, from: usize) -> Option<usize> {
+    let pat: Vec<char> = needle.chars().collect();
+    if pat.is_empty() || hay.len() < pat.len() {
+        return None;
+    }
+    (from..=hay.len() - pat.len()).find(|&s| hay[s..s + pat.len()] == pat[..])
+}
+
+/// Mark every line covered by a `#[cfg(test)]` item: the attribute line
+/// through the matching close of the first `{` after it (or the first
+/// `;` for braceless items).
+fn mark_test_regions(code: &[char], line_of: &[usize],
+                     in_test: &mut [bool]) {
+    let mut from = 0;
+    while let Some(p) = find_from(code, "#[cfg(test)]", from) {
+        let start = p + "#[cfg(test)]".chars().count();
+        let mut q = start;
+        let mut end = code.len();
+        while q < code.len() {
+            if code[q] == ';' {
+                end = q + 1;
+                break;
+            }
+            if code[q] == '{' {
+                let mut depth = 1usize;
+                let mut r = q + 1;
+                while r < code.len() && depth > 0 {
+                    match code[r] {
+                        '{' => depth += 1,
+                        '}' => depth -= 1,
+                        _ => {}
+                    }
+                    r += 1;
+                }
+                end = r;
+                break;
+            }
+            q += 1;
+        }
+        for item in in_test
+            .iter_mut()
+            .take(line_of[end.saturating_sub(1).min(line_of.len() - 1)] + 1)
+            .skip(line_of[p])
+        {
+            *item = true;
+        }
+        from = end.max(p + 1);
+    }
+}
+
+/// Record fn spans (signature line through body close) into `fn_of`;
+/// later — i.e. inner — spans overwrite outer ones, so each line maps
+/// to its innermost enclosing fn.
+fn mark_fn_spans(code: &[char], line_of: &[usize],
+                 fn_of: &mut [Option<String>]) {
+    let n = code.len();
+    let mut i = 0;
+    while let Some(p) = find_from(code, "fn", i) {
+        i = p + 2;
+        let left_ok = p == 0 || !is_ident(code[p - 1]);
+        let right_ok = p + 2 >= n || !is_ident(code[p + 2]);
+        if !left_ok || !right_ok {
+            continue;
+        }
+        let mut j = p + 2;
+        while j < n && code[j].is_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < n && is_ident(code[j]) {
+            j += 1;
+        }
+        if j == name_start {
+            continue; // `fn(` pointer type, no name
+        }
+        let name: String = code[name_start..j].iter().collect();
+        // Walk the signature to the body `{` (or `;` = no body).
+        let mut depth = 0i64;
+        let mut body = None;
+        while j < n {
+            match code[j] {
+                '(' => depth += 1,
+                ')' => depth -= 1,
+                '{' if depth == 0 => {
+                    body = Some(j);
+                    break;
+                }
+                ';' if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(body) = body else { continue };
+        let mut depth = 1usize;
+        let mut r = body + 1;
+        while r < n && depth > 0 {
+            match code[r] {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+            r += 1;
+        }
+        let first = line_of[p];
+        let last = line_of[r.saturating_sub(1).min(n - 1)];
+        for item in fn_of.iter_mut().take(last + 1).skip(first) {
+            *item = Some(name.clone());
+        }
+    }
+}
+
+/// Scan one source file.
+pub fn scan(src: &str) -> Scan {
+    let chars: Vec<char> = src.chars().collect();
+    let (code, com) = split_streams(&chars);
+    // Char index -> 0-based line number.
+    let mut line_of = Vec::with_capacity(chars.len());
+    let mut line = 0usize;
+    for &c in &chars {
+        line_of.push(line);
+        if c == '\n' {
+            line += 1;
+        }
+    }
+    let nlines = line + 1;
+    let join = |v: &[char]| -> Vec<String> {
+        v.iter()
+            .collect::<String>()
+            .split('\n')
+            .map(|s| s.to_string())
+            .collect()
+    };
+    let mut in_test = vec![false; nlines];
+    let mut fn_of: Vec<Option<String>> = vec![None; nlines];
+    if !chars.is_empty() {
+        mark_test_regions(&code, &line_of, &mut in_test);
+        mark_fn_spans(&code, &line_of, &mut fn_of);
+    }
+    Scan {
+        code: join(&code),
+        comment: join(&com),
+        in_test,
+        fn_of,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::scan;
+
+    #[test]
+    fn comments_are_stripped_from_code() {
+        let s = scan("let x = 1; // trailing .lock()\n/* block */ let y;\n");
+        assert!(!s.code[0].contains(".lock()"));
+        assert!(s.comment[0].contains(".lock()"));
+        assert!(s.code[1].contains("let y;"));
+        assert!(!s.code[1].contains("block"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let s = scan("/* outer /* inner */ still comment */ let z = 2;\n");
+        assert!(s.code[0].contains("let z = 2;"));
+        assert!(!s.code[0].contains("still"));
+    }
+
+    #[test]
+    fn string_interiors_blank_but_quotes_survive() {
+        let s = scan("let m = \"do not .unwrap() here\";\n");
+        assert!(!s.code[0].contains(".unwrap()"));
+        assert_eq!(s.code[0].matches('"').count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let s = scan(
+            "let a = r#\"raw .lock() \"quoted\" body\"#;\nlet b = \"esc \\\" .expect( more\";\n",
+        );
+        assert!(!s.code[0].contains(".lock()"));
+        assert!(!s.code[1].contains(".expect("));
+        assert!(s.code[1].ends_with(';'));
+    }
+
+    #[test]
+    fn lifetimes_are_not_strings() {
+        let s = scan("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'x';\n");
+        assert!(s.code[0].contains("str"));
+        assert!(!s.code[1].contains('x'));
+    }
+
+    #[test]
+    fn cfg_test_region_covers_the_mod() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let s = scan(src);
+        assert!(!s.in_test[0]);
+        assert!(s.in_test[1] && s.in_test[2] && s.in_test[3] && s.in_test[4]);
+        assert!(!s.in_test[5]);
+    }
+
+    #[test]
+    fn innermost_fn_wins() {
+        let src = "fn outer() {\n    fn inner() {\n        let q = 1;\n    }\n    let w = 2;\n}\n";
+        let s = scan(src);
+        assert_eq!(s.fn_name(2), Some("inner"));
+        assert_eq!(s.fn_name(4), Some("outer"));
+        assert_eq!(s.fn_name(0), Some("outer"));
+    }
+}

@@ -1,0 +1,112 @@
+//! Finding model + rendering for `splitk lint` (DESIGN.md §10).
+//!
+//! Text output is one `file:line: [rule] message` per finding —
+//! clickable in editors, greppable in CI. JSON output is hand-rolled
+//! through [`crate::util::json::Json`] like every other machine
+//! surface in this repo, so the CI gate can `grep` a stable shape
+//! (`"count": 0`) without a JSON parser on the runner.
+
+use crate::util::json::Json;
+
+/// One lint finding, addressed to a source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule key, as used in `lint: allow(<rule>)` annotations.
+    pub rule: &'static str,
+    /// Path relative to `rust/src`, forward-slashed.
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// What is wrong and how to fix or annotate it.
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, path: &str, line: usize,
+               message: &str) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line,
+            message: message.to_string(),
+        }
+    }
+}
+
+/// Stable order for reports: by path, then line, then rule.
+pub fn sort(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule)
+            .cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+}
+
+/// Human-readable report, one line per finding plus a summary line.
+pub fn to_text(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.rule,
+                              f.message));
+    }
+    if findings.is_empty() {
+        out.push_str("lint: clean\n");
+    } else {
+        out.push_str(&format!("lint: {} finding(s)\n", findings.len()));
+    }
+    out
+}
+
+/// Machine-readable report: `{"count": N, "findings": [...]}`.
+pub fn to_json(findings: &[Finding]) -> Json {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::str(f.rule)),
+                ("file", Json::str(&f.path)),
+                ("line", Json::num(f.line as f64)),
+                ("message", Json::str(&f.message)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("count", Json::num(findings.len() as f64)),
+        ("findings", Json::Arr(items)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{sort, to_json, to_text, Finding};
+
+    #[test]
+    fn text_report_is_file_line_rule() {
+        let fs = vec![Finding::new("unwrap", "coordinator/x.rs", 7, "m")];
+        let t = to_text(&fs);
+        assert!(t.starts_with("coordinator/x.rs:7: [unwrap] m\n"));
+        assert!(t.contains("1 finding(s)"));
+        assert!(to_text(&[]).contains("lint: clean"));
+    }
+
+    #[test]
+    fn json_report_carries_count_and_findings() {
+        let fs = vec![Finding::new("alloc", "kernels/exec/x.rs", 3, "m")];
+        let s = to_json(&fs).to_string();
+        assert!(s.contains("\"count\":1"), "{s}");
+        assert!(s.contains("\"rule\":\"alloc\""), "{s}");
+        assert!(to_json(&[]).to_string().contains("\"count\":0"));
+    }
+
+    #[test]
+    fn sort_is_path_then_line_then_rule() {
+        let mut fs = vec![
+            Finding::new("unwrap", "b.rs", 1, "m"),
+            Finding::new("alloc", "a.rs", 9, "m"),
+            Finding::new("alloc", "a.rs", 2, "m"),
+        ];
+        sort(&mut fs);
+        assert_eq!(fs[0].path, "a.rs");
+        assert_eq!(fs[0].line, 2);
+        assert_eq!(fs[2].path, "b.rs");
+    }
+}

@@ -1,0 +1,430 @@
+//! The lint rules (DESIGN.md §10). Each rule machine-enforces a
+//! contract that previously lived in a hand audit:
+//!
+//! * `raw-lock` — PR-6 poisoned-lock audit: every mutex/condvar touch
+//!   in `coordinator/` goes through `coordinator::sync`.
+//! * `unwrap` — PR-6 unwrap audit: hot-path `.unwrap()`/`.expect(`
+//!   must carry a written infallibility argument.
+//! * `hash-iter` — the bit-identity suites: hash containers in
+//!   deterministic scopes need a justification (HashMap iteration
+//!   order is the classic silent killer of output stability).
+//! * `alloc` — PR-4 allocation-free-after-warmup: kernel executors
+//!   allocate only on the allowlisted scratch/warmup paths.
+//! * `wallclock` — determinism: `Instant::now`/`SystemTime` stay in
+//!   bench/autotune/deadline modules.
+//! * `panic-message` — pool/ledger panics and asserts carry message
+//!   strings, so a tripped invariant names itself.
+//! * `design-ref` — every `§N` citation resolves to a real DESIGN.md
+//!   heading (the PR-1 dangling-reference fix, kept fixed).
+//!
+//! Escape hatch, uniform across rules: an adjacent
+//! `// lint: allow(<rule>): <reason>` comment — same line, or on the
+//! pure-comment lines immediately above — waives the finding. The
+//! reason is mandatory; an empty reason does not waive.
+//!
+//! Mirrored by `python/tests/test_lint_mirror.py`; change both sides
+//! together.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{scan, Scan};
+use super::report::Finding;
+
+/// Fns inside which raw `.lock()`/`.wait_timeout(` are the point.
+const LOCK_FNS: [&str; 2] = ["lock_recover", "wait_timeout_recover"];
+
+/// Kernel-executor fns allowed to allocate: constructors and the
+/// grow-only scratch/warmup paths the PR-4 contract carves out.
+const ALLOC_FNS: [&str; 4] =
+    ["new", "ensure_tile_scratches", "ensure_stitch_arenas", "self_check"];
+
+/// Modules where wall-clock reads are legitimate: CLI timing loops,
+/// the bench harness, the measuring autotuner, serving-metrics uptime,
+/// and the deadline/batch-window machinery.
+const WALLCLOCK_FILES: [&str; 6] = [
+    "main.rs",
+    "util/bench.rs",
+    "kernels/autotune.rs",
+    "coordinator/router.rs",
+    "coordinator/engine.rs",
+    "coordinator/batcher.rs",
+];
+
+/// Pool/ledger files whose panics and asserts must carry messages.
+const PANIC_MSG_FILES: [&str; 2] =
+    ["coordinator/kvpage.rs", "coordinator/engine.rs"];
+
+/// Parse `## §N` headings out of DESIGN.md.
+pub fn design_sections(design_md: &str) -> BTreeSet<u32> {
+    let mut out = BTreeSet::new();
+    for line in design_md.lines() {
+        if let Some(rest) = line.trim_start().strip_prefix("## §") {
+            let digits: String =
+                rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(n) = digits.parse::<u32>() {
+                out.insert(n);
+            }
+        }
+    }
+    out
+}
+
+/// True when line `idx` carries (or sits under) a
+/// `lint: allow(<rule>): <reason>` annotation with a non-empty reason.
+fn allowed(scan: &Scan, idx: usize, rule: &str) -> bool {
+    let needle = format!("lint: allow({rule}):");
+    let has = |line: &str| -> bool {
+        match line.find(&needle) {
+            Some(p) => !line[p + needle.len()..].trim().is_empty(),
+            None => false,
+        }
+    };
+    if has(&scan.comment[idx]) {
+        return true;
+    }
+    // Walk upward through pure-comment lines (no code, some comment).
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        if !scan.code[j].trim().is_empty()
+            || scan.comment[j].trim().is_empty()
+        {
+            return false;
+        }
+        if has(&scan.comment[j]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// One token-presence rule: `patterns` found in non-test code lines of
+/// in-scope files, minus fn-name allowlist, minus annotations.
+#[allow(clippy::too_many_arguments)]
+fn token_rule(out: &mut Vec<Finding>, rel: &str, scan: &Scan,
+              rule: &'static str, patterns: &[&str],
+              in_scope: bool, fn_allow: &[&str], message: &str) {
+    if !in_scope {
+        return;
+    }
+    for (i, code) in scan.code.iter().enumerate() {
+        if scan.in_test[i] {
+            continue;
+        }
+        if !patterns.iter().any(|p| code.contains(p)) {
+            continue;
+        }
+        if let Some(name) = scan.fn_name(i) {
+            if fn_allow.contains(&name) {
+                continue;
+            }
+        }
+        if allowed(scan, i, rule) {
+            continue;
+        }
+        out.push(Finding::new(rule, rel, i + 1, message));
+    }
+}
+
+/// Macro invocations whose arguments must include a message string:
+/// `panic!` needs a string in its first argument, `assert!` /
+/// `debug_assert!` in an argument past the condition, `assert_eq!` /
+/// `assert_ne!` past the two operands.
+fn panic_message_rule(out: &mut Vec<Finding>, rel: &str, scan: &Scan) {
+    if !PANIC_MSG_FILES.contains(&rel) {
+        return;
+    }
+    // (macro, index of the first argument that may be the message)
+    const MACROS: [(&str, usize); 7] = [
+        ("panic!", 0),
+        ("debug_assert_eq!", 2),
+        ("debug_assert_ne!", 2),
+        ("debug_assert!", 1),
+        ("assert_eq!", 2),
+        ("assert_ne!", 2),
+        ("assert!", 1),
+    ];
+    let full: Vec<char> = scan.code.join("\n").chars().collect();
+    let mut line_of = Vec::with_capacity(full.len());
+    let mut line = 0usize;
+    for &c in &full {
+        line_of.push(line);
+        if c == '\n' {
+            line += 1;
+        }
+    }
+    let mut i = 0usize;
+    while i < full.len() {
+        let Some((mac, msg_arg)) = MACROS.iter().find(|(m, _)| {
+            let pat: Vec<char> = m.chars().collect();
+            i + pat.len() <= full.len()
+                && full[i..i + pat.len()] == pat[..]
+                && (i == 0
+                    || !(full[i - 1].is_ascii_alphanumeric()
+                         || full[i - 1] == '_'))
+        }) else {
+            i += 1;
+            continue;
+        };
+        let mlen = mac.chars().count();
+        // Find the opening paren (rustfmt never splits `name!(`, but
+        // tolerate whitespace anyway).
+        let mut j = i + mlen;
+        while j < full.len() && full[j].is_whitespace() {
+            j += 1;
+        }
+        if j >= full.len() || full[j] != '(' {
+            i += mlen;
+            continue;
+        }
+        // Walk the argument list: count top-level commas, note which
+        // argument slots contain a string literal (quotes survive the
+        // lexer blanking).
+        let mut depth = 1i64;
+        let mut arg = 0usize;
+        let mut string_in: Vec<bool> = vec![false];
+        let mut k = j + 1;
+        while k < full.len() && depth > 0 {
+            match full[k] {
+                '(' | '[' | '{' => depth += 1,
+                ')' | ']' | '}' => depth -= 1,
+                ',' if depth == 1 => {
+                    arg += 1;
+                    string_in.push(false);
+                }
+                '"' if depth == 1 => string_in[arg] = true,
+                _ => {}
+            }
+            k += 1;
+        }
+        let msg_ok =
+            string_in.iter().skip(*msg_arg).any(|&s| s);
+        let fline = line_of[i.min(line_of.len() - 1)];
+        if !msg_ok && !scan.in_test[fline]
+            && !allowed(scan, fline, "panic-message")
+        {
+            out.push(Finding::new(
+                "panic-message", rel, fline + 1,
+                &format!("`{mac}` without a message string — ledger \
+                          panics must name the violated invariant"),
+            ));
+        }
+        i = k.max(i + mlen);
+    }
+}
+
+/// Every `§N` in comment text must name a real DESIGN.md section.
+fn design_ref_rule(out: &mut Vec<Finding>, rel: &str, scan: &Scan,
+                   sections: &BTreeSet<u32>) {
+    for (i, comment) in scan.comment.iter().enumerate() {
+        let chars: Vec<char> = comment.chars().collect();
+        let mut k = 0usize;
+        while k < chars.len() {
+            if chars[k] != '§' {
+                k += 1;
+                continue;
+            }
+            let mut j = k + 1;
+            let mut digits = String::new();
+            while j < chars.len() && chars[j].is_ascii_digit() {
+                digits.push(chars[j]);
+                j += 1;
+            }
+            k = j;
+            let Ok(n) = digits.parse::<u32>() else { continue };
+            if !sections.contains(&n) {
+                out.push(Finding::new(
+                    "design-ref", rel, i + 1,
+                    &format!("comment cites DESIGN.md §{n}, which has \
+                              no `## §{n}` heading"),
+                ));
+            }
+        }
+    }
+}
+
+/// Lint one source file. `rel` is the path relative to `rust/src`,
+/// forward-slashed (e.g. `coordinator/engine.rs`).
+pub fn lint_source(rel: &str, src: &str,
+                   sections: &BTreeSet<u32>) -> Vec<Finding> {
+    let scan = scan(src);
+    let mut out = Vec::new();
+
+    let in_coordinator = rel.starts_with("coordinator/");
+    let in_exec = rel.starts_with("kernels/exec/");
+    token_rule(
+        &mut out, rel, &scan, "raw-lock",
+        &[".lock()", ".wait_timeout("],
+        in_coordinator, &LOCK_FNS,
+        "raw lock/wait outside coordinator::sync — use lock_recover / \
+         wait_timeout_recover (poison recovery, PR-6 contract)",
+    );
+    token_rule(
+        &mut out, rel, &scan, "unwrap",
+        &[".unwrap()", ".expect("],
+        in_coordinator || in_exec, &[],
+        "unannotated unwrap/expect on a hot path — state why it is \
+         infallible with `// lint: allow(unwrap): <reason>` or return \
+         an error",
+    );
+    token_rule(
+        &mut out, rel, &scan, "hash-iter",
+        &["HashMap", "HashSet"],
+        rel.starts_with("kernels/") || rel.starts_with("model/")
+            || rel == "coordinator/engine.rs"
+            || rel == "coordinator/router.rs",
+        &[],
+        "hash container in a deterministic scope — iteration order is \
+         unstable; use BTreeMap/BTreeSet or annotate why order never \
+         escapes",
+    );
+    token_rule(
+        &mut out, rel, &scan, "alloc",
+        &["vec!", "Vec::new", ".collect(", ".to_vec("],
+        in_exec, &ALLOC_FNS,
+        "allocation in a kernel executor off the scratch/warmup paths \
+         (PR-4 allocation-free-after-warmup contract)",
+    );
+    token_rule(
+        &mut out, rel, &scan, "wallclock",
+        &["Instant::now", "SystemTime"],
+        !WALLCLOCK_FILES.contains(&rel)
+            && !rel.starts_with("metrics/"),
+        &[],
+        "wall-clock read outside the bench/autotune/deadline modules \
+         breaks replay determinism",
+    );
+    panic_message_rule(&mut out, rel, &scan);
+    design_ref_rule(&mut out, rel, &scan, sections);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{design_sections, lint_source};
+    use std::collections::BTreeSet;
+
+    fn sections() -> BTreeSet<u32> {
+        design_sections("## §1 A\n## §2 B\n")
+    }
+
+    fn rules_of(rel: &str, src: &str) -> Vec<String> {
+        lint_source(rel, src, &sections())
+            .into_iter()
+            .map(|f| f.rule.to_string())
+            .collect()
+    }
+
+    #[test]
+    fn raw_lock_flagged_in_coordinator() {
+        let src = "fn f(m: &Mutex<u32>) { let _ = m.lock(); }\n";
+        assert_eq!(rules_of("coordinator/x.rs", src), ["raw-lock"]);
+        // Out of scope: same text elsewhere is clean.
+        assert!(rules_of("kernels/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_lock_allowed_inside_the_recover_helpers() {
+        let src = "fn lock_recover(m: &Mutex<u32>) { m.lock(); }\n";
+        assert!(rules_of("coordinator/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_needs_an_annotation_with_a_reason() {
+        let bare = "fn f(x: Option<u32>) { x.unwrap(); }\n";
+        assert_eq!(rules_of("coordinator/x.rs", bare), ["unwrap"]);
+        let ok = "fn f(x: Option<u32>) {\n    // lint: allow(unwrap): set by construction\n    x.unwrap();\n}\n";
+        assert!(rules_of("coordinator/x.rs", ok).is_empty());
+        let trailing = "fn f(x: Option<u32>) { x.unwrap(); // lint: allow(unwrap): set above\n}\n";
+        assert!(rules_of("coordinator/x.rs", trailing).is_empty());
+        // An annotation without a reason does not waive.
+        let no_reason = "fn f(x: Option<u32>) {\n    // lint: allow(unwrap):\n    x.unwrap();\n}\n";
+        assert_eq!(rules_of("coordinator/x.rs", no_reason), ["unwrap"]);
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "fn f(x: Option<u32>) { x.unwrap_or_else(|| 0); x.unwrap_or(1); }\n";
+        assert!(rules_of("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn patterns_in_strings_comments_and_tests_are_ignored() {
+        let src = "fn f() { let m = \".unwrap() .lock()\"; }\n\
+                   // .unwrap() in a comment\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t(x: Option<u32>) { x.unwrap(); }\n\
+                   }\n";
+        assert!(rules_of("coordinator/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_container_flagged_in_deterministic_scopes() {
+        let src = "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }\n";
+        // One finding per offending line, however many tokens it holds.
+        assert_eq!(rules_of("model/x.rs", src), ["hash-iter"]);
+        assert_eq!(rules_of("coordinator/engine.rs", src), ["hash-iter"]);
+        // kvpage's trie is out of scope by path.
+        assert!(rules_of("coordinator/kvpage.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_in_executor_minus_allowlist() {
+        let hot = "fn step() { let v = Vec::new(); }\n";
+        assert_eq!(rules_of("kernels/exec/x.rs", hot), ["alloc"]);
+        let warm = "fn ensure_tile_scratches() { let v = Vec::new(); }\n";
+        assert!(rules_of("kernels/exec/x.rs", warm).is_empty());
+        let ctor = "fn new() { let v = vec![0u8; 4]; }\n";
+        assert!(rules_of("kernels/exec/x.rs", ctor).is_empty());
+        // with_capacity is pre-sized scratch growth, not flagged.
+        let cap = "fn step() { let v: Vec<u8> = Vec::with_capacity(4); }\n";
+        assert!(rules_of("kernels/exec/x.rs", cap).is_empty());
+    }
+
+    #[test]
+    fn wallclock_outside_allowed_modules() {
+        let src = "fn f() { let t = Instant::now(); }\n";
+        assert_eq!(rules_of("kernels/exec/x.rs", src), ["wallclock"]);
+        assert!(rules_of("kernels/autotune.rs", src).is_empty());
+        assert!(rules_of("metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_message_required_in_ledger_files() {
+        let bad = "fn f(rc: u32) { assert!(rc > 0); }\n";
+        assert_eq!(rules_of("coordinator/kvpage.rs", bad),
+                   ["panic-message"]);
+        let good = "fn f(rc: u32) { assert!(rc > 0, \"free block\"); }\n";
+        assert!(rules_of("coordinator/kvpage.rs", good).is_empty());
+        let eq_bad = "fn f(a: u32) { debug_assert_eq!(a, 0); }\n";
+        assert_eq!(rules_of("coordinator/kvpage.rs", eq_bad),
+                   ["panic-message"]);
+        let eq_good =
+            "fn f(a: u32) { debug_assert_eq!(a, 0, \"dirty block {a}\"); }\n";
+        assert!(rules_of("coordinator/kvpage.rs", eq_good).is_empty());
+        // Multi-line argument lists parse across lines.
+        let multi = "fn f(a: u32) {\n    assert!(\n        a > 0,\n        \"free block {a}\",\n    );\n}\n";
+        assert!(rules_of("coordinator/kvpage.rs", multi).is_empty());
+        // Out-of-scope files are not held to it.
+        assert!(rules_of("coordinator/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn design_refs_must_resolve() {
+        let ok = "// see DESIGN.md §2 for the substrate\nfn f() {}\n";
+        assert!(rules_of("model/x.rs", ok).is_empty());
+        let bad = "// see §9 (stale)\nfn f() {}\n";
+        assert_eq!(rules_of("model/x.rs", bad), ["design-ref"]);
+        // Non-numeric § marks are not citations.
+        let free = "// §Calibration notes\nfn f() {}\n";
+        assert!(rules_of("model/x.rs", free).is_empty());
+    }
+
+    #[test]
+    fn design_sections_parse() {
+        let s = design_sections(
+            "# T\n## §1 One\ntext\n## §12 Twelve\n## not a section\n");
+        assert!(s.contains(&1) && s.contains(&12) && !s.contains(&2));
+    }
+}

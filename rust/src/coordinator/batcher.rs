@@ -87,7 +87,8 @@ impl DynamicBatcher {
                 return b;
             }
         }
-        // Infallible: the constructor asserts `buckets` is non-empty.
+        // lint: allow(unwrap): the constructor asserts `buckets` is
+        // non-empty.
         *self.buckets.last().expect("buckets non-empty by construction")
     }
 
@@ -102,7 +103,8 @@ impl DynamicBatcher {
             return None;
         }
         self.polls_nonempty += 1;
-        // Infallible: the constructor asserts `buckets` is non-empty.
+        // lint: allow(unwrap): the constructor asserts `buckets` is
+        // non-empty.
         let max_bucket = *self.buckets.last().expect("buckets non-empty by construction");
         if self.queue.len() >= max_bucket {
             return Some(self.take(max_bucket, max_bucket));

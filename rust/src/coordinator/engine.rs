@@ -10,7 +10,7 @@
 //!   every projection running the fused W4A16 `kernels::exec` backend.
 //!   Works on a bare machine.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::rc::Rc;
 use std::sync::Arc;
@@ -125,9 +125,9 @@ impl DecodeBackend for ArtifactBackend {
         ];
         let mut out = exe.run_literals(&inputs)?;
         ensure!(out.len() == 2, "decode artifact must return (logits, kv)");
-        // Infallible: length checked by the ensure above.
+        // lint: allow(unwrap): length checked by the ensure above.
         self.kv = Some(out.pop().expect("two outputs checked"));
-        let logits = HostTensor::from_literal(&out.pop().expect("two outputs checked"))?;
+        let logits = HostTensor::from_literal(&out.pop().expect("two outputs checked"))?; // lint: allow(unwrap): second of the two checked outputs
         Ok(logits.as_f32()?.to_vec())
     }
 }
@@ -270,7 +270,7 @@ impl Engine {
             .iter()
             .map(|r| r.prompt.len())
             .max()
-            .expect("non-empty batch");
+            .expect("non-empty batch"); // lint: allow(unwrap): empty batches returned early above
         ensure!(prompt_max >= 1, "batch contains only empty prompts");
         ensure!(prompt_max < self.max_seq, "prompt exceeds context");
 
@@ -324,9 +324,9 @@ impl Engine {
 
         // First generated token comes from the last prefill logits.
         let vocab = self.vocab;
-        // Infallible: the `prompt_max >= 1` ensure above guarantees the
-        // prefill loop ran at least once with need_logits on its final
-        // position.
+        // lint: allow(unwrap): the `prompt_max >= 1` ensure above
+        // guarantees the prefill loop ran at least once with
+        // need_logits on its final position.
         let mut cur_logits = logits.expect("prefill ran (prompt_max >= 1)");
         self.harvest(&requests, &mut slots, &cur_logits, vocab, prompt_max)?;
 
@@ -348,12 +348,12 @@ impl Engine {
         // ---- responses ----
         let now = Instant::now();
         for (i, req) in requests.iter().enumerate() {
-            // Infallible: the slot loop above created one slot with
-            // `req_idx == Some(i)` for every request index.
+            // lint: allow(unwrap): the slot loop above created one slot
+            // with `req_idx == Some(i)` for every request index.
             let slot = slots
                 .iter()
                 .find(|s| s.req_idx == Some(i))
-                .expect("every request has a slot by construction");
+                .expect("every request has a slot by construction"); // lint: allow(unwrap): see above
             let latency_ms =
                 now.duration_since(req.accepted_at).as_secs_f64() * 1e3;
             let queue_wait_ms = batch_started
@@ -365,10 +365,10 @@ impl Engine {
             early.push(GenerateResponse {
                 id: req.id,
                 tokens: slot.generated.clone(),
-                // Infallible: the straggler sweep above finished every
-                // slot before this loop.
+                // lint: allow(unwrap): the straggler sweep above
+                // finished every slot before this loop.
                 finish_reason: slot.done
-                    .expect("all slots finished after the decode loop"),
+                    .expect("all slots finished after the decode loop"), // lint: allow(unwrap): see above
                 latency_ms,
                 queue_wait_ms,
                 bucket: b,
@@ -402,8 +402,8 @@ impl Engine {
             if slot.done.is_some() {
                 continue;
             }
-            // Infallible: padding slots are born with `done` set, so an
-            // unfinished slot always maps to a request.
+            // lint: allow(unwrap): padding slots are born with `done`
+            // set, so an unfinished slot always maps to a request.
             let ri = slot.req_idx.expect("unfinished slots hold a request");
             let row = &logits[i * vocab..(i + 1) * vocab];
             let tok = slot.sampler.next_token(row) as i32;
@@ -502,7 +502,7 @@ impl SlotScheduler {
     fn release(&mut self, lane: usize) -> DecodeSlot {
         let slot = self.lanes[lane]
             .take()
-            .expect("release of an empty lane (double free)");
+            .expect("release of an empty lane (double free)"); // lint: allow(unwrap): the panic IS the double-free guard
         self.releases += 1;
         slot
     }
@@ -597,6 +597,9 @@ impl SlotScheduler {
     /// lane's position and prompt cursor.
     fn note_fed(&mut self, steps: &[SlotStep]) {
         for s in steps {
+            // lint: allow(unwrap): the planner only emits steps for
+            // occupied lanes, and no release happens between plan and
+            // note_fed.
             let slot = self.lanes[s.slot].as_mut().expect("planned lane");
             if slot.consumed < slot.req.prompt.len() {
                 slot.consumed += 1;
@@ -611,6 +614,8 @@ impl SlotScheduler {
     fn harvest_row(&mut self, lane: usize, row: &[f32], max_seq: usize,
                    metrics: &ServingMetrics) -> Option<GenerateResponse> {
         let pool = self.lanes.len();
+        // lint: allow(unwrap): harvest only visits lanes the planner
+        // fed this step, and they stay occupied until released below.
         let slot = self.lanes[lane].as_mut().expect("harvested lane");
         let tok = slot.sampler.next_token(row) as i32;
         slot.generated.push(tok);
@@ -675,7 +680,10 @@ pub struct SlotEngine {
     /// to resume (recompute-on-resume: their generated tokens were
     /// re-appended to the prompt; the saved state restores the sampler
     /// and the already-delivered stream on re-admission).
-    preempted: HashMap<RequestId, PreemptState>,
+    /// BTreeMap, not HashMap: parked state is keyed and removed by id
+    /// only, but keeping the container ordered is free and keeps the
+    /// engine's output paths hash-free (`hash-iter` lint rule).
+    preempted: BTreeMap<RequestId, PreemptState>,
     /// Re-admission queue for preempted requests, FIFO, drained before
     /// planning each step while lanes are free.
     preempt_queue: VecDeque<GenerateRequest>,
@@ -729,7 +737,7 @@ impl SlotEngine {
             max_seq,
             vocab,
             metrics,
-            preempted: HashMap::new(),
+            preempted: BTreeMap::new(),
             preempt_queue: VecDeque::new(),
             step_id: 0,
             #[cfg(feature = "failpoints")]
@@ -850,6 +858,7 @@ impl SlotEngine {
             // be appended again, and decode continues the same seeded
             // random stream it left — bit-identical to an unpreempted
             // run.
+            // lint: allow(unwrap): `seat` returned this lane above.
             let s = self.sched.lanes[lane].as_mut().expect("just seated");
             s.resumed_prefix = st.generated.len();
             s.generated = st.generated;
@@ -861,10 +870,12 @@ impl SlotEngine {
         // their original prompt head usually still sits in the trie, so
         // recompute-on-resume only recomputes the unregistered tail.
         let cached = {
+            // lint: allow(unwrap): `seat` returned this lane above.
             let s = self.sched.lanes[lane].as_ref().expect("just seated");
             self.cache.attach_prefix(lane, &s.req.prompt)
         };
         if cached > 0 {
+            // lint: allow(unwrap): `seat` returned this lane above.
             let s = self.sched.lanes[lane].as_mut().expect("just seated");
             s.consumed = cached;
             s.pos = cached;
@@ -1022,7 +1033,7 @@ impl SlotEngine {
         for s in &steps {
             let id = self.sched.lanes[s.slot]
                 .as_ref()
-                .expect("planned lane")
+                .expect("planned lane") // lint: allow(unwrap): plan() emits steps only for occupied lanes
                 .req.id;
             if row_ids.last() != Some(&id) {
                 row_ids.push(id);
@@ -1169,7 +1180,7 @@ impl SlotEngine {
                 }))
                 .min()
                 .map(|(_, _, lane)| lane)
-                .expect("active() > 1 implies an occupied lane");
+                .expect("active() > 1 implies an occupied lane"); // lint: allow(unwrap): guarded by the active() check above
             self.preempt(victim);
             None
         } else {
@@ -1242,7 +1253,7 @@ impl SlotEngine {
             let sub_need = &need[i..j];
             let id = self.sched.lanes[lane]
                 .as_ref()
-                .expect("planned lane")
+                .expect("planned lane") // lint: allow(unwrap): isolation re-runs only planned (occupied) lanes
                 .req.id;
             let t0 = Instant::now();
             match self.forward(sub_steps, sub_need, &[id]) {
@@ -1286,6 +1297,7 @@ impl SlotEngine {
         let mut out = Vec::new();
         while !queue.is_empty() || !self.is_idle() {
             while self.free_slots() > 0 && !queue.is_empty() {
+                // lint: allow(unwrap): loop condition checks !is_empty.
                 let req = queue.pop_front().expect("non-empty queue");
                 if let Some(resp) = self.admit(req)? {
                     out.push(resp);

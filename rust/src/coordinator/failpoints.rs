@@ -227,11 +227,11 @@ impl FaultState {
 static STARTUP_PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
 
 pub fn install_startup_plan(plan: FaultPlan) {
-    *STARTUP_PLAN.lock().unwrap_or_else(|p| p.into_inner()) = Some(plan);
+    *super::sync::lock_recover(&STARTUP_PLAN) = Some(plan);
 }
 
 pub fn take_startup_plan() -> Option<FaultPlan> {
-    STARTUP_PLAN.lock().unwrap_or_else(|p| p.into_inner()).take()
+    super::sync::lock_recover(&STARTUP_PLAN).take()
 }
 
 #[cfg(test)]

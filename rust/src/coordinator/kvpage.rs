@@ -187,7 +187,8 @@ impl BlockPool {
     /// pool is exhausted — the caller evicts or preempts.
     pub fn alloc(&mut self) -> Option<u32> {
         let b = self.free.pop()?;
-        debug_assert_eq!(self.refcount[b as usize], 0);
+        debug_assert_eq!(self.refcount[b as usize], 0,
+                         "free-listed KV block {b} still referenced");
         self.refcount[b as usize] = 1;
         self.allocated += 1;
         Some(b)
@@ -484,6 +485,8 @@ impl PagedKv {
         hashes.sort_unstable();
         let n = hashes.len();
         for (_, h) in hashes {
+            // lint: allow(unwrap): `h` came out of the same map two
+            // lines up; nothing removes entries in between.
             let block = prefix.map.remove(&h).expect("listed entry").block;
             self.pool.release(block);
         }
@@ -523,7 +526,9 @@ impl PagedKv {
             return 0;
         }
         let cached = (matched.len() * l).min(prompt.len() - 1);
-        debug_assert_eq!(cached.div_ceil(l), matched.len());
+        debug_assert_eq!(cached.div_ceil(l), matched.len(),
+                         "prefix-attach block count drifted from the \
+                          cached-position count");
         for &b in &matched {
             self.pool.retain(b);
             self.tables[slot].push(b);
@@ -550,6 +555,8 @@ impl PagedKv {
             let h = chain_hash(self.reg_hash[slot],
                                &prompt[bi * l..(bi + 1) * l]);
             let block = self.tables[slot][bi];
+            // lint: allow(unwrap): the prefix-cache guard at the top of
+            // this fn returned early when `self.prefix` is None.
             let prefix = self.prefix.as_mut().expect("checked above");
             if prefix.map.contains_key(&h) {
                 prefix.touch(h);
@@ -571,7 +578,8 @@ impl PagedKv {
     /// exhausted — the engine then preempts.
     pub fn reserve(&mut self, slot: usize, from: usize, to: usize)
                    -> Result<(), KvPressure> {
-        debug_assert!(from <= to);
+        debug_assert!(from <= to,
+                      "reserve range inverted: from {from} > to {to}");
         let l = self.pool.block_len();
         for bi in from / l..=to / l {
             if bi < self.tables[slot].len() {

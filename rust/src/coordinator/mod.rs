@@ -41,6 +41,7 @@ mod kvpage;
 mod request;
 mod router;
 mod sampler;
+mod sync;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use engine::{argmax, ArtifactBackend, DecodeBackend, Engine,

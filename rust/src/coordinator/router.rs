@@ -31,12 +31,12 @@
 //! artifacts when present, else the pure-Rust fused host model — so
 //! `serve` works end to end on a bare machine (DESIGN.md §7).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -54,24 +54,7 @@ use super::error::ServeError;
 use super::request::{FinishReason, GenerateRequest, GenerateResponse,
                      RequestId, RequestLimits};
 use super::sampler::SamplingParams;
-
-/// Lock a mutex, recovering from poisoning. A panic on another thread
-/// while it held the lock must not cascade into killing this one: every
-/// structure guarded here (queue, waiters map, cancel list) is left
-/// valid by any partial operation — worst case a request is failed by
-/// the fault-isolation path, never a corrupted map.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
-}
-
-/// Condvar wait that recovers a poisoned guard the same way.
-fn wait_timeout_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>,
-                               dur: Duration) -> MutexGuard<'a, T> {
-    match cv.wait_timeout(guard, dur) {
-        Ok((guard, _timeout)) => guard,
-        Err(poisoned) => poisoned.into_inner().0,
-    }
-}
+use super::sync::{lock_recover, wait_timeout_recover};
 
 /// Upper bound on one scheduler sleep: the thread wakes at the earliest
 /// batching deadline or after this cap, whichever comes first (and
@@ -100,7 +83,10 @@ impl Pending {
     }
 }
 
-type Waiters = Mutex<HashMap<RequestId, SyncSender<GenerateResponse>>>;
+// BTreeMap, not HashMap: the engine's final waiter sweep and the
+// deliver loop walk this map, and response/cleanup order must not
+// depend on hash-iteration order (`hash-iter` lint rule).
+type Waiters = Mutex<BTreeMap<RequestId, SyncSender<GenerateResponse>>>;
 
 struct Shared {
     batcher: Mutex<DynamicBatcher>,
@@ -171,7 +157,7 @@ impl Coordinator {
                 cfg.queue_depth,
             )),
             batcher_cv: Condvar::new(),
-            waiters: Mutex::new(HashMap::new()),
+            waiters: Mutex::new(BTreeMap::new()),
             cancels: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
             engine_dead: AtomicBool::new(false),

@@ -173,7 +173,7 @@ impl Sampler {
         }
         // Total order: logit descending, index ascending on exact ties.
         cand.sort_by(|a, b| {
-            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)) // lint: allow(unwrap): partial_cmp is total — the filter above keeps only finite logits
         });
         if p.top_k > 0 && cand.len() > p.top_k {
             cand.truncate(p.top_k);

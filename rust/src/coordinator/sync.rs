@@ -1,0 +1,61 @@
+//! Poison-recovering lock primitives (DESIGN.md §7, §10).
+//!
+//! Every mutex/condvar touch in `coordinator/` goes through these two
+//! helpers — the PR-6 poisoned-lock audit, now machine-enforced by the
+//! `raw-lock` lint rule: a raw `.lock()`/`.wait_timeout(` anywhere
+//! else in the coordinator is a CI failure.
+//!
+//! Why recovery is sound here: a panic on another thread while it held
+//! a coordinator lock must not cascade into killing this one. Every
+//! structure guarded by these locks (queue, waiters map, cancel list,
+//! startup fault plan) is left valid by any partial operation — worst
+//! case a request is failed by the fault-isolation path, never a
+//! corrupted map.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Lock a mutex, recovering from poisoning.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Condvar wait that recovers a poisoned guard the same way.
+pub(crate) fn wait_timeout_recover<'a, T>(cv: &Condvar,
+                                          guard: MutexGuard<'a, T>,
+                                          dur: Duration)
+                                          -> MutexGuard<'a, T> {
+    match cv.wait_timeout(guard, dur) {
+        Ok((guard, _timeout)) => guard,
+        Err(poisoned) => poisoned.into_inner().0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{lock_recover, wait_timeout_recover};
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+    }
+
+    #[test]
+    fn wait_timeout_recover_returns_the_guard() {
+        let m = Mutex::new(1u32);
+        let cv = Condvar::new();
+        let g = lock_recover(&m);
+        let g = wait_timeout_recover(&cv, g, Duration::from_millis(1));
+        assert_eq!(*g, 1);
+    }
+}

@@ -13,7 +13,10 @@
 //! caller-visible error, never a panic — the serving plan cache falls
 //! back to a known-good config instead of taking the engine down.
 
-use std::collections::HashMap;
+// BTreeMap, not HashMap: the pack cache is per-sweep scratch, but
+// keeping iteration deterministic costs nothing and keeps the kernel
+// crate free of hash-ordered containers (§10).
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::gpusim::{simulate, Decomposition, DeviceConfig};
@@ -171,7 +174,7 @@ pub fn autotune_split_k_host(a: &MatF32, q: &QuantizedLinear,
     // windows open — the plan cache amortizes the build the same way.
     let mut out = MatF32::zeros(a.rows, q.n);
     let mut scratch = SplitKScratch::new();
-    let mut packs: HashMap<u64, PackedLinear> = HashMap::new();
+    let mut packs: BTreeMap<u64, PackedLinear> = BTreeMap::new();
     let mut sweep: Vec<(HostKernelConfig, f64)> = Vec::new();
     let mut best: Option<(HostKernelConfig, f64)> = None;
 

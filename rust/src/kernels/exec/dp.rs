@@ -56,6 +56,8 @@ pub(crate) fn dp_exec(a: &MatF32, wr: WeightsRef<'_>,
     }
 
     // Output-tile grid (the DP launch geometry).
+    // lint: allow(alloc): per-call launch bookkeeping, exempt from the
+    // §5 allocation-free contract (which covers the math buffers).
     let mut tiles = Vec::new();
     let mut r0 = 0;
     while r0 < m {
@@ -97,6 +99,8 @@ pub(crate) fn dp_exec(a: &MatF32, wr: WeightsRef<'_>,
                 .enumerate()
                 .map(|(w, (ts, arena))| {
                     scope.spawn(move || {
+                        // lint: allow(alloc): per-worker tile ledger —
+                        // §5 bookkeeping, not a math buffer.
                         let mut done = Vec::new();
                         let mut off = 0usize;
                         let mut t = w;
@@ -123,11 +127,11 @@ pub(crate) fn dp_exec(a: &MatF32, wr: WeightsRef<'_>,
                         done
                     })
                 })
-                .collect();
+                .collect(); // lint: allow(alloc): join-handle list (§5 bookkeeping)
             handles
                 .into_iter()
-                .map(|h| h.join().expect("dp worker panicked"))
-                .collect()
+                .map(|h| h.join().expect("dp worker panicked")) // lint: allow(unwrap): worker panics must propagate, not be swallowed
+                .collect() // lint: allow(alloc): per-worker ledgers (§5 bookkeeping)
         });
 
     for (arena, worker_tiles) in stitch.iter().zip(&results) {

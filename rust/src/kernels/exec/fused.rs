@@ -70,9 +70,12 @@ pub fn fused_tile(
     // Per-group dequant panels for this column span, plus the row buffer
     // the rank-1 updates consume. Small (block_n-sized), so they live in
     // L1 across the whole k sweep.
+    // lint: allow(alloc): reference-oracle kernel, preserved verbatim —
+    // the §5 allocation-free contract binds the production executors,
+    // which the bit-identity suites pin against this one.
     let mut scale = vec![0.0f32; bw];
-    let mut zero = vec![0.0f32; bw];
-    let mut wrow = vec![0.0f32; bw];
+    let mut zero = vec![0.0f32; bw]; // lint: allow(alloc): see above
+    let mut wrow = vec![0.0f32; bw]; // lint: allow(alloc): see above
 
     let mut kp = kp0;
     while kp < kp1 {
@@ -140,6 +143,8 @@ pub fn fused_gemm_legacy(a: &MatF32, q: &QuantizedLinear,
         return out;
     }
 
+    // lint: allow(alloc): reference-oracle launch bookkeeping (see the
+    // note on the dequant panels above — §5 binds the production path).
     let mut tiles = Vec::new();
     let mut r0 = 0;
     while r0 < m {
@@ -167,12 +172,14 @@ pub fn fused_gemm_legacy(a: &MatF32, q: &QuantizedLinear,
         let handles: Vec<_> = (0..workers)
             .map(|w| {
                 scope.spawn(move || {
+                    // lint: allow(alloc): reference-oracle worker state
+                    // — §5 binds the production executors.
                     let mut done = Vec::new();
                     let mut t = w;
                     while t < tile_list.len() {
                         let (r0, r1, c0, c1) = tile_list[t];
                         let bw = c1 - c0;
-                        let mut buf = vec![0.0f32; (r1 - r0) * bw];
+                        let mut buf = vec![0.0f32; (r1 - r0) * bw]; // lint: allow(alloc): see above
                         fused_tile(a, q, r0, r1, c0, c1, 0, kp_total,
                                    kp_chunk, &mut buf, bw);
                         done.push((t, buf));
@@ -181,11 +188,11 @@ pub fn fused_gemm_legacy(a: &MatF32, q: &QuantizedLinear,
                     done
                 })
             })
-            .collect();
+            .collect(); // lint: allow(alloc): join-handle list (oracle path)
         handles
             .into_iter()
-            .map(|h| h.join().expect("legacy dp worker panicked"))
-            .collect()
+            .map(|h| h.join().expect("legacy dp worker panicked")) // lint: allow(unwrap): worker panics must propagate, not be swallowed
+            .collect() // lint: allow(alloc): per-worker ledgers (oracle path)
     });
 
     for worker_tiles in results {

@@ -311,7 +311,7 @@ pub fn host_gemm_multi(a: &MatF32, qs: &[&QuantizedLinear],
             host_gemm_into(a, q, cfg, scratch, &mut out);
             out
         })
-        .collect()
+        .collect() // lint: allow(alloc): the output matrices themselves — callers own them
 }
 
 /// Startup self-check: run all three fused decompositions on a random

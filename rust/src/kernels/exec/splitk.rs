@@ -152,9 +152,11 @@ pub(crate) fn splitk_exec(a: &MatF32, wr: WeightsRef<'_>,
     // to block_n so it stays cache-resident.
     let colw = if m <= 2 { n } else { bn.min(n) };
 
+    // `split`-entry slice table — §5 per-call bookkeeping, not a math
+    // buffer.
     let slice_bounds: Vec<(usize, usize)> = (0..split)
         .map(|s| (s * kp_total / split, (s + 1) * kp_total / split))
-        .collect();
+        .collect(); // lint: allow(alloc): see bookkeeping note above
     let workers = cfg.effective_threads().min(split).max(1);
     scratch.ensure_tile_scratches(workers);
     // Size/zero the reusable partials for this call's (split, m, n).

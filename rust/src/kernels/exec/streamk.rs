@@ -91,6 +91,8 @@ pub(crate) fn streamk_exec(a: &MatF32, wr: WeightsRef<'_>,
     // its per-tile contributions. `span_descs[s]` is span `s`'s index
     // range into `descs`; ranges are consecutive, so the fixup buffers
     // below can be handed to workers as disjoint contiguous slices.
+    // lint: allow(alloc): span/contribution tables — §5 per-call
+    // bookkeeping, not a math buffer.
     let mut descs: Vec<Contribution> = Vec::new();
     let mut span_descs: Vec<(usize, usize)> = Vec::with_capacity(spans);
     for s in 0..spans {

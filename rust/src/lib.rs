@@ -25,6 +25,7 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod gpusim;

@@ -19,6 +19,7 @@
 //!                       [--nk NK] [--split-k S]
 //! splitk-w4a16 tables   [all|t1..t6|f9|f10|t7|t8|t9]
 //! splitk-w4a16 autotune [--m M] [--nk NK] [--sim-only]
+//! splitk-w4a16 lint     [--json] [--root DIR]
 //! ```
 
 use std::path::PathBuf;
@@ -38,7 +39,7 @@ use splitk_w4a16::runtime::{ExecutableCache, HostTensor, Manifest, Runtime};
 use splitk_w4a16::tables;
 use splitk_w4a16::util::{logging, Args, Rng};
 
-const USAGE: &str = "usage: splitk-w4a16 <serve|gemm|hostgemm|simulate|tables|autotune> [options]
+const USAGE: &str = "usage: splitk-w4a16 <serve|gemm|hostgemm|simulate|tables|autotune|lint> [options]
 run `splitk-w4a16 <cmd> --help-cmd` or see README.md for options";
 
 fn main() -> Result<()> {
@@ -51,8 +52,26 @@ fn main() -> Result<()> {
         Some("simulate") => sim(&args),
         Some("tables") => print_tables(&args),
         Some("autotune") => autotune(&args),
+        Some("lint") => lint(&args),
         _ => bail!("{USAGE}"),
     }
+}
+
+/// `splitk lint [--json] [--root DIR]`: run the in-repo static
+/// analysis (DESIGN.md §10) over `rust/src/**` and exit nonzero on any
+/// finding — the CI invariant gate. `--root` points at the repo root
+/// (default `.`; `..`-relative DESIGN.md is found automatically when
+/// run from `rust/`).
+fn lint(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.opt_str("root", "."));
+    let findings = splitk_w4a16::analysis::run_lint(&root)?;
+    if args.has_flag("json") {
+        println!("{}", splitk_w4a16::analysis::report::to_json(&findings));
+    } else {
+        print!("{}", splitk_w4a16::analysis::report::to_text(&findings));
+    }
+    ensure!(findings.is_empty(), "lint: {} finding(s)", findings.len());
+    Ok(())
 }
 
 /// Resolve the serving token limit: an explicit `--max-new` overrides

@@ -25,7 +25,10 @@ pub use ops::{add_in_place, rms_norm, rope_in_place, silu_in_place,
               softmax_in_place};
 pub use weights::{HostModelWeights, LayerWeights, ProjectionGemm, SlotStep};
 
-use std::collections::HashMap;
+// BTreeMap/BTreeSet, not the hash variants: the plan and pack caches
+// are iterated for diagnostics (`planned_shapes`, `bytes`) and warmed in
+// a loop — deterministic order keeps those paths seed-stable (§10).
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{ensure, Result};
 
@@ -54,19 +57,19 @@ enum PlanMode {
 #[derive(Debug, Clone)]
 pub struct GemmPlan {
     mode: PlanMode,
-    cache: HashMap<(usize, usize, usize), HostKernelConfig>,
+    cache: BTreeMap<(usize, usize, usize), HostKernelConfig>,
 }
 
 impl GemmPlan {
     /// Autotune each new shape on first use (`threads` = worker budget,
     /// 0 = one per core).
     pub fn autotuned(threads: usize) -> Self {
-        GemmPlan { mode: PlanMode::Autotune { threads }, cache: HashMap::new() }
+        GemmPlan { mode: PlanMode::Autotune { threads }, cache: BTreeMap::new() }
     }
 
     /// Pin one config for every shape (bit-level reproducibility).
     pub fn fixed(cfg: HostKernelConfig) -> Self {
-        GemmPlan { mode: PlanMode::Fixed(cfg), cache: HashMap::new() }
+        GemmPlan { mode: PlanMode::Fixed(cfg), cache: BTreeMap::new() }
     }
 
     /// Config for this activation/layer pair (tuning it first if new).
@@ -113,6 +116,13 @@ impl GemmPlan {
     pub fn is_empty(&self) -> bool {
         self.cache.is_empty()
     }
+
+    /// The planned `(m, n, k)` shapes in ascending key order — the
+    /// BTreeMap makes this deterministic regardless of tuning order
+    /// (pinned by `planned_shapes_iterate_in_stable_order`).
+    pub fn planned_shapes(&self) -> Vec<(usize, usize, usize)> {
+        self.cache.keys().copied().collect()
+    }
 }
 
 /// Cache of tile-major [`PackedLinear`] weight copies, keyed by
@@ -132,7 +142,7 @@ impl GemmPlan {
 /// ([`HostModel::packed_layout_bytes`]).
 #[derive(Debug, Default)]
 struct PackCache {
-    map: HashMap<(usize, u64), PackedLinear>,
+    map: BTreeMap<(usize, u64), PackedLinear>,
 }
 
 impl PackCache {
@@ -333,14 +343,13 @@ impl HostModel {
     /// autotune mid-request.
     pub fn warm(&mut self, buckets: &[usize]) -> usize {
         let HostModel { weights, plan, packs, .. } = self;
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = BTreeSet::new();
         let shapes: Vec<&QuantizedLinear> = weights
             .projections()
             .filter(|q| seen.insert((q.n, q.k)))
             .collect();
         let mut visited = 0;
-        let mut prepacked: std::collections::HashSet<(usize, usize, u64)> =
-            std::collections::HashSet::new();
+        let mut prepacked: BTreeSet<(usize, usize, u64)> = BTreeSet::new();
         for &b in buckets {
             for q in &shapes {
                 let a = MatF32::new(b, q.k, vec![0.5; b * q.k]);
@@ -373,6 +382,12 @@ impl HostModel {
     pub fn warm_slots(&mut self, row_budget: usize) -> usize {
         let ms: Vec<usize> = (1..=row_budget.max(1)).collect();
         self.warm(&ms)
+    }
+
+    /// The GEMM shapes planned so far, ascending — stable diagnostics
+    /// output no matter what order requests tuned them in.
+    pub fn planned_shapes(&self) -> Vec<(usize, usize, usize)> {
+        self.plan.planned_shapes()
     }
 
     /// Prepacked weight copies cached so far (diagnostics/tests).
@@ -753,6 +768,27 @@ mod tests {
         let logits = m.decode_step(&mut st, &[7], 0, true).unwrap();
         assert!(logits.iter().all(|v| v.is_finite()));
         assert_eq!(m.packed_layouts(), 7);
+    }
+
+    #[test]
+    fn planned_shapes_iterate_in_stable_order() {
+        // The plan cache is a BTreeMap precisely so diagnostics and
+        // warm-order never depend on hash seeds or tuning order: two
+        // models warmed with the same buckets in *different* orders must
+        // report the identical (and sorted) shape list.
+        let mut fwd =
+            HostModel::with_plan(&meta(), GemmPlan::autotuned(1)).unwrap();
+        let mut rev =
+            HostModel::with_plan(&meta(), GemmPlan::autotuned(1)).unwrap();
+        fwd.warm(&[1, 2, 4]);
+        rev.warm(&[4, 2, 1]);
+        let shapes = fwd.planned_shapes();
+        assert_eq!(shapes, rev.planned_shapes(),
+                   "shape order must not depend on tuning order");
+        let mut sorted = shapes.clone();
+        sorted.sort_unstable();
+        assert_eq!(shapes, sorted, "shapes come out ascending");
+        assert_eq!(shapes.len(), 9); // 3 buckets x 3 distinct (n, k)
     }
 
     #[test]
