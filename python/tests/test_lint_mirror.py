@@ -287,6 +287,7 @@ WALLCLOCK_FILES = {
     "coordinator/router.rs",
     "coordinator/engine.rs",
     "coordinator/batcher.rs",
+    "http/proto.rs",
 }
 PANIC_MSG_FILES = {"coordinator/kvpage.rs", "coordinator/engine.rs"}
 
@@ -419,14 +420,15 @@ def lint_source(rel, src, sections):
     out = []
     in_coordinator = rel.startswith("coordinator/")
     in_exec = rel.startswith("kernels/exec/")
+    in_http = rel.startswith("http/")
     _token_rule(
         out, rel, scan, "raw-lock", [".lock()", ".wait_timeout("],
-        in_coordinator, LOCK_FNS,
+        in_coordinator or in_http, LOCK_FNS,
         "raw lock/wait outside coordinator::sync — use lock_recover / "
         "wait_timeout_recover (poison recovery, PR-6 contract)")
     _token_rule(
         out, rel, scan, "unwrap", [".unwrap()", ".expect("],
-        in_coordinator or in_exec, set(),
+        in_coordinator or in_exec or in_http, set(),
         "unannotated unwrap/expect on a hot path — state why it is "
         "infallible with `// lint: allow(unwrap): <reason>` or return "
         "an error")
@@ -536,6 +538,9 @@ def rules_of(rel, src):
 def test_raw_lock_positive_and_scope():
     src = "fn f(m: &Mutex<u32>) { let _ = m.lock(); }\n"
     assert rules_of("coordinator/x.rs", src) == ["raw-lock"]
+    # The HTTP front door holds locks too (worker-handle pool) and is
+    # held to the same poison-recovery contract.
+    assert rules_of("http/server.rs", src) == ["raw-lock"]
     assert rules_of("kernels/x.rs", src) == []
 
 
@@ -550,6 +555,7 @@ def test_raw_lock_recover_helpers_exempt():
 def test_unwrap_annotation_grammar():
     bare = "fn f(x: Option<u32>) { x.unwrap(); }\n"
     assert rules_of("coordinator/x.rs", bare) == ["unwrap"]
+    assert rules_of("http/api.rs", bare) == ["unwrap"]
     above = ("fn f(x: Option<u32>) {\n"
              "    // lint: allow(unwrap): set by construction\n"
              "    x.unwrap();\n}\n")
@@ -616,6 +622,10 @@ def test_wallclock_scopes():
     assert rules_of("kernels/autotune.rs", src) == []
     assert rules_of("metrics/mod.rs", src) == []
     assert rules_of("util/bench.rs", src) == []
+    # The wire reader's socket deadlines are wall-clock by nature; the
+    # rest of http/ stays under the rule.
+    assert rules_of("http/proto.rs", src) == []
+    assert rules_of("http/server.rs", src) == ["wallclock"]
 
 
 def test_panic_message_rule():
@@ -735,8 +745,8 @@ def test_mutation_wallclock_in_kernel():
 
 def test_design_md_has_the_cited_sections():
     s = real_sections()
-    # §1..§10 all exist after the invariant-enforcement section landed.
-    assert s >= set(range(1, 11)), s
+    # §1..§11 all exist after the HTTP front-door section landed.
+    assert s >= set(range(1, 12)), s
 
 
 def test_repo_tree_is_lint_clean():

@@ -75,6 +75,7 @@ fn build_trace(n: usize, seed: u64) -> Trace {
                 accepted_at: Instant::now(),
                 deadline: None,
                 priority: 0,
+                stream: None,
             };
             (arrival, req)
         })

@@ -23,6 +23,7 @@ fn req(id: u64, at: Instant) -> GenerateRequest {
         accepted_at: at,
         deadline: None,
         priority: 0,
+        stream: None,
     }
 }
 

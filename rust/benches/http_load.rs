@@ -1,0 +1,201 @@
+//! Bench: HTTP front-door streaming latency (DESIGN.md §11) — p50/p95
+//! time-to-first-token, inter-token latency, and end-to-end latency
+//! under seeded Poisson open-loop arrivals (`BENCH_http.json`).
+//!
+//! An in-process server (host backend, continuous scheduler) is driven
+//! by client threads over real loopback sockets. The driver thread
+//! sleeps exponential inter-arrival gaps and launches one streaming
+//! `/v1/completions` client per request; each client timestamps every
+//! SSE token frame as it arrives off the socket, so:
+//!
+//! * **TTFT** — request write → first token frame. With per-token
+//!   streaming this is roughly one decode step plus queueing, far
+//!   below the full completion time; the bench asserts that ordering,
+//!   which is exactly what distinguishes real streaming from
+//!   harvest-then-replay.
+//! * **ITL** — gap between consecutive token frames of one stream.
+//! * **e2e** — request write → connection close.
+//!
+//! ```sh
+//! cargo bench --bench http_load [-- --smoke]
+//! ```
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::config::ServeConfig;
+use splitk_w4a16::coordinator::Coordinator;
+use splitk_w4a16::http::{HttpConfig, HttpServer};
+use splitk_w4a16::util::bench::BenchResult;
+use splitk_w4a16::util::{Json, Rng};
+
+fn server_config() -> ServeConfig {
+    ServeConfig {
+        backend: "host".into(),
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        slots: 4,
+        prefill_chunk: 8,
+        batch_window_ms: 1,
+        max_new_tokens: 32,
+        max_seq: 128,
+        warm_start: false,
+        self_check: false,
+        http_addr: "127.0.0.1:0".into(),
+        http_conns: 256,
+        ..Default::default()
+    }
+}
+
+/// Latency observations from one streamed completion.
+struct Sample {
+    ttft_ns: f64,
+    itl_ns: Vec<f64>,
+    e2e_ns: f64,
+}
+
+/// Drive one streaming completion and timestamp its token frames.
+fn run_client(addr: SocketAddr, prompt: &[i32], max_tokens: usize)
+              -> Sample {
+    let body = format!(
+        "{{\"prompt\": {:?}, \"max_tokens\": {max_tokens}, \
+         \"stream\": true}}", prompt);
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let t0 = Instant::now();
+    s.write_all(format!(
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(), body).as_bytes()).expect("send");
+    let mut frame_times: Vec<Instant> = Vec::new();
+    let mut seen = 0usize;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        let n = s.read(&mut chunk).expect("read");
+        if n == 0 {
+            break;
+        }
+        let now = Instant::now();
+        buf.extend_from_slice(&chunk[..n]);
+        // Timestamp each *new* token frame in the buffer. Frames that
+        // land in one read share a timestamp (their gap really was ~0:
+        // they were back-to-back on the wire).
+        let text = String::from_utf8_lossy(&buf);
+        let count = text.matches("data: {\"token\":").count();
+        for _ in seen..count {
+            frame_times.push(now);
+        }
+        seen = count;
+    }
+    let e2e_ns = t0.elapsed().as_nanos() as f64;
+    assert!(!frame_times.is_empty(), "stream produced no token frames");
+    let text = String::from_utf8_lossy(&buf);
+    assert!(text.contains("data: [DONE]"), "stream must end cleanly");
+    let ttft_ns = frame_times[0].duration_since(t0).as_nanos() as f64;
+    let itl_ns = frame_times
+        .windows(2)
+        .map(|w| w[1].duration_since(w[0]).as_nanos() as f64)
+        .collect();
+    Sample { ttft_ns, itl_ns, e2e_ns }
+}
+
+/// Aggregate raw nanosecond samples into the repo's standard record.
+fn aggregate(name: &str, mut ns: Vec<f64>) -> BenchResult {
+    ns.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
+    let n = ns.len();
+    BenchResult {
+        name: name.to_string(),
+        samples: n,
+        mean_ns: ns.iter().sum::<f64>() / n as f64,
+        p50_ns: ns[n / 2],
+        p95_ns: ns[(n * 95 / 100).min(n - 1)],
+        min_ns: ns[0],
+        max_ns: ns[n - 1],
+    }
+}
+
+/// One open-loop series: `n` requests, exponential gaps with the given
+/// mean. Returns (ttft, itl, e2e) sample vectors.
+fn run_series(addr: SocketAddr, n: usize, mean_gap_ms: f64, seed: u64,
+              max_tokens: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::seed_from(seed);
+    let mut clients = Vec::with_capacity(n);
+    for i in 0..n {
+        let gap_ms = -rng.next_f64().max(1e-9).ln() * mean_gap_ms;
+        thread::sleep(Duration::from_micros((gap_ms * 1e3) as u64));
+        let plen = 2 + (i % 6);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.gen_range(0, 512) as i32).collect();
+        clients.push(thread::spawn(move || {
+            run_client(addr, &prompt, max_tokens)
+        }));
+    }
+    let mut ttft = Vec::new();
+    let mut itl = Vec::new();
+    let mut e2e = Vec::new();
+    for c in clients {
+        let s = c.join().expect("client thread");
+        ttft.push(s.ttft_ns);
+        itl.extend(s.itl_ns);
+        e2e.push(s.e2e_ns);
+    }
+    (ttft, itl, e2e)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (offered rate label, mean inter-arrival gap ms, requests)
+    let series: &[(&str, f64, usize)] = if smoke {
+        &[("r100", 10.0, 8)]
+    } else {
+        &[("r25", 40.0, 48), ("r100", 10.0, 48), ("r400", 2.5, 48)]
+    };
+    let max_tokens = if smoke { 8 } else { 16 };
+
+    let cfg = server_config();
+    let coord = Arc::new(Coordinator::start(&cfg).expect("coordinator"));
+    let server = HttpServer::start(Arc::clone(&coord),
+                                   &HttpConfig::from_serve(&cfg))
+        .expect("http server");
+    let addr = server.addr();
+    println!("http front door on {addr} ({} lane(s), {} max conns)",
+             cfg.slots, cfg.http_conns);
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    for (i, &(label, gap_ms, n)) in series.iter().enumerate() {
+        println!("series {label}: {n} streamed completions, \
+                  exponential gaps (mean {gap_ms} ms, seed {})", 11 + i);
+        let (ttft, itl, e2e) =
+            run_series(addr, n, gap_ms, 11 + i as u64, max_tokens);
+        let ttft = aggregate(&format!("http_ttft_{label}"), ttft);
+        let itl = aggregate(&format!("http_itl_{label}"), itl);
+        let e2e = aggregate(&format!("http_e2e_{label}"), e2e);
+        for r in [&ttft, &itl, &e2e] {
+            println!("{}", r.line());
+        }
+        assert!(
+            ttft.p50_ns < e2e.p50_ns,
+            "TTFT must beat end-to-end — streaming is per-token, \
+             not harvest-then-replay");
+        results.extend([ttft, itl, e2e]);
+    }
+
+    server.stop();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown().expect("clean shutdown"),
+        Err(_) => panic!("coordinator still shared after server stop"),
+    }
+
+    let out = if smoke { "BENCH_http_smoke.json" }
+              else { "BENCH_http.json" };
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."));
+    let path = root.join(out);
+    match std::fs::write(&path, arr.to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

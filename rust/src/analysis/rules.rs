@@ -40,14 +40,17 @@ const ALLOC_FNS: [&str; 4] =
 
 /// Modules where wall-clock reads are legitimate: CLI timing loops,
 /// the bench harness, the measuring autotuner, serving-metrics uptime,
-/// and the deadline/batch-window machinery.
-const WALLCLOCK_FILES: [&str; 6] = [
+/// the deadline/batch-window machinery, and the HTTP wire reader
+/// (socket read deadlines are the slowloris defense, DESIGN.md §11 —
+/// inherently wall-clock).
+const WALLCLOCK_FILES: [&str; 7] = [
     "main.rs",
     "util/bench.rs",
     "kernels/autotune.rs",
     "coordinator/router.rs",
     "coordinator/engine.rs",
     "coordinator/batcher.rs",
+    "http/proto.rs",
 ];
 
 /// Pool/ledger files whose panics and asserts must carry messages.
@@ -252,17 +255,18 @@ pub fn lint_source(rel: &str, src: &str,
 
     let in_coordinator = rel.starts_with("coordinator/");
     let in_exec = rel.starts_with("kernels/exec/");
+    let in_http = rel.starts_with("http/");
     token_rule(
         &mut out, rel, &scan, "raw-lock",
         &[".lock()", ".wait_timeout("],
-        in_coordinator, &LOCK_FNS,
+        in_coordinator || in_http, &LOCK_FNS,
         "raw lock/wait outside coordinator::sync — use lock_recover / \
          wait_timeout_recover (poison recovery, PR-6 contract)",
     );
     token_rule(
         &mut out, rel, &scan, "unwrap",
         &[".unwrap()", ".expect("],
-        in_coordinator || in_exec, &[],
+        in_coordinator || in_exec || in_http, &[],
         "unannotated unwrap/expect on a hot path — state why it is \
          infallible with `// lint: allow(unwrap): <reason>` or return \
          an error",
@@ -319,6 +323,9 @@ mod tests {
     fn raw_lock_flagged_in_coordinator() {
         let src = "fn f(m: &Mutex<u32>) { let _ = m.lock(); }\n";
         assert_eq!(rules_of("coordinator/x.rs", src), ["raw-lock"]);
+        // The HTTP front door holds locks too (worker-handle pool) and
+        // is held to the same poison-recovery contract.
+        assert_eq!(rules_of("http/server.rs", src), ["raw-lock"]);
         // Out of scope: same text elsewhere is clean.
         assert!(rules_of("kernels/x.rs", src).is_empty());
     }
@@ -333,6 +340,7 @@ mod tests {
     fn unwrap_needs_an_annotation_with_a_reason() {
         let bare = "fn f(x: Option<u32>) { x.unwrap(); }\n";
         assert_eq!(rules_of("coordinator/x.rs", bare), ["unwrap"]);
+        assert_eq!(rules_of("http/api.rs", bare), ["unwrap"]);
         let ok = "fn f(x: Option<u32>) {\n    // lint: allow(unwrap): set by construction\n    x.unwrap();\n}\n";
         assert!(rules_of("coordinator/x.rs", ok).is_empty());
         let trailing = "fn f(x: Option<u32>) { x.unwrap(); // lint: allow(unwrap): set above\n}\n";
@@ -388,6 +396,10 @@ mod tests {
         assert_eq!(rules_of("kernels/exec/x.rs", src), ["wallclock"]);
         assert!(rules_of("kernels/autotune.rs", src).is_empty());
         assert!(rules_of("metrics/mod.rs", src).is_empty());
+        // The wire reader's socket deadlines are wall-clock by nature;
+        // the rest of http/ stays under the rule.
+        assert!(rules_of("http/proto.rs", src).is_empty());
+        assert_eq!(rules_of("http/server.rs", src), ["wallclock"]);
     }
 
     #[test]

@@ -67,6 +67,21 @@ pub struct ServeConfig {
     /// KV blocks in a hash trie, and a new request with a shared
     /// prompt head attaches those blocks instead of re-prefilling.
     pub prefix_cache: bool,
+    /// HTTP front-door bind address (DESIGN.md §11), e.g.
+    /// `"127.0.0.1:8080"` or `"127.0.0.1:0"` for an ephemeral port.
+    /// Empty (the default) keeps the in-process driver loop — no
+    /// socket is ever opened.
+    pub http_addr: String,
+    /// Bounded HTTP connection pool: at most this many connections are
+    /// in flight at once; excess accepts are shed with `503` +
+    /// `Retry-After` instead of queueing unboundedly.
+    pub http_conns: usize,
+    /// Slowloris defense: a connection must deliver its full request
+    /// head (and declared body) within this overall deadline, ms.
+    pub http_header_timeout_ms: u64,
+    /// Largest accepted request body, bytes; longer declared bodies
+    /// are rejected with `413` before the server reads them.
+    pub http_body_cap: usize,
 }
 
 /// Which decode implementation the engine will build.
@@ -98,6 +113,10 @@ impl Default for ServeConfig {
             kv_block_len: crate::coordinator::DEFAULT_KV_BLOCK_LEN,
             kv_blocks: 0,
             prefix_cache: true,
+            http_addr: String::new(),
+            http_conns: 64,
+            http_header_timeout_ms: 5000,
+            http_body_cap: 65536,
         }
     }
 }
@@ -184,6 +203,22 @@ impl ServeConfig {
                 Some(b) => b.as_bool()?,
                 None => d.prefix_cache,
             },
+            http_addr: match v.opt("http_addr") {
+                Some(s) => s.as_str()?.to_string(),
+                None => d.http_addr,
+            },
+            http_conns: match v.opt("http_conns") {
+                Some(n) => n.as_usize()?,
+                None => d.http_conns,
+            },
+            http_header_timeout_ms: match v.opt("http_header_timeout_ms") {
+                Some(n) => n.as_u64()?,
+                None => d.http_header_timeout_ms,
+            },
+            http_body_cap: match v.opt("http_body_cap") {
+                Some(n) => n.as_usize()?,
+                None => d.http_body_cap,
+            },
         })
     }
 
@@ -211,6 +246,11 @@ impl ServeConfig {
             ("kv_block_len", Json::num(self.kv_block_len as f64)),
             ("kv_blocks", Json::num(self.kv_blocks as f64)),
             ("prefix_cache", Json::Bool(self.prefix_cache)),
+            ("http_addr", Json::str(self.http_addr.clone())),
+            ("http_conns", Json::num(self.http_conns as f64)),
+            ("http_header_timeout_ms",
+             Json::num(self.http_header_timeout_ms as f64)),
+            ("http_body_cap", Json::num(self.http_body_cap as f64)),
         ])
     }
 
@@ -256,6 +296,18 @@ impl ServeConfig {
         // kv_block_len = 0 (contiguous fallback): prefix_cache and
         // kv_blocks are simply ignored, not rejected — `--kv-block-len
         // 0` alone must select the fallback.
+        if !self.http_addr.is_empty() {
+            ensure!(self.http_conns >= 1,
+                    "http_conns must be >= 1 when the HTTP door is on");
+            ensure!(self.http_conns <= 4096,
+                    "http_conns must be <= 4096");
+            ensure!(self.http_header_timeout_ms >= 1,
+                    "http_header_timeout_ms must be >= 1 (a zero deadline \
+                     would time every connection out at accept)");
+            ensure!(self.http_body_cap >= 64,
+                    "http_body_cap must be >= 64 bytes (a completion \
+                     request body cannot fit below that)");
+        }
         Ok(())
     }
 
@@ -464,6 +516,40 @@ mod tests {
             ..Default::default()
         };
         assert!(fallback.continuous());
+    }
+
+    #[test]
+    fn http_knobs_roundtrip_and_validate() {
+        let d = ServeConfig::default();
+        assert!(d.http_addr.is_empty(), "HTTP door is off by default");
+        assert_eq!(d.http_conns, 64);
+        assert_eq!(d.http_header_timeout_ms, 5000);
+        assert_eq!(d.http_body_cap, 65536);
+        let cfg = ServeConfig::from_json(&Json::parse(
+            r#"{"http_addr": "127.0.0.1:0", "http_conns": 8,
+                "http_header_timeout_ms": 250,
+                "http_body_cap": 1024}"#).unwrap()).unwrap();
+        assert_eq!(cfg.http_addr, "127.0.0.1:0");
+        assert_eq!(cfg.http_conns, 8);
+        assert_eq!(cfg.http_header_timeout_ms, 250);
+        assert_eq!(cfg.http_body_cap, 1024);
+        assert!(cfg.validate().is_ok());
+        let back = ServeConfig::from_json(&Json::parse(
+            &cfg.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+        // Degenerate knobs only matter when the door is actually on.
+        let off = ServeConfig { http_conns: 0, ..Default::default() };
+        assert!(off.validate().is_ok(), "door off: knobs ignored");
+        let on = ServeConfig { http_addr: "127.0.0.1:0".into(),
+                               http_conns: 0, ..Default::default() };
+        assert!(on.validate().is_err());
+        let stall = ServeConfig { http_addr: "127.0.0.1:0".into(),
+                                  http_header_timeout_ms: 0,
+                                  ..Default::default() };
+        assert!(stall.validate().is_err());
+        let tiny = ServeConfig { http_addr: "127.0.0.1:0".into(),
+                                 http_body_cap: 8, ..Default::default() };
+        assert!(tiny.validate().is_err());
     }
 
     #[test]

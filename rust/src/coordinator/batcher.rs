@@ -191,6 +191,7 @@ mod tests {
             accepted_at: at,
             deadline: None,
             priority: 0,
+            stream: None,
         }
     }
 

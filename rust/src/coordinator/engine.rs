@@ -410,6 +410,11 @@ impl Engine {
             slot.generated.push(tok);
             slot.next_token = tok;
             let req = &requests[ri];
+            // Per-token streaming (DESIGN.md §11): emit at the sampling
+            // site, so delivery order is the sampling order.
+            if let Some(sink) = req.stream.as_ref() {
+                sink.emit(tok);
+            }
             if req.stop_token == Some(tok) {
                 slot.done = Some(FinishReason::Stop);
             } else if slot.generated.len() >= req.max_new_tokens {
@@ -620,6 +625,15 @@ impl SlotScheduler {
         let tok = slot.sampler.next_token(row) as i32;
         slot.generated.push(tok);
         slot.next_token = tok;
+        // Per-token streaming (DESIGN.md §11): emit at the sampling
+        // site — this is the only place the continuous engine samples,
+        // so each token is emitted exactly once (preemption re-feeds
+        // generated tokens as prefill without sampling, and the
+        // fault-isolation solo re-runs are the only harvest of their
+        // step).
+        if let Some(sink) = slot.req.stream.as_ref() {
+            sink.emit(tok);
+        }
         let done = if slot.req.stop_token == Some(tok) {
             Some(FinishReason::Stop)
         } else if slot.generated.len() >= slot.req.max_new_tokens {
@@ -903,11 +917,30 @@ impl SlotEngine {
 
     /// Cancel an in-flight request: frees its lane exactly like a
     /// natural finish (scrub + release) and returns its terminal
-    /// response with the tokens generated so far. `None` if no lane
-    /// holds `id` (already finished, or never admitted).
+    /// response with the tokens generated so far. A request parked by
+    /// KV-pressure preemption (awaiting readmission) is cancelled too:
+    /// it is removed from the preempt queue and its saved stream is
+    /// returned, so a cancelled id can never be resurrected by
+    /// readmission. `None` if `id` is neither in a lane nor preempted
+    /// (already finished, or never admitted).
     pub fn cancel(&mut self, id: RequestId) -> Option<GenerateResponse> {
-        let lane = self.sched.lane_of(id)?;
-        Some(self.fail_lane(lane, FinishReason::Cancelled, None))
+        if let Some(lane) = self.sched.lane_of(id) {
+            return Some(self.fail_lane(lane, FinishReason::Cancelled,
+                                       None));
+        }
+        let pos = self.preempt_queue.iter().position(|r| r.id == id)?;
+        // lint: allow(unwrap): `pos` was found in the queue just above.
+        let req = self.preempt_queue.remove(pos).expect("indexed above");
+        let tokens = self
+            .preempted
+            .remove(&id)
+            .map(|st| st.generated)
+            .unwrap_or_default();
+        self.metrics.record_cancelled();
+        let mut resp = Self::unseated_response(
+            &req, Instant::now(), FinishReason::Cancelled, None);
+        resp.tokens = tokens;
+        Some(resp)
     }
 
     /// Fail every lane whose deadline has passed. Runs at the top of
@@ -1473,6 +1506,7 @@ mod tests {
             accepted_at: Instant::now(),
             deadline: None,
             priority: 0,
+            stream: None,
         }
     }
 

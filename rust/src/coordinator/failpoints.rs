@@ -44,6 +44,22 @@ pub enum Fault {
     /// Sleep `millis` before executing step `at_step` (pairs with
     /// per-request deadlines to force `DeadlineExceeded`).
     SlowStep { at_step: u64, millis: u64 },
+    /// HTTP front door (DESIGN.md §11): make connection `conn` (1-based
+    /// accept order) behave like a slowloris client — its header read
+    /// deterministically reports a timeout, driving the 408 +
+    /// `slowloris_timeouts` defense path without real waiting. Ignored
+    /// by the engine hooks.
+    ConnStallHeader { conn: u64 },
+    /// HTTP front door: fail connection `conn`'s socket writes after
+    /// `after_writes` successful writes (models a client that
+    /// disconnected mid-stream; drives the write-failure →
+    /// `Coordinator::cancel` path). Ignored by the engine hooks.
+    ConnDropWrite { conn: u64, after_writes: u64 },
+    /// HTTP front door: sleep `millis` before each socket write on
+    /// connection `conn` (a slow-reading client; pins that one slow
+    /// consumer cannot stall other connections). Ignored by the engine
+    /// hooks.
+    ConnSlowWrite { conn: u64, millis: u64 },
 }
 
 /// A deterministic schedule of faults.
@@ -84,7 +100,8 @@ impl FaultPlan {
     /// Parse a CLI spec: comma-separated entries of
     /// `panic-forward:<req>:<step>` | `panic-after-kv:<req>:<step>` |
     /// `err-forward:<req>:<step>` | `admit-fail:<req>` |
-    /// `slow-step:<step>:<millis>`.
+    /// `slow-step:<step>:<millis>` | `stall-header:<conn>` |
+    /// `drop-conn:<conn>:<writes>` | `slow-client:<conn>:<millis>`.
     pub fn parse(spec: &str) -> Result<Self, String> {
         let mut faults = Vec::new();
         for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
@@ -106,11 +123,22 @@ impl FaultPlan {
                 (Some("slow-step"), 3) => Fault::SlowStep {
                     at_step: num(parts[1])?, millis: num(parts[2])?,
                 },
+                (Some("stall-header"), 2) => Fault::ConnStallHeader {
+                    conn: num(parts[1])?,
+                },
+                (Some("drop-conn"), 3) => Fault::ConnDropWrite {
+                    conn: num(parts[1])?, after_writes: num(parts[2])?,
+                },
+                (Some("slow-client"), 3) => Fault::ConnSlowWrite {
+                    conn: num(parts[1])?, millis: num(parts[2])?,
+                },
                 _ => return Err(format!(
                     "unrecognized failpoint {entry:?} (expected \
                      panic-forward:<req>:<step>, panic-after-kv:<req>:<step>, \
-                     err-forward:<req>:<step>, admit-fail:<req>, or \
-                     slow-step:<step>:<millis>)"
+                     err-forward:<req>:<step>, admit-fail:<req>, \
+                     slow-step:<step>:<millis>, stall-header:<conn>, \
+                     drop-conn:<conn>:<writes>, or \
+                     slow-client:<conn>:<millis>)"
                 )),
             };
             faults.push(fault);
@@ -213,7 +241,13 @@ impl FaultState {
                         ));
                     }
                 }
-                Fault::AdmitFail { .. } | Fault::SlowStep { .. } => {}
+                // Connection-level faults are applied by the HTTP
+                // server, never by the engine hooks.
+                Fault::AdmitFail { .. }
+                | Fault::SlowStep { .. }
+                | Fault::ConnStallHeader { .. }
+                | Fault::ConnDropWrite { .. }
+                | Fault::ConnSlowWrite { .. } => {}
             }
         }
         Ok(())
@@ -256,6 +290,36 @@ mod tests {
         assert!(FaultPlan::parse("panic-forward:1").is_err());
         assert!(FaultPlan::parse("what:1:2").is_err());
         assert!(FaultPlan::parse("slow-step:x:2").is_err());
+        assert!(FaultPlan::parse("stall-header:1:2").is_err());
+        assert!(FaultPlan::parse("drop-conn:1").is_err());
+        assert!(FaultPlan::parse("slow-client:a:5").is_err());
+    }
+
+    #[test]
+    fn parse_connection_level_faults() {
+        let plan = FaultPlan::parse(
+            "stall-header:1, drop-conn:2:3, slow-client:4:25",
+        ).unwrap();
+        assert_eq!(plan.faults, vec![
+            Fault::ConnStallHeader { conn: 1 },
+            Fault::ConnDropWrite { conn: 2, after_writes: 3 },
+            Fault::ConnSlowWrite { conn: 4, millis: 25 },
+        ]);
+    }
+
+    #[test]
+    fn connection_faults_are_inert_in_engine_hooks() {
+        let mut st = FaultState::new(FaultPlan::new(vec![
+            Fault::ConnStallHeader { conn: 1 },
+            Fault::ConnDropWrite { conn: 1, after_writes: 0 },
+            Fault::ConnSlowWrite { conn: 1, millis: 5 },
+        ]));
+        st.before_step(1);
+        assert!(st.admit(1).is_ok());
+        assert!(st.forward(1, &[1], ForwardStage::Before).is_ok());
+        assert!(st.forward(1, &[1], ForwardStage::After).is_ok());
+        // Never consumed by the engine: they belong to the HTTP server.
+        assert!(!st.exhausted());
     }
 
     #[test]

@@ -41,7 +41,8 @@ mod kvpage;
 mod request;
 mod router;
 mod sampler;
-mod sync;
+mod stream;
+pub(crate) mod sync;
 
 pub use batcher::{Batch, DynamicBatcher};
 pub use engine::{argmax, ArtifactBackend, DecodeBackend, Engine,
@@ -55,3 +56,4 @@ pub use request::{
 };
 pub use router::{Coordinator, Pending};
 pub use sampler::{Pcg32, Sampler, SamplingParams};
+pub use stream::{StreamEvent, TokenSink, TokenStream};

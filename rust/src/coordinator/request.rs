@@ -3,6 +3,7 @@
 use std::time::Instant;
 
 use super::sampler::SamplingParams;
+use super::stream::TokenSink;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
@@ -36,6 +37,11 @@ pub struct GenerateRequest {
     /// in-flight request is the preemption victim. 0 (the default) is
     /// ordinary traffic.
     pub priority: u8,
+    /// Per-token streaming sink (DESIGN.md §11). When present, each
+    /// sampled token is emitted here the moment it leaves the sampler;
+    /// the terminal [`GenerateResponse`] still carries the full token
+    /// vector. `None` keeps pure end-of-request delivery.
+    pub stream: Option<TokenSink>,
 }
 
 impl GenerateRequest {

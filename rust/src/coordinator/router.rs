@@ -54,6 +54,7 @@ use super::error::ServeError;
 use super::request::{FinishReason, GenerateRequest, GenerateResponse,
                      RequestId, RequestLimits};
 use super::sampler::SamplingParams;
+use super::stream::{StreamEvent, TokenSink, TokenStream};
 use super::sync::{lock_recover, wait_timeout_recover};
 
 /// Upper bound on one scheduler sleep: the thread wakes at the earliest
@@ -62,31 +63,38 @@ use super::sync::{lock_recover, wait_timeout_recover};
 /// the old fixed 200 µs busy-poll.
 const SCHED_IDLE_POLL: Duration = Duration::from_millis(5);
 
-/// Handle to a submitted request.
+/// Handle to a submitted request: the legacy end-of-request view,
+/// reimplemented on top of the per-token stream (DESIGN.md §11) — it
+/// drains the channel to the terminal event, whose `tokens` carries the
+/// full transcript.
 pub struct Pending {
     pub id: RequestId,
-    rx: Receiver<GenerateResponse>,
+    stream: TokenStream,
 }
 
 impl Pending {
     /// Block until the response arrives. Errors if the engine died
     /// before producing one (the response sender is dropped).
     pub fn wait(self) -> Result<GenerateResponse> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow!("engine dropped request {}", self.id))
+        self.stream.wait_done()
     }
 
-    /// Non-blocking check.
+    /// Non-blocking check for the terminal response (intermediate token
+    /// events are discarded — the terminal carries the full stream).
     pub fn try_wait(&self) -> Option<GenerateResponse> {
-        self.rx.try_recv().ok()
+        loop {
+            match self.stream.try_recv()? {
+                StreamEvent::Token(_) => continue,
+                StreamEvent::Done(resp) => return Some(resp),
+            }
+        }
     }
 }
 
 // BTreeMap, not HashMap: the engine's final waiter sweep and the
 // deliver loop walk this map, and response/cleanup order must not
 // depend on hash-iteration order (`hash-iter` lint rule).
-type Waiters = Mutex<BTreeMap<RequestId, SyncSender<GenerateResponse>>>;
+type Waiters = Mutex<BTreeMap<RequestId, SyncSender<StreamEvent>>>;
 
 struct Shared {
     batcher: Mutex<DynamicBatcher>,
@@ -400,6 +408,29 @@ impl Coordinator {
                                 stop_token: Option<i32>,
                                 sampling: SamplingParams, priority: u8)
                                 -> std::result::Result<Pending, ServeError> {
+        let stream = self.submit_inner(prompt, max_new_tokens, stop_token,
+                                       sampling, priority, false)?;
+        Ok(Pending { id: stream.id, stream })
+    }
+
+    /// Validate and enqueue a request for per-token streaming delivery
+    /// (DESIGN.md §11): the returned [`TokenStream`] yields each sampled
+    /// token as a [`StreamEvent::Token`] the moment the engine samples
+    /// it, then exactly one terminal [`StreamEvent::Done`] carrying the
+    /// full [`GenerateResponse`]. Same refusal semantics as
+    /// [`Self::submit`].
+    pub fn submit_streaming(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                            stop_token: Option<i32>,
+                            sampling: SamplingParams)
+                            -> std::result::Result<TokenStream, ServeError> {
+        self.submit_inner(prompt, max_new_tokens, stop_token, sampling, 0,
+                          true)
+    }
+
+    fn submit_inner(&self, prompt: Vec<i32>, max_new_tokens: usize,
+                    stop_token: Option<i32>, sampling: SamplingParams,
+                    priority: u8, streaming: bool)
+                    -> std::result::Result<TokenStream, ServeError> {
         if self.shared.engine_dead.load(Ordering::SeqCst) {
             return Err(ServeError::EngineDown);
         }
@@ -416,7 +447,18 @@ impl Coordinator {
             .map_err(|e| ServeError::InvalidRequest(
                 format!("sampling params: {e}")))?;
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
-        let (tx, rx) = sync_channel(1);
+        // Channel capacity: the engine emits at most `max_new_tokens`
+        // Token events plus the single terminal Done, so the engine's
+        // try_send can never drop an event on a live receiver. The
+        // legacy path drains to Done without reading Tokens, so it only
+        // ever holds the terminal event.
+        let cap = if streaming { max_new_tokens + 1 } else { 1 };
+        let (tx, rx) = sync_channel(cap);
+        let sink = if streaming {
+            Some(TokenSink::new(tx.clone()))
+        } else {
+            None
+        };
         lock_recover(&self.shared.waiters).insert(id, tx);
         // Re-check after publishing the waiter: the engine marks itself
         // dead *before* its final waiter sweep, so either that sweep
@@ -442,6 +484,7 @@ impl Coordinator {
             accepted_at,
             deadline,
             priority,
+            stream: sink,
         };
         let pushed = lock_recover(&self.shared.batcher).push(req);
         if pushed.is_err() {
@@ -452,7 +495,7 @@ impl Coordinator {
             });
         }
         self.shared.batcher_cv.notify_one();
-        Ok(Pending { id, rx })
+        Ok(TokenStream::new(id, rx))
     }
 
     /// Cancel a request by id. Queued requests are removed and answered
@@ -463,6 +506,13 @@ impl Coordinator {
     /// initiated, `false` if the request is unknown, already finished,
     /// or mid-batch on the static path (static batches run to
     /// completion).
+    ///
+    /// Idempotent and cheap after the fact: cancelling an id that
+    /// already finished (or was already cancelled) is a no-op returning
+    /// `false` — the waiter is gone by then — and a duplicate cancel of
+    /// an in-flight id is deduplicated before it reaches the engine, so
+    /// at most one `Cancelled` response is ever produced. The HTTP
+    /// disconnect path calls this racily against natural completion.
     pub fn cancel(&self, id: RequestId) -> bool {
         if let Some(req) = lock_recover(&self.shared.batcher).remove(id) {
             self.metrics.record_cancelled();
@@ -490,7 +540,11 @@ impl Coordinator {
         let in_flight =
             lock_recover(&self.shared.waiters).contains_key(&id);
         if in_flight {
-            lock_recover(&self.shared.cancels).push(id);
+            let mut cancels = lock_recover(&self.shared.cancels);
+            if !cancels.contains(&id) {
+                cancels.push(id);
+            }
+            drop(cancels);
             self.shared.batcher_cv.notify_all();
             return true;
         }
@@ -509,6 +563,20 @@ impl Coordinator {
     /// Serving metrics (shared with the engine).
     pub fn metrics(&self) -> &ServingMetrics {
         &self.metrics
+    }
+
+    /// True once a graceful drain has begun (new submissions are being
+    /// refused). Drives the HTTP readiness probe (DESIGN.md §11):
+    /// draining means "stop routing traffic here", while liveness stays
+    /// green until the engine actually dies.
+    pub fn is_draining(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// True once the engine loop has exited (startup failure, drain
+    /// complete, or crash) — the HTTP liveness probe.
+    pub fn is_engine_dead(&self) -> bool {
+        self.shared.engine_dead.load(Ordering::SeqCst)
     }
 
     /// Current queue depth.
@@ -545,7 +613,10 @@ impl Coordinator {
     }
 }
 
-/// Deliver finished responses to their waiting callers.
+/// Deliver finished responses to their waiting callers as the terminal
+/// stream event. `try_send` never blocks the engine: the channel is
+/// sized for every token plus the terminal event, so the only failable
+/// case is a caller that went away (dropped receiver) — ignored.
 fn deliver(shared: &Shared, responses: Vec<GenerateResponse>) {
     if responses.is_empty() {
         return;
@@ -553,7 +624,7 @@ fn deliver(shared: &Shared, responses: Vec<GenerateResponse>) {
     let mut waiters = lock_recover(&shared.waiters);
     for resp in responses {
         if let Some(tx) = waiters.remove(&resp.id) {
-            let _ = tx.send(resp);
+            let _ = tx.try_send(StreamEvent::Done(resp));
         }
     }
 }
@@ -663,6 +734,18 @@ fn run_continuous_loop(shared: &Shared, engine: &mut SlotEngine,
             }
         }
         deliver(shared, done);
+        // Publish the seat/block ledger as metrics gauges each
+        // iteration: out-of-process observers (the HTTP suite's
+        // disconnect-frees-lane audit) can then check ledger balance
+        // without a handle on the engine.
+        metrics.publish_ledger(
+            engine.lanes_seated(),
+            engine.lanes_released(),
+            engine.kv_outstanding_blocks() as u64,
+            engine.kv_cached_blocks() as u64,
+            engine.kv_blocks_allocated(),
+            engine.kv_blocks_freed(),
+        );
         if engine.is_idle() {
             let guard = lock_recover(&shared.batcher);
             if guard.is_empty() {

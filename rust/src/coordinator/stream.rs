@@ -1,0 +1,173 @@
+//! Per-token streaming delivery (DESIGN.md §11).
+//!
+//! Delivery used to be end-of-request harvest: the engine buffered every
+//! sampled token and the caller saw nothing until the terminal
+//! [`GenerateResponse`]. The HTTP front door needs a real time-to-first-
+//! token, so the engines now *emit each sampled token* into a bounded
+//! per-request channel the moment it leaves the sampler, and the
+//! terminal response rides the same channel as the final event. The
+//! legacy harvest API (`Pending`) is reimplemented on top — it drains
+//! the channel to the terminal event, which still carries the full
+//! token vector — so existing callers are unaffected.
+//!
+//! Exactly-once emission: a token is emitted at its *sampling* site
+//! only (`SlotScheduler::harvest_row` in the continuous engine, the
+//! static engine's harvest). Preemption re-feeds generated tokens as
+//! prefill (no sampling), the fault-isolation path harvests a row at
+//! most once per step (the batched pass faults *before* harvest, and
+//! only the solo re-runs sample), and the deadline/cancel paths never
+//! sample — so the lifetime `Token` sequence concatenates bit-identical
+//! to the terminal response's `tokens` (pinned by the streaming
+//! equivalence test in `tests/serving_integration.rs`).
+
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+
+use anyhow::{anyhow, Result};
+
+use super::request::{GenerateResponse, RequestId};
+
+/// One event on a request's stream.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// One sampled token, in generation order.
+    Token(i32),
+    /// Terminal event: the request finished (any finish reason). Its
+    /// `tokens` vector carries the complete stream, so draining to
+    /// `Done` reproduces the legacy harvest semantics exactly. Always
+    /// the last event on the channel.
+    Done(GenerateResponse),
+}
+
+/// Engine-side half of a request's stream: emits sampled tokens.
+///
+/// Cloneable and cheap; rides inside `GenerateRequest` so every
+/// sampling site can emit without knowing about the router.
+#[derive(Debug, Clone)]
+pub struct TokenSink {
+    tx: SyncSender<StreamEvent>,
+}
+
+impl TokenSink {
+    pub(crate) fn new(tx: SyncSender<StreamEvent>) -> Self {
+        TokenSink { tx }
+    }
+
+    /// Emit one sampled token. Never blocks the engine: the channel is
+    /// sized at submit time for `max_new_tokens` token events plus the
+    /// terminal `Done`, so the only failable case is a dropped receiver
+    /// (the caller went away) — ignored here; the disconnect path
+    /// cancels the request and frees its lane.
+    pub(crate) fn emit(&self, tok: i32) {
+        let _ = self.tx.try_send(StreamEvent::Token(tok));
+    }
+}
+
+/// Caller-side half of a request's stream: a bounded receiver of
+/// [`StreamEvent`]s ending in exactly one `Done`.
+pub struct TokenStream {
+    /// The request this stream belongs to (for [`Coordinator::cancel`]
+    /// on client disconnect).
+    ///
+    /// [`Coordinator::cancel`]: super::Coordinator::cancel
+    pub id: RequestId,
+    rx: Receiver<StreamEvent>,
+}
+
+impl TokenStream {
+    pub(crate) fn new(id: RequestId, rx: Receiver<StreamEvent>) -> Self {
+        TokenStream { id, rx }
+    }
+
+    /// Block for the next event. Errors if the engine died before the
+    /// terminal event (its final sweep drops the sender).
+    pub fn recv(&self) -> Result<StreamEvent> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("engine dropped request {}", self.id))
+    }
+
+    /// Non-blocking poll: `None` when no event is ready (or the sender
+    /// is gone).
+    pub fn try_recv(&self) -> Option<StreamEvent> {
+        match self.rx.try_recv() {
+            Ok(ev) => Some(ev),
+            Err(TryRecvError::Empty | TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Drain to the terminal response — the legacy end-of-request
+    /// harvest, reimplemented on top of streaming. Token events are
+    /// discarded: `Done` carries the full stream.
+    pub fn wait_done(self) -> Result<GenerateResponse> {
+        loop {
+            match self.recv()? {
+                StreamEvent::Token(_) => continue,
+                StreamEvent::Done(resp) => return Ok(resp),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+    use std::sync::mpsc::sync_channel;
+
+    fn done(id: RequestId, tokens: Vec<i32>) -> GenerateResponse {
+        GenerateResponse {
+            id,
+            tokens,
+            finish_reason: FinishReason::Length,
+            latency_ms: 1.0,
+            queue_wait_ms: 0.0,
+            bucket: 1,
+            error: None,
+        }
+    }
+
+    #[test]
+    fn tokens_then_done_in_order() {
+        let (tx, rx) = sync_channel(4);
+        let sink = TokenSink::new(tx.clone());
+        let stream = TokenStream::new(7, rx);
+        sink.emit(3);
+        sink.emit(5);
+        tx.try_send(StreamEvent::Done(done(7, vec![3, 5]))).unwrap();
+        assert!(matches!(stream.recv().unwrap(), StreamEvent::Token(3)));
+        assert!(matches!(stream.recv().unwrap(), StreamEvent::Token(5)));
+        match stream.recv().unwrap() {
+            StreamEvent::Done(r) => assert_eq!(r.tokens, vec![3, 5]),
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wait_done_discards_tokens_and_returns_terminal() {
+        let (tx, rx) = sync_channel(4);
+        let sink = TokenSink::new(tx.clone());
+        let stream = TokenStream::new(9, rx);
+        sink.emit(1);
+        sink.emit(2);
+        tx.try_send(StreamEvent::Done(done(9, vec![1, 2]))).unwrap();
+        let resp = stream.wait_done().unwrap();
+        assert_eq!(resp.tokens, vec![1, 2]);
+    }
+
+    #[test]
+    fn dropped_sender_errors_instead_of_hanging() {
+        let (tx, rx) = sync_channel::<StreamEvent>(1);
+        let stream = TokenStream::new(4, rx);
+        drop(tx);
+        assert!(stream.recv().is_err());
+        assert!(stream.try_recv().is_none());
+    }
+
+    #[test]
+    fn emit_to_a_dropped_receiver_is_harmless() {
+        let (tx, rx) = sync_channel(1);
+        let sink = TokenSink::new(tx);
+        drop(rx);
+        sink.emit(42); // must not panic or block
+    }
+}

@@ -1,0 +1,435 @@
+//! Request routing and the JSON/SSE wire contract (DESIGN.md §11).
+//!
+//! Status mapping for [`ServeError`] — the table DESIGN.md §11 pins:
+//!
+//! | engine outcome            | wire                               |
+//! |---------------------------|-------------------------------------|
+//! | `Overloaded`              | 429 + `Retry-After: 1`              |
+//! | `ShuttingDown`            | 503 + `Retry-After: 1`              |
+//! | `EngineDown`              | 503                                  |
+//! | `InvalidRequest`          | 400                                  |
+//! | `DeadlineExceeded`        | 408                                  |
+//! | `Cancelled` / `Fault`     | 500                                  |
+//! | fault *mid-stream*        | terminal SSE `event: error` frame    |
+//!
+//! The mid-stream row is the interesting one: once the SSE head is on
+//! the wire the status line cannot change, so a request that faults
+//! after its first token ends with a typed `error` event instead —
+//! and only that stream dies; concurrent streams are untouched
+//! (fault isolation carried out to the wire).
+
+use std::io::Write;
+
+use crate::coordinator::{Coordinator, FinishReason, GenerateResponse,
+                         SamplingParams, ServeError, StreamEvent,
+                         TokenStream};
+use crate::metrics::ServingMetrics;
+use crate::util::Json;
+
+use super::proto::{write_response, write_sse_done, write_sse_event,
+                   write_sse_head, write_sse_json, HttpRequest};
+
+/// A parsed `/v1/completions` request body.
+#[derive(Debug)]
+pub(crate) struct CompletionParams {
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub stop: Option<i32>,
+    pub stream: bool,
+    pub sampling: SamplingParams,
+}
+
+/// Read one i32 token id out of a JSON number.
+fn token_id(v: &Json, field: &str) -> Result<i32, String> {
+    let n = v.as_f64().map_err(|e| format!("{field:?}: {e}"))?;
+    if n.fract() != 0.0 || !(0.0..=i32::MAX as f64).contains(&n) {
+        return Err(format!("{field:?}: {n} is not a token id"));
+    }
+    Ok(n as i32)
+}
+
+/// Parse and validate the JSON body. Every failure is a complete
+/// sentence the client can act on — this is the 400 surface.
+pub(crate) fn parse_completion(body: &[u8], default_max: usize)
+                               -> Result<CompletionParams, String> {
+    // `Json::parse` takes &str, so non-UTF-8 bodies are rejected here
+    // at the boundary rather than lossily transcoded.
+    let text = std::str::from_utf8(body)
+        .map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("malformed JSON: {e}"))?;
+    let prompt_v = v
+        .opt("prompt")
+        .ok_or_else(|| "missing required field \"prompt\"".to_string())?;
+    let arr = prompt_v
+        .as_arr()
+        .map_err(|_| "\"prompt\" must be an array of token ids".to_string())?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for t in arr {
+        prompt.push(token_id(t, "prompt")?);
+    }
+    let max_tokens = match v.opt("max_tokens") {
+        Some(n) => n.as_usize().map_err(|e| format!("\"max_tokens\": {e}"))?,
+        None => default_max,
+    };
+    let stop = match v.opt("stop") {
+        Some(t) => Some(token_id(t, "stop")?),
+        None => None,
+    };
+    let stream = match v.opt("stream") {
+        Some(b) => b.as_bool().map_err(|e| format!("\"stream\": {e}"))?,
+        None => false,
+    };
+    let mut sampling = SamplingParams::greedy();
+    if let Some(t) = v.opt("temperature") {
+        sampling.temperature =
+            t.as_f64().map_err(|e| format!("\"temperature\": {e}"))? as f32;
+    }
+    if let Some(k) = v.opt("top_k") {
+        sampling.top_k =
+            k.as_usize().map_err(|e| format!("\"top_k\": {e}"))?;
+    }
+    if let Some(p) = v.opt("top_p") {
+        sampling.top_p =
+            p.as_f64().map_err(|e| format!("\"top_p\": {e}"))? as f32;
+    }
+    if let Some(s) = v.opt("seed") {
+        sampling.seed = s.as_u64().map_err(|e| format!("\"seed\": {e}"))?;
+    }
+    Ok(CompletionParams { prompt, max_tokens, stop, stream, sampling })
+}
+
+/// The typed error body: `{"error": {"type": ..., "message": ...}}`.
+pub(crate) fn error_body(kind: &str, msg: &str) -> String {
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("type", Json::str(kind)),
+            ("message", Json::str(msg)),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Admission-time [`ServeError`] -> (status, machine-readable kind).
+pub(crate) fn serve_error_status(e: &ServeError) -> (u16, &'static str) {
+    match e {
+        ServeError::Overloaded { .. } => (429, "overloaded"),
+        ServeError::ShuttingDown => (503, "shutting_down"),
+        ServeError::EngineDown => (503, "engine_down"),
+        ServeError::InvalidRequest(_) => (400, "invalid_request"),
+        ServeError::DeadlineExceeded => (408, "deadline_exceeded"),
+        ServeError::Cancelled => (500, "cancelled"),
+        ServeError::Fault(_) => (500, "fault"),
+        ServeError::Internal(_) => (500, "internal"),
+    }
+}
+
+pub(crate) fn finish_reason_str(r: FinishReason) -> &'static str {
+    match r {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::ContextLimit => "context_limit",
+        FinishReason::Fault => "fault",
+        FinishReason::DeadlineExceeded => "deadline_exceeded",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+fn tokens_json(tokens: &[i32]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| Json::num(t as f64)).collect())
+}
+
+/// 200 body for a naturally finished completion.
+fn completion_body(resp: &GenerateResponse) -> String {
+    Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("tokens", tokens_json(&resp.tokens)),
+        ("finish_reason", Json::str(finish_reason_str(resp.finish_reason))),
+        ("latency_ms", Json::num(resp.latency_ms)),
+    ])
+    .to_string()
+}
+
+/// Error body for a request that seated but did not finish naturally
+/// (fault / deadline / cancel). Partial tokens ride along so a client
+/// keeps what was generated before the failure.
+fn failure_body(resp: &GenerateResponse) -> String {
+    let kind = finish_reason_str(resp.finish_reason);
+    let msg = resp.error.clone().unwrap_or_default();
+    Json::obj(vec![
+        (
+            "error",
+            Json::obj(vec![
+                ("type", Json::str(kind)),
+                ("message", Json::str(msg)),
+            ]),
+        ),
+        ("id", Json::num(resp.id as f64)),
+        ("tokens", tokens_json(&resp.tokens)),
+        ("finish_reason", Json::str(kind)),
+    ])
+    .to_string()
+}
+
+/// Back-pressure statuses carry `Retry-After` so well-behaved clients
+/// back off instead of hammering the shed path.
+fn extra_headers(status: u16) -> Vec<(&'static str, String)> {
+    match status {
+        429 | 503 => vec![("Retry-After", "1".to_string())],
+        _ => Vec::new(),
+    }
+}
+
+/// Record + write one typed error response; write failures are
+/// swallowed (the client may already be gone).
+pub(crate) fn respond_err(metrics: &ServingMetrics, w: &mut dyn Write,
+                          status: u16, kind: &str, msg: &str) {
+    metrics.record_http_status(status);
+    let _ = write_response(w, status, &extra_headers(status),
+                           "application/json", &error_body(kind, msg));
+}
+
+fn respond_json(metrics: &ServingMetrics, w: &mut dyn Write,
+                status: u16, body: &str) {
+    metrics.record_http_status(status);
+    let _ = write_response(w, status, &extra_headers(status),
+                           "application/json", body);
+}
+
+/// Dispatch one parsed request. Returns `true` when the request was a
+/// `/v1/completions` call (any outcome) — the server counts those so
+/// the CLI can exit after N served completions.
+pub(crate) fn route(coord: &Coordinator, w: &mut dyn Write,
+                    req: &HttpRequest) -> bool {
+    let m = coord.metrics();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            // Liveness: only an engine-thread death is "dead". A
+            // draining server is still alive and must keep answering
+            // so orchestrators don't kill it mid-drain.
+            if coord.is_engine_dead() {
+                respond_err(m, w, 503, "engine_down",
+                            "engine thread has exited");
+            } else {
+                respond_json(m, w, 200, "{\"status\": \"ok\"}");
+            }
+            false
+        }
+        ("GET", "/readyz") => {
+            // Readiness: drain flips this to 503 *before* in-flight
+            // work finishes, so load balancers stop routing here
+            // while existing streams run to completion.
+            if coord.is_engine_dead() {
+                respond_err(m, w, 503, "engine_down",
+                            "engine thread has exited");
+            } else if coord.is_draining() {
+                respond_err(m, w, 503, "shutting_down",
+                            "draining: no new admissions");
+            } else {
+                respond_json(m, w, 200, "{\"status\": \"ready\"}");
+            }
+            false
+        }
+        ("POST", "/v1/completions") => {
+            completions(coord, w, req);
+            true
+        }
+        (_, "/v1/completions") | (_, "/healthz") | (_, "/readyz") => {
+            respond_err(m, w, 405, "method_not_allowed",
+                        &format!("{} not supported here", req.method));
+            false
+        }
+        _ => {
+            respond_err(m, w, 404, "not_found",
+                        &format!("no route for {}", req.path));
+            false
+        }
+    }
+}
+
+fn completions(coord: &Coordinator, w: &mut dyn Write, req: &HttpRequest) {
+    let m = coord.metrics();
+    let default_max = coord.limits().max_new_tokens.min(16);
+    let params = match parse_completion(&req.body, default_max) {
+        Ok(p) => p,
+        Err(msg) => {
+            respond_err(m, w, 400, "invalid_request", &msg);
+            return;
+        }
+    };
+    if params.stream {
+        match coord.submit_streaming(params.prompt, params.max_tokens,
+                                     params.stop, params.sampling) {
+            Ok(ts) => stream_completion(coord, w, ts),
+            Err(e) => {
+                let (status, kind) = serve_error_status(&e);
+                respond_err(m, w, status, kind, &e.to_string());
+            }
+        }
+        return;
+    }
+    match coord.submit_sampled(params.prompt, params.max_tokens,
+                               params.stop, params.sampling) {
+        Ok(pending) => match pending.wait() {
+            Ok(resp) if resp.finish_reason.is_natural() => {
+                respond_json(m, w, 200, &completion_body(&resp));
+            }
+            Ok(resp) => {
+                let status = match resp.finish_reason {
+                    FinishReason::DeadlineExceeded => 408,
+                    _ => 500,
+                };
+                m.record_http_status(status);
+                let _ = write_response(w, status, &extra_headers(status),
+                                       "application/json",
+                                       &failure_body(&resp));
+            }
+            Err(_) => {
+                respond_err(m, w, 503, "engine_down",
+                            "engine dropped the request");
+            }
+        },
+        Err(e) => {
+            let (status, kind) = serve_error_status(&e);
+            respond_err(m, w, status, kind, &e.to_string());
+        }
+    }
+}
+
+/// Drive one SSE stream: a frame per token the moment it leaves the
+/// sampler, then a terminal frame. A failed write means the client is
+/// gone — the in-flight request is cancelled so its lane and KV
+/// blocks free immediately instead of decoding to a dead socket.
+fn stream_completion(coord: &Coordinator, w: &mut dyn Write,
+                     ts: TokenStream) {
+    let m = coord.metrics();
+    let client_gone = |m: &ServingMetrics| {
+        m.record_client_disconnect();
+        coord.cancel(ts.id);
+    };
+    if write_sse_head(w).is_err() {
+        client_gone(m);
+        return;
+    }
+    m.record_http_status(200);
+    loop {
+        match ts.recv() {
+            Ok(StreamEvent::Token(tok)) => {
+                let frame =
+                    Json::obj(vec![("token", Json::num(tok as f64))])
+                        .to_string();
+                if write_sse_json(w, &frame).is_err() {
+                    client_gone(m);
+                    return;
+                }
+            }
+            Ok(StreamEvent::Done(resp)) => {
+                if resp.finish_reason.is_natural() {
+                    let _ = write_sse_json(w, &completion_body(&resp));
+                    let _ = write_sse_done(w);
+                } else {
+                    // Status line already sent: the fault becomes a
+                    // terminal error event (the §11 mid-stream row).
+                    let _ = write_sse_event(w, "error",
+                                            &failure_body(&resp));
+                }
+                return;
+            }
+            Err(_) => {
+                let _ = write_sse_event(
+                    w, "error",
+                    &error_body("engine_down",
+                                "engine dropped the request"),
+                );
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_full_surface() {
+        let body = br#"{"prompt": [1, 2, 3], "max_tokens": 4,
+                        "stop": 7, "stream": true,
+                        "temperature": 0.5, "top_k": 3,
+                        "top_p": 0.9, "seed": 11}"#;
+        let p = parse_completion(body, 16).unwrap();
+        assert_eq!(p.prompt, vec![1, 2, 3]);
+        assert_eq!(p.max_tokens, 4);
+        assert_eq!(p.stop, Some(7));
+        assert!(p.stream);
+        assert_eq!(p.sampling.temperature, 0.5);
+        assert_eq!(p.sampling.top_k, 3);
+        assert_eq!(p.sampling.top_p, 0.9);
+        assert_eq!(p.sampling.seed, 11);
+    }
+
+    #[test]
+    fn parse_defaults_are_unary_greedy() {
+        let p = parse_completion(br#"{"prompt": [5]}"#, 12).unwrap();
+        assert_eq!(p.max_tokens, 12, "server default applies");
+        assert!(!p.stream);
+        assert_eq!(p.stop, None);
+        assert_eq!(p.sampling, SamplingParams::greedy());
+    }
+
+    #[test]
+    fn parse_rejects_hostile_bodies_with_sentences() {
+        let cases: &[(&[u8], &str)] = &[
+            (b"\xff\xfe", "UTF-8"),
+            (b"{not json", "malformed JSON"),
+            (br#"{"max_tokens": 4}"#, "prompt"),
+            (br#"{"prompt": "text"}"#, "array of token ids"),
+            (br#"{"prompt": [1.5]}"#, "not a token id"),
+            (br#"{"prompt": [-2]}"#, "not a token id"),
+            (br#"{"prompt": [1], "max_tokens": true}"#, "max_tokens"),
+            (br#"{"prompt": [1], "stream": 3}"#, "stream"),
+        ];
+        for (body, needle) in cases {
+            let err = parse_completion(body, 16)
+                .expect_err("hostile body must not parse");
+            assert!(err.contains(needle),
+                    "error {err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn status_mapping_matches_the_design_table() {
+        assert_eq!(
+            serve_error_status(&ServeError::Overloaded { queue_depth: 4 }),
+            (429, "overloaded"));
+        assert_eq!(serve_error_status(&ServeError::ShuttingDown),
+                   (503, "shutting_down"));
+        assert_eq!(serve_error_status(&ServeError::EngineDown),
+                   (503, "engine_down"));
+        assert_eq!(
+            serve_error_status(&ServeError::InvalidRequest("x".into())),
+            (400, "invalid_request"));
+        assert_eq!(serve_error_status(&ServeError::DeadlineExceeded),
+                   (408, "deadline_exceeded"));
+        assert_eq!(serve_error_status(&ServeError::Fault("x".into())),
+                   (500, "fault"));
+    }
+
+    #[test]
+    fn error_body_is_typed_json() {
+        let b = error_body("overloaded", "queue full");
+        let v = Json::parse(&b).unwrap();
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("type").unwrap().as_str().unwrap(), "overloaded");
+        assert_eq!(e.get("message").unwrap().as_str().unwrap(),
+                   "queue full");
+    }
+
+    #[test]
+    fn back_pressure_statuses_carry_retry_after() {
+        assert_eq!(extra_headers(429).len(), 1);
+        assert_eq!(extra_headers(503).len(), 1);
+        assert!(extra_headers(400).is_empty());
+        assert!(extra_headers(200).is_empty());
+    }
+}

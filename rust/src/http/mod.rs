@@ -1,0 +1,35 @@
+//! S17 — the HTTP front door (DESIGN.md §11).
+//!
+//! A zero-dependency HTTP/1.1 server over `std::net` that exposes the
+//! serving [`crate::coordinator::Coordinator`] as an OpenAI-style JSON
+//! API:
+//!
+//! * `POST /v1/completions` — submit a tokenized prompt; a plain JSON
+//!   response, or Server-Sent Events when `"stream": true` (one event
+//!   per sampled token, so time-to-first-token is real).
+//! * `GET /healthz` — liveness: 200 while the engine thread is alive.
+//! * `GET /readyz` — readiness: 503 once draining or engine-dead, so
+//!   a load balancer stops routing before in-flight work finishes.
+//!
+//! The wire contract maps [`crate::coordinator::ServeError`] onto
+//! status codes (429 + `Retry-After` for load shedding, 408 for
+//! deadline expiry, 503 for drain, 400 for malformed requests, 500
+//! for isolated faults); mid-stream failures become a terminal SSE
+//! `error` event because the status line is already on the wire.
+//!
+//! Defenses: an overall header/body read deadline (slowloris), size
+//! caps on header and body, a bounded connection pool that sheds at
+//! accept with 503, and client-disconnect detection that cancels the
+//! in-flight request so its lane and KV blocks free immediately.
+//!
+//! Every connection runs `Connection: close` semantics: one request,
+//! one response, shut down. Keep-alive buys nothing for a token
+//! streaming workload and would complicate the bounded-pool
+//! accounting.
+
+mod api;
+mod proto;
+mod server;
+
+pub use proto::{HttpRequest, ReadError, HEADER_CAP};
+pub use server::{HttpConfig, HttpServer};

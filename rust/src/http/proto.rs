@@ -1,0 +1,363 @@
+//! Wire-level HTTP/1.1 reader and writer (DESIGN.md §11).
+//!
+//! The reader enforces the slow-client contract: the whole request —
+//! head *and* declared body — must arrive inside one overall deadline.
+//! The deadline is a wall-clock instant fixed at accept; every socket
+//! read gets `set_read_timeout(remaining)`, so a client trickling one
+//! byte per second (slowloris) cannot reset the clock and hold a
+//! worker forever. Size caps bound memory: [`HEADER_CAP`] for the
+//! head, a configured cap for the body (checked against
+//! `Content-Length` *before* the body is read).
+//!
+//! The writer emits each response or SSE frame as a single
+//! `write_all`, which keeps per-response write counts deterministic —
+//! the `drop-conn:<conn>:<writes>` failpoint counts these calls.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Largest accepted request head (request line + headers), bytes.
+pub const HEADER_CAP: usize = 8 * 1024;
+
+/// A parsed request. Header names are lowercased at parse time;
+/// values keep their bytes (trimmed).
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this (lowercase) name, if any.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read off the socket. Each variant maps
+/// to a distinct wire response (or silent close) in the server.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The overall header/body deadline expired (slowloris-shaped).
+    Timeout,
+    /// Head or declared body exceeds its cap; carries which.
+    TooLarge(&'static str),
+    /// The bytes are not an HTTP/1.x request we accept.
+    Malformed(String),
+    /// The peer closed before a full request arrived.
+    Closed,
+    /// Some other socket error.
+    Io(String),
+}
+
+/// `\r\n\r\n` position (start index), if the head is complete.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// One socket read bounded by the overall deadline. `Ok(n)` is always
+/// `n > 0`; EOF, expiry and errors become `ReadError`s.
+fn read_with_deadline(stream: &TcpStream, chunk: &mut [u8],
+                      deadline: Instant) -> Result<usize, ReadError> {
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(ReadError::Timeout);
+        }
+        stream
+            .set_read_timeout(Some(remaining))
+            .map_err(|e| ReadError::Io(e.to_string()))?;
+        match (&mut &*stream).read(chunk) {
+            Ok(0) => return Err(ReadError::Closed),
+            Ok(n) => return Ok(n),
+            Err(e) => match e.kind() {
+                // Both kinds occur in the wild for an expired
+                // SO_RCVTIMEO, platform-dependent.
+                ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                    return Err(ReadError::Timeout)
+                }
+                ErrorKind::Interrupted => continue,
+                _ => return Err(ReadError::Io(e.to_string())),
+            },
+        }
+    }
+}
+
+/// Read and parse one request, enforcing the deadline and both size
+/// caps. See the module doc for the defense contract.
+pub fn read_request(stream: &TcpStream, body_cap: usize,
+                    timeout: Duration) -> Result<HttpRequest, ReadError> {
+    let deadline = Instant::now() + timeout;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let head_len = loop {
+        if let Some(p) = head_end(&buf) {
+            break p;
+        }
+        if buf.len() > HEADER_CAP {
+            return Err(ReadError::TooLarge("header"));
+        }
+        let mut chunk = [0u8; 2048];
+        let n = read_with_deadline(stream, &mut chunk, deadline)?;
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    if head_len > HEADER_CAP {
+        return Err(ReadError::TooLarge("header"));
+    }
+
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| ReadError::Malformed("head is not UTF-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None) => (m, p, v),
+            _ => {
+                return Err(ReadError::Malformed(format!(
+                    "bad request line {request_line:?}"
+                )))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Malformed(format!(
+            "unsupported version {version:?}"
+        )));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ReadError::Malformed(format!(
+                "bad header line {line:?}"
+            )));
+        };
+        headers.push((name.trim().to_ascii_lowercase(),
+                      value.trim().to_string()));
+    }
+
+    let declared: usize = match headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+    {
+        Some((_, v)) => v.parse().map_err(|_| {
+            ReadError::Malformed(format!("bad Content-Length {v:?}"))
+        })?,
+        None => 0,
+    };
+    // Reject an oversized body on its declaration: the bytes are never
+    // read, so a hostile upload costs one head, not `body_cap` memory.
+    if declared > body_cap {
+        return Err(ReadError::TooLarge("body"));
+    }
+    let mut body = buf[head_len + 4..].to_vec();
+    while body.len() < declared {
+        let mut chunk = [0u8; 2048];
+        let n = read_with_deadline(stream, &mut chunk, deadline)?;
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(declared);
+    Ok(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    })
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write one complete non-streaming response as a single `write_all`
+/// (plus flush). Always `Connection: close` — see the module docs.
+pub fn write_response(w: &mut dyn Write, status: u16,
+                      extra: &[(&str, String)], content_type: &str,
+                      body: &str) -> std::io::Result<()> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        status_reason(status),
+        body.len(),
+    );
+    for (name, value) in extra {
+        out.push_str(&format!("{name}: {value}\r\n"));
+    }
+    out.push_str("\r\n");
+    out.push_str(body);
+    w.write_all(out.as_bytes())?;
+    w.flush()
+}
+
+/// Start an SSE stream: status line + headers, no Content-Length (the
+/// stream ends when the connection closes).
+pub fn write_sse_head(w: &mut dyn Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One unnamed SSE frame carrying a JSON payload.
+pub fn write_sse_json(w: &mut dyn Write, json: &str) -> std::io::Result<()> {
+    w.write_all(format!("data: {json}\n\n").as_bytes())?;
+    w.flush()
+}
+
+/// One named SSE frame (`event: <name>`) carrying a JSON payload; the
+/// terminal `error` event of a faulted stream uses this.
+pub fn write_sse_event(w: &mut dyn Write, name: &str,
+                       json: &str) -> std::io::Result<()> {
+    w.write_all(format!("event: {name}\ndata: {json}\n\n").as_bytes())?;
+    w.flush()
+}
+
+/// The OpenAI-style terminal sentinel frame.
+pub fn write_sse_done(w: &mut dyn Write) -> std::io::Result<()> {
+    w.write_all(b"data: [DONE]\n\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::net::TcpListener;
+    use std::thread;
+
+    /// Bind a loopback pair and return (server-side stream, client).
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn parses_a_full_post_with_body() {
+        let (server, mut client) = pair();
+        let t = thread::spawn(move || {
+            client
+                .write_all(
+                    b"POST /v1/completions HTTP/1.1\r\n\
+                      Host: x\r\nContent-Length: 11\r\n\r\n\
+                      {\"a\": [1]}\n",
+                )
+                .unwrap();
+        });
+        let req =
+            read_request(&server, 1024, Duration::from_secs(2)).unwrap();
+        t.join().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"), "names lowercased");
+        assert_eq!(req.body, b"{\"a\": [1]}\n");
+    }
+
+    #[test]
+    fn stalled_header_times_out() {
+        let (server, mut client) = pair();
+        // A slowloris client: partial head, then silence.
+        client.write_all(b"GET /healthz HT").unwrap();
+        let err = read_request(&server, 1024, Duration::from_millis(60))
+            .expect_err("must not wait forever");
+        assert!(matches!(err, ReadError::Timeout), "{err:?}");
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_unread() {
+        let (server, mut client) = pair();
+        client
+            .write_all(b"POST /v1/completions HTTP/1.1\r\n\
+                         Content-Length: 999999\r\n\r\n")
+            .unwrap();
+        let err = read_request(&server, 64, Duration::from_secs(2))
+            .expect_err("body over cap");
+        assert!(matches!(err, ReadError::TooLarge("body")), "{err:?}");
+    }
+
+    #[test]
+    fn oversized_header_is_rejected() {
+        let (server, mut client) = pair();
+        let t = thread::spawn(move || {
+            let _ = client.write_all(b"GET / HTTP/1.1\r\n");
+            let junk = format!("X-Pad: {}\r\n", "q".repeat(512));
+            for _ in 0..40 {
+                if client.write_all(junk.as_bytes()).is_err() {
+                    return;
+                }
+            }
+        });
+        let err = read_request(&server, 1024, Duration::from_secs(2))
+            .expect_err("head over cap");
+        t.join().unwrap();
+        assert!(matches!(err, ReadError::TooLarge("header")), "{err:?}");
+    }
+
+    #[test]
+    fn early_close_is_closed_not_malformed() {
+        let (server, client) = pair();
+        drop(client);
+        let err = read_request(&server, 1024, Duration::from_secs(2))
+            .expect_err("peer gone");
+        assert!(matches!(err, ReadError::Closed), "{err:?}");
+    }
+
+    #[test]
+    fn garbage_request_line_is_malformed() {
+        let (server, mut client) = pair();
+        client.write_all(b"NOT AN HTTP LINE\r\n\r\n").unwrap();
+        let err = read_request(&server, 1024, Duration::from_secs(2))
+            .expect_err("garbage");
+        assert!(matches!(err, ReadError::Malformed(_)), "{err:?}");
+    }
+
+    #[test]
+    fn response_writer_is_one_frame() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429,
+                       &[("Retry-After", "1".to_string())],
+                       "application/json", "{}")
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn sse_frames_have_the_wire_shape() {
+        let mut out = Vec::new();
+        write_sse_head(&mut out).unwrap();
+        write_sse_json(&mut out, "{\"token\": 3}").unwrap();
+        write_sse_event(&mut out, "error", "{\"e\": 1}").unwrap();
+        write_sse_done(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.contains("\r\n\r\ndata: {\"token\": 3}\n\n"));
+        assert!(text.contains("event: error\ndata: {\"e\": 1}\n\n"));
+        assert!(text.ends_with("data: [DONE]\n\n"));
+    }
+}

@@ -1,0 +1,411 @@
+//! The listener, bounded accept/worker pool, and connection lifecycle
+//! (DESIGN.md §11).
+//!
+//! One accept thread owns the listener; each accepted connection gets
+//! a worker thread for its single request/response exchange. The pool
+//! is bounded: past `max_conns` in-flight connections, accepts are
+//! shed immediately with `503` + `Retry-After` — a wedged or slow
+//! worker pool degrades into fast rejections, never an unbounded
+//! thread pile or a silent accept-queue stall.
+//!
+//! Connection-level failpoints (`stall-header`, `drop-conn`,
+//! `slow-client`) are resolved here by 1-based connection index and
+//! injected into the reader/writer, so the chaos suite can exercise
+//! slowloris expiry, mid-stream disconnects and slow consumers
+//! deterministically, without a misbehaving client process.
+
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::coordinator::sync::lock_recover;
+use crate::coordinator::Coordinator;
+
+use super::api::{respond_err, route};
+use super::proto::{read_request, ReadError};
+
+/// With the `failpoints` feature the server threads a full
+/// [`crate::coordinator::failpoints::FaultPlan`] through to each
+/// connection; without it, a zero-sized stand-in keeps one launch
+/// path compiling in both builds.
+#[cfg(feature = "failpoints")]
+pub(crate) type ConnPlan = crate::coordinator::failpoints::FaultPlan;
+#[cfg(not(feature = "failpoints"))]
+#[derive(Debug, Clone, Default)]
+pub(crate) struct ConnPlan;
+
+/// Wire faults resolved for one connection.
+#[derive(Debug, Clone, Copy, Default)]
+struct ConnFaults {
+    /// Pretend the client never finished its header: the read path
+    /// reports the slowloris timeout without waiting it out.
+    stall_header: bool,
+    /// Fail the Nth (0-based) write with `BrokenPipe` — a client that
+    /// vanished mid-stream.
+    drop_after_writes: Option<u64>,
+    /// Sleep this long before every write — a slow consumer.
+    slow_write_ms: u64,
+}
+
+#[cfg(feature = "failpoints")]
+fn resolve_faults(plan: &ConnPlan, conn: u64) -> ConnFaults {
+    use crate::coordinator::failpoints::Fault;
+    let mut f = ConnFaults::default();
+    for fault in &plan.faults {
+        match *fault {
+            Fault::ConnStallHeader { conn: c } if c == conn => {
+                f.stall_header = true;
+            }
+            Fault::ConnDropWrite { conn: c, after_writes } if c == conn => {
+                f.drop_after_writes = Some(after_writes);
+            }
+            Fault::ConnSlowWrite { conn: c, millis } if c == conn => {
+                f.slow_write_ms = millis;
+            }
+            _ => {}
+        }
+    }
+    f
+}
+
+#[cfg(not(feature = "failpoints"))]
+fn resolve_faults(_plan: &ConnPlan, _conn: u64) -> ConnFaults {
+    ConnFaults::default()
+}
+
+/// Server tuning, normally derived from [`ServeConfig`].
+#[derive(Debug, Clone)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Bounded connection pool size; excess accepts shed with 503.
+    pub max_conns: usize,
+    /// Overall header+body read deadline (slowloris defense).
+    pub header_timeout: Duration,
+    /// Largest accepted request body, bytes.
+    pub body_cap: usize,
+}
+
+impl HttpConfig {
+    pub fn from_serve(cfg: &ServeConfig) -> Self {
+        HttpConfig {
+            addr: cfg.http_addr.clone(),
+            max_conns: cfg.http_conns,
+            header_timeout:
+                Duration::from_millis(cfg.http_header_timeout_ms),
+            body_cap: cfg.http_body_cap,
+        }
+    }
+}
+
+struct ServerShared {
+    coord: Arc<Coordinator>,
+    max_conns: usize,
+    header_timeout: Duration,
+    body_cap: usize,
+    stop: AtomicBool,
+    active: AtomicUsize,
+    completions: AtomicU64,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    conn_plan: ConnPlan,
+}
+
+/// A running front door. Dropping it (or calling [`Self::stop`])
+/// halts the accept loop and joins every worker; in-flight exchanges
+/// finish first — drain semantics come from pairing this with
+/// [`Coordinator::begin_shutdown`], which flips `/readyz` to 503 and
+/// refuses new admissions while streams already on the wire complete.
+pub struct HttpServer {
+    shared: Arc<ServerShared>,
+    bound: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    stopped: bool,
+}
+
+impl HttpServer {
+    /// Bind and start serving. The coordinator is shared — submission
+    /// is `&self` and thread-safe by construction.
+    pub fn start(coord: Arc<Coordinator>, cfg: &HttpConfig) -> Result<Self> {
+        Self::launch(coord, cfg, ConnPlan::default())
+    }
+
+    /// Start with a fault plan whose connection-level entries drive
+    /// the wire chaos hooks (engine-level entries are ignored here —
+    /// install those via the startup plan as usual).
+    #[cfg(feature = "failpoints")]
+    pub fn start_with_faults(
+        coord: Arc<Coordinator>, cfg: &HttpConfig,
+        plan: crate::coordinator::failpoints::FaultPlan,
+    ) -> Result<Self> {
+        Self::launch(coord, cfg, plan)
+    }
+
+    fn launch(coord: Arc<Coordinator>, cfg: &HttpConfig,
+              conn_plan: ConnPlan) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding http on {}", cfg.addr))?;
+        let bound = listener.local_addr().context("resolving bound addr")?;
+        let shared = Arc::new(ServerShared {
+            coord,
+            max_conns: cfg.max_conns.max(1),
+            header_timeout: cfg.header_timeout,
+            body_cap: cfg.body_cap,
+            stop: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            completions: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+            conn_plan,
+        });
+        let accept = thread::Builder::new()
+            .name("http-accept".into())
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || accept_loop(listener, shared)
+            })
+            .context("spawning http-accept")?;
+        Ok(HttpServer { shared, bound, accept: Some(accept),
+                        stopped: false })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.bound
+    }
+
+    /// `/v1/completions` responses written so far, every outcome
+    /// (200s, 4xx and 5xx alike) — the CLI's exit condition.
+    pub fn completions_served(&self) -> u64 {
+        self.shared.completions.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting, join the accept thread and every worker.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // The accept thread is blocked in `accept()`; a throwaway
+        // connection wakes it to observe the stop flag.
+        let _ = TcpStream::connect(self.bound);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let workers =
+            std::mem::take(&mut *lock_recover(&self.shared.workers));
+        for h in workers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
+    // 1-based connection index — the unit the conn-level failpoints
+    // (`stall-header:<conn>` etc.) address.
+    let mut conn_id: u64 = 0;
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        conn_id += 1;
+        let metrics = shared.coord.metrics();
+        metrics.record_conn_accepted();
+        if shared.active.load(Ordering::SeqCst) >= shared.max_conns {
+            // Shed at accept: the pool is full, so this connection
+            // gets an immediate typed 503 instead of a queue slot.
+            metrics.record_conn_shed();
+            let mut w = ConnWriter { stream: &stream, writes: 0,
+                                     faults: ConnFaults::default() };
+            respond_err(metrics, &mut w, 503, "overloaded",
+                        "connection pool full; retry shortly");
+            let _ = stream.shutdown(Shutdown::Both);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let faults = resolve_faults(&shared.conn_plan, conn_id);
+        let spawned = thread::Builder::new()
+            .name(format!("http-conn-{conn_id}"))
+            .spawn({
+                let shared = Arc::clone(&shared);
+                move || {
+                    handle_conn(&shared, stream, faults);
+                    shared.active.fetch_sub(1, Ordering::SeqCst);
+                }
+            });
+        match spawned {
+            Ok(handle) => {
+                let mut workers = lock_recover(&shared.workers);
+                // Keep the handle list bounded: reap finished workers
+                // on every push instead of growing forever.
+                workers.retain(|h| !h.is_finished());
+                workers.push(handle);
+            }
+            Err(_) => {
+                // Spawn failed; the closure (and the stream) was
+                // dropped, so release the pool slot it had claimed.
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// `Write` shim over the socket that applies this connection's wire
+/// faults and counts frames for `drop-conn:<conn>:<writes>`.
+struct ConnWriter<'a> {
+    stream: &'a TcpStream,
+    writes: u64,
+    faults: ConnFaults,
+}
+
+impl std::io::Write for ConnWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if let Some(after) = self.faults.drop_after_writes {
+            if self.writes >= after {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "failpoint drop-conn",
+                ));
+            }
+        }
+        if self.faults.slow_write_ms > 0 {
+            thread::sleep(Duration::from_millis(self.faults.slow_write_ms));
+        }
+        self.writes += 1;
+        (&mut &*self.stream).write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        (&mut &*self.stream).flush()
+    }
+}
+
+/// One connection, end to end: read (under the deadline and caps),
+/// route, respond, close. Read failures map to the defensive side of
+/// the wire contract; `Closed`/`Io` get silence (nobody is listening).
+fn handle_conn(shared: &ServerShared, stream: TcpStream,
+               faults: ConnFaults) {
+    let metrics = shared.coord.metrics();
+    let read = if faults.stall_header {
+        // Deterministic stand-in for a client that never finishes its
+        // header — same path as a real expiry, no wall-clock wait.
+        Err(ReadError::Timeout)
+    } else {
+        read_request(&stream, shared.body_cap, shared.header_timeout)
+    };
+    let mut w = ConnWriter { stream: &stream, writes: 0, faults };
+    match read {
+        Ok(req) => {
+            if route(&shared.coord, &mut w, &req) {
+                shared.completions.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        Err(ReadError::Timeout) => {
+            metrics.record_slowloris_timeout();
+            respond_err(metrics, &mut w, 408, "timeout",
+                        "request head/body not received within the \
+                         read deadline");
+        }
+        Err(ReadError::TooLarge("header")) => {
+            respond_err(metrics, &mut w, 431, "header_too_large",
+                        "request head exceeds the 8 KiB cap");
+        }
+        Err(ReadError::TooLarge(_)) => {
+            respond_err(metrics, &mut w, 413, "body_too_large",
+                        "declared Content-Length exceeds the body cap");
+        }
+        Err(ReadError::Malformed(msg)) => {
+            respond_err(metrics, &mut w, 400, "malformed_request", &msg);
+        }
+        Err(ReadError::Closed) | Err(ReadError::Io(_)) => {}
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn tiny_config() -> ServeConfig {
+        ServeConfig {
+            backend: "host".into(),
+            slots: 2,
+            max_seq: 32,
+            max_new_tokens: 4,
+            warm_start: false,
+            self_check: false,
+            http_addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        }
+    }
+
+    fn exchange(addr: SocketAddr, request: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_health_and_routes_over_a_real_socket() {
+        let cfg = tiny_config();
+        let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+        let server =
+            HttpServer::start(Arc::clone(&coord),
+                              &HttpConfig::from_serve(&cfg))
+                .unwrap();
+        let addr = server.addr();
+
+        let health = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.1 200 "), "{health}");
+
+        let missing = exchange(addr, "GET /nope HTTP/1.1\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.1 404 "), "{missing}");
+
+        let body = r#"{"prompt": [1, 2], "max_tokens": 2}"#;
+        let req = format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(), body);
+        let resp = exchange(addr, &req);
+        assert!(resp.starts_with("HTTP/1.1 200 "), "{resp}");
+        assert!(resp.contains("\"finish_reason\":\"length\""), "{resp}");
+        assert_eq!(server.completions_served(), 1);
+
+        server.stop();
+        let m = coord.metrics();
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(m.conns_accepted.load(Relaxed) >= 3);
+        assert_eq!(m.conns_shed.load(Relaxed), 0);
+        // The one 404 is the only error-class response above.
+        assert_eq!(m.requests_4xx.load(Relaxed), 1);
+        match Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown().unwrap(),
+            Err(_) => panic!("coordinator still shared after stop"),
+        }
+    }
+}

@@ -29,6 +29,7 @@ pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod gpusim;
+pub mod http;
 pub mod kernels;
 pub mod metrics;
 pub mod model;

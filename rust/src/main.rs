@@ -10,6 +10,9 @@
 //!                       [--temperature T] [--top-k K] [--top-p P]
 //!                       [--sample-seed S]
 //!                       [--queue-cap N] [--request-timeout-ms T]
+//!                       [--http-addr A] [--http-conns N]
+//!                       [--http-header-timeout-ms T]
+//!                       [--http-body-cap B]
 //!                       [--fail-plan SPEC]   (feature `failpoints`)
 //! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
 //!                       [--m M] [--nk NK] [--iters N]
@@ -123,6 +126,23 @@ fn serve(args: &Args) -> Result<()> {
         cfg.request_timeout_ms =
             args.opt_num("request-timeout-ms", cfg.request_timeout_ms)?;
     }
+    // HTTP front-door knobs (DESIGN.md §11): a non-empty --http-addr
+    // switches serve from the in-process driver loop to the socket
+    // API; the rest tune the bounded pool and slow-client defenses.
+    if let Some(addr) = args.options.get("http-addr") {
+        cfg.http_addr = addr.clone();
+    }
+    if args.options.contains_key("http-conns") {
+        cfg.http_conns = args.opt_num("http-conns", cfg.http_conns)?;
+    }
+    if args.options.contains_key("http-header-timeout-ms") {
+        cfg.http_header_timeout_ms = args.opt_num(
+            "http-header-timeout-ms", cfg.http_header_timeout_ms)?;
+    }
+    if args.options.contains_key("http-body-cap") {
+        cfg.http_body_cap = args.opt_num("http-body-cap", cfg.http_body_cap)?;
+    }
+    cfg.validate()?;
     if let Some(spec) = args.options.get("fail-plan") {
         #[cfg(feature = "failpoints")]
         {
@@ -176,6 +196,11 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         "static batching".into()
     };
+    if !cfg.http_addr.is_empty() {
+        return serve_http(&cfg, args, requests, &format!("{backend:?}"),
+                          &mode);
+    }
+
     let coord = Coordinator::start(&cfg)?;
     println!("coordinator up ({backend:?} backend, {mode}); issuing \
               {requests} synthetic requests");
@@ -203,6 +228,61 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!("{}", coord.metrics().summary());
     coord.shutdown()
+}
+
+/// HTTP serving mode (DESIGN.md §11): bind the front door, answer
+/// requests off the wire until `--requests N` completions have been
+/// served (every `/v1/completions` outcome counts, so a flood of
+/// 429s terminates deterministically too), then drain: readiness
+/// flips to 503, in-flight streams finish, and the engine shuts down
+/// clean.
+#[cfg_attr(not(feature = "failpoints"), allow(unused_variables))]
+fn serve_http(cfg: &ServeConfig, args: &Args, requests: usize,
+              backend: &str, mode: &str) -> Result<()> {
+    use std::sync::Arc;
+
+    use splitk_w4a16::http::{HttpConfig, HttpServer};
+
+    let coord = Arc::new(Coordinator::start(cfg)?);
+    let http_cfg = HttpConfig::from_serve(cfg);
+    #[cfg(feature = "failpoints")]
+    let server = match args.options.get("fail-plan") {
+        // The same plan drives both layers: engine-level entries were
+        // installed as the startup plan above; connection-level
+        // entries (stall-header / drop-conn / slow-client) are
+        // resolved by the server per accepted connection.
+        Some(spec) => {
+            let plan = splitk_w4a16::coordinator::failpoints::FaultPlan::parse(
+                spec,
+            )
+            .map_err(|e| anyhow!("--fail-plan: {e}"))?;
+            HttpServer::start_with_faults(Arc::clone(&coord), &http_cfg,
+                                          plan)?
+        }
+        None => HttpServer::start(Arc::clone(&coord), &http_cfg)?,
+    };
+    #[cfg(not(feature = "failpoints"))]
+    let server = HttpServer::start(Arc::clone(&coord), &http_cfg)?;
+    println!("coordinator up ({backend} backend, {mode}); http \
+              listening on {} (serving {requests} completions)",
+             server.addr());
+    while server.completions_served() < requests as u64 {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    // Drain: refuse new admissions (readiness 503) while anything
+    // already on the wire completes, then stop the listener.
+    coord.begin_shutdown();
+    server.stop();
+    println!("{}", coord.metrics().summary());
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        // Unreachable once the server joined its workers; don't leak
+        // an engine thread if it ever regresses.
+        Err(c) => {
+            c.begin_shutdown();
+            Ok(())
+        }
+    }
 }
 
 fn gemm(args: &Args) -> Result<()> {

@@ -40,6 +40,36 @@ pub struct ServingMetrics {
     pub prefix_hits: AtomicU64,
     /// Prompt positions whose prefill was skipped via the prefix cache.
     pub prefix_tokens_saved: AtomicU64,
+    /// HTTP front door (DESIGN.md §11): connections accepted.
+    pub conns_accepted: AtomicU64,
+    /// HTTP: connections shed at accept (pool full → immediate 503).
+    pub conns_shed: AtomicU64,
+    /// HTTP: responses with a 4xx status.
+    pub requests_4xx: AtomicU64,
+    /// HTTP: responses with a 5xx status.
+    pub requests_5xx: AtomicU64,
+    /// HTTP: mid-response client disconnects detected on the write path
+    /// (each triggers a `Coordinator::cancel` to free the lane).
+    pub client_disconnects: AtomicU64,
+    /// HTTP: connections dropped by the header/body read deadline
+    /// (slowloris defense).
+    pub slowloris_timeouts: AtomicU64,
+    /// Engine seat/block ledger gauges, published by the continuous
+    /// loop each iteration (zero on the static path): lanes seated /
+    /// released since startup, KV blocks currently held by lanes /
+    /// cached, KV blocks allocated / freed since startup. Out-of-process
+    /// observers (the HTTP suite's disconnect audit) check balance here.
+    pub lanes_seated: AtomicU64,
+    /// See [`Self::lanes_seated`].
+    pub lanes_released: AtomicU64,
+    /// See [`Self::lanes_seated`].
+    pub kv_outstanding_blocks: AtomicU64,
+    /// See [`Self::lanes_seated`].
+    pub kv_cached_blocks: AtomicU64,
+    /// See [`Self::lanes_seated`].
+    pub kv_blocks_allocated: AtomicU64,
+    /// See [`Self::lanes_seated`].
+    pub kv_blocks_freed: AtomicU64,
     /// End-to-end request latency, milliseconds.
     pub request_latency_ms: Mutex<Histogram>,
     /// Per-decode-step latency, microseconds.
@@ -76,6 +106,18 @@ impl ServingMetrics {
             preemptions: AtomicU64::new(0),
             prefix_hits: AtomicU64::new(0),
             prefix_tokens_saved: AtomicU64::new(0),
+            conns_accepted: AtomicU64::new(0),
+            conns_shed: AtomicU64::new(0),
+            requests_4xx: AtomicU64::new(0),
+            requests_5xx: AtomicU64::new(0),
+            client_disconnects: AtomicU64::new(0),
+            slowloris_timeouts: AtomicU64::new(0),
+            lanes_seated: AtomicU64::new(0),
+            lanes_released: AtomicU64::new(0),
+            kv_outstanding_blocks: AtomicU64::new(0),
+            kv_cached_blocks: AtomicU64::new(0),
+            kv_blocks_allocated: AtomicU64::new(0),
+            kv_blocks_freed: AtomicU64::new(0),
             request_latency_ms: Mutex::new(Histogram::new()),
             step_latency_us: Mutex::new(Histogram::new()),
             queue_wait_ms: Mutex::new(Histogram::new()),
@@ -129,6 +171,55 @@ impl ServingMetrics {
         self.prefix_tokens_saved.fetch_add(tokens_saved, Ordering::Relaxed);
     }
 
+    /// Record one accepted HTTP connection.
+    pub fn record_conn_accepted(&self) {
+        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one connection shed at accept (pool full).
+    pub fn record_conn_shed(&self) {
+        self.conns_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a completed HTTP response by status class (4xx/5xx
+    /// counted; everything else ignored).
+    pub fn record_http_status(&self, status: u16) {
+        match status {
+            400..=499 => {
+                self.requests_4xx.fetch_add(1, Ordering::Relaxed);
+            }
+            500..=599 => {
+                self.requests_5xx.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    /// Record one mid-response client disconnect (write failure on the
+    /// SSE path).
+    pub fn record_client_disconnect(&self) {
+        self.client_disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one connection dropped by the read deadline (slowloris).
+    pub fn record_slowloris_timeout(&self) {
+        self.slowloris_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the engine's seat/block ledger (continuous loop, once
+    /// per iteration). Plain stores: the loop is the only writer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn publish_ledger(&self, seated: u64, released: u64,
+                          kv_outstanding: u64, kv_cached: u64,
+                          kv_allocated: u64, kv_freed: u64) {
+        self.lanes_seated.store(seated, Ordering::Relaxed);
+        self.lanes_released.store(released, Ordering::Relaxed);
+        self.kv_outstanding_blocks.store(kv_outstanding, Ordering::Relaxed);
+        self.kv_cached_blocks.store(kv_cached, Ordering::Relaxed);
+        self.kv_blocks_allocated.store(kv_allocated, Ordering::Relaxed);
+        self.kv_blocks_freed.store(kv_freed, Ordering::Relaxed);
+    }
+
     /// KV-pressure preemptions so far.
     pub fn preemptions(&self) -> u64 {
         self.preemptions.load(Ordering::Relaxed)
@@ -167,7 +258,9 @@ impl ServingMetrics {
             "requests={} tokens={} steps={} tput={:.1} tok/s batch_occ={:.2} \
              req_lat p50={:.1}ms p99={:.1}ms step p50={:.0}us p99={:.0}us \
              faults={} deadline_expired={} cancelled={} shed={} \
-             preempt={} prefix_hits={} prefix_saved={}",
+             preempt={} prefix_hits={} prefix_saved={} \
+             http_conns={} http_shed={} http_4xx={} http_5xx={} \
+             disconnects={} slowloris={}",
             self.requests_completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
@@ -184,6 +277,12 @@ impl ServingMetrics {
             self.preemptions.load(Ordering::Relaxed),
             self.prefix_hits.load(Ordering::Relaxed),
             self.prefix_tokens_saved.load(Ordering::Relaxed),
+            self.conns_accepted.load(Ordering::Relaxed),
+            self.conns_shed.load(Ordering::Relaxed),
+            self.requests_4xx.load(Ordering::Relaxed),
+            self.requests_5xx.load(Ordering::Relaxed),
+            self.client_disconnects.load(Ordering::Relaxed),
+            self.slowloris_timeouts.load(Ordering::Relaxed),
         )
     }
 }
@@ -248,5 +347,45 @@ mod tests {
         let s = ServingMetrics::new().summary();
         assert!(s.contains("faults=0 deadline_expired=0 cancelled=0 shed=0"), "{s}");
         assert!(s.contains("preempt=0 prefix_hits=0 prefix_saved=0"), "{s}");
+        assert!(s.contains("http_conns=0 http_shed=0 http_4xx=0 http_5xx=0"), "{s}");
+        assert!(s.contains("disconnects=0 slowloris=0"), "{s}");
+    }
+
+    #[test]
+    fn http_counters_record_and_surface_in_summary() {
+        let m = ServingMetrics::new();
+        m.record_conn_accepted();
+        m.record_conn_accepted();
+        m.record_conn_shed();
+        m.record_http_status(200); // ignored: not an error class
+        m.record_http_status(429);
+        m.record_http_status(400);
+        m.record_http_status(500);
+        m.record_client_disconnect();
+        m.record_slowloris_timeout();
+        assert_eq!(m.conns_accepted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.conns_shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requests_4xx.load(Ordering::Relaxed), 2);
+        assert_eq!(m.requests_5xx.load(Ordering::Relaxed), 1);
+        let s = m.summary();
+        assert!(s.contains("http_conns=2"), "{s}");
+        assert!(s.contains("http_shed=1"), "{s}");
+        assert!(s.contains("http_4xx=2"), "{s}");
+        assert!(s.contains("http_5xx=1"), "{s}");
+        assert!(s.contains("disconnects=1"), "{s}");
+        assert!(s.contains("slowloris=1"), "{s}");
+    }
+
+    #[test]
+    fn ledger_gauges_publish_latest_snapshot() {
+        let m = ServingMetrics::new();
+        m.publish_ledger(4, 2, 10, 3, 14, 4);
+        m.publish_ledger(5, 5, 0, 3, 14, 14);
+        assert_eq!(m.lanes_seated.load(Ordering::Relaxed), 5);
+        assert_eq!(m.lanes_released.load(Ordering::Relaxed), 5);
+        assert_eq!(m.kv_outstanding_blocks.load(Ordering::Relaxed), 0);
+        assert_eq!(m.kv_cached_blocks.load(Ordering::Relaxed), 3);
+        assert_eq!(m.kv_blocks_allocated.load(Ordering::Relaxed), 14);
+        assert_eq!(m.kv_blocks_freed.load(Ordering::Relaxed), 14);
     }
 }

@@ -2,8 +2,12 @@
 //! environment; see Cargo.toml note).
 //!
 //! Supports the full JSON grammar minus exotic number edge cases beyond
-//! f64. Used for `artifacts/manifest.json`, the serving config, and
-//! bench/experiment result dumps.
+//! f64. Used for `artifacts/manifest.json`, the serving config,
+//! bench/experiment result dumps, and the HTTP front door's request
+//! bodies (DESIGN.md §11) — which makes it a hostile-input surface:
+//! parsing must error, never panic or abort. The recursive-descent
+//! depth is capped ([`MAX_DEPTH`]) so a deeply nested body cannot
+//! overflow the accept worker's stack.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -105,7 +109,7 @@ impl Json {
 
     /// Parse a complete JSON document (trailing whitespace allowed).
     pub fn parse(text: &str) -> Result<Json> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -116,9 +120,17 @@ impl Json {
     }
 }
 
+/// Maximum container nesting the parser accepts. Far beyond any
+/// legitimate config/manifest/request document, far below stack
+/// exhaustion for the recursive-descent parser.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting (objects + arrays), checked against
+    /// [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -156,11 +168,29 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn descend(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH} levels");
+        }
+        Ok(())
+    }
+
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
         match self.peek().ok_or_else(|| anyhow!("unexpected end of JSON"))? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => {
+                self.descend()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
+            b'[' => {
+                self.descend()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.literal("true", Json::Bool(true)),
             b'f' => self.literal("false", Json::Bool(false)),
@@ -393,5 +423,69 @@ mod tests {
         let s = Json::Str("a\"b\\c\nd\u{1}".into());
         let out = s.to_string();
         assert_eq!(Json::parse(&out).unwrap(), s);
+    }
+
+    // ---- hostile-input robustness (DESIGN.md §11): the HTTP front
+    // door feeds attacker-controlled bodies through this parser, so
+    // every malformed input must produce Err, never a panic or abort.
+
+    #[test]
+    fn every_truncation_of_a_document_errors_cleanly() {
+        let text = r#"{"a":[1,-2.5e3,"xé\n"],"b":{"c":true,"d":null}}"#;
+        for cut in 0..text.len() {
+            if !text.is_char_boundary(cut) {
+                continue;
+            }
+            // Any prefix either fails or (never here) parses; it must
+            // not panic.
+            let _ = Json::parse(&text[..cut]);
+        }
+        assert!(Json::parse(text).is_ok());
+    }
+
+    #[test]
+    fn nesting_beyond_the_depth_cap_errors_instead_of_overflowing() {
+        let deep_ok = format!("{}1{}", "[".repeat(MAX_DEPTH),
+                              "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&deep_ok).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1),
+                               "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&too_deep).is_err());
+        // A hostile body far past the cap errors long before the stack
+        // is at risk (the old parser aborted here).
+        let hostile = "[".repeat(100_000);
+        assert!(Json::parse(&hostile).is_err());
+        let hostile_obj = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&hostile_obj).is_err());
+        // Depth is releases-on-exit, not cumulative: many siblings at
+        // legal depth stay fine.
+        let wide = format!("[{}1]", "[1],".repeat(1000));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn invalid_escapes_and_bad_unicode_error() {
+        assert!(Json::parse(r#""\x""#).is_err());
+        assert!(Json::parse(r#""\u12"#).is_err()); // truncated \u
+        assert!(Json::parse(r#""\uzzzz""#).is_err()); // non-hex \u
+        assert!(Json::parse("\"\u{7}\"").is_err()); // raw control char
+        // Unpaired surrogate maps to the replacement char, not a panic.
+        let v = Json::parse(r#""\ud800""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "\u{fffd}");
+    }
+
+    #[test]
+    fn duplicate_keys_last_one_wins() {
+        let v = Json::parse(r#"{"k":1,"k":2}"#).unwrap();
+        assert_eq!(v.get("k").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.to_string(), r#"{"k":2}"#);
+    }
+
+    #[test]
+    fn number_edge_cases_error_not_panic() {
+        assert!(Json::parse("-").is_err());
+        assert!(Json::parse("1e").is_err());
+        assert!(Json::parse("+.e-").is_err());
+        assert!(Json::parse("0x10").is_err());
     }
 }

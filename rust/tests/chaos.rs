@@ -83,6 +83,7 @@ fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
         accepted_at: Instant::now(),
         deadline: None,
         priority: 0,
+        stream: None,
     }
 }
 

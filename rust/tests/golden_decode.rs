@@ -56,6 +56,7 @@ fn decode_static() -> Vec<i32> {
         accepted_at: Instant::now(),
         deadline: None,
         priority: 0,
+        stream: None,
     };
     engine
         .run_batch(Batch { requests: vec![req], bucket: 1 })
@@ -77,6 +78,7 @@ fn decode_slots(slots: usize, chunk: usize) -> Vec<i32> {
         accepted_at: Instant::now(),
         deadline: None,
         priority: 0,
+        stream: None,
     };
     engine.run_trace(vec![req]).unwrap().remove(0).tokens
 }

@@ -1,0 +1,539 @@
+//! Integration: the HTTP front door (DESIGN.md §11) over real loopback
+//! sockets — wire contracts, streaming equivalence, slow-client
+//! defense, overload shedding, disconnect cleanup, and drain
+//! semantics. The failpoints-gated module at the bottom drives the
+//! connection-level chaos hooks (`stall-header`, `drop-conn`,
+//! `slow-client`) plus a mid-stream engine fault, all deterministic.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use splitk_w4a16::config::ServeConfig;
+use splitk_w4a16::coordinator::Coordinator;
+use splitk_w4a16::http::{HttpConfig, HttpServer};
+use splitk_w4a16::util::Json;
+
+/// Serializes `Coordinator::start` across tests. Under the
+/// `failpoints` build, startup fault plans live in a process-global
+/// one-shot slot; without this lock a concurrently starting
+/// coordinator could steal (and consume) another test's plan between
+/// `install_startup_plan` and `start`.
+static START_LOCK: Mutex<()> = Mutex::new(());
+
+fn server_config() -> ServeConfig {
+    ServeConfig {
+        backend: "host".into(),
+        artifacts_dir: PathBuf::from("/nonexistent-artifacts"),
+        slots: 2,
+        prefill_chunk: 4,
+        batch_window_ms: 1,
+        max_new_tokens: 8,
+        max_seq: 64,
+        warm_start: false,
+        self_check: false,
+        http_addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    }
+}
+
+fn start_server(cfg: &ServeConfig) -> (Arc<Coordinator>, HttpServer) {
+    let guard = START_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let coord = Arc::new(Coordinator::start(cfg).unwrap());
+    drop(guard);
+    let server = HttpServer::start(Arc::clone(&coord),
+                                   &HttpConfig::from_serve(cfg))
+        .unwrap();
+    (coord, server)
+}
+
+fn finish(coord: Arc<Coordinator>, server: HttpServer) {
+    server.stop();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown().unwrap(),
+        Err(_) => panic!("coordinator still shared after server stop"),
+    }
+}
+
+/// One full request/response exchange over a fresh connection.
+fn exchange(addr: SocketAddr, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    out
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> String {
+    exchange(addr, &format!(
+        "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()))
+}
+
+fn status_of(resp: &str) -> u16 {
+    resp.split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {resp:?}"))
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split_once("\r\n\r\n")
+        .unwrap_or_else(|| panic!("no header/body split in {resp:?}"))
+        .1
+}
+
+/// The `"type"` field of a typed error body.
+fn error_type(resp: &str) -> String {
+    let v = Json::parse(body_of(resp)).unwrap();
+    v.get("error").unwrap().get("type").unwrap().as_str().unwrap()
+        .to_string()
+}
+
+fn tokens_of(body: &str) -> Vec<i32> {
+    Json::parse(body).unwrap()
+        .get("tokens").unwrap()
+        .as_arr().unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect()
+}
+
+/// Parse an SSE body into (data payloads, named events). Payloads keep
+/// arrival order; named events are `(event-name, data)` pairs.
+fn parse_sse(body: &str) -> (Vec<String>, Vec<(String, String)>) {
+    let mut data = Vec::new();
+    let mut events = Vec::new();
+    for frame in body.split("\n\n").filter(|f| !f.trim().is_empty()) {
+        let mut name = None;
+        let mut payload = None;
+        for line in frame.lines() {
+            if let Some(n) = line.strip_prefix("event: ") {
+                name = Some(n.to_string());
+            } else if let Some(d) = line.strip_prefix("data: ") {
+                payload = Some(d.to_string());
+            }
+        }
+        match (name, payload) {
+            (Some(n), Some(d)) => events.push((n, d)),
+            (None, Some(d)) => data.push(d),
+            _ => {}
+        }
+    }
+    (data, events)
+}
+
+/// The per-token frames of a healthy SSE stream, concatenated.
+fn sse_tokens(data: &[String]) -> Vec<i32> {
+    data.iter()
+        .filter_map(|d| {
+            Json::parse(d).ok()?.opt("token")
+                .map(|t| t.as_f64().unwrap() as i32)
+        })
+        .collect()
+}
+
+/// Poll `cond` until true or ~5 s elapsed.
+fn wait_for(what: &str, cond: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ---- streaming is real and equivalent --------------------------------
+
+#[test]
+fn streamed_sse_tokens_match_the_unary_transcript() {
+    let (coord, server) = start_server(&server_config());
+    let addr = server.addr();
+
+    let unary = post(addr, "/v1/completions",
+                     r#"{"prompt": [10, 20, 30], "max_tokens": 6}"#);
+    assert_eq!(status_of(&unary), 200, "{unary}");
+    let want = tokens_of(body_of(&unary));
+    assert_eq!(want.len(), 6);
+
+    let streamed = post(
+        addr, "/v1/completions",
+        r#"{"prompt": [10, 20, 30], "max_tokens": 6, "stream": true}"#);
+    assert_eq!(status_of(&streamed), 200, "{streamed}");
+    assert!(streamed.contains("Content-Type: text/event-stream"),
+            "{streamed}");
+    let (data, events) = parse_sse(body_of(&streamed));
+    assert!(events.is_empty(), "healthy stream has no error events");
+    assert_eq!(data.last().map(String::as_str), Some("[DONE]"),
+               "stream must end with the sentinel frame");
+    // Same coordinator instance → bit-identical decode; the per-token
+    // frames concatenate to exactly the unary transcript.
+    assert_eq!(sse_tokens(&data), want);
+    // The terminal summary frame (second to last) agrees too.
+    let terminal = &data[data.len() - 2];
+    assert_eq!(tokens_of(terminal), want);
+    assert!(terminal.contains("\"finish_reason\":\"length\""));
+
+    assert_eq!(server.completions_served(), 2);
+    finish(coord, server);
+}
+
+// ---- wire contract: typed errors for hostile/wrong requests ----------
+
+#[test]
+fn malformed_and_unroutable_requests_get_typed_errors() {
+    let mut cfg = server_config();
+    cfg.http_body_cap = 64;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    let bad_json = post(addr, "/v1/completions", "{not json");
+    assert_eq!(status_of(&bad_json), 400, "{bad_json}");
+    assert_eq!(error_type(&bad_json), "invalid_request");
+    assert!(body_of(&bad_json).contains("malformed JSON"));
+
+    let no_prompt = post(addr, "/v1/completions", r#"{"max_tokens": 2}"#);
+    assert_eq!(status_of(&no_prompt), 400);
+    assert!(body_of(&no_prompt).contains("prompt"));
+
+    let missing = exchange(addr, "GET /nope HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&missing), 404);
+    assert_eq!(error_type(&missing), "not_found");
+
+    let wrong_method = exchange(addr, "GET /v1/completions HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&wrong_method), 405);
+    assert_eq!(error_type(&wrong_method), "method_not_allowed");
+
+    let garbled = exchange(addr, "completely bogus\r\n\r\n");
+    assert_eq!(status_of(&garbled), 400);
+    assert_eq!(error_type(&garbled), "malformed_request");
+
+    // Declared Content-Length over the cap: refused before the body is
+    // read, so the oversized payload need not even be sent.
+    let oversized = exchange(
+        addr,
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: 100000\r\n\r\n");
+    assert_eq!(status_of(&oversized), 413, "{oversized}");
+    assert_eq!(error_type(&oversized), "body_too_large");
+
+    // A header block past the 8 KiB cap.
+    let huge = exchange(addr, &format!(
+        "GET /healthz HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(9000)));
+    assert_eq!(status_of(&huge), 431, "{huge}");
+    assert_eq!(error_type(&huge), "header_too_large");
+
+    let m = coord.metrics();
+    assert_eq!(m.requests_4xx.load(Relaxed), 7);
+    assert_eq!(m.requests_5xx.load(Relaxed), 0);
+    finish(coord, server);
+}
+
+// ---- overload: 429 + Retry-After, server keeps serving ---------------
+
+#[test]
+fn overload_sheds_with_429_and_retry_after() {
+    let mut cfg = server_config();
+    cfg.slots = 1;
+    cfg.queue_depth = 1;
+    cfg.max_new_tokens = 32;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    // Fill the lane and the 1-deep queue directly, so the HTTP request
+    // below deterministically hits the shed path.
+    let a = coord.submit(vec![1, 2, 3], 32, None).unwrap();
+    wait_for("A to seat", || coord.queue_len() == 0);
+    let b = coord.submit(vec![4, 5], 8, None).unwrap();
+
+    let shed = post(addr, "/v1/completions",
+                    r#"{"prompt": [6], "max_tokens": 2}"#);
+    assert_eq!(status_of(&shed), 429, "{shed}");
+    assert_eq!(error_type(&shed), "overloaded");
+    assert!(shed.contains("Retry-After: 1"),
+            "back-pressure must carry Retry-After: {shed}");
+
+    // Once the backlog drains the same request is served normally.
+    assert!(a.wait().unwrap().finish_reason.is_natural());
+    assert!(b.wait().unwrap().finish_reason.is_natural());
+    let ok = post(addr, "/v1/completions",
+                  r#"{"prompt": [6], "max_tokens": 2}"#);
+    assert_eq!(status_of(&ok), 200, "{ok}");
+
+    assert_eq!(coord.metrics().shed_overload.load(Relaxed), 1);
+    assert_eq!(server.completions_served(), 2);
+    finish(coord, server);
+}
+
+// ---- slow-client defense: slowloris expires, server stays healthy ----
+
+#[test]
+fn slowloris_header_times_out_without_wedging_the_server() {
+    let mut cfg = server_config();
+    cfg.http_header_timeout_ms = 100;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    // Dribble out a partial request head and then stall forever.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"POST /v1/completions HTTP/1.1\r\nContent-Le").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert_eq!(status_of(&out), 408, "{out}");
+    assert_eq!(error_type(&out), "timeout");
+    assert_eq!(coord.metrics().slowloris_timeouts.load(Relaxed), 1);
+
+    // The stalled connection burned its own worker, nothing else.
+    let health = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&health), 200, "{health}");
+    finish(coord, server);
+}
+
+// ---- disconnect mid-stream frees the lane and keeps the ledger clean -
+
+#[test]
+fn client_disconnect_mid_stream_cancels_and_frees_the_lane() {
+    let mut cfg = server_config();
+    cfg.max_new_tokens = 256;
+    cfg.max_seq = 512;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    let body = r#"{"prompt": [3, 1, 4], "max_tokens": 256, "stream": true}"#;
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(format!(
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(), body).as_bytes()).unwrap();
+    // Read until the first token frame proves the stream is live, then
+    // vanish without ceremony.
+    let mut seen = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        let n = s.read(&mut chunk).unwrap();
+        assert!(n > 0, "server closed before the first token");
+        seen.extend_from_slice(&chunk[..n]);
+        if String::from_utf8_lossy(&seen).contains("{\"token\":") {
+            break;
+        }
+    }
+    s.shutdown(Shutdown::Both).unwrap();
+    drop(s);
+
+    // The very next failed write detects the disconnect and cancels the
+    // in-flight request, freeing its lane well before the 256-token
+    // budget would have run out.
+    let m = coord.metrics();
+    wait_for("disconnect detection",
+             || m.client_disconnects.load(Relaxed) == 1);
+    wait_for("lane release",
+             || m.lanes_seated.load(Relaxed) == m.lanes_released.load(Relaxed)
+                && m.lanes_seated.load(Relaxed) >= 1);
+    assert_eq!(m.kv_outstanding_blocks.load(Relaxed), 0,
+               "no KV blocks may leak past a disconnect");
+
+    // The freed capacity is immediately reusable.
+    let ok = post(addr, "/v1/completions",
+                  r#"{"prompt": [9], "max_tokens": 2}"#);
+    assert_eq!(status_of(&ok), 200, "{ok}");
+    finish(coord, server);
+}
+
+// ---- drain: readiness flips first, in-flight work completes ----------
+
+#[test]
+fn drain_flips_readiness_and_completes_in_flight_work() {
+    let mut cfg = server_config();
+    cfg.max_new_tokens = 32;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    assert_eq!(status_of(&exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n")),
+               200);
+    assert_eq!(status_of(&exchange(addr, "GET /readyz HTTP/1.1\r\n\r\n")),
+               200);
+
+    let inflight = coord.submit(vec![7, 7, 7], 32, None).unwrap();
+    wait_for("request to seat", || coord.queue_len() == 0);
+    coord.begin_shutdown();
+
+    // Readiness drops immediately so load balancers route away...
+    let ready = exchange(addr, "GET /readyz HTTP/1.1\r\n\r\n");
+    assert_eq!(status_of(&ready), 503, "{ready}");
+    assert_eq!(error_type(&ready), "shutting_down");
+    assert!(ready.contains("Retry-After: 1"), "{ready}");
+    // ...while liveness holds, so orchestrators don't kill the drain.
+    assert_eq!(status_of(&exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n")),
+               200);
+
+    // New admissions are refused with the typed 503...
+    let refused = post(addr, "/v1/completions",
+                       r#"{"prompt": [1], "max_tokens": 2}"#);
+    assert_eq!(status_of(&refused), 503, "{refused}");
+    assert_eq!(error_type(&refused), "shutting_down");
+
+    // ...and the in-flight request still runs to natural completion.
+    let r = inflight.wait().unwrap();
+    assert!(r.finish_reason.is_natural(), "{:?}", r.finish_reason);
+    assert_eq!(r.tokens.len(), 32);
+    finish(coord, server);
+}
+
+// ---- chaos over HTTP: deterministic wire + engine failpoints ---------
+
+#[cfg(feature = "failpoints")]
+mod chaos_http {
+    use super::*;
+    use splitk_w4a16::coordinator::failpoints::{install_startup_plan,
+                                                FaultPlan};
+
+    /// Install an engine-level startup plan and start the coordinator
+    /// atomically, so a concurrently starting test cannot steal the
+    /// plan out of the process-global slot.
+    fn start_with_engine_plan(cfg: &ServeConfig, spec: &str)
+                              -> (Arc<Coordinator>, HttpServer) {
+        let guard = START_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        install_startup_plan(FaultPlan::parse(spec).unwrap());
+        let coord = Arc::new(Coordinator::start(cfg).unwrap());
+        drop(guard);
+        let server = HttpServer::start(Arc::clone(&coord),
+                                       &HttpConfig::from_serve(cfg))
+            .unwrap();
+        (coord, server)
+    }
+
+    /// Start with a connection-level wire fault plan.
+    fn start_with_conn_plan(cfg: &ServeConfig, spec: &str)
+                            -> (Arc<Coordinator>, HttpServer) {
+        let guard = START_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let coord = Arc::new(Coordinator::start(cfg).unwrap());
+        drop(guard);
+        let server = HttpServer::start_with_faults(
+            Arc::clone(&coord), &HttpConfig::from_serve(cfg),
+            FaultPlan::parse(spec).unwrap())
+            .unwrap();
+        (coord, server)
+    }
+
+    #[test]
+    fn mid_stream_fault_ends_in_an_error_event_and_is_isolated() {
+        // Request id 2 (the streaming victim) faults at decode step 3:
+        // its stream must terminate with a typed SSE `error` event, and
+        // the concurrent/bracketing requests must be untouched — the
+        // wire carries the engine's fault isolation all the way out.
+        let (coord, server) =
+            start_with_engine_plan(&server_config(), "err-forward:2:3");
+        let addr = server.addr();
+
+        let before = post(addr, "/v1/completions",
+                          r#"{"prompt": [10, 20], "max_tokens": 6}"#);
+        assert_eq!(status_of(&before), 200, "{before}");
+        let want = tokens_of(body_of(&before));
+
+        let victim = post(
+            addr, "/v1/completions",
+            r#"{"prompt": [5, 5, 5], "max_tokens": 6, "stream": true}"#);
+        // The head was already on the wire when the fault landed, so
+        // the status is 200 and the failure is the terminal event.
+        assert_eq!(status_of(&victim), 200, "{victim}");
+        let (data, events) = parse_sse(body_of(&victim));
+        assert_eq!(events.len(), 1, "exactly one terminal error event");
+        let (name, payload) = &events[0];
+        assert_eq!(name, "error");
+        assert!(payload.contains("\"finish_reason\":\"fault\""),
+                "{payload}");
+        assert_ne!(data.last().map(String::as_str), Some("[DONE]"),
+                   "a faulted stream must not claim clean completion");
+
+        // Survivor: same prompt as the reference, bit-identical.
+        let after = post(addr, "/v1/completions",
+                         r#"{"prompt": [10, 20], "max_tokens": 6}"#);
+        assert_eq!(status_of(&after), 200, "{after}");
+        assert_eq!(tokens_of(body_of(&after)), want,
+                   "the fault must not perturb other requests");
+
+        assert_eq!(coord.metrics().faults_isolated.load(Relaxed), 1);
+        finish(coord, server);
+    }
+
+    #[test]
+    fn drop_conn_failpoint_drives_the_cancel_path() {
+        // Connection 1's third socket write fails with BrokenPipe (SSE
+        // head + first token frame succeed). The server must record the
+        // disconnect and cancel the in-flight request — deterministic
+        // twin of the real-socket disconnect test.
+        let mut cfg = server_config();
+        cfg.max_new_tokens = 64;
+        cfg.max_seq = 128;
+        let (coord, server) =
+            start_with_conn_plan(&cfg, "drop-conn:1:2");
+        let addr = server.addr();
+
+        let body =
+            r#"{"prompt": [8, 8], "max_tokens": 64, "stream": true}"#;
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(), body).as_bytes()).unwrap();
+        let mut got = String::new();
+        s.read_to_string(&mut got).unwrap();
+        // Head and exactly one token frame made it out.
+        assert_eq!(status_of(&got), 200, "{got}");
+        assert_eq!(sse_tokens(&parse_sse(body_of(&got)).0).len(), 1,
+                   "{got}");
+
+        let m = coord.metrics();
+        wait_for("disconnect bookkeeping",
+                 || m.client_disconnects.load(Relaxed) == 1
+                    && m.cancelled.load(Relaxed) == 1);
+        wait_for("lane release",
+                 || m.lanes_seated.load(Relaxed)
+                    == m.lanes_released.load(Relaxed));
+        finish(coord, server);
+    }
+
+    #[test]
+    fn stall_header_failpoint_trips_the_slowloris_defense() {
+        // Connection 1 "never finishes" its header: the 408 path and
+        // the slowloris counter fire with zero wall-clock waiting, and
+        // connection 2 is served normally right after.
+        let (coord, server) =
+            start_with_conn_plan(&server_config(), "stall-header:1");
+        let addr = server.addr();
+
+        let stalled = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status_of(&stalled), 408, "{stalled}");
+        assert_eq!(error_type(&stalled), "timeout");
+        assert_eq!(coord.metrics().slowloris_timeouts.load(Relaxed), 1);
+
+        let health = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status_of(&health), 200, "{health}");
+        finish(coord, server);
+    }
+
+    #[test]
+    fn slow_client_failpoint_does_not_stall_other_connections() {
+        // Connection 1's writes each sleep 200 ms (a slow reader). A
+        // health check on connection 2, issued while connection 1's
+        // response is still being dribbled out, completes immediately —
+        // one slow consumer costs only its own worker thread.
+        let (coord, server) =
+            start_with_conn_plan(&server_config(), "slow-client:1:200");
+        let addr = server.addr();
+
+        let body = r#"{"prompt": [2, 2], "max_tokens": 2}"#;
+        let mut slow = TcpStream::connect(addr).unwrap();
+        slow.write_all(format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(), body).as_bytes()).unwrap();
+
+        // Connection 2 while connection 1 is mid-sleep.
+        let health = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status_of(&health), 200, "{health}");
+
+        let mut got = String::new();
+        slow.read_to_string(&mut got).unwrap();
+        assert_eq!(status_of(&got), 200, "slow client is still served: {got}");
+        finish(coord, server);
+    }
+}

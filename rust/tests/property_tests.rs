@@ -464,6 +464,7 @@ fn prop_batcher_conserves_requests() {
                 accepted_at: t0,
                 deadline: None,
                 priority: 0,
+                stream: None,
             })
             .unwrap();
         }
@@ -498,6 +499,7 @@ fn prop_batcher_backpressure_capacity() {
                     accepted_at: t0,
                     deadline: None,
                     priority: 0,
+                    stream: None,
                 })
                 .is_ok()
             {

@@ -22,7 +22,7 @@ use splitk_w4a16::config::ServeConfig;
 use splitk_w4a16::coordinator::{
     Batch, Coordinator, Engine, FinishReason, GenerateRequest,
     GenerateResponse, HostModelBackend, KvLayout, SamplingParams,
-    ServeError, SlotEngine,
+    ServeError, SlotEngine, StreamEvent,
 };
 use splitk_w4a16::kernels::HostKernelConfig;
 use splitk_w4a16::metrics::ServingMetrics;
@@ -325,6 +325,7 @@ fn greq(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerateRequest {
         accepted_at: Instant::now(),
         deadline: None,
         priority: 0,
+        stream: None,
     }
 }
 
@@ -888,5 +889,73 @@ fn admission_sheds_load_with_typed_overload_error() {
     for p in [a, b, c] {
         assert!(p.wait().unwrap().finish_reason.is_natural());
     }
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn streamed_tokens_concat_to_the_harvested_transcript() {
+    // The streaming submit path (DESIGN.md §11) must be a pure delivery
+    // change: the per-token events, concatenated, are bit-identical to
+    // the transcript the legacy harvest-at-completion path returns for
+    // the same prompt. Both run on the *same* coordinator instance —
+    // autotuned GEMM plans can differ across instances, bit-identity is
+    // only promised within one.
+    let coord = Coordinator::start(&continuous_config(2, 4)).unwrap();
+    let want = coord
+        .submit(vec![10, 20, 30], 6, None)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(want.finish_reason, FinishReason::Length);
+    let ts = coord
+        .submit_streaming(vec![10, 20, 30], 6, None,
+                          SamplingParams::greedy())
+        .unwrap();
+    let mut streamed = Vec::new();
+    let done = loop {
+        match ts.recv().unwrap() {
+            StreamEvent::Token(t) => streamed.push(t),
+            StreamEvent::Done(resp) => break resp,
+        }
+    };
+    assert_eq!(streamed, done.tokens,
+               "token events must concat to the terminal transcript");
+    assert_eq!(done.tokens, want.tokens,
+               "streamed decode must be bit-identical to harvested");
+    assert_eq!(done.finish_reason, FinishReason::Length);
+    // Legacy harvest built *on top of* the stream agrees too.
+    let r = coord
+        .submit_streaming(vec![10, 20, 30], 6, None,
+                          SamplingParams::greedy())
+        .unwrap()
+        .wait_done()
+        .unwrap();
+    assert_eq!(r.tokens, want.tokens);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn cancel_is_idempotent_and_a_noop_after_finish() {
+    // The HTTP disconnect path fires `cancel` racily against natural
+    // completion, possibly more than once. Contract: the first cancel
+    // of a live request wins, every duplicate is a cheap `false`, a
+    // cancel after the request finished is a no-op, and the cancelled
+    // metric counts each request at most once.
+    let coord = Coordinator::start(&continuous_config(1, 4)).unwrap();
+    let a = coord.submit(vec![1, 2, 3], 8, None).unwrap();
+    let b = coord.submit(vec![4, 5], 8, None).unwrap();
+    assert!(coord.cancel(b.id), "first cancel of queued B must land");
+    assert!(!coord.cancel(b.id),
+            "second cancel of the same id is a no-op");
+    assert_eq!(b.wait().unwrap().finish_reason, FinishReason::Cancelled);
+    assert!(!coord.cancel(b.id),
+            "cancel after the Cancelled response is still a no-op");
+    let ra = a.wait().unwrap();
+    assert!(ra.finish_reason.is_natural());
+    assert!(!coord.cancel(a.id),
+            "cancel after natural completion must not invent work");
+    use std::sync::atomic::Ordering;
+    assert_eq!(coord.metrics().cancelled.load(Ordering::Relaxed), 1,
+               "duplicate cancels must count the request once");
     coord.shutdown().unwrap();
 }
