@@ -288,6 +288,7 @@ WALLCLOCK_FILES = {
     "coordinator/engine.rs",
     "coordinator/batcher.rs",
     "http/proto.rs",
+    "http/reactor.rs",
 }
 PANIC_MSG_FILES = {"coordinator/kvpage.rs", "coordinator/engine.rs"}
 
@@ -625,6 +626,7 @@ def test_wallclock_scopes():
     # The wire reader's socket deadlines are wall-clock by nature; the
     # rest of http/ stays under the rule.
     assert rules_of("http/proto.rs", src) == []
+    assert rules_of("http/reactor.rs", src) == []
     assert rules_of("http/server.rs", src) == ["wallclock"]
 
 

@@ -14,7 +14,13 @@
 //!   which is exactly what distinguishes real streaming from
 //!   harvest-then-replay.
 //! * **ITL** — gap between consecutive token frames of one stream.
-//! * **e2e** — request write → connection close.
+//! * **e2e** — request write → connection close (or, on a keep-alive
+//!   connection, → the `data: [DONE]` sentinel that ends the stream).
+//!
+//! Besides the open-loop rate series, a closed-loop `keepalive` series
+//! drives the same streamed completions sequentially down ONE
+//! persistent connection — measuring what connection reuse buys over
+//! connect-per-request on the same stack.
 //!
 //! ```sh
 //! cargo bench --bench http_load [-- --smoke]
@@ -100,6 +106,61 @@ fn run_client(addr: SocketAddr, prompt: &[i32], max_tokens: usize)
     Sample { ttft_ns, itl_ns, e2e_ns }
 }
 
+/// Drive `n` sequential streaming completions down ONE keep-alive
+/// connection. Each stream is delimited by the `data: [DONE]` sentinel
+/// rather than EOF, so e2e here is request write → sentinel.
+fn run_keepalive_client(addr: SocketAddr, n: usize, seed: u64,
+                        max_tokens: usize) -> Vec<Sample> {
+    const SENTINEL: &str = "data: [DONE]\n\n";
+    let mut rng = Rng::seed_from(seed);
+    let mut s = TcpStream::connect(addr).expect("connect");
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut samples = Vec::with_capacity(n);
+    for i in 0..n {
+        let plen = 2 + (i % 6);
+        let prompt: Vec<i32> =
+            (0..plen).map(|_| rng.gen_range(0, 512) as i32).collect();
+        let body = format!(
+            "{{\"prompt\": {:?}, \"max_tokens\": {max_tokens}, \
+             \"stream\": true}}", prompt);
+        let t0 = Instant::now();
+        s.write_all(format!(
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\
+             Connection: keep-alive\r\n\r\n{}",
+            body.len(), body).as_bytes()).expect("send");
+        let mut frame_times: Vec<Instant> = Vec::new();
+        let mut seen = 0usize;
+        let stream_end = loop {
+            let text = String::from_utf8_lossy(&buf);
+            if let Some(p) = text.find(SENTINEL) {
+                break p + SENTINEL.len();
+            }
+            let got = s.read(&mut chunk).expect("read");
+            assert!(got > 0, "server closed a keep-alive stream early");
+            let now = Instant::now();
+            buf.extend_from_slice(&chunk[..got]);
+            let count = String::from_utf8_lossy(&buf)
+                .matches("data: {\"token\":")
+                .count();
+            for _ in seen..count {
+                frame_times.push(now);
+            }
+            seen = count;
+        };
+        let e2e_ns = t0.elapsed().as_nanos() as f64;
+        buf.drain(..stream_end);
+        assert!(!frame_times.is_empty(), "stream produced no token frames");
+        let ttft_ns = frame_times[0].duration_since(t0).as_nanos() as f64;
+        let itl_ns = frame_times
+            .windows(2)
+            .map(|w| w[1].duration_since(w[0]).as_nanos() as f64)
+            .collect();
+        samples.push(Sample { ttft_ns, itl_ns, e2e_ns });
+    }
+    samples
+}
+
 /// Aggregate raw nanosecond samples into the repo's standard record.
 fn aggregate(name: &str, mut ns: Vec<f64>) -> BenchResult {
     ns.sort_by(|a, b| a.partial_cmp(b).expect("finite sample"));
@@ -180,6 +241,29 @@ fn main() {
              not harvest-then-replay");
         results.extend([ttft, itl, e2e]);
     }
+
+    // Closed-loop keep-alive series: one persistent connection serving
+    // every request back to back, streams delimited by `data: [DONE]`.
+    let ka_n = if smoke { 8 } else { 48 };
+    println!("series keepalive_r100: {ka_n} streamed completions on one \
+              keep-alive connection (seed 21)");
+    let samples = run_keepalive_client(addr, ka_n, 21, max_tokens);
+    let (mut ttft, mut itl, mut e2e) = (Vec::new(), Vec::new(), Vec::new());
+    for s in samples {
+        ttft.push(s.ttft_ns);
+        itl.extend(s.itl_ns);
+        e2e.push(s.e2e_ns);
+    }
+    let ttft = aggregate("http_ttft_keepalive_r100", ttft);
+    let itl = aggregate("http_itl_keepalive_r100", itl);
+    let e2e = aggregate("http_e2e_keepalive_r100", e2e);
+    for r in [&ttft, &itl, &e2e] {
+        println!("{}", r.line());
+    }
+    assert!(
+        ttft.p50_ns < e2e.p50_ns,
+        "TTFT must beat end-to-end on a reused connection too");
+    results.extend([ttft, itl, e2e]);
 
     server.stop();
     match Arc::try_unwrap(coord) {

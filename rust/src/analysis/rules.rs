@@ -40,10 +40,11 @@ const ALLOC_FNS: [&str; 4] =
 
 /// Modules where wall-clock reads are legitimate: CLI timing loops,
 /// the bench harness, the measuring autotuner, serving-metrics uptime,
-/// the deadline/batch-window machinery, and the HTTP wire reader
-/// (socket read deadlines are the slowloris defense, DESIGN.md §11 —
-/// inherently wall-clock).
-const WALLCLOCK_FILES: [&str; 7] = [
+/// the deadline/batch-window machinery, the HTTP wire reader (socket
+/// read deadlines are the slowloris defense, DESIGN.md §11 —
+/// inherently wall-clock), and the keep-alive reactor (parked-socket
+/// idle deadlines are wall-clock by the same argument).
+const WALLCLOCK_FILES: [&str; 8] = [
     "main.rs",
     "util/bench.rs",
     "kernels/autotune.rs",
@@ -51,6 +52,7 @@ const WALLCLOCK_FILES: [&str; 7] = [
     "coordinator/engine.rs",
     "coordinator/batcher.rs",
     "http/proto.rs",
+    "http/reactor.rs",
 ];
 
 /// Pool/ledger files whose panics and asserts must carry messages.
@@ -399,6 +401,7 @@ mod tests {
         // The wire reader's socket deadlines are wall-clock by nature;
         // the rest of http/ stays under the rule.
         assert!(rules_of("http/proto.rs", src).is_empty());
+        assert!(rules_of("http/reactor.rs", src).is_empty());
         assert_eq!(rules_of("http/server.rs", src), ["wallclock"]);
     }
 

@@ -82,6 +82,14 @@ pub struct ServeConfig {
     /// Largest accepted request body, bytes; longer declared bodies
     /// are rejected with `413` before the server reads them.
     pub http_body_cap: usize,
+    /// Keep-alive request cap: how many requests one persistent
+    /// connection may serve before the server closes it (the final
+    /// response carries `Connection: close`). Bounds how long a
+    /// single client can monopolize a pool slot.
+    pub http_keepalive_reqs: u64,
+    /// Keep-alive idle deadline, ms: a persistent connection with no
+    /// next request inside this window is closed by the reactor.
+    pub http_idle_timeout_ms: u64,
 }
 
 /// Which decode implementation the engine will build.
@@ -117,6 +125,8 @@ impl Default for ServeConfig {
             http_conns: 64,
             http_header_timeout_ms: 5000,
             http_body_cap: 65536,
+            http_keepalive_reqs: 100,
+            http_idle_timeout_ms: 5000,
         }
     }
 }
@@ -219,6 +229,14 @@ impl ServeConfig {
                 Some(n) => n.as_usize()?,
                 None => d.http_body_cap,
             },
+            http_keepalive_reqs: match v.opt("http_keepalive_reqs") {
+                Some(n) => n.as_u64()?,
+                None => d.http_keepalive_reqs,
+            },
+            http_idle_timeout_ms: match v.opt("http_idle_timeout_ms") {
+                Some(n) => n.as_u64()?,
+                None => d.http_idle_timeout_ms,
+            },
         })
     }
 
@@ -251,6 +269,10 @@ impl ServeConfig {
             ("http_header_timeout_ms",
              Json::num(self.http_header_timeout_ms as f64)),
             ("http_body_cap", Json::num(self.http_body_cap as f64)),
+            ("http_keepalive_reqs",
+             Json::num(self.http_keepalive_reqs as f64)),
+            ("http_idle_timeout_ms",
+             Json::num(self.http_idle_timeout_ms as f64)),
         ])
     }
 
@@ -307,6 +329,12 @@ impl ServeConfig {
             ensure!(self.http_body_cap >= 64,
                     "http_body_cap must be >= 64 bytes (a completion \
                      request body cannot fit below that)");
+            ensure!(self.http_keepalive_reqs >= 1,
+                    "http_keepalive_reqs must be >= 1 (every connection \
+                     serves at least its first request)");
+            ensure!(self.http_idle_timeout_ms >= 1,
+                    "http_idle_timeout_ms must be >= 1 (a zero idle \
+                     deadline would close keep-alive sockets at park)");
         }
         Ok(())
     }
@@ -525,14 +553,20 @@ mod tests {
         assert_eq!(d.http_conns, 64);
         assert_eq!(d.http_header_timeout_ms, 5000);
         assert_eq!(d.http_body_cap, 65536);
+        assert_eq!(d.http_keepalive_reqs, 100);
+        assert_eq!(d.http_idle_timeout_ms, 5000);
         let cfg = ServeConfig::from_json(&Json::parse(
             r#"{"http_addr": "127.0.0.1:0", "http_conns": 8,
                 "http_header_timeout_ms": 250,
-                "http_body_cap": 1024}"#).unwrap()).unwrap();
+                "http_body_cap": 1024,
+                "http_keepalive_reqs": 4,
+                "http_idle_timeout_ms": 750}"#).unwrap()).unwrap();
         assert_eq!(cfg.http_addr, "127.0.0.1:0");
         assert_eq!(cfg.http_conns, 8);
         assert_eq!(cfg.http_header_timeout_ms, 250);
         assert_eq!(cfg.http_body_cap, 1024);
+        assert_eq!(cfg.http_keepalive_reqs, 4);
+        assert_eq!(cfg.http_idle_timeout_ms, 750);
         assert!(cfg.validate().is_ok());
         let back = ServeConfig::from_json(&Json::parse(
             &cfg.to_json().to_string()).unwrap()).unwrap();
@@ -550,6 +584,14 @@ mod tests {
         let tiny = ServeConfig { http_addr: "127.0.0.1:0".into(),
                                  http_body_cap: 8, ..Default::default() };
         assert!(tiny.validate().is_err());
+        let no_reqs = ServeConfig { http_addr: "127.0.0.1:0".into(),
+                                    http_keepalive_reqs: 0,
+                                    ..Default::default() };
+        assert!(no_reqs.validate().is_err());
+        let no_idle = ServeConfig { http_addr: "127.0.0.1:0".into(),
+                                    http_idle_timeout_ms: 0,
+                                    ..Default::default() };
+        assert!(no_idle.validate().is_err());
     }
 
     #[test]

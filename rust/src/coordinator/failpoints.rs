@@ -44,17 +44,26 @@ pub enum Fault {
     /// Sleep `millis` before executing step `at_step` (pairs with
     /// per-request deadlines to force `DeadlineExceeded`).
     SlowStep { at_step: u64, millis: u64 },
-    /// HTTP front door (DESIGN.md §11): make connection `conn` (1-based
-    /// accept order) behave like a slowloris client — its header read
+    /// HTTP front door (DESIGN.md §11): make request `req` (1-based,
+    /// per connection — keep-alive serves many) on connection `conn`
+    /// (1-based accept order) behave like a stalled client — its read
     /// deterministically reports a timeout, driving the 408 +
     /// `slowloris_timeouts` defense path without real waiting. Ignored
     /// by the engine hooks.
-    ConnStallHeader { conn: u64 },
-    /// HTTP front door: fail connection `conn`'s socket writes after
-    /// `after_writes` successful writes (models a client that
-    /// disconnected mid-stream; drives the write-failure →
-    /// `Coordinator::cancel` path). Ignored by the engine hooks.
-    ConnDropWrite { conn: u64, after_writes: u64 },
+    ConnStallHeader { conn: u64, req: u64 },
+    /// HTTP front door: panic inside request routing on request `req`
+    /// (1-based) of connection `conn` — the worker-unwind chaos hook
+    /// behind the pool-slot-leak regression test. Ignored by the
+    /// engine hooks.
+    ConnPanicRoute { conn: u64, req: u64 },
+    /// HTTP front door: fail connection `conn`'s socket writes once
+    /// `after_frames` complete response/SSE frames are on the wire
+    /// (models a client that disconnected mid-stream; drives the
+    /// write-failure → `Coordinator::cancel` path). Counted at frame
+    /// granularity — one frame is one `write_all` + flush — so partial
+    /// socket writes cannot move where the fault lands. Ignored by
+    /// the engine hooks.
+    ConnDropWrite { conn: u64, after_frames: u64 },
     /// HTTP front door: sleep `millis` before each socket write on
     /// connection `conn` (a slow-reading client; pins that one slow
     /// consumer cannot stall other connections). Ignored by the engine
@@ -100,8 +109,12 @@ impl FaultPlan {
     /// Parse a CLI spec: comma-separated entries of
     /// `panic-forward:<req>:<step>` | `panic-after-kv:<req>:<step>` |
     /// `err-forward:<req>:<step>` | `admit-fail:<req>` |
-    /// `slow-step:<step>:<millis>` | `stall-header:<conn>` |
-    /// `drop-conn:<conn>:<writes>` | `slow-client:<conn>:<millis>`.
+    /// `slow-step:<step>:<millis>` | `stall-header:<conn>[:<req>]` |
+    /// `panic-route:<conn>[:<req>]` | `drop-conn:<conn>:<frames>` |
+    /// `slow-client:<conn>:<millis>`. The optional `<req>` (1-based
+    /// request index on that connection) defaults to 1 — under
+    /// keep-alive one connection carries many requests, and the
+    /// two-part forms keep the PR-9 spellings addressing the first.
     pub fn parse(spec: &str) -> Result<Self, String> {
         let mut faults = Vec::new();
         for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
@@ -124,10 +137,19 @@ impl FaultPlan {
                     at_step: num(parts[1])?, millis: num(parts[2])?,
                 },
                 (Some("stall-header"), 2) => Fault::ConnStallHeader {
-                    conn: num(parts[1])?,
+                    conn: num(parts[1])?, req: 1,
+                },
+                (Some("stall-header"), 3) => Fault::ConnStallHeader {
+                    conn: num(parts[1])?, req: num(parts[2])?,
+                },
+                (Some("panic-route"), 2) => Fault::ConnPanicRoute {
+                    conn: num(parts[1])?, req: 1,
+                },
+                (Some("panic-route"), 3) => Fault::ConnPanicRoute {
+                    conn: num(parts[1])?, req: num(parts[2])?,
                 },
                 (Some("drop-conn"), 3) => Fault::ConnDropWrite {
-                    conn: num(parts[1])?, after_writes: num(parts[2])?,
+                    conn: num(parts[1])?, after_frames: num(parts[2])?,
                 },
                 (Some("slow-client"), 3) => Fault::ConnSlowWrite {
                     conn: num(parts[1])?, millis: num(parts[2])?,
@@ -136,9 +158,9 @@ impl FaultPlan {
                     "unrecognized failpoint {entry:?} (expected \
                      panic-forward:<req>:<step>, panic-after-kv:<req>:<step>, \
                      err-forward:<req>:<step>, admit-fail:<req>, \
-                     slow-step:<step>:<millis>, stall-header:<conn>, \
-                     drop-conn:<conn>:<writes>, or \
-                     slow-client:<conn>:<millis>)"
+                     slow-step:<step>:<millis>, stall-header:<conn>[:<req>], \
+                     panic-route:<conn>[:<req>], drop-conn:<conn>:<frames>, \
+                     or slow-client:<conn>:<millis>)"
                 )),
             };
             faults.push(fault);
@@ -246,6 +268,7 @@ impl FaultState {
                 Fault::AdmitFail { .. }
                 | Fault::SlowStep { .. }
                 | Fault::ConnStallHeader { .. }
+                | Fault::ConnPanicRoute { .. }
                 | Fault::ConnDropWrite { .. }
                 | Fault::ConnSlowWrite { .. } => {}
             }
@@ -290,7 +313,8 @@ mod tests {
         assert!(FaultPlan::parse("panic-forward:1").is_err());
         assert!(FaultPlan::parse("what:1:2").is_err());
         assert!(FaultPlan::parse("slow-step:x:2").is_err());
-        assert!(FaultPlan::parse("stall-header:1:2").is_err());
+        assert!(FaultPlan::parse("stall-header:1:2:3").is_err());
+        assert!(FaultPlan::parse("panic-route:x").is_err());
         assert!(FaultPlan::parse("drop-conn:1").is_err());
         assert!(FaultPlan::parse("slow-client:a:5").is_err());
     }
@@ -298,11 +322,17 @@ mod tests {
     #[test]
     fn parse_connection_level_faults() {
         let plan = FaultPlan::parse(
-            "stall-header:1, drop-conn:2:3, slow-client:4:25",
+            "stall-header:1, stall-header:2:3, panic-route:5, \
+             panic-route:6:2, drop-conn:2:3, slow-client:4:25",
         ).unwrap();
         assert_eq!(plan.faults, vec![
-            Fault::ConnStallHeader { conn: 1 },
-            Fault::ConnDropWrite { conn: 2, after_writes: 3 },
+            // Two-part spellings address the first request, so PR-9
+            // plans keep their meaning under keep-alive.
+            Fault::ConnStallHeader { conn: 1, req: 1 },
+            Fault::ConnStallHeader { conn: 2, req: 3 },
+            Fault::ConnPanicRoute { conn: 5, req: 1 },
+            Fault::ConnPanicRoute { conn: 6, req: 2 },
+            Fault::ConnDropWrite { conn: 2, after_frames: 3 },
             Fault::ConnSlowWrite { conn: 4, millis: 25 },
         ]);
     }
@@ -310,8 +340,9 @@ mod tests {
     #[test]
     fn connection_faults_are_inert_in_engine_hooks() {
         let mut st = FaultState::new(FaultPlan::new(vec![
-            Fault::ConnStallHeader { conn: 1 },
-            Fault::ConnDropWrite { conn: 1, after_writes: 0 },
+            Fault::ConnStallHeader { conn: 1, req: 1 },
+            Fault::ConnPanicRoute { conn: 1, req: 1 },
+            Fault::ConnDropWrite { conn: 1, after_frames: 0 },
             Fault::ConnSlowWrite { conn: 1, millis: 5 },
         ]));
         st.before_step(1);

@@ -181,98 +181,122 @@ fn extra_headers(status: u16) -> Vec<(&'static str, String)> {
 }
 
 /// Record + write one typed error response; write failures are
-/// swallowed (the client may already be gone).
+/// swallowed (the client may already be gone) but reported via the
+/// return so keep-alive callers know the framing still holds.
+/// `keep` selects the response's `Connection:` header.
 pub(crate) fn respond_err(metrics: &ServingMetrics, w: &mut dyn Write,
-                          status: u16, kind: &str, msg: &str) {
+                          status: u16, kind: &str, msg: &str,
+                          keep: bool) -> bool {
     metrics.record_http_status(status);
-    let _ = write_response(w, status, &extra_headers(status),
-                           "application/json", &error_body(kind, msg));
+    write_response(w, status, &extra_headers(status),
+                   "application/json", &error_body(kind, msg), keep)
+        .is_ok()
 }
 
 fn respond_json(metrics: &ServingMetrics, w: &mut dyn Write,
-                status: u16, body: &str) {
+                status: u16, body: &str, keep: bool) -> bool {
     metrics.record_http_status(status);
-    let _ = write_response(w, status, &extra_headers(status),
-                           "application/json", body);
+    write_response(w, status, &extra_headers(status),
+                   "application/json", body, keep)
+        .is_ok()
 }
 
-/// Dispatch one parsed request. Returns `true` when the request was a
-/// `/v1/completions` call (any outcome) — the server counts those so
-/// the CLI can exit after N served completions.
+/// What [`route`] did with the request.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct RouteOutcome {
+    /// The request was a `/v1/completions` call (any outcome) — the
+    /// server counts those so the CLI can exit after N completions.
+    pub completion: bool,
+    /// The connection may serve another request: keep-alive was
+    /// granted going in *and* the response left the wire in a framed
+    /// state (every write succeeded; streams ended at their `[DONE]`
+    /// sentinel). Anything else closes.
+    pub keep_open: bool,
+}
+
+/// Dispatch one parsed request. `keep` is the server's keep-alive
+/// decision for this response (client opt-in, request cap not yet
+/// reached); error statuses with intact `Content-Length` framing —
+/// 404s, 405s, invalid-request 400s — still honor it, because the
+/// byte stream after them is exactly where the next request starts.
 pub(crate) fn route(coord: &Coordinator, w: &mut dyn Write,
-                    req: &HttpRequest) -> bool {
+                    req: &HttpRequest, keep: bool) -> RouteOutcome {
     let m = coord.metrics();
-    match (req.method.as_str(), req.path.as_str()) {
+    let (completion, wrote) = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             // Liveness: only an engine-thread death is "dead". A
             // draining server is still alive and must keep answering
             // so orchestrators don't kill it mid-drain.
-            if coord.is_engine_dead() {
+            let ok = if coord.is_engine_dead() {
                 respond_err(m, w, 503, "engine_down",
-                            "engine thread has exited");
+                            "engine thread has exited", keep)
             } else {
-                respond_json(m, w, 200, "{\"status\": \"ok\"}");
-            }
-            false
+                respond_json(m, w, 200, "{\"status\": \"ok\"}", keep)
+            };
+            (false, ok)
         }
         ("GET", "/readyz") => {
             // Readiness: drain flips this to 503 *before* in-flight
             // work finishes, so load balancers stop routing here
             // while existing streams run to completion.
-            if coord.is_engine_dead() {
+            let ok = if coord.is_engine_dead() {
                 respond_err(m, w, 503, "engine_down",
-                            "engine thread has exited");
+                            "engine thread has exited", keep)
             } else if coord.is_draining() {
                 respond_err(m, w, 503, "shutting_down",
-                            "draining: no new admissions");
+                            "draining: no new admissions", keep)
             } else {
-                respond_json(m, w, 200, "{\"status\": \"ready\"}");
-            }
-            false
+                respond_json(m, w, 200, "{\"status\": \"ready\"}", keep)
+            };
+            (false, ok)
         }
         ("POST", "/v1/completions") => {
-            completions(coord, w, req);
-            true
+            (true, completions(coord, w, req, keep))
         }
         (_, "/v1/completions") | (_, "/healthz") | (_, "/readyz") => {
-            respond_err(m, w, 405, "method_not_allowed",
-                        &format!("{} not supported here", req.method));
-            false
+            let ok = respond_err(
+                m, w, 405, "method_not_allowed",
+                &format!("{} not supported here", req.method), keep);
+            (false, ok)
         }
         _ => {
-            respond_err(m, w, 404, "not_found",
-                        &format!("no route for {}", req.path));
-            false
+            let ok = respond_err(
+                m, w, 404, "not_found",
+                &format!("no route for {}", req.path), keep);
+            (false, ok)
         }
-    }
+    };
+    RouteOutcome { completion, keep_open: keep && wrote }
 }
 
-fn completions(coord: &Coordinator, w: &mut dyn Write, req: &HttpRequest) {
+/// Serve one `/v1/completions` request. Returns whether the
+/// connection may stay open afterwards (see [`RouteOutcome`]).
+fn completions(coord: &Coordinator, w: &mut dyn Write, req: &HttpRequest,
+               keep: bool) -> bool {
     let m = coord.metrics();
     let default_max = coord.limits().max_new_tokens.min(16);
     let params = match parse_completion(&req.body, default_max) {
         Ok(p) => p,
         Err(msg) => {
-            respond_err(m, w, 400, "invalid_request", &msg);
-            return;
+            return respond_err(m, w, 400, "invalid_request", &msg, keep);
         }
     };
     if params.stream {
-        match coord.submit_streaming(params.prompt, params.max_tokens,
-                                     params.stop, params.sampling) {
-            Ok(ts) => stream_completion(coord, w, ts),
+        return match coord.submit_streaming(params.prompt,
+                                            params.max_tokens,
+                                            params.stop, params.sampling) {
+            Ok(ts) => stream_completion(coord, w, ts, keep),
             Err(e) => {
                 let (status, kind) = serve_error_status(&e);
-                respond_err(m, w, status, kind, &e.to_string());
+                respond_err(m, w, status, kind, &e.to_string(), keep)
             }
-        }
-        return;
+        };
     }
     match coord.submit_sampled(params.prompt, params.max_tokens,
                                params.stop, params.sampling) {
         Ok(pending) => match pending.wait() {
             Ok(resp) if resp.finish_reason.is_natural() => {
-                respond_json(m, w, 200, &completion_body(&resp));
+                respond_json(m, w, 200, &completion_body(&resp), keep)
             }
             Ok(resp) => {
                 let status = match resp.finish_reason {
@@ -280,18 +304,19 @@ fn completions(coord: &Coordinator, w: &mut dyn Write, req: &HttpRequest) {
                     _ => 500,
                 };
                 m.record_http_status(status);
-                let _ = write_response(w, status, &extra_headers(status),
-                                       "application/json",
-                                       &failure_body(&resp));
+                write_response(w, status, &extra_headers(status),
+                               "application/json", &failure_body(&resp),
+                               keep)
+                    .is_ok()
             }
             Err(_) => {
                 respond_err(m, w, 503, "engine_down",
-                            "engine dropped the request");
+                            "engine dropped the request", keep)
             }
         },
         Err(e) => {
             let (status, kind) = serve_error_status(&e);
-            respond_err(m, w, status, kind, &e.to_string());
+            respond_err(m, w, status, kind, &e.to_string(), keep)
         }
     }
 }
@@ -300,16 +325,22 @@ fn completions(coord: &Coordinator, w: &mut dyn Write, req: &HttpRequest) {
 /// sampler, then a terminal frame. A failed write means the client is
 /// gone — the in-flight request is cancelled so its lane and KV
 /// blocks free immediately instead of decoding to a dead socket.
+///
+/// Returns `true` only for a naturally finished stream whose every
+/// frame — `[DONE]` sentinel included — hit the wire: that sentinel
+/// is what delimits the stream for a keep-alive client (SSE has no
+/// `Content-Length`), so anything short of it means the connection
+/// must close for the client to see an end at all.
 fn stream_completion(coord: &Coordinator, w: &mut dyn Write,
-                     ts: TokenStream) {
+                     ts: TokenStream, keep: bool) -> bool {
     let m = coord.metrics();
     let client_gone = |m: &ServingMetrics| {
         m.record_client_disconnect();
         coord.cancel(ts.id);
     };
-    if write_sse_head(w).is_err() {
+    if write_sse_head(w, keep).is_err() {
         client_gone(m);
-        return;
+        return false;
     }
     m.record_http_status(200);
     loop {
@@ -320,20 +351,22 @@ fn stream_completion(coord: &Coordinator, w: &mut dyn Write,
                         .to_string();
                 if write_sse_json(w, &frame).is_err() {
                     client_gone(m);
-                    return;
+                    return false;
                 }
             }
             Ok(StreamEvent::Done(resp)) => {
-                if resp.finish_reason.is_natural() {
-                    let _ = write_sse_json(w, &completion_body(&resp));
-                    let _ = write_sse_done(w);
+                return if resp.finish_reason.is_natural() {
+                    write_sse_json(w, &completion_body(&resp)).is_ok()
+                        && write_sse_done(w).is_ok()
                 } else {
                     // Status line already sent: the fault becomes a
                     // terminal error event (the §11 mid-stream row).
+                    // No `[DONE]` follows, so the close *is* the
+                    // client's end-of-stream signal.
                     let _ = write_sse_event(w, "error",
                                             &failure_body(&resp));
-                }
-                return;
+                    false
+                };
             }
             Err(_) => {
                 let _ = write_sse_event(
@@ -341,7 +374,7 @@ fn stream_completion(coord: &Coordinator, w: &mut dyn Write,
                     &error_body("engine_down",
                                 "engine dropped the request"),
                 );
-                return;
+                return false;
             }
         }
     }

@@ -19,16 +19,31 @@
 //!
 //! Defenses: an overall header/body read deadline (slowloris), size
 //! caps on header and body, a bounded connection pool that sheds at
-//! accept with 503, and client-disconnect detection that cancels the
+//! accept with 503, an idle keep-alive deadline and per-connection
+//! request cap, and client-disconnect detection that cancels the
 //! in-flight request so its lane and KV blocks free immediately.
 //!
-//! Every connection runs `Connection: close` semantics: one request,
-//! one response, shut down. Keep-alive buys nothing for a token
-//! streaming workload and would complicate the bounded-pool
-//! accounting.
+//! Connections persist under **opt-in keep-alive**: a request carrying
+//! `Connection: keep-alive` gets a keep-alive response and the socket
+//! serves the next request (pipelined bytes are re-framed from the
+//! connection's read buffer, never re-read or dropped). Clients that
+//! don't opt in get PR-9 `Connection: close` semantics unchanged —
+//! they frame responses by EOF, and the server will not hold their
+//! socket hostage to an idle timeout. SSE streams are reusable too:
+//! the `data: [DONE]` sentinel delimits the stream at the application
+//! layer (SSE has no `Content-Length`), so a naturally finished
+//! stream hands the socket back; faulted streams close, making the
+//! close itself the end-of-stream signal.
+//!
+//! Idle connections cost no stacks: between requests a socket is
+//! parked in a `poll(2)` readiness reactor (one thread, one pollfd
+//! per parked socket — no `mio`, the shim is ~40 lines of FFI) and
+//! only *active* exchanges occupy the bounded worker pool.
 
 mod api;
+mod poll;
 mod proto;
+mod reactor;
 mod server;
 
 pub use proto::{HttpRequest, ReadError, HEADER_CAP};

@@ -1,0 +1,178 @@
+//! Tiny `poll(2)` FFI shim (DESIGN.md §11).
+//!
+//! Vendored-only policy: no `mio`, no `libc` crate — just the one
+//! syscall the reactor needs, declared by hand. `poll` is POSIX, level
+//! triggered, and takes a contiguous `pollfd` array, which is exactly
+//! the shape of "a few hundred parked keep-alive sockets": the reactor
+//! rebuilds the array each iteration (O(parked), tiny at this scale)
+//! and never has to track registration state the way epoll would
+//! require.
+//!
+//! The [`Wakeup`] half is the classic self-pipe trick over a
+//! nonblocking `UnixStream` pair: the accept thread (or anyone holding
+//! a handle) writes one byte to pop the reactor out of `poll`, and the
+//! reactor drains the pipe before re-polling. Level-triggered readiness
+//! means a wake posted *between* drain and poll is still seen — no
+//! lost-wakeup window.
+
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+/// `struct pollfd` from `<poll.h>`. Field order and widths are ABI.
+#[repr(C)]
+#[derive(Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+/// Readable (or peer-closed — `poll` also raises `POLLHUP`/`POLLERR`
+/// in `revents` unbidden; the reactor treats any of them as "ready":
+/// the subsequent `read` reports the real condition).
+pub const POLLIN: i16 = 0x001;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong,
+            timeout: std::ffi::c_int) -> std::ffi::c_int;
+}
+
+/// Safe wrapper: poll `fds`, waiting at most `timeout` (`None` =
+/// forever). Returns how many entries have nonzero `revents`. `EINTR`
+/// is reported as `Ok(0)` — the reactor loop re-derives deadlines and
+/// re-polls, so a spurious zero is always safe.
+pub fn poll_fds(fds: &mut [PollFd],
+                timeout: Option<Duration>) -> std::io::Result<usize> {
+    let millis: std::ffi::c_int = match timeout {
+        // Saturate instead of wrapping: i32 millis caps at ~24 days.
+        Some(t) => t.as_millis().min(i32::MAX as u128) as std::ffi::c_int,
+        None => -1,
+    };
+    // SAFETY: `fds` is a valid, exclusive slice of `#[repr(C)]`
+    // pollfd-layout structs for the duration of the call, and `nfds`
+    // is its exact length.
+    let rc = unsafe {
+        poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, millis)
+    };
+    if rc < 0 {
+        let err = std::io::Error::last_os_error();
+        if err.kind() == ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+    Ok(rc as usize)
+}
+
+/// Self-pipe: wakes a `poll`-blocked reactor from another thread.
+pub struct Wakeup {
+    rx: UnixStream,
+    tx: UnixStream,
+}
+
+impl Wakeup {
+    pub fn new() -> std::io::Result<Self> {
+        let (tx, rx) = UnixStream::pair()?;
+        // Nonblocking on both ends: `wake` must never block a sender
+        // when the pipe is full (a full pipe already guarantees the
+        // reactor will wake), and `drain` reads until empty.
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Wakeup { rx, tx })
+    }
+
+    /// The fd the reactor registers for `POLLIN`.
+    pub fn fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    /// Post a wake. Idempotent under a full pipe.
+    pub fn wake(&self) {
+        match (&self.tx).write(&[1u8]) {
+            Ok(_) => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+            // A broken pipe here means the reactor is gone; nothing
+            // left to wake.
+            Err(_) => {}
+        }
+    }
+
+    /// Swallow all pending wake bytes before re-polling.
+    pub fn drain(&self) {
+        let mut sink = [0u8; 64];
+        loop {
+            match (&self.rx).read(&mut sink) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn wakeup_pops_a_blocked_poll() {
+        let wakeup = Wakeup::new().unwrap();
+        let mut fds = [PollFd { fd: wakeup.fd(), events: POLLIN,
+                                revents: 0 }];
+        // Nothing posted yet: a short poll times out with no entries.
+        let n = poll_fds(&mut fds,
+                         Some(Duration::from_millis(10))).unwrap();
+        assert_eq!(n, 0);
+
+        wakeup.wake();
+        wakeup.wake(); // coalesces; still one readiness edge
+        let n = poll_fds(&mut fds,
+                         Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLIN, 0);
+
+        // Drained pipe goes quiet again.
+        wakeup.drain();
+        fds[0].revents = 0;
+        let n = poll_fds(&mut fds,
+                         Some(Duration::from_millis(10))).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn wake_from_another_thread_is_seen() {
+        let wakeup = std::sync::Arc::new(Wakeup::new().unwrap());
+        let poster = std::sync::Arc::clone(&wakeup);
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            poster.wake();
+        });
+        let mut fds = [PollFd { fd: wakeup.fd(), events: POLLIN,
+                                revents: 0 }];
+        let n = poll_fds(&mut fds,
+                         Some(Duration::from_secs(5))).unwrap();
+        t.join().unwrap();
+        assert_eq!(n, 1, "cross-thread wake must interrupt poll");
+    }
+
+    #[test]
+    fn wake_survives_a_full_pipe() {
+        let wakeup = Wakeup::new().unwrap();
+        // Stuff the pipe far past any plausible buffer; wake() must
+        // stay non-blocking and the readiness edge must remain.
+        for _ in 0..200_000 {
+            wakeup.wake();
+        }
+        let mut fds = [PollFd { fd: wakeup.fd(), events: POLLIN,
+                                revents: 0 }];
+        let n = poll_fds(&mut fds,
+                         Some(Duration::from_secs(2))).unwrap();
+        assert_eq!(n, 1);
+        wakeup.drain();
+    }
+}

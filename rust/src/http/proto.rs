@@ -1,17 +1,34 @@
 //! Wire-level HTTP/1.1 reader and writer (DESIGN.md §11).
 //!
-//! The reader enforces the slow-client contract: the whole request —
-//! head *and* declared body — must arrive inside one overall deadline.
-//! The deadline is a wall-clock instant fixed at accept; every socket
-//! read gets `set_read_timeout(remaining)`, so a client trickling one
-//! byte per second (slowloris) cannot reset the clock and hold a
-//! worker forever. Size caps bound memory: [`HEADER_CAP`] for the
-//! head, a configured cap for the body (checked against
-//! `Content-Length` *before* the body is read).
+//! The reader is per-connection state ([`ConnReader`]): under
+//! keep-alive a client may pipeline, so bytes that arrive past the
+//! current request's declared body are *not* discarded — they are kept
+//! as the next request's prefix and re-framed without touching the
+//! socket again. The head scan is incremental: each new chunk resumes
+//! the `\r\n\r\n` search three bytes before the previously scanned
+//! end (the terminator can straddle a chunk boundary), so a large head
+//! costs one pass, not one pass per chunk.
 //!
-//! The writer emits each response or SSE frame as a single
-//! `write_all`, which keeps per-response write counts deterministic —
-//! the `drop-conn:<conn>:<writes>` failpoint counts these calls.
+//! Each request is read under the slow-client contract: the whole
+//! request — head *and* declared body — must arrive inside one overall
+//! deadline. The deadline is a wall-clock instant fixed when the read
+//! starts; every socket read gets `set_read_timeout(remaining)`, so a
+//! client trickling one byte per second (slowloris) cannot reset the
+//! clock and hold a worker forever. Size caps bound memory:
+//! [`HEADER_CAP`] for the head, a configured cap for the body (checked
+//! against `Content-Length` *before* the body is read).
+//!
+//! `Content-Length` is parsed strictly: digits only (no sign, no
+//! whitespace inside the value), and multiple headers must agree —
+//! conflicting values are the classic request-smuggling vector once
+//! framing decides where the *next* request starts, so they are a
+//! typed 400, never "first one wins".
+//!
+//! The writer emits each response or SSE frame as a single `write_all`
+//! plus a `flush` that marks the frame boundary — the
+//! `drop-conn:<conn>:<frames>` failpoint counts completed frames, so a
+//! partial socket write inside a frame cannot skew where the fault
+//! lands.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
@@ -38,6 +55,29 @@ impl HttpRequest {
             .find(|(n, _)| n == name)
             .map(|(_, v)| v.as_str())
     }
+
+    /// Keep-alive is opt-in: the request must carry a
+    /// `Connection: keep-alive` token, and any `close` token wins.
+    /// (RFC 7230 defaults HTTP/1.1 to persistent; this server requires
+    /// the explicit token so clients that frame responses by
+    /// connection close — every pre-keep-alive client of this door —
+    /// keep working unchanged.)
+    pub fn keep_alive_requested(&self) -> bool {
+        let Some(v) = self.header("connection") else {
+            return false;
+        };
+        let mut keep = false;
+        for token in v.split(',') {
+            let token = token.trim();
+            if token.eq_ignore_ascii_case("close") {
+                return false;
+            }
+            if token.eq_ignore_ascii_case("keep-alive") {
+                keep = true;
+            }
+        }
+        keep
+    }
 }
 
 /// Why a request could not be read off the socket. Each variant maps
@@ -57,8 +97,16 @@ pub enum ReadError {
 }
 
 /// `\r\n\r\n` position (start index), if the head is complete.
-fn head_end(buf: &[u8]) -> Option<usize> {
-    buf.windows(4).position(|w| w == b"\r\n\r\n")
+/// `scanned` is how many bytes previous calls already searched; the
+/// scan resumes at `scanned - 3` because the terminator may straddle
+/// the old end — this is what keeps head framing O(head), not
+/// O(head · chunks).
+fn head_end_from(buf: &[u8], scanned: usize) -> Option<usize> {
+    let start = scanned.saturating_sub(3);
+    buf[start..]
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + start)
 }
 
 /// One socket read bounded by the overall deadline. `Ok(n)` is always
@@ -89,87 +137,136 @@ fn read_with_deadline(stream: &TcpStream, chunk: &mut [u8],
     }
 }
 
-/// Read and parse one request, enforcing the deadline and both size
-/// caps. See the module doc for the defense contract.
-pub fn read_request(stream: &TcpStream, body_cap: usize,
-                    timeout: Duration) -> Result<HttpRequest, ReadError> {
-    let deadline = Instant::now() + timeout;
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
-    let head_len = loop {
-        if let Some(p) = head_end(&buf) {
-            break p;
-        }
-        if buf.len() > HEADER_CAP {
+/// Strict `Content-Length` value: ASCII digits only. Rejects signs
+/// (`+5` parses fine as `usize` but is a smuggling tell), embedded
+/// whitespace, and anything non-numeric.
+fn parse_content_length(v: &str) -> Result<usize, ReadError> {
+    if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(ReadError::Malformed(format!("bad Content-Length {v:?}")));
+    }
+    v.parse().map_err(|_| {
+        ReadError::Malformed(format!("bad Content-Length {v:?}"))
+    })
+}
+
+/// Per-connection buffered reader: the keep-alive framing state. Owns
+/// whatever arrived past the previous request's declared body, and
+/// serves the next request out of that prefix before reading the
+/// socket again.
+#[derive(Debug, Default)]
+pub struct ConnReader {
+    /// Bytes past the last request's body — the next request's prefix.
+    leftover: Vec<u8>,
+}
+
+impl ConnReader {
+    pub fn new() -> Self {
+        ConnReader { leftover: Vec::new() }
+    }
+
+    /// True when pipelined bytes are already in hand: the connection
+    /// must be re-framed immediately, not parked to wait for POLLIN
+    /// (the bytes it would wait for are here, not in the socket).
+    pub fn has_buffered(&self) -> bool {
+        !self.leftover.is_empty()
+    }
+
+    /// Read and parse one request, enforcing the deadline and both
+    /// size caps. See the module doc for the defense contract. Any
+    /// error invalidates framing — the connection must close.
+    pub fn read_request(&mut self, stream: &TcpStream, body_cap: usize,
+                        timeout: Duration)
+                        -> Result<HttpRequest, ReadError> {
+        let deadline = Instant::now() + timeout;
+        let mut buf = std::mem::take(&mut self.leftover);
+        let mut scanned = 0usize;
+        let head_len = loop {
+            if let Some(p) = head_end_from(&buf, scanned) {
+                break p;
+            }
+            scanned = buf.len();
+            if buf.len() > HEADER_CAP {
+                return Err(ReadError::TooLarge("header"));
+            }
+            let mut chunk = [0u8; 2048];
+            let n = read_with_deadline(stream, &mut chunk, deadline)?;
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        if head_len > HEADER_CAP {
             return Err(ReadError::TooLarge("header"));
         }
-        let mut chunk = [0u8; 2048];
-        let n = read_with_deadline(stream, &mut chunk, deadline)?;
-        buf.extend_from_slice(&chunk[..n]);
-    };
-    if head_len > HEADER_CAP {
-        return Err(ReadError::TooLarge("header"));
-    }
 
-    let head = std::str::from_utf8(&buf[..head_len])
-        .map_err(|_| ReadError::Malformed("head is not UTF-8".into()))?;
-    let mut lines = head.split("\r\n");
-    let request_line = lines.next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let (method, path, version) =
-        match (parts.next(), parts.next(), parts.next(), parts.next()) {
-            (Some(m), Some(p), Some(v), None) => (m, p, v),
-            _ => {
-                return Err(ReadError::Malformed(format!(
-                    "bad request line {request_line:?}"
-                )))
-            }
-        };
-    if !version.starts_with("HTTP/1.") {
-        return Err(ReadError::Malformed(format!(
-            "unsupported version {version:?}"
-        )));
-    }
-    let mut headers = Vec::new();
-    for line in lines {
-        if line.is_empty() {
-            continue;
-        }
-        let Some((name, value)) = line.split_once(':') else {
+        let head = std::str::from_utf8(&buf[..head_len])
+            .map_err(|_| ReadError::Malformed("head is not UTF-8".into()))?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let (method, path, version) =
+            match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(m), Some(p), Some(v), None) => (m, p, v),
+                _ => {
+                    return Err(ReadError::Malformed(format!(
+                        "bad request line {request_line:?}"
+                    )))
+                }
+            };
+        if !version.starts_with("HTTP/1.") {
             return Err(ReadError::Malformed(format!(
-                "bad header line {line:?}"
+                "unsupported version {version:?}"
             )));
-        };
-        headers.push((name.trim().to_ascii_lowercase(),
-                      value.trim().to_string()));
-    }
+        }
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(ReadError::Malformed(format!(
+                    "bad header line {line:?}"
+                )));
+            };
+            headers.push((name.trim().to_ascii_lowercase(),
+                          value.trim().to_string()));
+        }
+        let (method, path) = (method.to_string(), path.to_string());
 
-    let declared: usize = match headers
-        .iter()
-        .find(|(n, _)| n == "content-length")
-    {
-        Some((_, v)) => v.parse().map_err(|_| {
-            ReadError::Malformed(format!("bad Content-Length {v:?}"))
-        })?,
-        None => 0,
-    };
-    // Reject an oversized body on its declaration: the bytes are never
-    // read, so a hostile upload costs one head, not `body_cap` memory.
-    if declared > body_cap {
-        return Err(ReadError::TooLarge("body"));
+        // Every Content-Length header must agree; conflicting values
+        // are the request-smuggling shape (two parsers, two framings)
+        // and get a typed 400, not "first one wins".
+        let mut declared: Option<usize> = None;
+        for (name, value) in &headers {
+            if name != "content-length" {
+                continue;
+            }
+            let parsed = parse_content_length(value)?;
+            match declared {
+                Some(prev) if prev != parsed => {
+                    return Err(ReadError::Malformed(format!(
+                        "conflicting Content-Length headers \
+                         ({prev} vs {parsed})"
+                    )));
+                }
+                _ => declared = Some(parsed),
+            }
+        }
+        let declared = declared.unwrap_or(0);
+        // Reject an oversized body on its declaration: the bytes are
+        // never read, so a hostile upload costs one head, not
+        // `body_cap` memory.
+        if declared > body_cap {
+            return Err(ReadError::TooLarge("body"));
+        }
+        let mut body = buf.split_off(head_len + 4);
+        while body.len() < declared {
+            let mut chunk = [0u8; 2048];
+            let n = read_with_deadline(stream, &mut chunk, deadline)?;
+            body.extend_from_slice(&chunk[..n]);
+        }
+        // Whatever arrived past the declared body is the next
+        // pipelined request's prefix — carried over, never truncated.
+        self.leftover = body.split_off(declared);
+        Ok(HttpRequest { method, path, headers, body })
     }
-    let mut body = buf[head_len + 4..].to_vec();
-    while body.len() < declared {
-        let mut chunk = [0u8; 2048];
-        let n = read_with_deadline(stream, &mut chunk, deadline)?;
-        body.extend_from_slice(&chunk[..n]);
-    }
-    body.truncate(declared);
-    Ok(HttpRequest {
-        method: method.to_string(),
-        path: path.to_string(),
-        headers,
-        body,
-    })
 }
 
 /// Canonical reason phrase for the statuses this server emits.
@@ -188,16 +285,23 @@ pub fn status_reason(status: u16) -> &'static str {
     }
 }
 
+fn connection_value(keep_alive: bool) -> &'static str {
+    if keep_alive { "keep-alive" } else { "close" }
+}
+
 /// Write one complete non-streaming response as a single `write_all`
-/// (plus flush). Always `Connection: close` — see the module docs.
+/// (plus the frame-boundary flush). `keep_alive` selects the
+/// `Connection:` header — the caller decides whether this connection
+/// persists (client opt-in, request cap, framing still intact).
 pub fn write_response(w: &mut dyn Write, status: u16,
                       extra: &[(&str, String)], content_type: &str,
-                      body: &str) -> std::io::Result<()> {
+                      body: &str, keep_alive: bool) -> std::io::Result<()> {
     let mut out = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n",
+         Content-Length: {}\r\nConnection: {}\r\n",
         status_reason(status),
         body.len(),
+        connection_value(keep_alive),
     );
     for (name, value) in extra {
         out.push_str(&format!("{name}: {value}\r\n"));
@@ -208,13 +312,18 @@ pub fn write_response(w: &mut dyn Write, status: u16,
     w.flush()
 }
 
-/// Start an SSE stream: status line + headers, no Content-Length (the
-/// stream ends when the connection closes).
-pub fn write_sse_head(w: &mut dyn Write) -> std::io::Result<()> {
-    w.write_all(
-        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
-          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
-    )?;
+/// Start an SSE stream: status line + headers, no Content-Length.
+/// Under `Connection: close` the stream ends when the connection
+/// closes; under keep-alive the application-level `data: [DONE]`
+/// sentinel delimits it (the wire contract every client of this door
+/// already parses), and the connection is reusable after the sentinel.
+pub fn write_sse_head(w: &mut dyn Write,
+                      keep_alive: bool) -> std::io::Result<()> {
+    w.write_all(format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+         Cache-Control: no-cache\r\nConnection: {}\r\n\r\n",
+        connection_value(keep_alive),
+    ).as_bytes())?;
     w.flush()
 }
 
@@ -254,6 +363,11 @@ mod tests {
         (server, client)
     }
 
+    fn read_one(server: &TcpStream) -> Result<HttpRequest, ReadError> {
+        ConnReader::new().read_request(server, 1024,
+                                       Duration::from_secs(2))
+    }
+
     #[test]
     fn parses_a_full_post_with_body() {
         let (server, mut client) = pair();
@@ -266,13 +380,134 @@ mod tests {
                 )
                 .unwrap();
         });
-        let req =
-            read_request(&server, 1024, Duration::from_secs(2)).unwrap();
+        let req = read_one(&server).unwrap();
         t.join().unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/completions");
         assert_eq!(req.header("host"), Some("x"), "names lowercased");
         assert_eq!(req.body, b"{\"a\": [1]}\n");
+        assert!(!req.keep_alive_requested(), "keep-alive is opt-in");
+    }
+
+    #[test]
+    fn keep_alive_needs_the_token_and_close_wins() {
+        let req = |conn: Option<&str>| HttpRequest {
+            method: "GET".into(),
+            path: "/".into(),
+            headers: conn
+                .map(|v| vec![("connection".to_string(), v.to_string())])
+                .unwrap_or_default(),
+            body: Vec::new(),
+        };
+        assert!(!req(None).keep_alive_requested());
+        assert!(req(Some("keep-alive")).keep_alive_requested());
+        assert!(req(Some("Keep-Alive")).keep_alive_requested());
+        assert!(!req(Some("close")).keep_alive_requested());
+        assert!(!req(Some("keep-alive, close")).keep_alive_requested());
+    }
+
+    #[test]
+    fn head_scan_resumes_across_chunk_boundaries() {
+        // The `\r\n\r\n` terminator split at every possible boundary:
+        // the resumed scan (from `scanned - 3`) must find it exactly
+        // where a full rescan would.
+        let head = b"GET / HTTP/1.1\r\nHost: x\r\n\r\n";
+        let end = head.len() - 4;
+        for cut in 1..head.len() {
+            let mut buf = head[..cut].to_vec();
+            let first = head_end_from(&buf, 0);
+            if cut < head.len() {
+                // Only complete heads may report a terminator.
+                assert_eq!(first.is_some(), cut == head.len(),
+                           "cut {cut}");
+            }
+            let scanned = buf.len();
+            buf.extend_from_slice(&head[cut..]);
+            assert_eq!(head_end_from(&buf, scanned), Some(end),
+                       "terminator missed when resumed at cut {cut}");
+        }
+    }
+
+    #[test]
+    fn pipelined_bytes_are_carried_over_not_truncated() {
+        let (server, mut client) = pair();
+        // Two framed POSTs in one TCP segment: the bytes past the
+        // first declared body are the second request, verbatim.
+        let b1 = b"{\"a\": 1}";
+        let b2 = b"{\"b\": 22}";
+        let wire = format!(
+            "POST /one HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            b1.len());
+        let wire2 = format!(
+            "POST /two HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            b2.len());
+        let mut seg = wire.into_bytes();
+        seg.extend_from_slice(b1);
+        seg.extend_from_slice(wire2.as_bytes());
+        seg.extend_from_slice(b2);
+        client.write_all(&seg).unwrap();
+
+        let mut reader = ConnReader::new();
+        let first = reader
+            .read_request(&server, 1024, Duration::from_secs(2))
+            .unwrap();
+        assert_eq!(first.path, "/one");
+        assert_eq!(first.body, b1);
+        assert!(reader.has_buffered(),
+                "second request must be waiting in the carry-over");
+        // No further socket traffic needed: re-framed from the prefix.
+        let second = reader
+            .read_request(&server, 1024, Duration::from_secs(2))
+            .unwrap();
+        assert_eq!(second.path, "/two");
+        assert_eq!(second.body, b2);
+        assert!(!reader.has_buffered());
+    }
+
+    #[test]
+    fn duplicate_content_length_same_value_is_accepted() {
+        let (server, mut client) = pair();
+        client
+            .write_all(b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\
+                         Content-Length: 2\r\n\r\nok")
+            .unwrap();
+        let req = read_one(&server).unwrap();
+        assert_eq!(req.body, b"ok");
+    }
+
+    #[test]
+    fn conflicting_content_length_is_malformed() {
+        let (server, mut client) = pair();
+        client
+            .write_all(b"POST / HTTP/1.1\r\nContent-Length: 2\r\n\
+                         Content-Length: 3\r\n\r\nok!")
+            .unwrap();
+        let err = read_one(&server).expect_err("smuggling shape");
+        match err {
+            ReadError::Malformed(msg) => {
+                assert!(msg.contains("conflicting Content-Length"),
+                        "{msg}");
+            }
+            other => panic!("want Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn content_length_rejects_sign_and_inner_whitespace() {
+        // `"+2".parse::<usize>()` succeeds in Rust — the strict digit
+        // check is load-bearing, not redundant.
+        for bad in ["+2", "-2", "2 2", "2\t", "0x2", ""] {
+            let (server, mut client) = pair();
+            client
+                .write_all(format!(
+                    "POST / HTTP/1.1\r\nContent-Length: {bad}\r\n\r\nok",
+                ).as_bytes())
+                .unwrap();
+            let err = read_one(&server)
+                .expect_err("non-canonical Content-Length");
+            assert!(matches!(err, ReadError::Malformed(_)),
+                    "{bad:?}: {err:?}");
+        }
     }
 
     #[test]
@@ -280,7 +515,8 @@ mod tests {
         let (server, mut client) = pair();
         // A slowloris client: partial head, then silence.
         client.write_all(b"GET /healthz HT").unwrap();
-        let err = read_request(&server, 1024, Duration::from_millis(60))
+        let err = ConnReader::new()
+            .read_request(&server, 1024, Duration::from_millis(60))
             .expect_err("must not wait forever");
         assert!(matches!(err, ReadError::Timeout), "{err:?}");
     }
@@ -292,7 +528,8 @@ mod tests {
             .write_all(b"POST /v1/completions HTTP/1.1\r\n\
                          Content-Length: 999999\r\n\r\n")
             .unwrap();
-        let err = read_request(&server, 64, Duration::from_secs(2))
+        let err = ConnReader::new()
+            .read_request(&server, 64, Duration::from_secs(2))
             .expect_err("body over cap");
         assert!(matches!(err, ReadError::TooLarge("body")), "{err:?}");
     }
@@ -309,8 +546,7 @@ mod tests {
                 }
             }
         });
-        let err = read_request(&server, 1024, Duration::from_secs(2))
-            .expect_err("head over cap");
+        let err = read_one(&server).expect_err("head over cap");
         t.join().unwrap();
         assert!(matches!(err, ReadError::TooLarge("header")), "{err:?}");
     }
@@ -319,8 +555,7 @@ mod tests {
     fn early_close_is_closed_not_malformed() {
         let (server, client) = pair();
         drop(client);
-        let err = read_request(&server, 1024, Duration::from_secs(2))
-            .expect_err("peer gone");
+        let err = read_one(&server).expect_err("peer gone");
         assert!(matches!(err, ReadError::Closed), "{err:?}");
     }
 
@@ -328,8 +563,7 @@ mod tests {
     fn garbage_request_line_is_malformed() {
         let (server, mut client) = pair();
         client.write_all(b"NOT AN HTTP LINE\r\n\r\n").unwrap();
-        let err = read_request(&server, 1024, Duration::from_secs(2))
-            .expect_err("garbage");
+        let err = read_one(&server).expect_err("garbage");
         assert!(matches!(err, ReadError::Malformed(_)), "{err:?}");
     }
 
@@ -338,26 +572,38 @@ mod tests {
         let mut out = Vec::new();
         write_response(&mut out, 429,
                        &[("Retry-After", "1".to_string())],
-                       "application/json", "{}")
+                       "application/json", "{}", false)
             .unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(text.contains("Retry-After: 1\r\n"));
         assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("\r\n\r\n{}"));
+
+        let mut out = Vec::new();
+        write_response(&mut out, 200, &[], "application/json", "{}", true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
     }
 
     #[test]
     fn sse_frames_have_the_wire_shape() {
         let mut out = Vec::new();
-        write_sse_head(&mut out).unwrap();
+        write_sse_head(&mut out, false).unwrap();
         write_sse_json(&mut out, "{\"token\": 3}").unwrap();
         write_sse_event(&mut out, "error", "{\"e\": 1}").unwrap();
         write_sse_done(&mut out).unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
         assert!(text.contains("\r\n\r\ndata: {\"token\": 3}\n\n"));
         assert!(text.contains("event: error\ndata: {\"e\": 1}\n\n"));
         assert!(text.ends_with("data: [DONE]\n\n"));
+
+        let mut out = Vec::new();
+        write_sse_head(&mut out, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
     }
 }

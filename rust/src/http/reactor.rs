@@ -1,0 +1,149 @@
+//! The readiness reactor: parked keep-alive connections at zero stack
+//! cost (DESIGN.md §11).
+//!
+//! One thread owns every *idle* connection. A connection is idle
+//! between requests — just accepted and waiting for its first bytes,
+//! or keep-alive and waiting for the next request. Idle connections
+//! are parked here as plain structs in a `Vec` (a few hundred bytes
+//! each), and a single `poll(2)` call watches all of their sockets
+//! plus the [`Wakeup`] pipe; ten thousand mostly-idle streaming
+//! clients cost one poll set, not ten thousand worker stacks.
+//!
+//! When a socket turns readable (or its peer closes — any `revents`
+//! bit counts, the worker's read reports which), the connection is
+//! unparked and sent to the bounded worker pool as a [`Wake::Ready`]
+//! job. Each parked connection also carries a deadline: the header
+//! timeout while it has served nothing (a connection that never sends
+//! a byte is the quietest slowloris), the idle keep-alive timeout
+//! after at least one response. Expired connections are dispatched as
+//! [`Wake::Expired`] so the worker can emit the 408 / silent close on
+//! its own thread — the reactor never blocks on socket I/O.
+//!
+//! Wake ordering: senders (accept loop, workers re-parking) `send`
+//! on the park channel *then* post a wakeup byte. The reactor drains
+//! the wakeup pipe before draining the channel, so a byte posted
+//! after the drain leaves the pipe readable and the level-triggered
+//! poll returns immediately — no sleep-through window.
+
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::poll::{poll_fds, PollFd, Wakeup, POLLIN};
+use super::server::Conn;
+
+/// Why a parked connection is being handed to a worker.
+pub(super) enum Wake {
+    /// The socket has bytes (or a close/error condition) to read.
+    Ready,
+    /// The park deadline expired: header deadline before the first
+    /// request, idle keep-alive deadline after.
+    Expired,
+}
+
+/// One unit of worker work: a woken connection.
+pub(super) struct Job {
+    pub(super) conn: Conn,
+    pub(super) wake: Wake,
+}
+
+/// Park deadlines, from [`super::HttpConfig`].
+pub(super) struct ReactorConfig {
+    pub(super) header_timeout: Duration,
+    pub(super) idle_timeout: Duration,
+}
+
+struct Parked {
+    conn: Conn,
+    deadline: Instant,
+}
+
+/// Run until `stop` is observed or every park-channel sender is gone.
+/// Exit drops the `Job` sender — the worker pool's shutdown signal —
+/// and every still-parked connection (closing its socket and freeing
+/// its pool slot via the connection's own guards).
+pub(super) fn reactor_loop(cfg: ReactorConfig, park_rx: Receiver<Conn>,
+                           job_tx: Sender<Job>, wakeup: Arc<Wakeup>,
+                           stop: Arc<AtomicBool>) {
+    let mut parked: Vec<Parked> = Vec::new();
+    loop {
+        // Drain the pipe *before* the channel: see the module doc.
+        wakeup.drain();
+        loop {
+            match park_rx.try_recv() {
+                Ok(conn) => {
+                    let timeout = if conn.served == 0 {
+                        cfg.header_timeout
+                    } else {
+                        cfg.idle_timeout
+                    };
+                    parked.push(Parked {
+                        deadline: Instant::now() + timeout,
+                        conn,
+                    });
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+
+        // Dispatch expired parks. `swap_remove` keeps this O(expired).
+        let now = Instant::now();
+        let mut i = 0;
+        while i < parked.len() {
+            if parked[i].deadline <= now {
+                let p = parked.swap_remove(i);
+                let job = Job { conn: p.conn, wake: Wake::Expired };
+                if job_tx.send(job).is_err() {
+                    return;
+                }
+            } else {
+                i += 1;
+            }
+        }
+
+        // One pollfd per parked socket, plus the wakeup pipe at
+        // index 0. Rebuilt each pass: O(parked) and registration-free.
+        let mut fds = Vec::with_capacity(parked.len() + 1);
+        fds.push(PollFd { fd: wakeup.fd(), events: POLLIN, revents: 0 });
+        for p in &parked {
+            fds.push(PollFd {
+                fd: p.conn.stream.as_raw_fd(),
+                events: POLLIN,
+                revents: 0,
+            });
+        }
+        // Sleep until the earliest deadline; forever when nothing is
+        // parked (a wakeup byte interrupts either way).
+        let timeout = parked
+            .iter()
+            .map(|p| p.deadline.saturating_duration_since(now))
+            .min();
+        if poll_fds(&mut fds, timeout).is_err() {
+            // A non-EINTR poll failure is unexpected; back off so a
+            // persistent error cannot spin the thread hot.
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+
+        // Unpark ready connections. Reverse order: `swap_remove(i)`
+        // backfills from the tail, and every tail slot above the
+        // cursor has already been examined (and either removed or
+        // left as not-ready), so the backfilled element never needs a
+        // second look.
+        for idx in (1..fds.len()).rev() {
+            if fds[idx].revents != 0 {
+                let p = parked.swap_remove(idx - 1);
+                let job = Job { conn: p.conn, wake: Wake::Ready };
+                if job_tx.send(job).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}

@@ -1,21 +1,43 @@
-//! The listener, bounded accept/worker pool, and connection lifecycle
-//! (DESIGN.md §11).
+//! The listener, reactor, bounded worker pool and connection
+//! lifecycle (DESIGN.md §11).
 //!
-//! One accept thread owns the listener; each accepted connection gets
-//! a worker thread for its single request/response exchange. The pool
-//! is bounded: past `max_conns` in-flight connections, accepts are
-//! shed immediately with `503` + `Retry-After` — a wedged or slow
-//! worker pool degrades into fast rejections, never an unbounded
-//! thread pile or a silent accept-queue stall.
+//! PR 9 ran one thread per connection under `Connection: close`. This
+//! server splits the connection's life in two: *idle* time (waiting
+//! for bytes) is spent parked in the poll [`reactor`](super::reactor)
+//! at zero stack cost, and *active* time (reading, routing, writing —
+//! possibly a long SSE stream) is spent on one of a bounded pool of
+//! worker threads. The accept thread only admits: it checks the pool
+//! cap, claims a slot, and parks the new connection; past `max_conns`
+//! in-flight connections, accepts are shed immediately with `503` +
+//! `Retry-After`.
 //!
-//! Connection-level failpoints (`stall-header`, `drop-conn`,
-//! `slow-client`) are resolved here by 1-based connection index and
-//! injected into the reader/writer, so the chaos suite can exercise
-//! slowloris expiry, mid-stream disconnects and slow consumers
+//! Keep-alive is opt-in (see [`super::proto`]): a request carrying
+//! `Connection: keep-alive` gets a keep-alive response, and the
+//! connection loops — buffered pipelined requests are served
+//! immediately, otherwise it parks under the idle deadline. The
+//! per-connection request cap (`--http-keepalive-reqs`) bounds how
+//! long one client can monopolize its slot; the final response says
+//! `Connection: close`.
+//!
+//! Every admitted connection carries a slot guard armed *at accept*:
+//! whether it ends by clean close, read error, idle expiry, server
+//! stop, or a panicking handler (the `panic-route` failpoint pins
+//! this), dropping the connection releases its pool slot. Workers wrap
+//! each job in `catch_unwind`, so a panic costs one connection, never
+//! a pool thread or — the pre-PR-10 leak — a slot.
+//!
+//! Connection-level failpoints (`stall-header`, `panic-route`,
+//! `drop-conn`, `slow-client`) are resolved here by 1-based connection
+//! index (and, under keep-alive, 1-based request index) and injected
+//! into the reader/writer, so the chaos suite can exercise slowloris
+//! expiry, worker unwinds, mid-stream disconnects and slow consumers
 //! deterministically, without a misbehaving client process.
 
+use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::Duration;
@@ -27,7 +49,14 @@ use crate::coordinator::sync::lock_recover;
 use crate::coordinator::Coordinator;
 
 use super::api::{respond_err, route};
-use super::proto::{read_request, ReadError};
+use super::poll::Wakeup;
+use super::proto::{ConnReader, ReadError};
+use super::reactor::{reactor_loop, Job, ReactorConfig, Wake};
+
+/// Cap on worker threads: enough for `max_conns` concurrent *active*
+/// exchanges on small configs, bounded on large ones (parked
+/// connections don't need workers, only active ones do).
+const MAX_WORKERS: usize = 64;
 
 /// With the `failpoints` feature the server threads a full
 /// [`crate::coordinator::failpoints::FaultPlan`] through to each
@@ -39,15 +68,19 @@ pub(crate) type ConnPlan = crate::coordinator::failpoints::FaultPlan;
 #[derive(Debug, Clone, Default)]
 pub(crate) struct ConnPlan;
 
-/// Wire faults resolved for one connection.
+/// Wire faults resolved for one connection. Request indices are
+/// 1-based on this connection (keep-alive serves several).
 #[derive(Debug, Clone, Copy, Default)]
 struct ConnFaults {
-    /// Pretend the client never finished its header: the read path
-    /// reports the slowloris timeout without waiting it out.
-    stall_header: bool,
-    /// Fail the Nth (0-based) write with `BrokenPipe` — a client that
-    /// vanished mid-stream.
-    drop_after_writes: Option<u64>,
+    /// Report the slowloris timeout on this request index without
+    /// waiting it out.
+    stall_header: Option<u64>,
+    /// Panic inside routing on this request index (worker-unwind
+    /// chaos; the slot-leak regression hook).
+    panic_route: Option<u64>,
+    /// Fail every write once this many complete frames are written —
+    /// a client that vanished mid-stream.
+    drop_after_frames: Option<u64>,
     /// Sleep this long before every write — a slow consumer.
     slow_write_ms: u64,
 }
@@ -58,11 +91,14 @@ fn resolve_faults(plan: &ConnPlan, conn: u64) -> ConnFaults {
     let mut f = ConnFaults::default();
     for fault in &plan.faults {
         match *fault {
-            Fault::ConnStallHeader { conn: c } if c == conn => {
-                f.stall_header = true;
+            Fault::ConnStallHeader { conn: c, req } if c == conn => {
+                f.stall_header = Some(req);
             }
-            Fault::ConnDropWrite { conn: c, after_writes } if c == conn => {
-                f.drop_after_writes = Some(after_writes);
+            Fault::ConnPanicRoute { conn: c, req } if c == conn => {
+                f.panic_route = Some(req);
+            }
+            Fault::ConnDropWrite { conn: c, after_frames } if c == conn => {
+                f.drop_after_frames = Some(after_frames);
             }
             Fault::ConnSlowWrite { conn: c, millis } if c == conn => {
                 f.slow_write_ms = millis;
@@ -89,6 +125,12 @@ pub struct HttpConfig {
     pub header_timeout: Duration,
     /// Largest accepted request body, bytes.
     pub body_cap: usize,
+    /// Requests one keep-alive connection may serve before the server
+    /// closes it (the final response says `Connection: close`).
+    pub keepalive_reqs: u64,
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the server closes it.
+    pub idle_timeout: Duration,
 }
 
 impl HttpConfig {
@@ -99,6 +141,8 @@ impl HttpConfig {
             header_timeout:
                 Duration::from_millis(cfg.http_header_timeout_ms),
             body_cap: cfg.http_body_cap,
+            keepalive_reqs: cfg.http_keepalive_reqs,
+            idle_timeout: Duration::from_millis(cfg.http_idle_timeout_ms),
         }
     }
 }
@@ -108,15 +152,67 @@ struct ServerShared {
     max_conns: usize,
     header_timeout: Duration,
     body_cap: usize,
-    stop: AtomicBool,
+    keepalive_reqs: u64,
+    stop: Arc<AtomicBool>,
     active: AtomicUsize,
     completions: AtomicU64,
-    workers: Mutex<Vec<JoinHandle<()>>>,
+    wakeup: Arc<Wakeup>,
     conn_plan: ConnPlan,
 }
 
+/// Releases one pool slot when dropped. Armed the moment the accept
+/// loop claims the slot and carried by the connection from then on,
+/// so no exit path — panic included — can leak the slot.
+struct SlotGuard {
+    shared: Arc<ServerShared>,
+}
+
+impl Drop for SlotGuard {
+    fn drop(&mut self) {
+        self.shared.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One admitted connection: the socket plus all per-connection state
+/// (framing carry-over, request/frame counters, resolved faults, the
+/// pool slot). Moves between the reactor (parked) and workers
+/// (active); dropping it anywhere closes the socket, records the
+/// per-connection request count, and frees the slot.
+pub(super) struct Conn {
+    pub(super) stream: TcpStream,
+    /// Requests served to completion on this connection so far.
+    pub(super) served: u64,
+    reader: ConnReader,
+    /// Complete response/SSE frames written (cumulative; the unit the
+    /// `drop-conn:<conn>:<frames>` failpoint counts).
+    frames: u64,
+    faults: ConnFaults,
+    slot: SlotGuard,
+}
+
+impl Conn {
+    fn writer(&mut self) -> ConnWriter<'_, &TcpStream> {
+        ConnWriter {
+            inner: &self.stream,
+            frames: &mut self.frames,
+            faults: &self.faults,
+        }
+    }
+}
+
+impl Drop for Conn {
+    fn drop(&mut self) {
+        self.slot
+            .shared
+            .coord
+            .metrics()
+            .record_requests_per_conn(self.served);
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
 /// A running front door. Dropping it (or calling [`Self::stop`])
-/// halts the accept loop and joins every worker; in-flight exchanges
+/// halts the accept loop, reactor and workers; in-flight exchanges
 /// finish first — drain semantics come from pairing this with
 /// [`Coordinator::begin_shutdown`], which flips `/readyz` to 503 and
 /// refuses new admissions while streams already on the wire complete.
@@ -124,6 +220,8 @@ pub struct HttpServer {
     shared: Arc<ServerShared>,
     bound: SocketAddr,
     accept: Option<JoinHandle<()>>,
+    reactor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     stopped: bool,
 }
 
@@ -150,26 +248,68 @@ impl HttpServer {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding http on {}", cfg.addr))?;
         let bound = listener.local_addr().context("resolving bound addr")?;
+        let wakeup =
+            Arc::new(Wakeup::new().context("creating reactor wakeup")?);
+        let max_conns = cfg.max_conns.max(1);
         let shared = Arc::new(ServerShared {
             coord,
-            max_conns: cfg.max_conns.max(1),
+            max_conns,
             header_timeout: cfg.header_timeout,
             body_cap: cfg.body_cap,
-            stop: AtomicBool::new(false),
+            keepalive_reqs: cfg.keepalive_reqs.max(1),
+            stop: Arc::new(AtomicBool::new(false)),
             active: AtomicUsize::new(0),
             completions: AtomicU64::new(0),
-            workers: Mutex::new(Vec::new()),
+            wakeup: Arc::clone(&wakeup),
             conn_plan,
         });
+        // Channel topology (and the shutdown cascade it encodes):
+        // accept + workers send parks to the reactor; the reactor is
+        // the *sole* `Job` sender, so when it exits, the workers'
+        // `recv` drains the queue and then fails, and the pool winds
+        // down without any further signaling.
+        let (park_tx, park_rx) = channel::<Conn>();
+        let (job_tx, job_rx) = channel::<Job>();
+        let jobs = Arc::new(Mutex::new(job_rx));
+        let pool = max_conns.min(MAX_WORKERS);
+        let mut workers = Vec::with_capacity(pool);
+        for i in 0..pool {
+            let shared = Arc::clone(&shared);
+            let jobs = Arc::clone(&jobs);
+            let park_tx = park_tx.clone();
+            let handle = thread::Builder::new()
+                .name(format!("http-worker-{i}"))
+                .spawn(move || worker_loop(&shared, &jobs, &park_tx))
+                .context("spawning http worker")?;
+            workers.push(handle);
+        }
+        let reactor = thread::Builder::new()
+            .name("http-reactor".into())
+            .spawn({
+                let wakeup = Arc::clone(&wakeup);
+                let stop = Arc::clone(&shared.stop);
+                let rcfg = ReactorConfig {
+                    header_timeout: cfg.header_timeout,
+                    idle_timeout: cfg.idle_timeout,
+                };
+                move || reactor_loop(rcfg, park_rx, job_tx, wakeup, stop)
+            })
+            .context("spawning http-reactor")?;
         let accept = thread::Builder::new()
             .name("http-accept".into())
             .spawn({
                 let shared = Arc::clone(&shared);
-                move || accept_loop(listener, shared)
+                move || accept_loop(listener, shared, park_tx)
             })
             .context("spawning http-accept")?;
-        Ok(HttpServer { shared, bound, accept: Some(accept),
-                        stopped: false })
+        Ok(HttpServer {
+            shared,
+            bound,
+            accept: Some(accept),
+            reactor: Some(reactor),
+            workers,
+            stopped: false,
+        })
     }
 
     /// The actually-bound address (resolves port 0).
@@ -183,7 +323,7 @@ impl HttpServer {
         self.shared.completions.load(Ordering::SeqCst)
     }
 
-    /// Stop accepting, join the accept thread and every worker.
+    /// Stop accepting, join the accept thread, reactor and workers.
     pub fn stop(mut self) {
         self.halt();
     }
@@ -200,9 +340,15 @@ impl HttpServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let workers =
-            std::mem::take(&mut *lock_recover(&self.shared.workers));
-        for h in workers {
+        // Pop the reactor out of `poll`; it observes the flag, drops
+        // its parked connections and — critically — the only `Job`
+        // sender, which is what winds the workers down after they
+        // finish any in-flight exchanges.
+        self.shared.wakeup.wake();
+        if let Some(h) = self.reactor.take() {
+            let _ = h.join();
+        }
+        for h in std::mem::take(&mut self.workers) {
             let _ = h.join();
         }
     }
@@ -214,7 +360,8 @@ impl Drop for HttpServer {
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
+fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>,
+               park_tx: Sender<Conn>) {
     // 1-based connection index — the unit the conn-level failpoints
     // (`stall-header:<conn>` etc.) address.
     let mut conn_id: u64 = 0;
@@ -238,53 +385,53 @@ fn accept_loop(listener: TcpListener, shared: Arc<ServerShared>) {
             // Shed at accept: the pool is full, so this connection
             // gets an immediate typed 503 instead of a queue slot.
             metrics.record_conn_shed();
-            let mut w = ConnWriter { stream: &stream, writes: 0,
-                                     faults: ConnFaults::default() };
+            let faults = ConnFaults::default();
+            let mut frames = 0u64;
+            let mut w = ConnWriter { inner: &stream,
+                                     frames: &mut frames,
+                                     faults: &faults };
             respond_err(metrics, &mut w, 503, "overloaded",
-                        "connection pool full; retry shortly");
+                        "connection pool full; retry shortly", false);
             let _ = stream.shutdown(Shutdown::Both);
             continue;
         }
         shared.active.fetch_add(1, Ordering::SeqCst);
         let faults = resolve_faults(&shared.conn_plan, conn_id);
-        let spawned = thread::Builder::new()
-            .name(format!("http-conn-{conn_id}"))
-            .spawn({
-                let shared = Arc::clone(&shared);
-                move || {
-                    handle_conn(&shared, stream, faults);
-                    shared.active.fetch_sub(1, Ordering::SeqCst);
-                }
-            });
-        match spawned {
-            Ok(handle) => {
-                let mut workers = lock_recover(&shared.workers);
-                // Keep the handle list bounded: reap finished workers
-                // on every push instead of growing forever.
-                workers.retain(|h| !h.is_finished());
-                workers.push(handle);
-            }
-            Err(_) => {
-                // Spawn failed; the closure (and the stream) was
-                // dropped, so release the pool slot it had claimed.
-                shared.active.fetch_sub(1, Ordering::SeqCst);
-            }
+        let conn = Conn {
+            stream,
+            served: 0,
+            reader: ConnReader::new(),
+            frames: 0,
+            faults,
+            // Armed before any handler can run: every exit path from
+            // here on frees the slot by dropping the connection.
+            slot: SlotGuard { shared: Arc::clone(&shared) },
+        };
+        // Park the new connection; its first bytes (or the header
+        // deadline) will wake it into a worker.
+        if park_tx.send(conn).is_err() {
+            return;
         }
+        shared.wakeup.wake();
     }
 }
 
 /// `Write` shim over the socket that applies this connection's wire
-/// faults and counts frames for `drop-conn:<conn>:<writes>`.
-struct ConnWriter<'a> {
-    stream: &'a TcpStream,
-    writes: u64,
-    faults: ConnFaults,
+/// faults and counts *frames* for `drop-conn:<conn>:<frames>`. A
+/// frame completes at its `flush` — every response and SSE frame is
+/// exactly one `write_all` + flush — so however the underlying writer
+/// splits the bytes, the fault lands on a frame boundary. Generic
+/// over the sink so the unit tests can substitute a splitting writer.
+struct ConnWriter<'a, W: Write> {
+    inner: W,
+    frames: &'a mut u64,
+    faults: &'a ConnFaults,
 }
 
-impl std::io::Write for ConnWriter<'_> {
+impl<W: Write> Write for ConnWriter<'_, W> {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-        if let Some(after) = self.faults.drop_after_writes {
-            if self.writes >= after {
+        if let Some(after) = self.faults.drop_after_frames {
+            if *self.frames >= after {
                 return Err(std::io::Error::new(
                     std::io::ErrorKind::BrokenPipe,
                     "failpoint drop-conn",
@@ -294,61 +441,145 @@ impl std::io::Write for ConnWriter<'_> {
         if self.faults.slow_write_ms > 0 {
             thread::sleep(Duration::from_millis(self.faults.slow_write_ms));
         }
-        self.writes += 1;
-        (&mut &*self.stream).write(buf)
+        self.inner.write(buf)
     }
 
     fn flush(&mut self) -> std::io::Result<()> {
-        (&mut &*self.stream).flush()
+        *self.frames += 1;
+        self.inner.flush()
     }
 }
 
-/// One connection, end to end: read (under the deadline and caps),
-/// route, respond, close. Read failures map to the defensive side of
-/// the wire contract; `Closed`/`Io` get silence (nobody is listening).
-fn handle_conn(shared: &ServerShared, stream: TcpStream,
-               faults: ConnFaults) {
-    let metrics = shared.coord.metrics();
-    let read = if faults.stall_header {
-        // Deterministic stand-in for a client that never finishes its
-        // header — same path as a real expiry, no wall-clock wait.
-        Err(ReadError::Timeout)
-    } else {
-        read_request(&stream, shared.body_cap, shared.header_timeout)
-    };
-    let mut w = ConnWriter { stream: &stream, writes: 0, faults };
-    match read {
-        Ok(req) => {
-            if route(&shared.coord, &mut w, &req) {
-                shared.completions.fetch_add(1, Ordering::SeqCst);
+/// Worker: block on the shared job queue, serve each woken connection,
+/// re-park the survivors. Shuts down when the queue's only sender
+/// (the reactor) is gone and the queue is drained. A panicking
+/// handler is contained by `catch_unwind`: the unwind drops the
+/// `Conn` (closing the socket and freeing the slot via its guard) and
+/// the worker lives on to take the next job.
+fn worker_loop(shared: &ServerShared, jobs: &Mutex<Receiver<Job>>,
+               park_tx: &Sender<Conn>) {
+    loop {
+        // Hold the lock only across the dequeue: one worker blocks in
+        // `recv` while its peers queue on the mutex — either way,
+        // exactly one waiter per job, and the exchange itself runs
+        // unlocked.
+        let job = match lock_recover(jobs).recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            handle_job(shared, job)
+        }));
+        if let Ok(Some(conn)) = outcome {
+            // Keep-alive with nothing buffered: back to the reactor.
+            if park_tx.send(conn).is_ok() {
+                shared.wakeup.wake();
             }
         }
-        Err(ReadError::Timeout) => {
+    }
+}
+
+/// Serve one woken connection. Returns the connection to re-park
+/// (keep-alive, idle), or `None` when it closed. Read failures map to
+/// the defensive side of the wire contract and always close — a
+/// framing-level error means the byte stream can no longer be trusted
+/// to start the next request where we think it does.
+fn handle_job(shared: &ServerShared, job: Job) -> Option<Conn> {
+    let metrics = shared.coord.metrics();
+    let mut conn = job.conn;
+    if matches!(job.wake, Wake::Expired) {
+        if conn.served == 0 {
+            // Never completed a first request inside the header
+            // deadline: the slowloris outcome, exactly as PR 9.
             metrics.record_slowloris_timeout();
+            let mut w = conn.writer();
             respond_err(metrics, &mut w, 408, "timeout",
                         "request head/body not received within the \
-                         read deadline");
+                         read deadline", false);
         }
-        Err(ReadError::TooLarge("header")) => {
-            respond_err(metrics, &mut w, 431, "header_too_large",
-                        "request head exceeds the 8 KiB cap");
-        }
-        Err(ReadError::TooLarge(_)) => {
-            respond_err(metrics, &mut w, 413, "body_too_large",
-                        "declared Content-Length exceeds the body cap");
-        }
-        Err(ReadError::Malformed(msg)) => {
-            respond_err(metrics, &mut w, 400, "malformed_request", &msg);
-        }
-        Err(ReadError::Closed) | Err(ReadError::Io(_)) => {}
+        // A reused connection idling past its keep-alive deadline
+        // closes silently: nothing was in flight.
+        return None;
     }
-    let _ = stream.shutdown(Shutdown::Both);
+    // Ready: serve framed requests until the connection parks
+    // (keep-alive, nothing buffered) or closes.
+    loop {
+        let req_idx = conn.served + 1;
+        let read = if conn.faults.stall_header == Some(req_idx) {
+            // Deterministic stand-in for a client that never finishes
+            // its request — same path as a real expiry, no waiting.
+            Err(ReadError::Timeout)
+        } else {
+            conn.reader.read_request(&conn.stream, shared.body_cap,
+                                     shared.header_timeout)
+        };
+        match read {
+            Ok(req) => {
+                conn.served += 1;
+                if conn.served == 2 {
+                    metrics.record_conn_reused();
+                }
+                if conn.faults.panic_route == Some(conn.served) {
+                    panic!("failpoint panic-route: injected routing \
+                            panic on request {} of this connection",
+                           conn.served);
+                }
+                let keep = req.keep_alive_requested()
+                    && conn.served < shared.keepalive_reqs;
+                let outcome = {
+                    let mut w = conn.writer();
+                    route(&shared.coord, &mut w, &req, keep)
+                };
+                if outcome.completion {
+                    shared.completions.fetch_add(1, Ordering::SeqCst);
+                }
+                if !outcome.keep_open {
+                    return None;
+                }
+                if conn.reader.has_buffered() {
+                    // Pipelined request already in hand: serve it now
+                    // rather than parking on a socket that may never
+                    // turn readable again.
+                    continue;
+                }
+                return Some(conn);
+            }
+            Err(ReadError::Timeout) => {
+                metrics.record_slowloris_timeout();
+                let mut w = conn.writer();
+                respond_err(metrics, &mut w, 408, "timeout",
+                            "request head/body not received within the \
+                             read deadline", false);
+                return None;
+            }
+            Err(ReadError::TooLarge("header")) => {
+                let mut w = conn.writer();
+                respond_err(metrics, &mut w, 431, "header_too_large",
+                            "request head exceeds the 8 KiB cap", false);
+                return None;
+            }
+            Err(ReadError::TooLarge(_)) => {
+                let mut w = conn.writer();
+                respond_err(metrics, &mut w, 413, "body_too_large",
+                            "declared Content-Length exceeds the body \
+                             cap", false);
+                return None;
+            }
+            Err(ReadError::Malformed(msg)) => {
+                let mut w = conn.writer();
+                respond_err(metrics, &mut w, 400, "malformed_request",
+                            &msg, false);
+                return None;
+            }
+            Err(ReadError::Closed) | Err(ReadError::Io(_)) => return None,
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::{Read, Write};
+    use std::io::Read;
 
     fn tiny_config() -> ServeConfig {
         ServeConfig {
@@ -403,6 +634,70 @@ mod tests {
         assert_eq!(m.conns_shed.load(Relaxed), 0);
         // The one 404 is the only error-class response above.
         assert_eq!(m.requests_4xx.load(Relaxed), 1);
+        // Nothing above opted into keep-alive: no reuse recorded.
+        assert_eq!(m.conns_reused.load(Relaxed), 0);
+        match Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown().unwrap(),
+            Err(_) => panic!("coordinator still shared after stop"),
+        }
+    }
+
+    /// A sink that accepts at most one byte per `write` call — the
+    /// pathological partial-write case. The frame counter must be
+    /// oblivious to it.
+    struct DribbleSink {
+        bytes: Vec<u8>,
+    }
+
+    impl Write for DribbleSink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if buf.is_empty() {
+                return Ok(0);
+            }
+            self.bytes.push(buf[0]);
+            Ok(1)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn drop_conn_counts_frames_not_writes() {
+        // drop after 1 frame: the whole first frame must land (even
+        // though the sink forces dozens of write() calls), and the
+        // second frame must fail at its very first byte.
+        let faults = ConnFaults { drop_after_frames: Some(1),
+                                  ..Default::default() };
+        let mut sink = DribbleSink { bytes: Vec::new() };
+        let mut frames = 0u64;
+        let mut w = ConnWriter { inner: &mut sink, frames: &mut frames,
+                                 faults: &faults };
+        w.write_all(b"data: frame-one\n\n").unwrap();
+        w.flush().unwrap();
+        let second = w.write_all(b"data: frame-two\n\n");
+        assert!(second.is_err(), "second frame must hit the failpoint");
+        assert_eq!(frames, 1);
+        assert_eq!(sink.bytes, b"data: frame-one\n\n",
+                   "first frame intact, second frame absent");
+    }
+
+    #[test]
+    fn slot_guard_releases_on_drop() {
+        let cfg = tiny_config();
+        let coord = Arc::new(Coordinator::start(&cfg).unwrap());
+        let server =
+            HttpServer::start(Arc::clone(&coord),
+                              &HttpConfig::from_serve(&cfg))
+                .unwrap();
+        let shared = Arc::clone(&server.shared);
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let guard = SlotGuard { shared: Arc::clone(&shared) };
+        assert_eq!(shared.active.load(Ordering::SeqCst), 1);
+        drop(guard);
+        assert_eq!(shared.active.load(Ordering::SeqCst), 0);
+        server.stop();
+        drop(shared);
         match Arc::try_unwrap(coord) {
             Ok(c) => c.shutdown().unwrap(),
             Err(_) => panic!("coordinator still shared after stop"),

@@ -13,6 +13,8 @@
 //!                       [--http-addr A] [--http-conns N]
 //!                       [--http-header-timeout-ms T]
 //!                       [--http-body-cap B]
+//!                       [--http-keepalive-reqs N]
+//!                       [--http-idle-timeout-ms T]
 //!                       [--fail-plan SPEC]   (feature `failpoints`)
 //! splitk-w4a16 gemm     [--artifacts DIR] [--variant splitk|dp]
 //!                       [--m M] [--nk NK] [--iters N]
@@ -141,6 +143,14 @@ fn serve(args: &Args) -> Result<()> {
     }
     if args.options.contains_key("http-body-cap") {
         cfg.http_body_cap = args.opt_num("http-body-cap", cfg.http_body_cap)?;
+    }
+    if args.options.contains_key("http-keepalive-reqs") {
+        cfg.http_keepalive_reqs =
+            args.opt_num("http-keepalive-reqs", cfg.http_keepalive_reqs)?;
+    }
+    if args.options.contains_key("http-idle-timeout-ms") {
+        cfg.http_idle_timeout_ms = args.opt_num(
+            "http-idle-timeout-ms", cfg.http_idle_timeout_ms)?;
     }
     cfg.validate()?;
     if let Some(spec) = args.options.get("fail-plan") {

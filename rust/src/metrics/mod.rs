@@ -54,6 +54,13 @@ pub struct ServingMetrics {
     /// HTTP: connections dropped by the header/body read deadline
     /// (slowloris defense).
     pub slowloris_timeouts: AtomicU64,
+    /// HTTP: connections that served a second request over the same
+    /// socket (keep-alive reuse; counted once per connection).
+    pub conns_reused: AtomicU64,
+    /// HTTP: requests served per connection, recorded when the
+    /// connection closes (1.0 for every `Connection: close` exchange;
+    /// higher under keep-alive).
+    pub requests_per_conn: Mutex<Histogram>,
     /// Engine seat/block ledger gauges, published by the continuous
     /// loop each iteration (zero on the static path): lanes seated /
     /// released since startup, KV blocks currently held by lanes /
@@ -112,6 +119,8 @@ impl ServingMetrics {
             requests_5xx: AtomicU64::new(0),
             client_disconnects: AtomicU64::new(0),
             slowloris_timeouts: AtomicU64::new(0),
+            conns_reused: AtomicU64::new(0),
+            requests_per_conn: Mutex::new(Histogram::new()),
             lanes_seated: AtomicU64::new(0),
             lanes_released: AtomicU64::new(0),
             kv_outstanding_blocks: AtomicU64::new(0),
@@ -206,6 +215,17 @@ impl ServingMetrics {
         self.slowloris_timeouts.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one keep-alive reuse: a connection served its second
+    /// request (called once per connection, at that moment).
+    pub fn record_conn_reused(&self) {
+        self.conns_reused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record how many requests one now-closed connection served.
+    pub fn record_requests_per_conn(&self, served: u64) {
+        lock_recover(&self.requests_per_conn).record(served as f64);
+    }
+
     /// Publish the engine's seat/block ledger (continuous loop, once
     /// per iteration). Plain stores: the loop is the only writer.
     #[allow(clippy::too_many_arguments)]
@@ -254,13 +274,15 @@ impl ServingMetrics {
     pub fn summary(&self) -> String {
         let req = lock_recover(&self.request_latency_ms);
         let step = lock_recover(&self.step_latency_us);
+        let per_conn = lock_recover(&self.requests_per_conn);
         format!(
             "requests={} tokens={} steps={} tput={:.1} tok/s batch_occ={:.2} \
              req_lat p50={:.1}ms p99={:.1}ms step p50={:.0}us p99={:.0}us \
              faults={} deadline_expired={} cancelled={} shed={} \
              preempt={} prefix_hits={} prefix_saved={} \
              http_conns={} http_shed={} http_4xx={} http_5xx={} \
-             disconnects={} slowloris={}",
+             disconnects={} slowloris={} conns_reused={} \
+             reqs_per_conn_p50={:.1}",
             self.requests_completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
             self.decode_steps.load(Ordering::Relaxed),
@@ -283,6 +305,8 @@ impl ServingMetrics {
             self.requests_5xx.load(Ordering::Relaxed),
             self.client_disconnects.load(Ordering::Relaxed),
             self.slowloris_timeouts.load(Ordering::Relaxed),
+            self.conns_reused.load(Ordering::Relaxed),
+            per_conn.percentile(50.0),
         )
     }
 }
@@ -348,7 +372,8 @@ mod tests {
         assert!(s.contains("faults=0 deadline_expired=0 cancelled=0 shed=0"), "{s}");
         assert!(s.contains("preempt=0 prefix_hits=0 prefix_saved=0"), "{s}");
         assert!(s.contains("http_conns=0 http_shed=0 http_4xx=0 http_5xx=0"), "{s}");
-        assert!(s.contains("disconnects=0 slowloris=0"), "{s}");
+        assert!(s.contains("disconnects=0 slowloris=0 conns_reused=0"), "{s}");
+        assert!(s.contains("reqs_per_conn_p50=0.0"), "{s}");
     }
 
     #[test]
@@ -363,10 +388,14 @@ mod tests {
         m.record_http_status(500);
         m.record_client_disconnect();
         m.record_slowloris_timeout();
+        m.record_conn_reused();
+        m.record_requests_per_conn(1);
+        m.record_requests_per_conn(5);
         assert_eq!(m.conns_accepted.load(Ordering::Relaxed), 2);
         assert_eq!(m.conns_shed.load(Ordering::Relaxed), 1);
         assert_eq!(m.requests_4xx.load(Ordering::Relaxed), 2);
         assert_eq!(m.requests_5xx.load(Ordering::Relaxed), 1);
+        assert_eq!(m.conns_reused.load(Ordering::Relaxed), 1);
         let s = m.summary();
         assert!(s.contains("http_conns=2"), "{s}");
         assert!(s.contains("http_shed=1"), "{s}");
@@ -374,6 +403,7 @@ mod tests {
         assert!(s.contains("http_5xx=1"), "{s}");
         assert!(s.contains("disconnects=1"), "{s}");
         assert!(s.contains("slowloris=1"), "{s}");
+        assert!(s.contains("conns_reused=1"), "{s}");
     }
 
     #[test]

@@ -73,6 +73,50 @@ fn post(addr: SocketAddr, path: &str, body: &str) -> String {
         body.len()))
 }
 
+/// Split exactly one `Content-Length`-framed response off a persistent
+/// connection, reading more bytes as needed; bytes past the frame stay
+/// in `buf` for the next call (the client-side mirror of the server's
+/// carry-over framing).
+fn read_one_response(s: &mut TcpStream, buf: &mut Vec<u8>) -> String {
+    let mut chunk = [0u8; 1024];
+    let head_len = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p + 4;
+        }
+        let n = s.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed mid-head: {:?}",
+                String::from_utf8_lossy(buf));
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_len]).to_string();
+    let need: usize = head.lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length")
+                .then(|| v.trim().parse().unwrap())
+        })
+        .unwrap_or_else(|| panic!("no Content-Length in {head:?}"));
+    while buf.len() < head_len + need {
+        let n = s.read(&mut chunk).unwrap();
+        assert!(n > 0, "connection closed mid-body: {:?}",
+                String::from_utf8_lossy(buf));
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let rest = buf.split_off(head_len + need);
+    String::from_utf8(std::mem::replace(buf, rest)).unwrap()
+}
+
+/// The `Connection:` header value of a response.
+fn connection_header(resp: &str) -> String {
+    resp.lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("connection")
+                .then(|| v.trim().to_string())
+        })
+        .unwrap_or_else(|| panic!("no Connection header in {resp:?}"))
+}
+
 fn status_of(resp: &str) -> u16 {
     resp.split_whitespace()
         .nth(1)
@@ -379,6 +423,157 @@ fn drain_flips_readiness_and_completes_in_flight_work() {
     finish(coord, server);
 }
 
+// ---- keep-alive: reuse, pipelining, idle deadline, request cap -------
+
+#[test]
+fn keep_alive_reuses_one_connection_for_many_requests() {
+    let (coord, server) = start_server(&server_config());
+    let addr = server.addr();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut buf = Vec::new();
+    let req = "GET /healthz HTTP/1.1\r\nConnection: keep-alive\r\n\r\n";
+    for i in 0..3 {
+        s.write_all(req.as_bytes()).unwrap();
+        let resp = read_one_response(&mut s, &mut buf);
+        assert_eq!(status_of(&resp), 200, "request {i}: {resp}");
+        assert_eq!(connection_header(&resp), "keep-alive");
+    }
+    drop(s);
+
+    let m = coord.metrics();
+    assert_eq!(m.conns_accepted.load(Relaxed), 1,
+               "three requests must ride one accepted connection");
+    assert_eq!(m.conns_reused.load(Relaxed), 1,
+               "reuse is counted once per connection, on request 2");
+    // The requests-per-connection histogram is fed from the conn's
+    // Drop, which runs when the server notices our EOF.
+    wait_for("per-conn histogram", || {
+        m.summary().contains("reqs_per_conn_p50=3.0")
+    });
+    finish(coord, server);
+}
+
+#[test]
+fn pipelined_requests_in_one_segment_are_both_answered() {
+    let (coord, server) = start_server(&server_config());
+    let addr = server.addr();
+
+    let body = r#"{"prompt": [10, 20, 30], "max_tokens": 3}"#;
+    // Both requests land in ONE TCP segment; the server must frame the
+    // second out of its carry-over buffer, not re-read or drop it.
+    let wire = format!(
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: {n}\r\n\
+         Connection: keep-alive\r\n\r\n{body}\
+         POST /v1/completions HTTP/1.1\r\nContent-Length: {n}\r\n\r\n{body}",
+        n = body.len());
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(wire.as_bytes()).unwrap();
+
+    let mut buf = Vec::new();
+    let first = read_one_response(&mut s, &mut buf);
+    assert_eq!(status_of(&first), 200, "{first}");
+    assert_eq!(connection_header(&first), "keep-alive");
+    let want = tokens_of(body_of(&first));
+    assert_eq!(want.len(), 3);
+
+    // The second request carried no keep-alive token, so its response
+    // closes the connection; EOF framing reads it whole.
+    let mut rest = String::from_utf8(buf).unwrap();
+    s.read_to_string(&mut rest).unwrap();
+    assert_eq!(status_of(&rest), 200, "{rest}");
+    assert_eq!(connection_header(&rest), "close");
+    assert_eq!(tokens_of(body_of(&rest)), want,
+               "same coordinator, same prompt, identical decode");
+
+    assert_eq!(server.completions_served(), 2);
+    assert_eq!(coord.metrics().conns_accepted.load(Relaxed), 1);
+    finish(coord, server);
+}
+
+#[test]
+fn idle_keep_alive_connection_is_closed_at_the_deadline() {
+    let mut cfg = server_config();
+    cfg.http_idle_timeout_ms = 150;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /healthz HTTP/1.1\r\nConnection: keep-alive\r\n\r\n")
+        .unwrap();
+    let mut buf = Vec::new();
+    let resp = read_one_response(&mut s, &mut buf);
+    assert_eq!(status_of(&resp), 200, "{resp}");
+    assert_eq!(connection_header(&resp), "keep-alive");
+    assert!(buf.is_empty());
+
+    // Go idle. The parked socket is closed by the reactor at the idle
+    // deadline — a silent EOF, not a 408 (nothing was mid-request).
+    let t0 = Instant::now();
+    let mut rest = String::new();
+    s.read_to_string(&mut rest).unwrap();
+    assert_eq!(rest, "", "idle close must be silent");
+    let waited = t0.elapsed();
+    assert!(waited >= Duration::from_millis(75),
+            "closed after {waited:?}, well before the 150 ms deadline");
+    finish(coord, server);
+}
+
+#[test]
+fn request_cap_sends_connection_close_on_the_last_response() {
+    let mut cfg = server_config();
+    cfg.http_keepalive_reqs = 2;
+    let (coord, server) = start_server(&cfg);
+    let addr = server.addr();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = "GET /healthz HTTP/1.1\r\nConnection: keep-alive\r\n\r\n";
+    let mut buf = Vec::new();
+    s.write_all(req.as_bytes()).unwrap();
+    let first = read_one_response(&mut s, &mut buf);
+    assert_eq!(status_of(&first), 200, "{first}");
+    assert_eq!(connection_header(&first), "keep-alive");
+
+    // Request 2 hits the per-connection cap: still served, but the
+    // response announces the close and the socket then EOFs.
+    s.write_all(req.as_bytes()).unwrap();
+    let mut rest = String::from_utf8(buf).unwrap();
+    s.read_to_string(&mut rest).unwrap();
+    assert_eq!(status_of(&rest), 200, "{rest}");
+    assert_eq!(connection_header(&rest), "close");
+    finish(coord, server);
+}
+
+#[test]
+fn conflicting_content_length_headers_get_a_typed_400() {
+    let (coord, server) = start_server(&server_config());
+    let addr = server.addr();
+
+    let resp = exchange(
+        addr,
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: 2\r\n\
+         Content-Length: 5\r\n\r\nhello");
+    assert_eq!(status_of(&resp), 400, "{resp}");
+    assert_eq!(error_type(&resp), "malformed_request");
+    assert!(body_of(&resp).contains("conflicting Content-Length"),
+            "{resp}");
+
+    // A signed length is smuggling bait, not a number.
+    let signed = exchange(
+        addr,
+        "POST /v1/completions HTTP/1.1\r\nContent-Length: +5\r\n\r\nhello");
+    assert_eq!(status_of(&signed), 400, "{signed}");
+    assert_eq!(error_type(&signed), "malformed_request");
+
+    // Duplicates that agree are fine (the length is just repeated).
+    let ok = exchange(
+        addr,
+        "GET /healthz HTTP/1.1\r\nContent-Length: 0\r\n\
+         Content-Length: 0\r\n\r\n");
+    assert_eq!(status_of(&ok), 200, "{ok}");
+    finish(coord, server);
+}
+
 // ---- chaos over HTTP: deterministic wire + engine failpoints ---------
 
 #[cfg(feature = "failpoints")]
@@ -508,6 +703,63 @@ mod chaos_http {
 
         let health = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
         assert_eq!(status_of(&health), 200, "{health}");
+        finish(coord, server);
+    }
+
+    #[test]
+    fn worker_panic_releases_the_connection_slot() {
+        // Regression: a routing panic used to leak the connection's
+        // pool slot (the decrement ran after the handler, which a
+        // panic skipped), so each panic shrank the pool by one until
+        // every accept shed 503. The slot now rides a Drop guard.
+        let mut cfg = server_config();
+        cfg.http_conns = 2;
+        let (coord, server) = start_with_conn_plan(&cfg, "panic-route:1");
+        let addr = server.addr();
+
+        // Connection 1 panics mid-route: no response, just a close.
+        let gone = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(gone, "", "panicked connection must close unanswered");
+
+        // Both slots must be usable again: hold one connection open
+        // while a second completes a full exchange. With the leak,
+        // `active` never returns to 0 and the exchange sheds with 503.
+        let held = TcpStream::connect(addr).unwrap();
+        wait_for("held connection to be accepted",
+                 || coord.metrics().conns_accepted.load(Relaxed) >= 2);
+        let health = exchange(addr, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status_of(&health), 200,
+                   "slot leaked by the panicked worker: {health}");
+        assert_eq!(coord.metrics().conns_shed.load(Relaxed), 0);
+        drop(held);
+        finish(coord, server);
+    }
+
+    #[test]
+    fn stall_header_failpoint_can_target_the_nth_request() {
+        // `stall-header:1:2` stalls the SECOND request of connection
+        // 1: the first must succeed over keep-alive, then the reused
+        // connection gets the 408 — failpoints address the request
+        // index within a connection, not just the connection.
+        let (coord, server) =
+            start_with_conn_plan(&server_config(), "stall-header:1:2");
+        let addr = server.addr();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        let req = "GET /healthz HTTP/1.1\r\nConnection: keep-alive\r\n\r\n";
+        s.write_all(req.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        let first = read_one_response(&mut s, &mut buf);
+        assert_eq!(status_of(&first), 200, "{first}");
+        assert_eq!(connection_header(&first), "keep-alive");
+        assert_eq!(coord.metrics().slowloris_timeouts.load(Relaxed), 0);
+
+        s.write_all(req.as_bytes()).unwrap();
+        let mut rest = String::from_utf8(buf).unwrap();
+        s.read_to_string(&mut rest).unwrap();
+        assert_eq!(status_of(&rest), 408, "{rest}");
+        assert_eq!(error_type(&rest), "timeout");
+        assert_eq!(coord.metrics().slowloris_timeouts.load(Relaxed), 1);
         finish(coord, server);
     }
 
